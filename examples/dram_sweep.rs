@@ -1,0 +1,9 @@
+//! DRAM-generation sweep (paper Fig. 10): DDR4 / DDR5 / HBM2.
+//!
+//! ```bash
+//! cargo run --release --example dram_sweep
+//! ```
+
+fn main() {
+    println!("{}", hecaton::report::run("fig10").expect("fig10 report"));
+}

@@ -1,0 +1,9 @@
+//! Die-layout sweep (paper Fig. 11): all factor-pair layouts of 16 dies.
+//!
+//! ```bash
+//! cargo run --release --example layout_sweep
+//! ```
+
+fn main() {
+    println!("{}", hecaton::report::run("fig11").expect("fig11 report"));
+}

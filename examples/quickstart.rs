@@ -1,0 +1,50 @@
+//! Quickstart: simulate Llama2-70B training on a 256-die Hecaton package
+//! and compare all four distributed methods.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::sim::system::simulate;
+use hecaton::table_row;
+use hecaton::util::table::Table;
+
+fn main() {
+    let model = model_preset("llama2-70b").expect("preset");
+    let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr5_6400);
+    println!(
+        "Simulating one {}-batch of {} on a 16x16 {} package ({} aggregate)…\n",
+        model.batch,
+        model.name,
+        hw.package.name(),
+        hecaton::util::fmt::flops(hw.peak_flops()),
+    );
+
+    let mut t = Table::new(&["method", "latency", "speedup", "energy", "NoP share", "SRAM"])
+        .label_first();
+    let hec = simulate(&model, &hw, Method::Hecaton);
+    for m in Method::all() {
+        let r = if m == Method::Hecaton {
+            hec.clone()
+        } else {
+            simulate(&model, &hw, m)
+        };
+        t.row(table_row![
+            r.method.name(),
+            r.latency,
+            format!("{:.2}x", r.latency / hec.latency),
+            r.energy_total,
+            format!(
+                "{:.0}%",
+                100.0 * (r.breakdown.nop_transmission + r.breakdown.nop_link).raw()
+                    / r.latency.raw()
+            ),
+            if r.feasible() { "ok" } else { "overflow*" }
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(*) method requires more than the 8 MB per-die SRAM buffers — paper Fig. 8 asterisks.");
+}

@@ -1,0 +1,12 @@
+//! Weak-scaling study (paper §V-B / Fig. 9): scale h by k and dies by k²,
+//! watch Hecaton's per-layer-per-token latency stay flat while the
+//! baselines blow up.
+//!
+//! ```bash
+//! cargo run --release --example weak_scaling
+//! ```
+
+fn main() {
+    println!("{}", hecaton::report::run("weak").expect("weak-scaling report"));
+    println!("{}", hecaton::report::run("fig9").expect("fig9 report"));
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT export.
+
+Never imported at runtime — the rust binary only reads artifacts/.
+"""

@@ -1,0 +1,165 @@
+"""AOT pipeline: lower every kernel/entry-point to HLO **text** artifacts.
+
+HLO text (not serialized protos) is the interchange format — the image's
+xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos, and the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Python runs exactly once, at build time; the rust coordinator loads these
+files through PJRT and never calls back into python.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention import attention_bwd, attention_fwd
+from .kernels.layernorm import (
+    gelu_bwd,
+    gelu_fwd,
+    rmsnorm_bwd,
+    rmsnorm_fwd,
+    softmax_xent,
+)
+from .kernels.matmul import matmul
+from .kernels import ref
+from .model import CONFIGS, aux_shapes, hecaton_tile_shapes
+
+# (model, mesh_rows, mesh_cols, minibatch_tokens) triples whose artifacts
+# the rust examples/tests request. Keep in sync with
+# `rust/src/coordinator/mesh.rs::artifact_plan` (pinned by pytest).
+DEPLOYMENTS = [
+    ("tiny", 1, 1, 64),
+    ("tiny", 2, 2, 64),
+    ("e2e-100m", 2, 2, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points():
+    """name -> (fn, example_args). Deduplicated across deployments."""
+    entries = {}
+
+    def add(name, fn, *args):
+        if name not in entries:
+            entries[name] = (fn, args)
+
+    for model_name, rows, cols, tokens in DEPLOYMENTS:
+        cfg = CONFIGS[model_name]
+        for (m, k, n) in hecaton_tile_shapes(cfg, rows, cols, tokens):
+            add(f"matmul_{m}x{k}x{n}", lambda x, w: (matmul(x, w),), f32(m, k), f32(k, n))
+        aux = aux_shapes(cfg, rows, cols, tokens)
+        h, s, d = aux["attention"]
+        add(
+            f"attention_fwd_{h}x{s}x{d}",
+            lambda q, k, v: (attention_fwd(q, k, v),),
+            f32(h, s, d), f32(h, s, d), f32(h, s, d),
+        )
+        add(
+            f"attention_bwd_{h}x{s}x{d}",
+            lambda q, k, v, do: tuple(attention_bwd(q, k, v, do)),
+            f32(h, s, d), f32(h, s, d), f32(h, s, d), f32(h, s, d),
+        )
+        nt, hh = aux["rmsnorm"]
+        add(
+            f"rmsnorm_fwd_{nt}x{hh}",
+            lambda x, g: (rmsnorm_fwd(x, g),),
+            f32(nt, hh), f32(hh),
+        )
+        add(
+            f"rmsnorm_bwd_{nt}x{hh}",
+            lambda x, g, dy: tuple(rmsnorm_bwd(x, g, dy)),
+            f32(nt, hh), f32(hh), f32(nt, hh),
+        )
+        gm, gn = aux["gelu"]
+        add(f"gelu_fwd_{gm}x{gn}", lambda x: (gelu_fwd(x),), f32(gm, gn))
+        add(
+            f"gelu_bwd_{gm}x{gn}",
+            lambda x, dy: (gelu_bwd(x, dy),),
+            f32(gm, gn), f32(gm, gn),
+        )
+        xn, xv = aux["xent"]
+        add(
+            f"xent_{xn}x{xv}",
+            lambda l, t: softmax_xent(l, t),
+            f32(xn, xv), i32(xn),
+        )
+    return entries
+
+
+def smoke_check():
+    """Cheap kernel-vs-oracle equivalence before exporting anything."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    x = jax.random.normal(ks[0], (32, 96), jnp.float32)
+    w = jax.random.normal(ks[1], (96, 64), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(ref.matmul_ref(x, w)), rtol=2e-5, atol=2e-5
+    )
+    q = jax.random.normal(ks[2], (4, 16, 8), jnp.float32)
+    kk = jax.random.normal(ks[3], (4, 16, 8), jnp.float32)
+    v = jax.random.normal(ks[4], (4, 16, 8), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(attention_fwd(q, kk, v)),
+        np.asarray(ref.attention_ref(q, kk, v)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+    g = jnp.ones((96,), jnp.float32)
+    xx = jax.random.normal(ks[5], (16, 96), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm_fwd(xx, g)), np.asarray(ref.rmsnorm_ref(xx, g)), rtol=2e-5, atol=2e-5
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single entry point")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    smoke_check()
+    entries = entry_points()
+    manifest_lines = []
+    for name, (fn, example_args) in sorted(entries.items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ";".join(
+            f"{'x'.join(map(str, a.shape))}:{a.dtype}" for a in example_args
+        )
+        manifest_lines.append(f"{name} {ins}")
+        print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"emitted {len(manifest_lines)} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

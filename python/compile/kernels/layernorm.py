@@ -1,0 +1,97 @@
+"""RMSNorm Pallas kernel (row-wise normalization on the vector unit).
+
+The paper's normalization runs on the die's vector unit; the kernel tiles
+rows so each grid step normalizes a block of tokens over the full hidden
+dimension (normalization needs the whole row — this is why the functional
+coordinator applies norms at block boundaries where full-width activations
+exist; see `rust/src/coordinator`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]  # [bm, h]
+    g = g_ref[...]  # [h]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + EPS) * g
+
+
+def _row_block(n):
+    b = min(64, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def rmsnorm_fwd(x, g):
+    """RMSNorm over the last dim: ``x·rsqrt(mean(x²)+ε)·g``; x is [n, h]."""
+    n, h = x.shape
+    bm = _row_block(n)
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), jnp.float32),
+        interpret=True,
+    )(x, g)
+
+
+def _rmsnorm_ref(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * g
+
+
+@jax.jit
+def rmsnorm_bwd(x, g, dy):
+    """Gradients (dx, dg) of RMSNorm under cotangent `dy`.
+
+    Derived from the jnp formulation (Pallas interpret calls don't admit
+    reverse-mode AD); pytest asserts `rmsnorm_fwd == _rmsnorm_ref` so the
+    gradients are exact for the kernel too. Vector-unit work either way.
+    """
+    _, vjp = jax.vjp(_rmsnorm_ref, x, g)
+    return vjp(dy)
+
+
+# Plain-jnp element-wise pieces, AOT'd alongside the kernels (the vector
+# unit handles these; no tiling subtlety so no Pallas needed).
+
+
+@jax.jit
+def gelu_fwd(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+@jax.jit
+def gelu_bwd(x, dy):
+    _, vjp = jax.vjp(gelu_fwd, x)
+    return vjp(dy)[0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def softmax_xent(logits, targets):
+    """Mean cross-entropy + dLogits for integer targets.
+
+    Returns ``(loss, dlogits)`` — the only loss-side artifact the
+    coordinator needs (it backpropagates from dlogits).
+    """
+    n = logits.shape[0]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1).squeeze(-1)
+    loss = jnp.mean(nll)
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    dlogits = (p - onehot) / n
+    return loss, dlogits

@@ -1,0 +1,89 @@
+"""Tiled matmul Pallas kernel — the per-die PE-array analogue.
+
+Grid = (M/bm, N/bn, K/bk) with K innermost; the output tile (whose block
+index is constant along K) acts as the accumulator: zeroed on the first K
+step, accumulated on every step — mirroring the weight-stationary
+accumulation of the paper's MAC array (and the classic MXU matmul
+schedule). Block sizes adapt to the problem so small coordinator tiles
+(e.g. 32×64×96) work as well as wide FFN tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# Default (bm, bk, bn) tile; shrunk per-dimension when the problem is
+# smaller. Chosen in the EXPERIMENTS.md §Perf L1 iteration: the live VMEM
+# tiles cost 5.6 MiB (double-buffers inside a 16 MiB VMEM) while keeping
+# the HBM<->VMEM grid small — the (64,128,128) starting point spent most
+# of the e2e-100m execution on grid-step overhead (9.7x end-to-end after
+# this change); the next size up (1024,2048,1152) gained 13% more on the
+# CPU but exceeds the VMEM budget, so it was rejected as structurally
+# invalid for the real-TPU target.
+DEFAULT_BLOCK = (512, 1024, 576)
+
+
+def _largest_divisor_block(dim, cap):
+    """Largest divisor of `dim` that is <= cap (keeps grids exact)."""
+    b = min(cap, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def block_dims(m, k, n, block=DEFAULT_BLOCK):
+    bm, bk, bn = block
+    return (
+        _largest_divisor_block(m, bm),
+        _largest_divisor_block(k, bk),
+        _largest_divisor_block(n, bn),
+    )
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps):
+    """One (i, j, kk) grid step: o_tile (+)= x_tile @ w_tile."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x, w, block=DEFAULT_BLOCK):
+    """``x[m,k] @ w[k,n]`` via the Pallas kernel (interpret mode)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bk, bn = block_dims(m, k, n, block)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_footprint_bytes(m, k, n, block=DEFAULT_BLOCK):
+    """Estimated VMEM bytes live per grid step (x, w, o tiles).
+
+    Used by the perf report: interpret-mode wallclock is not a TPU proxy,
+    so we optimize/validate the *structure* — footprint must fit VMEM
+    (≈16 MiB/core) with room for double buffering.
+    """
+    bm, bk, bn = block_dims(m, k, n, block)
+    return 4 * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every kernel (the build-time correctness bar).
+
+pytest (with hypothesis sweeps) asserts kernel == oracle before any
+artifact is emitted; `aot.py` refuses to export if the smoke equivalence
+fails.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def attention_ref(q, k, v):
+    """[h, s, d] single-head-per-grid attention reference."""
+    d = q.shape[-1]
+    scores = jnp.einsum("hsd,htd->hst", q, k) / (d**0.5)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, v)
+
+
+def rmsnorm_ref(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * g
+
+
+def gelu_ref(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softmax_xent_ref(logits, targets):
+    n = logits.shape[0]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1).squeeze(-1)
+    loss = jnp.mean(nll)
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    return loss, (p - onehot) / n

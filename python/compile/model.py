@@ -1,0 +1,192 @@
+"""Layer-2: the transformer model in JAX, built on the L1 kernels.
+
+Two uses:
+1. **Reference** — `model_loss` / `train_step` give a single-device oracle
+   for the distributed coordinator's numerics (pytest compares the rust
+   1×1-mesh run against this trajectory).
+2. **Shape source** — `hecaton_tile_shapes` mirrors the rust planner's
+   Algorithm-1 tiling so `aot.py` knows exactly which matmul artifacts the
+   coordinator will request. `python/tests/test_model.py` pins the
+   enumeration against hand-computed lists to prevent drift.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention_fwd
+from .kernels.layernorm import gelu_fwd, rmsnorm_fwd, softmax_xent
+from .kernels.matmul import matmul
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """Mirror of the rust `tiny`/`e2e-100m` presets (non-gated FFN)."""
+
+    name: str
+    hidden: int
+    intermediate: int
+    layers: int
+    heads: int
+    seq_len: int
+    batch: int
+    vocab: int
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+    @property
+    def qkv_out(self):
+        return 3 * self.hidden
+
+
+TINY = ModelCfg("tiny", hidden=64, intermediate=256, layers=2, heads=4,
+                seq_len=32, batch=8, vocab=64)
+E2E_100M = ModelCfg("e2e-100m", hidden=768, intermediate=3072, layers=12,
+                    heads=12, seq_len=256, batch=8, vocab=512)
+
+CONFIGS = {c.name: c for c in (TINY, E2E_100M)}
+
+
+def init_params(cfg: ModelCfg, key):
+    """Xavier-ish init; flat dict keyed like the rust coordinator's store."""
+    params = {}
+    k = iter(jax.random.split(key, 4 + 6 * cfg.layers))
+
+    def glorot(key, shape):
+        fan = sum(shape)
+        return jax.random.normal(key, shape, jnp.float32) * (2.0 / fan) ** 0.5
+
+    params["embed"] = glorot(next(k), (cfg.vocab, cfg.hidden))
+    for i in range(cfg.layers):
+        params[f"l{i}.w_qkv"] = glorot(next(k), (cfg.hidden, cfg.qkv_out))
+        params[f"l{i}.w_o"] = glorot(next(k), (cfg.hidden, cfg.hidden))
+        params[f"l{i}.w_up"] = glorot(next(k), (cfg.hidden, cfg.intermediate))
+        params[f"l{i}.w_down"] = glorot(next(k), (cfg.intermediate, cfg.hidden))
+        params[f"l{i}.norm1"] = jnp.ones((cfg.hidden,), jnp.float32)
+        params[f"l{i}.norm2"] = jnp.ones((cfg.hidden,), jnp.float32)
+    params["norm_f"] = jnp.ones((cfg.hidden,), jnp.float32)
+    params["lm_head"] = glorot(next(k), (cfg.hidden, cfg.vocab))
+    return params
+
+
+def forward(params, tokens, cfg: ModelCfg, use_kernels=True):
+    """Logits for `tokens` of shape [n] (already flattened batch·seq).
+
+    `use_kernels=True` routes matmul/attention/norm through the Pallas
+    kernels (the artifact path); `False` uses the differentiable jnp
+    oracles — needed for `jax.grad` since interpret-mode `pallas_call`
+    does not admit reverse-mode AD. `test_model.py` pins the two paths
+    equal, so gradients of the oracle path are gradients of the kernels.
+    """
+    from .kernels import ref as _ref
+
+    mm = matmul if use_kernels else _ref.matmul_ref
+    attn = attention_fwd if use_kernels else _ref.attention_ref
+    norm = rmsnorm_fwd if use_kernels else _ref.rmsnorm_ref
+
+    n = tokens.shape[0]
+    seqs = n // cfg.seq_len
+    x = params["embed"][tokens]  # [n, h]
+    for i in range(cfg.layers):
+        # Attention block (pre-norm).
+        xn = norm(x, params[f"l{i}.norm1"])
+        qkv = mm(xn, params[f"l{i}.w_qkv"])  # [n, 3h]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return (
+                t.reshape(seqs, cfg.seq_len, cfg.heads, cfg.head_dim)
+                .transpose(0, 2, 1, 3)
+                .reshape(seqs * cfg.heads, cfg.seq_len, cfg.head_dim)
+            )
+
+        a = attn(heads(q), heads(k), heads(v))
+        a = (
+            a.reshape(seqs, cfg.heads, cfg.seq_len, cfg.head_dim)
+            .transpose(0, 2, 1, 3)
+            .reshape(n, cfg.hidden)
+        )
+        x = x + mm(a, params[f"l{i}.w_o"])
+        # FFN block.
+        xn = norm(x, params[f"l{i}.norm2"])
+        z = gelu_fwd(mm(xn, params[f"l{i}.w_up"]))
+        x = x + mm(z, params[f"l{i}.w_down"])
+    xn = norm(x, params["norm_f"])
+    return mm(xn, params["lm_head"])
+
+
+def model_loss(params, tokens, targets, cfg: ModelCfg, use_kernels=True):
+    logits = forward(params, tokens, cfg, use_kernels=use_kernels)
+    loss, _ = softmax_xent(logits, targets)
+    return loss
+
+
+def train_step(params, tokens, targets, lr, cfg: ModelCfg):
+    """One SGD step; returns (loss, new_params)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: model_loss(p, tokens, targets, cfg, use_kernels=False)
+    )(params)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return loss, new_params
+
+
+# ───────────────── Algorithm-1 tile-shape enumeration ─────────────────
+
+
+def linears_of(cfg: ModelCfg):
+    """(name, in_dim, out_dim, orientation_idx) per block linear.
+
+    orientation_idx 0 = first (gather within columns, ring length R),
+    1 = last (transposed). Mirrors `rust/src/parallel/hecaton.rs`.
+    """
+    return [
+        ("w_qkv", cfg.hidden, cfg.qkv_out, 0),
+        ("w_o", cfg.hidden, cfg.hidden, 1),
+        ("w_up", cfg.hidden, cfg.intermediate, 0),
+        ("w_down", cfg.intermediate, cfg.hidden, 1),
+    ]
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def hecaton_tile_shapes(cfg: ModelCfg, rows, cols, tokens):
+    """All per-die matmul shapes (m, k, n) the coordinator requests for one
+    (model, mesh, mini-batch) triple: fwd, dX, dW per linear, plus the
+    LM-head shapes executed on the leader."""
+    shapes = set()
+    for _, in_dim, out_dim, orient in linears_of(cfg):
+        gather, scatter = (rows, cols) if orient == 0 else (cols, rows)
+        k = ceil_div(in_dim, scatter)
+        n = ceil_div(out_dim, gather)
+        shapes.add((tokens, k, n))  # fwd
+        shapes.add((tokens, n, k))  # dX = dY · Wᵀ
+        shapes.add((k, tokens, n))  # dW = Xᵀ · dY
+    # LM head on the leader (full width).
+    shapes.add((tokens, cfg.hidden, cfg.vocab))
+    shapes.add((tokens, cfg.vocab, cfg.hidden))
+    shapes.add((cfg.hidden, tokens, cfg.vocab))
+    return sorted(shapes)
+
+
+def aux_shapes(cfg: ModelCfg, rows, cols, tokens):
+    """Non-matmul artifact shapes for a (model, mesh, mini-batch) triple."""
+    seqs = max(1, tokens // cfg.seq_len)
+    n_dies = rows * cols
+    assert (seqs * cfg.heads) % n_dies == 0, "head batches must divide dies"
+    return {
+        # Heads are distributed across the N dies (paper Steps 10-12);
+        # the artifact shape is one die's chunk.
+        "attention": (seqs * cfg.heads // n_dies, cfg.seq_len, cfg.head_dim),
+        "rmsnorm": (tokens, cfg.hidden),
+        # gelu runs die-local on the up-projection's output tile
+        # [tokens/scatter, intermediate/gather] (orientation 0: gather=R,
+        # scatter=C) — no communication, exactly as the fused flow keeps
+        # the intermediate on-package.
+        "gelu": (ceil_div(tokens, cols), ceil_div(cfg.intermediate, rows)),
+        "xent": (tokens, cfg.vocab),
+    }

@@ -1,0 +1,62 @@
+"""AOT pipeline: every entry point lowers to parseable HLO text with the
+expected parameter arity; the manifest stays in sync."""
+
+import os
+
+import pytest
+
+from compile.aot import DEPLOYMENTS, entry_points, to_hlo_text
+import jax
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return entry_points()
+
+
+def test_deployments_cover_examples(entries):
+    # The rust examples need tiny@1x1, tiny@2x2 and e2e-100m@2x2.
+    assert ("tiny", 1, 1, 64) in DEPLOYMENTS
+    assert ("tiny", 2, 2, 64) in DEPLOYMENTS
+    assert ("e2e-100m", 2, 2, 256) in DEPLOYMENTS
+
+
+def test_entry_point_names_unique_and_shaped(entries):
+    assert len(entries) > 30
+    for name in entries:
+        kind = name.split("_")[0]
+        assert kind in {"matmul", "attention", "rmsnorm", "gelu", "xent"}, name
+
+
+@pytest.mark.parametrize("name", ["matmul_64x32x96", "attention_fwd_8x32x16",
+                                  "rmsnorm_fwd_64x64", "xent_64x64"])
+def test_lowering_produces_hlo_text(entries, name):
+    fn, args = entries[name]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule"), text[:80]
+    # return_tuple=True: the root is a tuple.
+    assert "ROOT" in text
+    # Count parameters of the ENTRY computation only (fusion bodies also
+    # contain `parameter(` lines). The ENTRY block runs from its header
+    # line to the first unindented closing brace.
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    block = []
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        block.append(l)
+    n_params = sum("parameter(" in l for l in block)
+    assert n_params == len(args), f"{name}: {n_params} params vs {len(args)} args"
+
+
+def test_emitted_artifacts_match_entry_points(entries):
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts/ not built yet (run `make artifacts`)")
+    on_disk = {f[: -len(".hlo.txt")] for f in os.listdir(art) if f.endswith(".hlo.txt")}
+    assert on_disk == set(entries), sorted(on_disk ^ set(entries))
+    manifest = os.path.join(art, "manifest.txt")
+    with open(manifest) as f:
+        names = {line.split()[0] for line in f if line.strip()}
+    assert names == set(entries)

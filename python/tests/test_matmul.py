@@ -1,0 +1,82 @@
+"""L1 matmul kernel vs pure-jnp oracle, with hypothesis shape sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import (
+    DEFAULT_BLOCK,
+    block_dims,
+    matmul,
+    vmem_footprint_bytes,
+)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),
+        (64, 96, 160),
+        (32, 64, 96),  # a coordinator tile for the tiny model
+        (64, 32, 96),
+        (128, 256, 64),
+        (7, 13, 5),  # primes: forces 1-sized blocks on some dims
+        (256, 384, 1152),  # an e2e-100m tile
+    ],
+)
+def test_matches_oracle(m, k, n):
+    x, w = rand(m, *(m, k)), rand(n, *(k, n))
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(ref.matmul_ref(x, w))
+    # Tolerance scales mildly with K: tiled accumulation reassociates sums.
+    tol = 2e-5 * max(1.0, (k / 64.0) ** 0.5)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(x @ w)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 2048), k=st.integers(1, 2048), n=st.integers(1, 2048))
+def test_block_dims_divide(m, k, n):
+    bm, bk, bn = block_dims(m, k, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+    assert bm <= DEFAULT_BLOCK[0] and bk <= DEFAULT_BLOCK[1] and bn <= DEFAULT_BLOCK[2]
+
+
+def test_vmem_footprint_reasonable():
+    # Default blocks at (4096)³: bm=512, bk=1024, bn=512 (largest divisor
+    # ≤576) → 5.24 MiB live, which double-buffers inside a 16 MiB VMEM.
+    fp = vmem_footprint_bytes(4096, 4096, 4096)
+    assert fp == 4 * (512 * 1024 + 1024 * 512 + 512 * 512)
+    assert fp * 2 < 16 * 2**20
+
+
+def test_accumulation_order_stability():
+    # Long-K accumulation must not blow up numerically.
+    x, w = rand(1, 8, 2048), rand(2, 2048, 8)
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(x @ w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

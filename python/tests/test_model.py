@@ -1,0 +1,114 @@
+"""L2 model: shapes, loss behaviour, gradient sanity, and the tile-shape
+enumeration the rust coordinator depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import (
+    CONFIGS,
+    TINY,
+    aux_shapes,
+    forward,
+    hecaton_tile_shapes,
+    init_params,
+    model_loss,
+    train_step,
+)
+
+
+def data(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    n = cfg.batch * cfg.seq_len
+    tokens = jax.random.randint(key, (n,), 0, cfg.vocab)
+    # Synthetic next-token task: target = (token + 1) mod vocab.
+    targets = (tokens + 1) % cfg.vocab
+    return tokens, targets
+
+
+def test_forward_shapes():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    tokens, _ = data(TINY)
+    logits = forward(params, tokens, TINY)
+    assert logits.shape == (TINY.batch * TINY.seq_len, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_kernel_and_oracle_paths_agree():
+    """Pins the gradient argument: the jnp-oracle forward (through which
+    `train_step` differentiates) equals the Pallas-kernel forward."""
+    params = init_params(TINY, jax.random.PRNGKey(7))
+    tokens, _ = data(TINY, seed=8)
+    lk = forward(params, tokens, TINY, use_kernels=True)
+    lo = forward(params, tokens, TINY, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lo), rtol=2e-4, atol=2e-4)
+
+
+def test_initial_loss_near_uniform():
+    params = init_params(TINY, jax.random.PRNGKey(0))
+    tokens, targets = data(TINY)
+    loss = float(model_loss(params, tokens, targets, TINY))
+    uniform = float(np.log(TINY.vocab))
+    assert abs(loss - uniform) < 0.5, f"init loss {loss} vs ln V {uniform}"
+
+
+def test_sgd_reduces_loss():
+    params = init_params(TINY, jax.random.PRNGKey(1))
+    tokens, targets = data(TINY, seed=2)
+    losses = []
+    for _ in range(12):
+        loss, params = train_step(params, tokens, targets, 0.5, TINY)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, f"no learning: {losses}"
+
+
+def test_gradients_flow_to_all_params():
+    params = init_params(TINY, jax.random.PRNGKey(3))
+    tokens, targets = data(TINY, seed=4)
+    grads = jax.grad(lambda p: model_loss(p, tokens, targets, TINY, use_kernels=False))(params)
+    for name, g in grads.items():
+        assert float(jnp.max(jnp.abs(g))) > 0.0, f"dead gradient for {name}"
+
+
+def test_tile_shape_enumeration_pinned_tiny_2x2():
+    """Hand-computed Algorithm-1 tiles for tiny @ 2×2, w=64 — guards the
+    python↔rust shape contract."""
+    shapes = hecaton_tile_shapes(TINY, 2, 2, 64)
+    expected = {
+        # w_qkv (64→192, orient 0): fwd / dX / dW
+        (64, 32, 96), (64, 96, 32), (32, 64, 96),
+        # w_o (64→64, orient 1)
+        (64, 32, 32), (32, 64, 32),
+        # w_up (64→256, orient 0)
+        (64, 32, 128), (64, 128, 32), (32, 64, 128),
+        # w_down (256→64, orient 1): k=256/2=128, n=64/2=32
+        (64, 128, 32), (128, 64, 32),
+        # lm head on the leader
+        (64, 64, 64), (64, 64, 64), (64, 64, 64),
+    }
+    assert set(shapes) == expected, sorted(set(shapes) ^ expected)
+
+
+def test_aux_shapes_pinned_tiny_2x2():
+    aux = aux_shapes(TINY, 2, 2, 64)
+    assert aux["attention"] == (2, 32, 16)  # (2 seqs × 4 heads) / 4 dies
+    assert aux["rmsnorm"] == (64, 64)
+    assert aux["gelu"] == (32, 128)
+    assert aux["xent"] == (64, 64)
+
+
+def test_shapes_for_reference_mesh_1x1():
+    shapes = hecaton_tile_shapes(TINY, 1, 1, 64)
+    # On 1×1 every linear is dense.
+    assert (64, 64, 192) in shapes  # qkv fwd
+    assert (64, 256, 64) in shapes  # down fwd
+    aux = aux_shapes(TINY, 1, 1, 64)
+    assert aux["gelu"] == (64, 256)
+
+
+def test_e2e_config_is_about_100m():
+    cfg = CONFIGS["e2e-100m"]
+    stack = cfg.layers * (4 * cfg.hidden**2 + 2 * cfg.hidden * cfg.intermediate)
+    embeds = 2 * cfg.vocab * cfg.hidden
+    total = stack + embeds
+    assert 6e7 < total < 1.6e8, total

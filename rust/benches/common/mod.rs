@@ -1,0 +1,78 @@
+//! Mini-criterion: a bench harness for `harness = false` bench targets
+//! (criterion is not in the offline vendor set — see DESIGN.md).
+//!
+//! Usage inside a bench binary:
+//! ```ignore
+//! mod common;
+//! fn main() {
+//!     let mut b = common::Bench::new("fig8");
+//!     b.bench("fig8/grid", || { hecaton::report::fig8::run(); });
+//!     b.finish();
+//! }
+//! ```
+//!
+//! Prints per-bench mean/median/p95 and writes nothing to disk; the
+//! experiment *content* (the paper tables) is printed once before timing.
+
+use std::time::{Duration, Instant};
+
+use hecaton::util::stats::Summary;
+
+/// Target minimum measurement time per bench.
+const TARGET_TIME: Duration = Duration::from_secs(2);
+/// Hard cap on iterations.
+const MAX_ITERS: usize = 200;
+
+pub struct Bench {
+    suite: &'static str,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(suite: &'static str) -> Bench {
+        eprintln!("== bench suite: {suite} ==");
+        Bench {
+            suite,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` adaptively: warm up once, then iterate until the target
+    /// time or the iteration cap is reached.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        // Warmup.
+        f();
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < TARGET_TIME && samples.len() < MAX_ITERS {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::from(&samples).expect("at least one sample");
+        println!(
+            "bench {:40} {:>6} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            name,
+            s.n,
+            hecaton::util::fmt::seconds(s.mean),
+            hecaton::util::fmt::seconds(s.median),
+            hecaton::util::fmt::seconds(s.p95),
+        );
+        self.results.push((name.to_string(), s));
+    }
+
+    /// Print the suite footer.
+    pub fn finish(self) {
+        eprintln!(
+            "== {}: {} benches complete ==",
+            self.suite,
+            self.results.len()
+        );
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

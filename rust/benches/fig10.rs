@@ -1,0 +1,11 @@
+//! Bench + regeneration of paper Fig. 10 (DRAM bandwidth sweep).
+mod common;
+
+fn main() {
+    println!("{}", hecaton::report::run("fig10").expect("fig10"));
+    let mut b = common::Bench::new("fig10");
+    b.bench("fig10/dram_sweep", || {
+        common::black_box(hecaton::report::fig10::run());
+    });
+    b.finish();
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration of paper Fig. 11 (layout sweep).
+mod common;
+
+fn main() {
+    println!("{}", hecaton::report::run("fig11").expect("fig11"));
+    let mut b = common::Bench::new("fig11");
+    b.bench("fig11/layout_sweep", || {
+        common::black_box(hecaton::report::fig11::run());
+    });
+    b.finish();
+}

@@ -1,0 +1,14 @@
+//! Bench + regeneration of paper Fig. 8 (overall latency/energy grid).
+mod common;
+
+fn main() {
+    // Print the reproduced figure once.
+    println!("{}", hecaton::report::run("fig8").expect("fig8"));
+    // Then time the full grid (the fig8 sweep is itself a simulator
+    // workload: 2 packages x 4 workloads x 4 methods).
+    let mut b = common::Bench::new("fig8");
+    b.bench("fig8/full_grid", || {
+        common::black_box(hecaton::report::fig8::run());
+    });
+    b.finish();
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration of paper Fig. 9 (scaling study).
+mod common;
+
+fn main() {
+    println!("{}", hecaton::report::run("fig9").expect("fig9"));
+    let mut b = common::Bench::new("fig9");
+    b.bench("fig9/scaling_sweep", || {
+        common::black_box(hecaton::report::fig9::run());
+    });
+    b.finish();
+}

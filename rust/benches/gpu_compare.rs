@@ -1,0 +1,11 @@
+//! Bench + regeneration of §VI-G (energy efficiency vs A100 cluster).
+mod common;
+
+fn main() {
+    println!("{}", hecaton::report::run("gpu").expect("gpu"));
+    let mut b = common::Bench::new("gpu_compare");
+    b.bench("gpu/comparison", || {
+        common::black_box(hecaton::report::gpu::run());
+    });
+    b.finish();
+}

@@ -1,0 +1,105 @@
+//! Hot-path micro-benchmarks — the targets of the EXPERIMENTS.md §Perf
+//! pass:
+//!
+//! * L3 simulator: one `simulate()` call (the inner loop of every sweep),
+//!   the step-level collective simulator, and the fusion planner.
+//! * L3 coordinator: ring collectives on real tensors and one full
+//!   distributed mini-batch (when artifacts are built).
+//! * Runtime: PJRT executable-cache hit path.
+
+mod common;
+
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::nop::collective::{flat_ring_all_reduce, ring_step_collective, CollectiveKind};
+use hecaton::runtime::Tensor;
+use hecaton::sim::system::simulate;
+use hecaton::util::Bytes;
+
+fn main() {
+    let mut b = common::Bench::new("hotpath");
+
+    // ── L3 simulator ──
+    let model = model_preset("llama2-70b").unwrap();
+    let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr5_6400);
+    b.bench("sim/simulate_llama70b_256d", || {
+        common::black_box(simulate(&model, &hw, Method::Hecaton));
+    });
+    let model405 = model_preset("llama3.1-405b").unwrap();
+    let hw1024 = HardwareConfig::square(1024, PackageKind::Standard, DramKind::Ddr5_6400);
+    b.bench("sim/simulate_llama405b_1024d", || {
+        common::black_box(simulate(&model405, &hw1024, Method::FlatRing));
+    });
+
+    // ── NoP collective step simulator ──
+    let link = LinkConfig::for_package(PackageKind::Standard);
+    b.bench("nop/ring_ag_n32", || {
+        common::black_box(ring_step_collective(
+            CollectiveKind::AllGather,
+            32,
+            Bytes::mib(64.0),
+            &link,
+        ));
+    });
+    b.bench("nop/flat_ring_ar_n1024", || {
+        common::black_box(flat_ring_all_reduce(1024, Bytes::gib(1.0), &link));
+    });
+
+    // ── host tensor ops (coordinator inner loop) ──
+    let mut rng = hecaton::util::rng::Rng::new(1);
+    let big = Tensor::glorot(768, 1152, &mut rng);
+    b.bench("tensor/transpose_768x1152", || {
+        common::black_box(big.transpose());
+    });
+    let mut acc = Tensor::zeros(&[768, 1152]);
+    b.bench("tensor/add_assign_768x1152", || {
+        acc.add_assign(&big);
+    });
+
+    // ── coordinator collectives on real tensors ──
+    b.bench("coord/rs_ag_ring4_64x256", || {
+        use hecaton::coordinator::collective::build_ring;
+        let ends = build_ring(4);
+        let handles: Vec<_> = ends
+            .into_iter()
+            .enumerate()
+            .map(|(p, end)| {
+                std::thread::spawn(move || {
+                    let t = Tensor::new(vec![p as f32; 64 * 256], vec![64, 256]);
+                    let rs = end.reduce_scatter(&t).unwrap();
+                    end.all_gather(rs).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            common::black_box(h.join().unwrap());
+        }
+    });
+
+    // ── PJRT runtime (artifact cache hit) ──
+    if hecaton::runtime::artifact_dir().join("manifest.txt").exists() {
+        let rt = hecaton::runtime::Runtime::open_default().unwrap();
+        let x = Tensor::glorot(64, 32, &mut rng);
+        let w = Tensor::glorot(32, 96, &mut rng);
+        let _ = rt.matmul(&x, &w).unwrap(); // compile once
+        b.bench("runtime/matmul_64x32x96_cached", || {
+            common::black_box(rt.matmul(&x, &w).unwrap());
+        });
+
+        // One full distributed mini-batch through the 2x2 mesh.
+        use hecaton::coordinator::{coord_model, Coordinator, MeshCfg};
+        let cfg = MeshCfg::new(coord_model("tiny").unwrap(), 2, 2, 64);
+        let mut coord = Coordinator::new(cfg, 5).unwrap();
+        let mut corpus = hecaton::train::data::Corpus::next_token(64, 32, 9);
+        let (tokens, targets) = corpus.minibatch(64);
+        b.bench("coord/grad_step_tiny_2x2", || {
+            common::black_box(coord.grad_step(&tokens, &targets).unwrap());
+        });
+        coord.shutdown().unwrap();
+    } else {
+        eprintln!("(artifacts not built — skipping runtime/coordinator benches)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration of paper Table IV (link-latency proportion) and
+//! Table III (closed forms).
+mod common;
+
+fn main() {
+    println!("{}", hecaton::report::run("table3").expect("table3"));
+    println!("{}", hecaton::report::run("table4").expect("table4"));
+    let mut b = common::Bench::new("table4");
+    b.bench("table4/link_latency_sweep", || {
+        common::black_box(hecaton::report::table4::run());
+    });
+    b.finish();
+}

@@ -1,0 +1,65 @@
+//! Die coordinates on the package mesh.
+
+use std::fmt;
+
+/// Coordinate of a computing die: row-major `[i, j]` as in the paper's
+/// Algorithm 1 ("for hardware, [i, j] denotes the die's coordinates").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DieId {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl DieId {
+    pub fn new(row: usize, col: usize) -> DieId {
+        DieId { row, col }
+    }
+
+    /// Flat index for a mesh with `cols` columns.
+    pub fn flat(self, cols: usize) -> usize {
+        self.row * cols + self.col
+    }
+
+    /// Inverse of [`DieId::flat`].
+    pub fn from_flat(idx: usize, cols: usize) -> DieId {
+        DieId {
+            row: idx / cols,
+            col: idx % cols,
+        }
+    }
+
+    /// Manhattan distance (hop count on the mesh without bypass links).
+    pub fn manhattan(self, other: DieId) -> usize {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+impl fmt::Display for DieId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{},{}]", self.row, self.col)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip() {
+        for cols in [1usize, 3, 8] {
+            for idx in 0..cols * 4 {
+                let d = DieId::from_flat(idx, cols);
+                assert_eq!(d.flat(cols), idx);
+            }
+        }
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let a = DieId::new(0, 0);
+        let b = DieId::new(2, 3);
+        assert_eq!(a.manhattan(b), 5);
+        assert_eq!(b.manhattan(a), 5);
+        assert_eq!(a.manhattan(a), 0);
+    }
+}

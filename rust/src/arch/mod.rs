@@ -1,0 +1,15 @@
+//! Structural hardware models: die coordinates, package geometry, the
+//! bypass-ring NoP router, and SRAM buffer occupancy tracking.
+//!
+//! Parameter *values* (bandwidths, capacities, energies) live in
+//! [`crate::config`]; this module models *behaviour*.
+
+pub mod die;
+pub mod package;
+pub mod router;
+pub mod sram;
+
+pub use die::DieId;
+pub use package::Package;
+pub use router::{Port, Router};
+pub use sram::SramTracker;

@@ -1,0 +1,111 @@
+//! Package geometry: the 2D mesh of computing dies, its perimeter (which
+//! sets the DRAM channel count) and the rectangular layouts swept in
+//! Fig. 11.
+
+use crate::arch::die::DieId;
+
+/// Geometry of a `rows × cols` package.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Package {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Package {
+    pub fn new(rows: usize, cols: usize) -> Package {
+        assert!(rows > 0 && cols > 0, "degenerate package");
+        Package { rows, cols }
+    }
+
+    pub fn n_dies(self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Whether the mesh is square (Optimus requires this; Hecaton doesn't).
+    pub fn is_square(self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Perimeter in die-edges; the paper scales DRAM channels with this.
+    pub fn perimeter(self) -> usize {
+        2 * (self.rows + self.cols)
+    }
+
+    /// Iterate all die coordinates row-major.
+    pub fn dies(self) -> impl Iterator<Item = DieId> {
+        let cols = self.cols;
+        (0..self.n_dies()).map(move |i| DieId::from_flat(i, cols))
+    }
+
+    /// Dies in row `i`, left→right.
+    pub fn row(self, i: usize) -> Vec<DieId> {
+        assert!(i < self.rows);
+        (0..self.cols).map(|j| DieId::new(i, j)).collect()
+    }
+
+    /// Dies in column `j`, top→bottom.
+    pub fn col(self, j: usize) -> Vec<DieId> {
+        assert!(j < self.cols);
+        (0..self.rows).map(|i| DieId::new(i, j)).collect()
+    }
+
+    /// All factor-pair layouts of `n` dies — the Fig. 11 sweep
+    /// (`(1,16), (2,8), (4,4), (8,2), (16,1)` for n = 16).
+    pub fn layouts_of(n: usize) -> Vec<Package> {
+        let mut out = Vec::new();
+        for rows in 1..=n {
+            if n % rows == 0 {
+                out.push(Package::new(rows, n / rows));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_basics() {
+        let p = Package::new(4, 8);
+        assert_eq!(p.n_dies(), 32);
+        assert_eq!(p.perimeter(), 24);
+        assert!(!p.is_square());
+        assert!(Package::new(4, 4).is_square());
+    }
+
+    #[test]
+    fn rows_and_cols_enumerate_correctly() {
+        let p = Package::new(3, 2);
+        assert_eq!(p.row(1), vec![DieId::new(1, 0), DieId::new(1, 1)]);
+        assert_eq!(
+            p.col(0),
+            vec![DieId::new(0, 0), DieId::new(1, 0), DieId::new(2, 0)]
+        );
+        assert_eq!(p.dies().count(), 6);
+        // row-major order
+        let all: Vec<DieId> = p.dies().collect();
+        assert_eq!(all[0], DieId::new(0, 0));
+        assert_eq!(all[1], DieId::new(0, 1));
+        assert_eq!(all[2], DieId::new(1, 0));
+    }
+
+    #[test]
+    fn layouts_are_all_factor_pairs() {
+        let ls = Package::layouts_of(16);
+        assert_eq!(ls.len(), 5);
+        assert!(ls.iter().any(|p| p.rows == 1 && p.cols == 16));
+        assert!(ls.iter().any(|p| p.rows == 4 && p.cols == 4));
+        assert!(ls.iter().any(|p| p.rows == 16 && p.cols == 1));
+        for p in ls {
+            assert_eq!(p.n_dies(), 16);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_dim_panics() {
+        Package::new(0, 4);
+    }
+}

@@ -1,0 +1,157 @@
+//! The high-throughput NoP router with bypass channels (paper Fig. 5(d)).
+//!
+//! The paper's router adds dedicated wires so that *deterministic
+//! forwarding* (receive port always opposite the transmit port: W→E or
+//! N→S, as happens on the bypass ring) proceeds concurrently with the
+//! die's own local traffic. We model the router at the transaction level:
+//! a cycle-free check that a set of simultaneous port-to-port transactions
+//! is contention-free, which the collective simulator uses to assert that
+//! its schedules achieve full-bandwidth steps.
+
+use std::collections::HashSet;
+
+/// Router port. `Local` is the die's own NoC interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Port {
+    Local,
+    East,
+    South,
+    West,
+    North,
+}
+
+impl Port {
+    /// The opposite direction (bypass pairs: W↔E, N↔S).
+    pub fn opposite(self) -> Option<Port> {
+        match self {
+            Port::East => Some(Port::West),
+            Port::West => Some(Port::East),
+            Port::North => Some(Port::South),
+            Port::South => Some(Port::North),
+            Port::Local => None,
+        }
+    }
+}
+
+/// One in-flight transaction through a router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Transaction {
+    pub from: Port,
+    pub to: Port,
+}
+
+impl Transaction {
+    /// A deterministic straight-through forward (the bypass fast path).
+    pub fn is_bypass(self) -> bool {
+        self.from.opposite() == Some(self.to)
+    }
+}
+
+/// Transaction-level router model.
+///
+/// `bypass` mirrors the paper's proposal: with it, a bypass forward and
+/// unrelated crossbar traffic proceed in the same cycle; without it every
+/// transaction competes for the single crossbar.
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    pub bypass: bool,
+}
+
+impl Router {
+    pub fn paper() -> Router {
+        Router { bypass: true }
+    }
+    pub fn baseline() -> Router {
+        Router { bypass: false }
+    }
+
+    /// Can this set of transactions execute in a single router cycle?
+    ///
+    /// Rules: each input port feeds one transaction, each output port
+    /// accepts one. With `bypass`, transactions on the dedicated bypass
+    /// wires (W→E, E→W, N→S, S→N) don't occupy the crossbar, so one bypass
+    /// plus one crossbar transaction may share even port-disjointness —
+    /// they still must not share physical ports.
+    pub fn admissible(&self, txns: &[Transaction]) -> bool {
+        let mut in_used: HashSet<Port> = HashSet::new();
+        let mut out_used: HashSet<Port> = HashSet::new();
+        let mut crossbar_txns = 0usize;
+        for t in txns {
+            if !in_used.insert(t.from) || !out_used.insert(t.to) {
+                return false; // physical port conflict
+            }
+            if !(self.bypass && t.is_bypass()) {
+                crossbar_txns += 1;
+            }
+        }
+        // The baseline crossbar is non-blocking across distinct ports, so
+        // port-disjoint transactions always fit; the difference bypass
+        // makes is *latency/throughput* (modelled as concurrent slots in
+        // `throughput_factor`), plus it frees the crossbar path entirely.
+        let _ = crossbar_txns;
+        true
+    }
+
+    /// Effective throughput multiplier for a die that simultaneously
+    /// forwards ring traffic and injects its own: the paper's router
+    /// sustains both (factor 1.0); the baseline serializes them (0.5).
+    pub fn forward_inject_throughput(&self) -> f64 {
+        if self.bypass {
+            1.0
+        } else {
+            0.5
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opposites() {
+        assert_eq!(Port::West.opposite(), Some(Port::East));
+        assert_eq!(Port::North.opposite(), Some(Port::South));
+        assert_eq!(Port::Local.opposite(), None);
+    }
+
+    #[test]
+    fn bypass_detection() {
+        assert!(Transaction { from: Port::West, to: Port::East }.is_bypass());
+        assert!(Transaction { from: Port::South, to: Port::North }.is_bypass());
+        assert!(!Transaction { from: Port::West, to: Port::South }.is_bypass());
+        assert!(!Transaction { from: Port::Local, to: Port::East }.is_bypass());
+    }
+
+    #[test]
+    fn port_conflicts_rejected() {
+        let r = Router::paper();
+        // two transactions out of the same input port
+        assert!(!r.admissible(&[
+            Transaction { from: Port::West, to: Port::East },
+            Transaction { from: Port::West, to: Port::South },
+        ]));
+        // two into the same output port
+        assert!(!r.admissible(&[
+            Transaction { from: Port::West, to: Port::East },
+            Transaction { from: Port::Local, to: Port::East },
+        ]));
+    }
+
+    #[test]
+    fn bypass_plus_local_inject_coexist() {
+        let r = Router::paper();
+        // Die 1 on the ring: forwards Die0→Die2 (W→E) while sending its own
+        // chunk north — the paper's headline router scenario.
+        assert!(r.admissible(&[
+            Transaction { from: Port::West, to: Port::East },
+            Transaction { from: Port::Local, to: Port::North },
+        ]));
+    }
+
+    #[test]
+    fn throughput_factors() {
+        assert_eq!(Router::paper().forward_inject_throughput(), 1.0);
+        assert_eq!(Router::baseline().forward_inject_throughput(), 0.5);
+    }
+}

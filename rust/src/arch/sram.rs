@@ -1,0 +1,144 @@
+//! SRAM buffer occupancy tracking.
+//!
+//! Used in two places: the tensor-parallel methods compute *peak* buffer
+//! requirements to decide feasibility (Fig. 8's asterisked "SRAM overflow"
+//! entries), and the functional coordinator tracks live allocations per die
+//! so that a schedule that would overflow the 8 MB buffers fails loudly
+//! rather than silently producing impossible results.
+
+use crate::util::Bytes;
+
+/// Tracks allocations against a fixed capacity, recording the peak.
+#[derive(Debug, Clone)]
+pub struct SramTracker {
+    capacity: Bytes,
+    used: Bytes,
+    peak: Bytes,
+    name: &'static str,
+}
+
+/// Error when an allocation would exceed capacity.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("{name} buffer overflow: requested {req}, used {used} of {cap}")]
+pub struct SramOverflow {
+    pub name: &'static str,
+    pub req: Bytes,
+    pub used: Bytes,
+    pub cap: Bytes,
+}
+
+impl SramTracker {
+    pub fn new(name: &'static str, capacity: Bytes) -> SramTracker {
+        SramTracker {
+            capacity,
+            used: Bytes::ZERO,
+            peak: Bytes::ZERO,
+            name,
+        }
+    }
+
+    pub fn capacity(&self) -> Bytes {
+        self.capacity
+    }
+    pub fn used(&self) -> Bytes {
+        self.used
+    }
+    pub fn peak(&self) -> Bytes {
+        self.peak
+    }
+    pub fn free(&self) -> Bytes {
+        self.capacity - self.used
+    }
+
+    /// Allocate `size` bytes; errors when capacity would be exceeded.
+    pub fn alloc(&mut self, size: Bytes) -> Result<(), SramOverflow> {
+        if (self.used + size).raw() > self.capacity.raw() + 1e-9 {
+            return Err(SramOverflow {
+                name: self.name,
+                req: size,
+                used: self.used,
+                cap: self.capacity,
+            });
+        }
+        self.used += size;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `size` bytes (panics on double-free below zero).
+    pub fn release(&mut self, size: Bytes) {
+        assert!(
+            self.used.raw() + 1e-9 >= size.raw(),
+            "{}: release {} exceeds used {}",
+            self.name,
+            size,
+            self.used
+        );
+        self.used -= size;
+        if self.used.raw() < 0.0 {
+            self.used = Bytes::ZERO;
+        }
+    }
+
+    /// Record a transient peak (allocate + release immediately) — used by
+    /// analytic feasibility checks that don't track lifetimes.
+    pub fn touch_peak(&mut self, size: Bytes) -> Result<(), SramOverflow> {
+        self.alloc(size)?;
+        self.release(size);
+        Ok(())
+    }
+
+    /// Reset usage but keep the peak (per-mini-batch reuse).
+    pub fn reset(&mut self) {
+        self.used = Bytes::ZERO;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_and_peak() {
+        let mut t = SramTracker::new("act", Bytes::mib(8.0));
+        t.alloc(Bytes::mib(5.0)).unwrap();
+        t.alloc(Bytes::mib(2.0)).unwrap();
+        assert_eq!(t.used(), Bytes::mib(7.0));
+        t.release(Bytes::mib(4.0));
+        assert_eq!(t.used(), Bytes::mib(3.0));
+        assert_eq!(t.peak(), Bytes::mib(7.0));
+        assert_eq!(t.free(), Bytes::mib(5.0));
+    }
+
+    #[test]
+    fn overflow_is_an_error_and_leaves_state() {
+        let mut t = SramTracker::new("w", Bytes::mib(8.0));
+        t.alloc(Bytes::mib(6.0)).unwrap();
+        let e = t.alloc(Bytes::mib(3.0)).unwrap_err();
+        assert_eq!(e.name, "w");
+        assert_eq!(t.used(), Bytes::mib(6.0)); // unchanged after failure
+    }
+
+    #[test]
+    fn touch_peak_records_without_holding() {
+        let mut t = SramTracker::new("a", Bytes::mib(8.0));
+        t.touch_peak(Bytes::mib(7.5)).unwrap();
+        assert_eq!(t.used(), Bytes::ZERO);
+        assert_eq!(t.peak(), Bytes::mib(7.5));
+        assert!(t.touch_peak(Bytes::mib(9.0)).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "release")]
+    fn over_release_panics() {
+        let mut t = SramTracker::new("a", Bytes::mib(1.0));
+        t.release(Bytes::mib(0.5));
+    }
+
+    #[test]
+    fn exact_fit_allowed() {
+        let mut t = SramTracker::new("a", Bytes::mib(8.0));
+        t.alloc(Bytes::mib(8.0)).unwrap();
+        assert!(t.free().raw().abs() < 1.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! `hecaton` command-line interface.
+//!
+//! Subcommands:
+//! * `simulate`  — run the system simulator on one (model, hardware, method)
+//! * `reproduce` — regenerate a paper table/figure (fig8, fig9, …)
+//! * `train`     — functional distributed training with a loss curve
+//! * `info`      — show presets and the resolved configuration
+
+use anyhow::anyhow;
+
+use crate::config::presets::{eval_models, model_preset};
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::simulate;
+use crate::util::cli::{App, CommandSpec, Matches};
+use crate::util::table::Table;
+
+/// Build the CLI application spec.
+pub fn app() -> App {
+    App::new("hecaton", "scalable waferscale-chiplet LLM training (paper reproduction)")
+        .command(
+            CommandSpec::new("simulate", "simulate one training batch")
+                .opt("model", "llama2-70b", "model preset (see `hecaton info`)")
+                .opt("dies", "256", "number of computing dies (square) or use --mesh")
+                .opt("mesh", "", "explicit RxC mesh, e.g. 2x8")
+                .opt("package", "standard", "packaging: standard | advanced")
+                .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
+                .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
+                .opt("config", "", "TOML config file (overrides the above)"),
+        )
+        .command(
+            CommandSpec::new("reproduce", "regenerate a paper table/figure")
+                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | all"),
+        )
+        .command(
+            CommandSpec::new("train", "functional distributed training (real numerics)")
+                .opt("model", "tiny", "tiny | e2e-100m")
+                .opt("mesh", "2x2", "die mesh RxC (artifacts must exist)")
+                .opt("steps", "20", "training steps")
+                .opt("lr", "0.5", "learning rate")
+                .opt("seed", "1234", "seed")
+                .opt("task", "next-token", "next-token | induction"),
+        )
+        .command(CommandSpec::new("info", "list presets and hardware defaults"))
+}
+
+/// Entry point used by `main.rs`.
+pub fn run(args: &[String]) -> crate::Result<i32> {
+    let app = app();
+    let Some(m) = app.parse(args).map_err(|e| anyhow!("{e}"))? else {
+        return Ok(0); // help printed
+    };
+    match m.command.as_str() {
+        "simulate" => cmd_simulate(&m),
+        "reproduce" => cmd_reproduce(&m),
+        "train" => cmd_train(&m),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unhandled command {other}")),
+    }?;
+    Ok(0)
+}
+
+fn parse_mesh(s: &str) -> crate::Result<(usize, usize)> {
+    let (r, c) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow!("mesh must be RxC, e.g. 4x4"))?;
+    Ok((r.parse()?, c.parse()?))
+}
+
+fn cmd_simulate(m: &Matches) -> crate::Result<()> {
+    let (model, hw) = if !m.value("config").is_empty() {
+        let setup = crate::config::file::load(m.value("config"))?;
+        (setup.model, setup.hardware)
+    } else {
+        let model = model_preset(m.value("model"))
+            .ok_or_else(|| anyhow!("unknown model '{}'", m.value("model")))?;
+        let package = PackageKind::parse(m.value("package"))
+            .ok_or_else(|| anyhow!("bad package"))?;
+        let dram = DramKind::parse(m.value("dram")).ok_or_else(|| anyhow!("bad dram"))?;
+        let hw = if !m.value("mesh").is_empty() {
+            let (r, c) = parse_mesh(m.value("mesh"))?;
+            HardwareConfig::mesh(r, c, package, dram)
+        } else {
+            HardwareConfig::square(m.parse_value("dies")?, package, dram)
+        };
+        (model, hw)
+    };
+    let method = Method::parse(m.value("method")).ok_or_else(|| anyhow!("bad method"))?;
+    let r = simulate(&model, &hw, method);
+
+    let mut t = Table::new(&["metric", "value"]).label_first();
+    let lat = r.latency.raw();
+    t.row(crate::table_row!["model", model.name]);
+    t.row(crate::table_row![
+        "mesh",
+        format!("{}x{} ({} dies, {})", hw.mesh_rows, hw.mesh_cols, r.dies, hw.package.name())
+    ]);
+    t.row(crate::table_row!["method", method.name()]);
+    t.row(crate::table_row!["batch latency", r.latency]);
+    t.row(crate::table_row![
+        "  compute",
+        format!("{} ({:.1}%)", r.breakdown.compute, 100.0 * r.breakdown.compute.raw() / lat)
+    ]);
+    t.row(crate::table_row![
+        "  NoP transmission",
+        format!(
+            "{} ({:.1}%)",
+            r.breakdown.nop_transmission,
+            100.0 * r.breakdown.nop_transmission.raw() / lat
+        )
+    ]);
+    t.row(crate::table_row![
+        "  NoP link latency",
+        format!("{} ({:.2}%)", r.breakdown.nop_link, 100.0 * r.breakdown.nop_link.raw() / lat)
+    ]);
+    t.row(crate::table_row![
+        "  exposed DRAM",
+        format!("{} ({:.1}%)", r.breakdown.dram_exposed, 100.0 * r.breakdown.dram_exposed.raw() / lat)
+    ]);
+    t.row(crate::table_row!["energy / batch", r.energy_total]);
+    t.row(crate::table_row![
+        "throughput",
+        format!("{:.0} tokens/s", r.tokens_per_sec(&model))
+    ]);
+    t.row(crate::table_row![
+        "achieved compute",
+        crate::util::fmt::flops(r.achieved_flops())
+    ]);
+    t.row(crate::table_row![
+        "efficiency",
+        format!("{} /W", crate::util::fmt::flops(r.flops_per_watt()))
+    ]);
+    t.row(crate::table_row![
+        "PE utilization (worst block)",
+        format!("{:.1}%", 100.0 * r.min_utilization)
+    ]);
+    t.row(crate::table_row![
+        "mini-batch",
+        format!("{} tokens x {}", r.minibatch_tokens, r.n_minibatches)
+    ]);
+    t.row(crate::table_row![
+        "SRAM act/weight peak",
+        format!("{} / {}", r.sram.act_peak, r.sram.weight_peak)
+    ]);
+    t.row(crate::table_row![
+        "feasible",
+        if r.feasible() { "yes" } else { "NO (SRAM overflow or layout)" }
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_reproduce(m: &Matches) -> crate::Result<()> {
+    let exp = m.pos(0).ok_or_else(|| anyhow!("which experiment? (fig8|...|all)"))?;
+    if exp == "all" {
+        for id in crate::report::experiments() {
+            println!("{}", crate::report::run(id)?);
+        }
+    } else {
+        println!("{}", crate::report::run(exp)?);
+    }
+    Ok(())
+}
+
+fn cmd_train(m: &Matches) -> crate::Result<()> {
+    use crate::coordinator::{coord_model, Coordinator, MeshCfg};
+    use crate::train::data::Corpus;
+
+    let model = coord_model(m.value("model"))
+        .ok_or_else(|| anyhow!("model '{}' has no functional preset", m.value("model")))?;
+    let (rows, cols) = parse_mesh(m.value("mesh"))?;
+    let tokens = match model.name.as_str() {
+        "tiny" => 64,
+        _ => model.seq_len,
+    };
+    let seed: u64 = m.parse_value("seed")?;
+    let mut corpus = match m.value("task") {
+        "induction" => Corpus::induction(model.vocab, model.seq_len, seed),
+        _ => Corpus::next_token(model.vocab, model.seq_len, seed),
+    };
+    let cfg = MeshCfg::new(model, rows, cols, tokens);
+    println!(
+        "spawning {}x{} die mesh for '{}' ({} tokens/mini-batch)…",
+        rows, cols, cfg.model.name, tokens
+    );
+    let mut coord = Coordinator::new(cfg, seed)?;
+    let logs = crate::train::train(
+        &mut coord,
+        &mut corpus,
+        crate::train::TrainCfg {
+            steps: m.parse_value("steps")?,
+            lr: m.parse_value("lr")?,
+            seed,
+        },
+    )?;
+    let mut t = Table::new(&["step", "loss", "wall"]).label_first();
+    for l in &logs {
+        t.row(crate::table_row![l.step, format!("{:.4}", l.loss), format!("{:?}", l.wall)]);
+    }
+    println!("{}", t.render());
+    coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_info() -> crate::Result<()> {
+    let mut t = Table::new(&["model", "hidden", "layers", "heads", "seq", "params"])
+        .with_title("Model presets")
+        .label_first();
+    for name in eval_models() {
+        let m = model_preset(name).unwrap();
+        t.row(crate::table_row![
+            m.name,
+            m.hidden,
+            m.layers,
+            m.heads,
+            m.seq_len,
+            crate::util::fmt::count(m.total_params())
+        ]);
+    }
+    println!("{}", t.render());
+    let die = HardwareConfig::paper_die();
+    println!(
+        "Die: {} MACs/cycle @ {:.0} MHz = {} peak; {} + {} buffers; {} mm2",
+        die.macs_per_cycle(),
+        die.freq_hz / 1e6,
+        crate::util::fmt::flops(die.peak_flops()),
+        die.weight_buf,
+        die.act_buf,
+        die.area_mm2
+    );
+    println!("Functional (train) presets: tiny, e2e-100m — see aot.py DEPLOYMENTS");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn app_parses_all_subcommands() {
+        let a = app();
+        assert!(a.parse(&argv(&["simulate", "--model", "tiny"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["reproduce", "fig8"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["train", "--steps", "3"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["info"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn parse_mesh_forms() {
+        assert_eq!(parse_mesh("4x4").unwrap(), (4, 4));
+        assert_eq!(parse_mesh("2x8").unwrap(), (2, 8));
+        assert!(parse_mesh("44").is_err());
+    }
+
+    #[test]
+    fn simulate_command_runs() {
+        let a = app();
+        let m = a
+            .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16"]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
+    }
+
+    #[test]
+    fn info_runs() {
+        cmd_info().unwrap();
+    }
+}

@@ -1,0 +1,12 @@
+//! Per-die compute timing: the Timeloop-lite PE-array model.
+//!
+//! The paper validates its performance model against Timeloop for
+//! utilization and SRAM reuse (§VI-A) but states that fine-grained mapping
+//! is not the focus; we reproduce the same level of abstraction — a
+//! loop-tiling utilization model over the Simba-like FP32 PE array.
+
+pub mod tiling;
+pub mod pe;
+
+pub use pe::{DieCompute, VectorOpKind};
+pub use tiling::{MatmulShape, Tiling};

@@ -1,0 +1,161 @@
+//! Die-level compute engine: matmuls on the PE array, everything else on
+//! the vector unit (paper Fig. 5(c): "PE array and vector unit for main
+//! computation").
+
+use crate::compute::tiling::{MatmulShape, Tiling};
+use crate::config::DieConfig;
+use crate::util::Seconds;
+
+/// Non-matmul element-wise/reduction work executed on the vector unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VectorOpKind {
+    /// Softmax over attention scores (exp + sum + div ≈ 5 passes).
+    Softmax,
+    /// LayerNorm / RMSNorm (mean/var + normalize ≈ 4 passes).
+    LayerNorm,
+    /// GeLU / SiLU activation (≈ 2 passes).
+    Activation,
+    /// Residual add (1 pass).
+    Add,
+    /// Optimizer update per weight element (SGD+momentum ≈ 3 passes).
+    OptimizerUpdate,
+}
+
+impl VectorOpKind {
+    /// Effective element-passes through the vector unit.
+    pub fn passes(self) -> f64 {
+        match self {
+            VectorOpKind::Softmax => 5.0,
+            VectorOpKind::LayerNorm => 4.0,
+            VectorOpKind::Activation => 2.0,
+            VectorOpKind::Add => 1.0,
+            VectorOpKind::OptimizerUpdate => 3.0,
+        }
+    }
+}
+
+/// Compute model of one die.
+#[derive(Debug, Clone)]
+pub struct DieCompute {
+    pub die: DieConfig,
+    pub tiling: Tiling,
+    /// Vector-unit throughput, elements/cycle. Sized at one element per
+    /// MAC lane (the vector unit is a lane-wide SIMD engine).
+    pub vector_lanes: usize,
+}
+
+/// Accumulated compute cost on one die.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ComputeCost {
+    pub time: Seconds,
+    pub macs: f64,
+    /// Operand elements streamed through SRAM (for access energy).
+    pub sram_elems: f64,
+    /// Vector-unit element-passes.
+    pub vector_elems: f64,
+}
+
+impl ComputeCost {
+    pub const ZERO: ComputeCost = ComputeCost {
+        time: Seconds::ZERO,
+        macs: 0.0,
+        sram_elems: 0.0,
+        vector_elems: 0.0,
+    };
+    pub fn add(&mut self, other: ComputeCost) {
+        self.time += other.time;
+        self.macs += other.macs;
+        self.sram_elems += other.sram_elems;
+        self.vector_elems += other.vector_elems;
+    }
+    pub fn scaled(self, f: f64) -> ComputeCost {
+        ComputeCost {
+            time: self.time * f,
+            macs: self.macs * f,
+            sram_elems: self.sram_elems * f,
+            vector_elems: self.vector_elems * f,
+        }
+    }
+}
+
+impl DieCompute {
+    pub fn new(die: DieConfig) -> DieCompute {
+        let tiling = Tiling::for_die(&die);
+        let vector_lanes = die.total_lanes();
+        DieCompute {
+            die,
+            tiling,
+            vector_lanes,
+        }
+    }
+
+    /// Cost of one matmul on this die.
+    pub fn matmul(&self, s: MatmulShape) -> ComputeCost {
+        ComputeCost {
+            time: self.tiling.time(s, &self.die),
+            macs: s.macs(),
+            sram_elems: s.operand_elems(),
+            vector_elems: 0.0,
+        }
+    }
+
+    /// Cost of a vector op over `elems` elements.
+    pub fn vector(&self, kind: VectorOpKind, elems: f64) -> ComputeCost {
+        let passes = kind.passes() * elems;
+        ComputeCost {
+            time: Seconds(passes / self.vector_lanes as f64 / self.die.freq_hz),
+            macs: 0.0,
+            sram_elems: 2.0 * elems, // read + write once
+            vector_elems: passes,
+        }
+    }
+
+    /// Utilization of a matmul (for reports).
+    pub fn utilization(&self, s: MatmulShape) -> f64 {
+        self.tiling.utilization(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    fn dc() -> DieCompute {
+        DieCompute::new(HardwareConfig::paper_die())
+    }
+
+    #[test]
+    fn matmul_cost_matches_tiling() {
+        let c = dc();
+        let s = MatmulShape::new(64, 64, 64);
+        let cost = c.matmul(s);
+        assert_eq!(cost.macs, s.macs());
+        assert!((cost.time.raw() - c.tiling.time(s, &c.die).raw()).abs() < 1e-18);
+        assert!(cost.sram_elems > 0.0);
+    }
+
+    #[test]
+    fn vector_ops_scale_with_passes() {
+        let c = dc();
+        let n = 10_000.0;
+        let soft = c.vector(VectorOpKind::Softmax, n);
+        let add = c.vector(VectorOpKind::Add, n);
+        assert!((soft.time.raw() / add.time.raw() - 5.0).abs() < 1e-9);
+        // 512 lanes at 800 MHz: 1 pass over 10k elems ≈ 24.4 ns
+        let expect = n / 512.0 / 800e6;
+        assert!((add.time.raw() - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn accumulation() {
+        let c = dc();
+        let mut total = ComputeCost::ZERO;
+        total.add(c.matmul(MatmulShape::new(32, 32, 32)));
+        total.add(c.vector(VectorOpKind::Add, 1024.0));
+        assert!(total.time.raw() > 0.0);
+        assert!(total.macs > 0.0 && total.vector_elems > 0.0);
+        let doubled = total.scaled(2.0);
+        assert!((doubled.macs - 2.0 * total.macs).abs() < 1e-9);
+    }
+}

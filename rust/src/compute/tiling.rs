@@ -1,0 +1,181 @@
+//! Loop-tiling / utilization model for the Simba-like PE array
+//! (paper Fig. 5(c): `pe_rows × pe_cols` PEs × `lanes` FP32 MACs).
+//!
+//! Spatial mapping (weight-stationary, as Simba):
+//! * input channels `k` spread over PE rows × an 8-wide vector slice,
+//! * output channels `n` spread over PE cols × the remaining lanes,
+//! * rows `m` streamed temporally.
+//!
+//! Utilization losses come from array-edge effects: a matmul whose `k`/`n`
+//! don't fill the spatial tile wastes lanes. This is exactly the mechanism
+//! behind the paper's observation that 1D-TP "exhibits increased
+//! computation time despite unchanged theoretical FLOPs per die, primarily
+//! due to the reduced PE array utilization" — 1D slicing makes `n`
+//! skinny at large N, while 2D tilings keep `k`,`n` balanced.
+
+use crate::config::DieConfig;
+use crate::util::Seconds;
+
+/// Dimensions of a (per-die) matrix multiplication `[m,k] × [k,n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatmulShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl MatmulShape {
+    pub fn new(m: usize, k: usize, n: usize) -> MatmulShape {
+        MatmulShape { m, k, n }
+    }
+    /// MAC count.
+    pub fn macs(&self) -> f64 {
+        self.m as f64 * self.k as f64 * self.n as f64
+    }
+    /// FLOP count (2 per MAC).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.macs()
+    }
+    /// Backward shapes for `Y = X·W` with this forward shape:
+    /// `dX = dY·Wᵀ` and `dW = Xᵀ·dY`.
+    pub fn backward(&self) -> (MatmulShape, MatmulShape) {
+        (
+            MatmulShape::new(self.m, self.n, self.k), // dX
+            MatmulShape::new(self.k, self.m, self.n), // dW
+        )
+    }
+    /// Bytes of operands streamed once (A + B + C), for SRAM energy.
+    pub fn operand_elems(&self) -> f64 {
+        (self.m * self.k + self.k * self.n + self.m * self.n) as f64
+    }
+}
+
+/// The spatial tile the PE array covers per cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tiling {
+    /// Input channels consumed per cycle (`k` tile).
+    pub kt: usize,
+    /// Output channels produced per cycle (`n` tile).
+    pub nt: usize,
+}
+
+impl Tiling {
+    /// Derive the spatial tile from a die config: PE rows × the lane's
+    /// dot-product width cover input channels, PE cols × the lane count
+    /// cover output channels (Simba's weight-stationary mapping).
+    pub fn for_die(die: &DieConfig) -> Tiling {
+        Tiling {
+            kt: die.pe_rows * die.vec_width,
+            nt: die.pe_cols * die.lanes,
+        }
+    }
+
+    /// Cycles to run a matmul on the array (temporal `m`, spatial `k`,`n`).
+    pub fn cycles(&self, s: MatmulShape) -> f64 {
+        if s.m == 0 || s.k == 0 || s.n == 0 {
+            return 0.0;
+        }
+        let k_pass = s.k.div_ceil(self.kt) as f64;
+        let n_pass = s.n.div_ceil(self.nt) as f64;
+        s.m as f64 * k_pass * n_pass
+    }
+
+    /// Array utilization ∈ (0, 1]: achieved MACs / issued MAC slots.
+    pub fn utilization(&self, s: MatmulShape) -> f64 {
+        if s.m == 0 || s.k == 0 || s.n == 0 {
+            return 0.0;
+        }
+        let issued = self.cycles(s) * (self.kt * self.nt) as f64;
+        s.macs() / issued
+    }
+
+    /// Wall-clock for one matmul on a die.
+    pub fn time(&self, s: MatmulShape, die: &DieConfig) -> Seconds {
+        Seconds(self.cycles(s) / die.freq_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::util::prop;
+
+    fn tiling() -> (Tiling, DieConfig) {
+        let die = HardwareConfig::paper_die();
+        (Tiling::for_die(&die), die)
+    }
+
+    #[test]
+    fn paper_die_tile_is_32x128() {
+        let (t, _) = tiling();
+        assert_eq!(t.kt, 32); // 4 rows × 8-wide dot products
+        assert_eq!(t.nt, 128); // 4 cols × 32 lanes
+    }
+
+    #[test]
+    fn aligned_matmul_is_fully_utilized() {
+        let (t, die) = tiling();
+        let s = MatmulShape::new(128, 256, 256);
+        assert!((t.utilization(s) - 1.0).abs() < 1e-12);
+        // time = m * (k/32) * (n/128) / freq
+        let cycles = 128.0 * 8.0 * 2.0;
+        assert!((t.time(s, &die).raw() - cycles / die.freq_hz).abs() < 1e-15);
+    }
+
+    #[test]
+    fn skinny_n_hurts_utilization() {
+        let (t, _) = tiling();
+        // 1D-TP at large N: n per die shrinks below the 128-wide tile.
+        let fat = MatmulShape::new(1024, 1024, 256);
+        let skinny = MatmulShape::new(1024, 1024, 16);
+        assert!((t.utilization(fat) - 1.0).abs() < 1e-12);
+        assert!((t.utilization(skinny) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_flops_reached_at_full_utilization() {
+        let (t, die) = tiling();
+        let s = MatmulShape::new(4096, 320, 256);
+        let time = t.time(s, &die);
+        let achieved = s.flops() / time.raw();
+        assert!((achieved / die.peak_flops() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backward_shapes() {
+        let s = MatmulShape::new(10, 20, 30);
+        let (dx, dw) = s.backward();
+        assert_eq!(dx, MatmulShape::new(10, 30, 20));
+        assert_eq!(dw, MatmulShape::new(20, 10, 30));
+        // All three legs have the same MAC count.
+        assert_eq!(s.macs(), dx.macs());
+        assert_eq!(s.macs(), dw.macs());
+    }
+
+    #[test]
+    fn degenerate_shapes_cost_nothing() {
+        let (t, _) = tiling();
+        assert_eq!(t.cycles(MatmulShape::new(0, 5, 5)), 0.0);
+        assert_eq!(t.utilization(MatmulShape::new(5, 0, 5)), 0.0);
+    }
+
+    #[test]
+    fn utilization_bounded_and_time_positive() {
+        prop::check("0 < util <= 1 and achieved <= peak", 128, |g| {
+            let (t, die) = tiling();
+            let s = MatmulShape::new(
+                g.usize_range(1, 4096),
+                g.usize_range(1, 4096),
+                g.usize_range(1, 4096),
+            );
+            let u = t.utilization(s);
+            prop::assert_prop(u > 0.0 && u <= 1.0 + 1e-12, format!("util {u} for {s:?}"))?;
+            let achieved = s.flops() / t.time(s, &die).raw();
+            prop::assert_prop(
+                achieved <= die.peak_flops() * (1.0 + 1e-9),
+                format!("achieved {achieved:.3e} > peak"),
+            )
+        });
+    }
+}

@@ -1,0 +1,215 @@
+//! Load simulation configs from TOML files (see `configs/*.toml`).
+//!
+//! A config file can override any preset field:
+//!
+//! ```toml
+//! [model]
+//! preset = "llama2-70b"
+//! batch = 512            # optional overrides
+//!
+//! [hardware]
+//! mesh = [16, 16]
+//! package = "advanced"
+//! dram = "ddr5-6400"
+//!
+//! [hardware.die]
+//! weight_buf_mib = 8
+//! act_buf_mib = 8
+//! freq_mhz = 800
+//! ```
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::config::hardware::{DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
+use crate::config::model::ModelConfig;
+use crate::config::presets::model_preset;
+use crate::util::toml::{self, Document};
+use crate::util::{Bytes, Seconds};
+
+/// A fully-resolved simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimSetup {
+    pub model: ModelConfig,
+    pub hardware: HardwareConfig,
+}
+
+/// Parse a config document into a `SimSetup`.
+pub fn from_str(input: &str) -> crate::Result<SimSetup> {
+    let doc = toml::parse(input).map_err(|e| anyhow!("{e}"))?;
+    let model = parse_model(&doc)?;
+    let hardware = parse_hardware(&doc)?;
+    Ok(SimSetup { model, hardware })
+}
+
+/// Load from a file path.
+pub fn load(path: &str) -> crate::Result<SimSetup> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    from_str(&text).with_context(|| format!("parsing {path}"))
+}
+
+fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
+    let preset = doc
+        .get_str("model", "preset")
+        .ok_or_else(|| anyhow!("[model] preset is required"))?;
+    let mut m =
+        model_preset(preset).ok_or_else(|| anyhow!("unknown model preset '{preset}'"))?;
+    let over_usize = |key: &str, target: &mut usize| {
+        if let Some(v) = doc.get_int("model", key) {
+            *target = v as usize;
+        }
+    };
+    over_usize("hidden", &mut m.hidden);
+    over_usize("intermediate", &mut m.intermediate);
+    over_usize("layers", &mut m.layers);
+    over_usize("heads", &mut m.heads);
+    over_usize("kv_heads", &mut m.kv_heads);
+    over_usize("seq_len", &mut m.seq_len);
+    over_usize("batch", &mut m.batch);
+    over_usize("vocab", &mut m.vocab);
+    if m.hidden % m.heads != 0 {
+        bail!("hidden ({}) must divide by heads ({})", m.hidden, m.heads);
+    }
+    Ok(m)
+}
+
+fn parse_hardware(doc: &Document) -> crate::Result<HardwareConfig> {
+    let package = match doc.get_str("hardware", "package") {
+        Some(s) => PackageKind::parse(s).ok_or_else(|| anyhow!("bad package '{s}'"))?,
+        None => PackageKind::Standard,
+    };
+    let dram_kind = match doc.get_str("hardware", "dram") {
+        Some(s) => DramKind::parse(s).ok_or_else(|| anyhow!("bad dram '{s}'"))?,
+        None => DramKind::Ddr5_6400,
+    };
+    let (rows, cols) = match doc.get("hardware", "mesh") {
+        Some(v) => {
+            let arr = v.as_array().ok_or_else(|| anyhow!("mesh must be [rows, cols]"))?;
+            if arr.len() != 2 {
+                bail!("mesh must have exactly two entries");
+            }
+            let rows = arr[0].as_int().ok_or_else(|| anyhow!("mesh rows"))? as usize;
+            let cols = arr[1].as_int().ok_or_else(|| anyhow!("mesh cols"))? as usize;
+            (rows, cols)
+        }
+        None => match doc.get_int("hardware", "dies") {
+            Some(n) => {
+                let side = (n as f64).sqrt().round() as usize;
+                if (side * side) as i64 != n {
+                    bail!("dies = {n} is not a perfect square; use mesh = [r, c]");
+                }
+                (side, side)
+            }
+            None => (4, 4),
+        },
+    };
+    if rows == 0 || cols == 0 {
+        bail!("mesh dimensions must be positive");
+    }
+
+    let mut hw = HardwareConfig::mesh(rows, cols, package, dram_kind);
+
+    // Die overrides.
+    if let Some(v) = doc.get_float("hardware.die", "freq_mhz") {
+        hw.die.freq_hz = v * 1e6;
+    }
+    if let Some(v) = doc.get_int("hardware.die", "pe_rows") {
+        hw.die.pe_rows = v as usize;
+    }
+    if let Some(v) = doc.get_int("hardware.die", "pe_cols") {
+        hw.die.pe_cols = v as usize;
+    }
+    if let Some(v) = doc.get_int("hardware.die", "lanes") {
+        hw.die.lanes = v as usize;
+    }
+    if let Some(v) = doc.get_float("hardware.die", "weight_buf_mib") {
+        hw.die.weight_buf = Bytes::mib(v);
+    }
+    if let Some(v) = doc.get_float("hardware.die", "act_buf_mib") {
+        hw.die.act_buf = Bytes::mib(v);
+    }
+
+    // Link overrides.
+    let default_link = LinkConfig::for_package(package);
+    hw.link = default_link;
+    if let Some(v) = doc.get_float("hardware.link", "bandwidth_gbs") {
+        hw.link.bandwidth = v * 1e9;
+    }
+    if let Some(v) = doc.get_float("hardware.link", "latency_ns") {
+        hw.link.latency = Seconds::ns(v);
+    }
+    if let Some(v) = doc.get_float("hardware.link", "pj_per_bit") {
+        hw.link.pj_per_bit = v;
+    }
+
+    // DRAM overrides.
+    let mut dram = DramConfig::preset(dram_kind);
+    if let Some(v) = doc.get_float("hardware.dram", "channel_bandwidth_gbs") {
+        dram.channel_bandwidth = v * 1e9;
+    }
+    if let Some(v) = doc.get_float("hardware.dram", "pj_per_bit") {
+        dram.pj_per_bit = v;
+    }
+    hw.dram = dram;
+
+    Ok(hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config() {
+        let s = from_str("[model]\npreset = \"llama2-7b\"\n").unwrap();
+        assert_eq!(s.model.name, "llama2-7b");
+        assert_eq!(s.hardware.n_dies(), 16); // default 4x4
+        assert_eq!(s.hardware.package, PackageKind::Standard);
+    }
+
+    #[test]
+    fn full_overrides() {
+        let s = from_str(
+            r#"
+            [model]
+            preset = "tiny"
+            batch = 4
+            [hardware]
+            mesh = [2, 8]
+            package = "advanced"
+            dram = "hbm2"
+            [hardware.die]
+            weight_buf_mib = 16
+            freq_mhz = 1000
+            [hardware.link]
+            latency_ns = 10
+            "#,
+        )
+        .unwrap();
+        assert_eq!(s.model.batch, 4);
+        assert_eq!(s.hardware.mesh_rows, 2);
+        assert_eq!(s.hardware.mesh_cols, 8);
+        assert_eq!(s.hardware.package, PackageKind::Advanced);
+        assert_eq!(s.hardware.dram.kind, DramKind::Hbm2);
+        assert_eq!(s.hardware.die.weight_buf, Bytes::mib(16.0));
+        assert!((s.hardware.die.freq_hz - 1e9).abs() < 1.0);
+        assert_eq!(s.hardware.link.latency, Seconds::ns(10.0));
+    }
+
+    #[test]
+    fn dies_shorthand() {
+        let s = from_str("[model]\npreset = \"tiny\"\n[hardware]\ndies = 64\n").unwrap();
+        assert_eq!(s.hardware.mesh_rows, 8);
+        assert!(from_str("[model]\npreset = \"tiny\"\n[hardware]\ndies = 12\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(from_str("[model]\npreset = \"nope\"").is_err());
+        assert!(from_str("x = 1").is_err()); // missing model preset
+        assert!(from_str(
+            "[model]\npreset = \"tiny\"\nheads = 7\n" // 64 % 7 != 0
+        )
+        .is_err());
+        assert!(from_str("[model]\npreset = \"tiny\"\n[hardware]\npackage = \"exotic\"").is_err());
+    }
+}

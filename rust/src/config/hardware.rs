@@ -1,0 +1,316 @@
+//! Hardware configuration: computing die, package, D2D link, DRAM.
+//!
+//! All numbers trace to paper §VI-A (28 nm RTL rescaled to 7 nm, UCIe link
+//! parameters, DDR5-6400 via Ramulator2/JEDEC) — see DESIGN.md for the
+//! calibration table.
+
+use crate::util::{Bytes, Seconds};
+
+/// Packaging technology (paper Fig. 2). Determines D2D link density and
+/// therefore per-link bandwidth and energy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PackageKind {
+    /// Organic substrate / standard package: 110 µm bump pitch, x16 UCIe
+    /// module per link @16 GT/s.
+    Standard,
+    /// Advanced package (silicon bridge): 45 µm pitch, x64 module —
+    /// 4× the link bandwidth at lower pJ/bit.
+    Advanced,
+}
+
+impl PackageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PackageKind::Standard => "standard",
+            PackageKind::Advanced => "advanced",
+        }
+    }
+    pub fn parse(s: &str) -> Option<PackageKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "standard" | "std" => Some(PackageKind::Standard),
+            "advanced" | "adv" => Some(PackageKind::Advanced),
+            _ => None,
+        }
+    }
+}
+
+/// One computing die (paper Fig. 5(c); Simba-like, FP32 MACs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DieConfig {
+    /// Clock frequency (Hz). Paper: 800 MHz after 28 nm synthesis.
+    pub freq_hz: f64,
+    /// PE array rows × cols. Paper: 4×4.
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Vector MAC lanes per PE. Paper: 32.
+    pub lanes: usize,
+    /// Dot-product width of each vector MAC lane (Simba-style 8-wide).
+    pub vec_width: usize,
+    /// Weight buffer capacity. Paper: 8 MB.
+    pub weight_buf: Bytes,
+    /// Activation buffer capacity. Paper: 8 MB.
+    pub act_buf: Bytes,
+    /// Die area (mm², 7 nm). Paper: 30.08.
+    pub area_mm2: f64,
+}
+
+impl DieConfig {
+    /// MACs per cycle: `pe_rows·pe_cols·lanes·vec_width`.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.pe_rows * self.pe_cols * self.lanes * self.vec_width
+    }
+    /// Peak FLOP/s of one die (2 FLOPs per MAC).
+    pub fn peak_flops(&self) -> f64 {
+        self.macs_per_cycle() as f64 * 2.0 * self.freq_hz
+    }
+    /// Total vector MAC lanes (vector-unit width).
+    pub fn total_lanes(&self) -> usize {
+        self.pe_rows * self.pe_cols * self.lanes
+    }
+}
+
+/// A D2D link (UCIe). Bandwidth is per direction per neighbouring pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkConfig {
+    /// Sustained bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-hop link latency α (adapter + PHY both sides).
+    pub latency: Seconds,
+    /// Transfer energy, pJ/bit.
+    pub pj_per_bit: f64,
+}
+
+impl LinkConfig {
+    /// UCIe-derived link preset for a package kind.
+    ///
+    /// Both packages run 16 GT/s lanes; the advanced package's finer pitch
+    /// fits 4× the lanes in the same shoreline (paper §VI-A: "higher
+    /// bandwidth within the same area constraint").
+    pub fn for_package(kind: PackageKind) -> LinkConfig {
+        match kind {
+            PackageKind::Standard => LinkConfig {
+                bandwidth: 32.0e9, // x16 @ 16 GT/s
+                latency: Seconds::ns(2.0),
+                pj_per_bit: 0.5,
+            },
+            PackageKind::Advanced => LinkConfig {
+                bandwidth: 128.0e9, // x64 @ 16 GT/s
+                latency: Seconds::ns(2.0),
+                pj_per_bit: 0.25,
+            },
+        }
+    }
+}
+
+/// DRAM generation (paper §VI-D sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramKind {
+    Ddr4_3200,
+    Ddr5_6400,
+    Hbm2,
+}
+
+impl DramKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DramKind::Ddr4_3200 => "ddr4-3200",
+            DramKind::Ddr5_6400 => "ddr5-6400",
+            DramKind::Hbm2 => "hbm2",
+        }
+    }
+    pub fn parse(s: &str) -> Option<DramKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "ddr4" | "ddr4-3200" => Some(DramKind::Ddr4_3200),
+            "ddr5" | "ddr5-6400" => Some(DramKind::Ddr5_6400),
+            "hbm2" | "hbm" => Some(DramKind::Hbm2),
+            _ => None,
+        }
+    }
+}
+
+/// DRAM channel parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DramConfig {
+    pub kind: DramKind,
+    /// Bytes/s per channel (DDR5-6400: 51.2 GB/s, paper §VI-A).
+    pub channel_bandwidth: f64,
+    /// Access energy, pJ/bit (DDR5: 19, paper §VI-A; HBM2: 3.9 [O'Connor]).
+    pub pj_per_bit: f64,
+}
+
+impl DramConfig {
+    pub fn preset(kind: DramKind) -> DramConfig {
+        match kind {
+            DramKind::Ddr4_3200 => DramConfig {
+                kind,
+                channel_bandwidth: 25.6e9,
+                pj_per_bit: 22.0,
+            },
+            DramKind::Ddr5_6400 => DramConfig {
+                kind,
+                channel_bandwidth: 51.2e9,
+                pj_per_bit: 19.0,
+            },
+            DramKind::Hbm2 => DramConfig {
+                kind,
+                channel_bandwidth: 307.2e9, // one HBM2 stack per channel site
+                pj_per_bit: 3.9,
+            },
+        }
+    }
+}
+
+/// The whole package: a `rows × cols` mesh of computing dies plus IO dies
+/// with DRAM controllers around the perimeter (paper Fig. 5(a)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    pub mesh_rows: usize,
+    pub mesh_cols: usize,
+    pub package: PackageKind,
+    pub die: DieConfig,
+    pub link: LinkConfig,
+    pub dram: DramConfig,
+}
+
+impl HardwareConfig {
+    /// Number of computing dies `N`.
+    pub fn n_dies(&self) -> usize {
+        self.mesh_rows * self.mesh_cols
+    }
+
+    /// DRAM channel count: proportional to the package perimeter
+    /// (paper §III-A(c)) — one channel per perimeter die edge.
+    pub fn dram_channels(&self) -> usize {
+        2 * (self.mesh_rows + self.mesh_cols)
+    }
+
+    /// Aggregate DRAM bandwidth (bytes/s).
+    pub fn dram_bandwidth(&self) -> f64 {
+        self.dram_channels() as f64 * self.dram.channel_bandwidth
+    }
+
+    /// Aggregate peak compute (FLOP/s).
+    pub fn peak_flops(&self) -> f64 {
+        self.n_dies() as f64 * self.die.peak_flops()
+    }
+
+    /// Aggregate weight-buffer capacity across dies (the unified on-package
+    /// memory pool, §III-A(a)).
+    pub fn total_weight_buf(&self) -> Bytes {
+        self.die.weight_buf * self.n_dies() as f64
+    }
+
+    pub fn total_act_buf(&self) -> Bytes {
+        self.die.act_buf * self.n_dies() as f64
+    }
+
+    /// The paper's reference die (§VI-A).
+    pub fn paper_die() -> DieConfig {
+        DieConfig {
+            freq_hz: 800.0e6,
+            pe_rows: 4,
+            pe_cols: 4,
+            lanes: 32,
+            vec_width: 8,
+            weight_buf: Bytes::mib(8.0),
+            act_buf: Bytes::mib(8.0),
+            area_mm2: 30.08,
+        }
+    }
+
+    /// Build a package of `rows × cols` paper dies.
+    pub fn mesh(rows: usize, cols: usize, package: PackageKind, dram: DramKind) -> HardwareConfig {
+        HardwareConfig {
+            mesh_rows: rows,
+            mesh_cols: cols,
+            package,
+            die: Self::paper_die(),
+            link: LinkConfig::for_package(package),
+            dram: DramConfig::preset(dram),
+        }
+    }
+
+    /// Square package of `n` dies (`n` must be a perfect square).
+    pub fn square(n: usize, package: PackageKind, dram: DramKind) -> HardwareConfig {
+        let side = (n as f64).sqrt().round() as usize;
+        assert_eq!(side * side, n, "square() needs a perfect-square die count");
+        Self::mesh(side, side, package, dram)
+    }
+
+    /// Swap the DRAM generation (Fig. 10 sweep).
+    pub fn with_dram(mut self, kind: DramKind) -> HardwareConfig {
+        self.dram = DramConfig::preset(kind);
+        self
+    }
+
+    /// Override the D2D link latency α (Table IV sweep).
+    pub fn with_link_latency(mut self, alpha: Seconds) -> HardwareConfig {
+        self.link.latency = alpha;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_die_peak_flops() {
+        let d = HardwareConfig::paper_die();
+        // 4·4 PEs × 32 lanes × 8-wide = 4096 MACs/cycle × 2 × 800 MHz
+        assert_eq!(d.macs_per_cycle(), 4096);
+        assert!((d.peak_flops() - 6553.6e9).abs() < 1.0);
+        assert_eq!(d.total_lanes(), 512);
+    }
+
+    #[test]
+    fn mesh_accessors() {
+        let hw = HardwareConfig::mesh(8, 8, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert_eq!(hw.n_dies(), 64);
+        assert_eq!(hw.dram_channels(), 32);
+        assert!((hw.dram_bandwidth() - 32.0 * 51.2e9).abs() < 1.0);
+        assert!((hw.peak_flops() - 64.0 * 6553.6e9).abs() < 1e4);
+        assert_eq!(hw.total_weight_buf(), Bytes::mib(8.0 * 64.0));
+    }
+
+    #[test]
+    fn advanced_package_has_4x_bandwidth() {
+        let s = LinkConfig::for_package(PackageKind::Standard);
+        let a = LinkConfig::for_package(PackageKind::Advanced);
+        assert!((a.bandwidth / s.bandwidth - 4.0).abs() < 1e-12);
+        assert!(a.pj_per_bit < s.pj_per_bit);
+    }
+
+    #[test]
+    fn square_rejects_non_square() {
+        let r = std::panic::catch_unwind(|| {
+            HardwareConfig::square(12, PackageKind::Standard, DramKind::Ddr5_6400)
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn dram_presets_ordering() {
+        let d4 = DramConfig::preset(DramKind::Ddr4_3200);
+        let d5 = DramConfig::preset(DramKind::Ddr5_6400);
+        let h = DramConfig::preset(DramKind::Hbm2);
+        assert!(d4.channel_bandwidth < d5.channel_bandwidth);
+        assert!(d5.channel_bandwidth < h.channel_bandwidth);
+        assert!(h.pj_per_bit < d5.pj_per_bit);
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(PackageKind::parse("ADV"), Some(PackageKind::Advanced));
+        assert_eq!(DramKind::parse("hbm"), Some(DramKind::Hbm2));
+        assert_eq!(PackageKind::parse("x"), None);
+    }
+
+    #[test]
+    fn weak_scaling_channel_growth() {
+        // c grows with the perimeter: doubling the side doubles channels.
+        let a = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let b = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert_eq!(b.dram_channels(), 2 * a.dram_channels());
+    }
+}

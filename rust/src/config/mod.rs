@@ -1,0 +1,15 @@
+//! Configuration: model presets (paper §VI-A workloads), hardware presets
+//! (die, package, D2D link, DRAM) and TOML-file loading.
+
+pub mod model;
+pub mod hardware;
+pub mod presets;
+pub mod file;
+
+pub use hardware::{DieConfig, DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
+pub use model::ModelConfig;
+pub use presets::{hardware_preset, model_preset, paper_pairings, PaperWorkload};
+
+/// Bytes per tensor element. The paper trains in FP32 (the computing die
+/// replaces Simba's INT8 MACs with FP32 versions, §III-A).
+pub const ELEM_BYTES: f64 = 4.0;

@@ -1,0 +1,170 @@
+//! Transformer model configuration (paper Fig. 3 nomenclature).
+
+use crate::config::ELEM_BYTES;
+use crate::util::Bytes;
+
+/// A decoder-only (or encoder, for BERT) transformer configuration.
+///
+/// Dimension names follow the paper: batch `b`, sequence `s`, hidden `h`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Hidden size `h`.
+    pub hidden: usize,
+    /// FFN intermediate size (4h classically; SwiGLU models differ).
+    pub intermediate: usize,
+    /// Number of transformer layers.
+    pub layers: usize,
+    /// Attention heads.
+    pub heads: usize,
+    /// KV heads (GQA); equals `heads` for MHA models.
+    pub kv_heads: usize,
+    /// Training sequence length `s`.
+    pub seq_len: usize,
+    /// Training batch size `b` (paper uses 1024).
+    pub batch: usize,
+    /// Vocabulary size (only used by the functional training path).
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Size of the fused QKV projection output (GQA-aware):
+    /// `h + 2 * kv_heads * head_dim`.
+    pub fn qkv_out(&self) -> usize {
+        self.hidden + 2 * self.kv_heads * self.head_dim()
+    }
+
+    /// Parameter count of one attention block's linear weights
+    /// (`W_QKV` + `W_O`). For MHA this is the paper's `4h²`.
+    pub fn attn_params(&self) -> u64 {
+        (self.hidden as u64) * (self.qkv_out() as u64) + (self.hidden as u64).pow(2)
+    }
+
+    /// Parameter count of one FFN block. Classic GeLU FFN: `8h²` (up+down);
+    /// SwiGLU (llama): three matrices `h×i, h×i, i×h`.
+    pub fn ffn_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let i = self.intermediate as u64;
+        if self.is_gated() {
+            3 * h * i
+        } else {
+            2 * h * i
+        }
+    }
+
+    /// Whether the FFN is gated (SwiGLU-style — llama family presets).
+    pub fn is_gated(&self) -> bool {
+        self.name.contains("llama")
+    }
+
+    /// Total parameters of the transformer stack (excluding embeddings).
+    pub fn stack_params(&self) -> u64 {
+        (self.attn_params() + self.ffn_params()) * self.layers as u64
+    }
+
+    /// Total parameters including token embedding + LM head (tied not
+    /// assumed) — used only for reporting.
+    pub fn total_params(&self) -> u64 {
+        self.stack_params() + 2 * (self.vocab as u64) * (self.hidden as u64)
+    }
+
+    /// Bytes of one full activation tensor `[b, s, h]`.
+    pub fn act_bytes(&self) -> Bytes {
+        Bytes(self.batch as f64 * self.seq_len as f64 * self.hidden as f64 * ELEM_BYTES)
+    }
+
+    /// Tokens per batch.
+    pub fn tokens_per_batch(&self) -> u64 {
+        self.batch as u64 * self.seq_len as u64
+    }
+
+    /// Forward FLOPs for one layer over `tokens` tokens
+    /// (matmul-only, 2·params·tokens plus attention score/context matmuls).
+    pub fn layer_fwd_flops(&self, tokens: u64) -> f64 {
+        let lin = 2.0 * (self.attn_params() + self.ffn_params()) as f64 * tokens as f64;
+        // Attention QK^T and SV: 2 * (2 * s * s * h) per sequence.
+        let seqs = tokens as f64 / self.seq_len as f64;
+        let attn = seqs * 4.0 * (self.seq_len as f64).powi(2) * self.hidden as f64;
+        lin + attn
+    }
+
+    /// Training FLOPs per layer (fwd + bwd ≈ 3× fwd: bwd computes both
+    /// dX and dW, §III-B of the paper).
+    pub fn layer_train_flops(&self, tokens: u64) -> f64 {
+        3.0 * self.layer_fwd_flops(tokens)
+    }
+
+    /// Scale every model dimension by `k` (weak-scaling experiments §V-B):
+    /// h → k·h, intermediate → k·i, heads → k·heads.
+    pub fn scaled(&self, k: usize) -> ModelConfig {
+        ModelConfig {
+            name: format!("{}-x{}", self.name, k),
+            hidden: self.hidden * k,
+            intermediate: self.intermediate * k,
+            heads: self.heads * k,
+            kv_heads: self.kv_heads * k,
+            ..self.clone()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+
+    #[test]
+    fn mha_attention_params_are_4h2() {
+        let bert = model_preset("bert-large").unwrap();
+        assert_eq!(bert.heads, bert.kv_heads);
+        assert_eq!(bert.attn_params(), 4 * (bert.hidden as u64).pow(2));
+    }
+
+    #[test]
+    fn classic_ffn_params_are_8h2() {
+        let bert = model_preset("bert-large").unwrap();
+        assert_eq!(bert.intermediate, 4 * bert.hidden);
+        assert_eq!(bert.ffn_params(), 8 * (bert.hidden as u64).pow(2));
+    }
+
+    #[test]
+    fn llama70b_total_params_near_70b() {
+        let m = model_preset("llama2-70b").unwrap();
+        let p = m.total_params() as f64;
+        // Stack + embeddings should land in the right ballpark (±15%).
+        assert!(p > 55e9 && p < 80e9, "params {p:.3e}");
+    }
+
+    #[test]
+    fn gqa_shrinks_qkv() {
+        let m = model_preset("llama2-70b").unwrap();
+        assert!(m.kv_heads < m.heads);
+        assert!(m.qkv_out() < 3 * m.hidden);
+        let mha = model_preset("gpt3-6.7b").unwrap();
+        assert_eq!(mha.qkv_out(), 3 * mha.hidden);
+    }
+
+    #[test]
+    fn scaled_multiplies_dims() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let s = m.scaled(2);
+        assert_eq!(s.hidden, 2 * m.hidden);
+        assert_eq!(s.intermediate, 2 * m.intermediate);
+        assert_eq!(s.head_dim(), m.head_dim());
+        assert_eq!(s.seq_len, m.seq_len);
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_tokens() {
+        let m = model_preset("llama2-7b").unwrap();
+        let f1 = m.layer_fwd_flops(m.seq_len as u64);
+        let f2 = m.layer_fwd_flops(2 * m.seq_len as u64);
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+        assert!((m.layer_train_flops(1024) / m.layer_fwd_flops(1024) - 3.0).abs() < 1e-12);
+    }
+}

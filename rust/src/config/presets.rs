@@ -1,0 +1,209 @@
+//! Named presets for the paper's workloads and hardware pairings (§VI-A).
+
+use crate::config::hardware::{DramKind, HardwareConfig, PackageKind};
+use crate::config::model::ModelConfig;
+
+/// Look up a model preset by name.
+///
+/// Evaluation models come from the paper (§VI-A): Llama family with
+/// successively doubled hidden sizes for the scaling study, plus the §I/§VI
+/// mixed set (BERT-Large, Bloom-1.7B, GPT3-6.7B). `tiny` and `e2e-100m` are
+/// repo-local configs for the functional training path.
+pub fn model_preset(name: &str) -> Option<ModelConfig> {
+    let m = match name.to_ascii_lowercase().as_str() {
+        "bert-large" => ModelConfig {
+            name: "bert-large".into(),
+            hidden: 1024,
+            intermediate: 4096,
+            layers: 24,
+            heads: 16,
+            kv_heads: 16,
+            seq_len: 512,
+            batch: 1024,
+            vocab: 30522,
+        },
+        "bloom-1.7b" => ModelConfig {
+            name: "bloom-1.7b".into(),
+            hidden: 2048,
+            intermediate: 8192,
+            layers: 24,
+            heads: 16,
+            kv_heads: 16,
+            seq_len: 2048,
+            batch: 1024,
+            vocab: 250880,
+        },
+        "gpt3-6.7b" => ModelConfig {
+            name: "gpt3-6.7b".into(),
+            hidden: 4096,
+            intermediate: 16384,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            seq_len: 2048,
+            batch: 1024,
+            vocab: 50257,
+        },
+        "tinyllama-1.1b" => ModelConfig {
+            name: "tinyllama-1.1b".into(),
+            hidden: 2048,
+            intermediate: 5632,
+            layers: 22,
+            heads: 32,
+            kv_heads: 4,
+            seq_len: 2048,
+            batch: 1024,
+            vocab: 32000,
+        },
+        "llama2-7b" => ModelConfig {
+            name: "llama2-7b".into(),
+            hidden: 4096,
+            intermediate: 11008,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            seq_len: 4096,
+            batch: 1024,
+            vocab: 32000,
+        },
+        "llama2-70b" => ModelConfig {
+            name: "llama2-70b".into(),
+            hidden: 8192,
+            intermediate: 28672,
+            layers: 80,
+            heads: 64,
+            kv_heads: 8,
+            seq_len: 4096,
+            batch: 1024,
+            vocab: 32000,
+        },
+        "llama3.1-405b" => ModelConfig {
+            name: "llama3.1-405b".into(),
+            hidden: 16384,
+            intermediate: 53248,
+            layers: 126,
+            heads: 128,
+            kv_heads: 8,
+            seq_len: 8192,
+            batch: 1024,
+            vocab: 128256,
+        },
+        // Functional-path configs (real numerics on the coordinator).
+        "tiny" => ModelConfig {
+            name: "tiny".into(),
+            hidden: 64,
+            intermediate: 256,
+            layers: 2,
+            heads: 4,
+            kv_heads: 4,
+            seq_len: 32,
+            batch: 8,
+            vocab: 64,
+        },
+        "e2e-100m" => ModelConfig {
+            name: "e2e-100m".into(),
+            hidden: 768,
+            intermediate: 3072,
+            layers: 12,
+            heads: 12,
+            kv_heads: 12,
+            seq_len: 256,
+            batch: 8,
+            vocab: 512,
+        },
+        _ => return None,
+    };
+    Some(m)
+}
+
+/// All evaluation model names.
+pub fn eval_models() -> &'static [&'static str] {
+    &[
+        "bert-large",
+        "bloom-1.7b",
+        "gpt3-6.7b",
+        "tinyllama-1.1b",
+        "llama2-7b",
+        "llama2-70b",
+        "llama3.1-405b",
+    ]
+}
+
+/// A paper workload pairing: model + die count (§VI-A: "their training
+/// systems scale proportionally, integrating 16, 64, 256, 1024 dies").
+#[derive(Debug, Clone)]
+pub struct PaperWorkload {
+    pub model: ModelConfig,
+    pub dies: usize,
+}
+
+/// The four scaling-study pairings of §VI (Figs. 8 & 9, Table IV).
+pub fn paper_pairings() -> Vec<PaperWorkload> {
+    [
+        ("tinyllama-1.1b", 16),
+        ("llama2-7b", 64),
+        ("llama2-70b", 256),
+        ("llama3.1-405b", 1024),
+    ]
+    .iter()
+    .map(|&(name, dies)| PaperWorkload {
+        model: model_preset(name).expect("preset exists"),
+        dies,
+    })
+    .collect()
+}
+
+/// Hardware preset for a pairing: square mesh of `dies` paper dies.
+pub fn hardware_preset(dies: usize, package: PackageKind, dram: DramKind) -> HardwareConfig {
+    HardwareConfig::square(dies, package, dram)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_eval_presets_resolve() {
+        for name in eval_models() {
+            let m = model_preset(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(m.hidden % m.heads == 0, "{name}: h % heads != 0");
+            assert!(m.heads % m.kv_heads == 0, "{name}: heads % kv != 0");
+            assert!(m.layers > 0 && m.seq_len > 0);
+        }
+        assert!(model_preset("nonexistent").is_none());
+    }
+
+    #[test]
+    fn scaling_pairs_double_hidden_and_quadruple_dies() {
+        let pairs = paper_pairings();
+        assert_eq!(pairs.len(), 4);
+        for w in pairs.windows(2) {
+            assert_eq!(w[1].model.hidden, 2 * w[0].model.hidden);
+            assert_eq!(w[1].dies, 4 * w[0].dies);
+        }
+    }
+
+    #[test]
+    fn batch_is_1024_for_eval_models() {
+        for name in eval_models() {
+            assert_eq!(model_preset(name).unwrap().batch, 1024, "{name}");
+        }
+    }
+
+    #[test]
+    fn e2e_model_is_about_100m_params() {
+        let m = model_preset("e2e-100m").unwrap();
+        let p = m.total_params();
+        assert!(
+            (60_000_000..150_000_000).contains(&p),
+            "e2e-100m params = {p}"
+        );
+    }
+
+    #[test]
+    fn hardware_preset_builds_square() {
+        let hw = hardware_preset(256, PackageKind::Advanced, DramKind::Ddr5_6400);
+        assert_eq!(hw.mesh_rows, 16);
+        assert_eq!(hw.mesh_cols, 16);
+    }
+}

@@ -1,0 +1,218 @@
+//! Ring collectives over OS-thread channels — the functional counterpart
+//! of the NoP bypass rings (paper Fig. 5(b) / §IV-B).
+//!
+//! Exactly the two primitives Hecaton needs: all-gather and
+//! reduce-scatter. Each die thread calls these with its ring endpoints;
+//! channel sends are non-blocking (unbounded), so the step loop can never
+//! deadlock as long as every ring member executes the same collective.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::runtime::tensor::Tensor;
+
+/// One die's endpoints on a ring of `size` members; `pos` is its index.
+/// `send` goes to `(pos+1) % size`, `recv` comes from `(pos-1) % size`.
+pub struct RingEnd {
+    pub pos: usize,
+    pub size: usize,
+    pub send: Sender<Tensor>,
+    pub recv: Receiver<Tensor>,
+}
+
+impl RingEnd {
+    /// All-gather: every member contributes `mine`; returns all chunks in
+    /// ring-index order (index i = the chunk contributed by member i).
+    pub fn all_gather(&self, mine: Tensor) -> crate::Result<Vec<Tensor>> {
+        let n = self.size;
+        let mut chunks: Vec<Option<Tensor>> = vec![None; n];
+        let mut cur = mine.clone();
+        chunks[self.pos] = Some(mine);
+        for step in 0..n.saturating_sub(1) {
+            self.send.send(cur).map_err(|_| anyhow::anyhow!("ring peer hung up"))?;
+            cur = self.recv.recv().map_err(|_| anyhow::anyhow!("ring recv failed"))?;
+            // The chunk arriving at step s originated at (pos - 1 - s) mod n.
+            let idx = (self.pos + n - 1 - step) % n;
+            chunks[idx] = Some(cur.clone());
+        }
+        Ok(chunks.into_iter().map(|c| c.expect("all chunks seen")).collect())
+    }
+
+    /// Reduce-scatter: every member contributes a full `partial` tensor
+    /// (same shape); the partials are summed element-wise and member `p`
+    /// receives row-chunk `p` of the sum. Rows must divide by `size`.
+    pub fn reduce_scatter(&self, partial: &Tensor) -> crate::Result<Tensor> {
+        let n = self.size;
+        if n == 1 {
+            return Ok(partial.clone());
+        }
+        let rows = partial.rows();
+        assert!(
+            rows % n == 0,
+            "reduce_scatter: {rows} rows not divisible by ring size {n}"
+        );
+        let chunk_rows = rows / n;
+        let mut chunks: Vec<Tensor> = (0..n)
+            .map(|q| partial.row_block(q * chunk_rows, chunk_rows))
+            .collect();
+        // At step s: send accumulated chunk (pos-1-s) mod n, receive chunk
+        // (pos-2-s) mod n and fold it in. After n-1 steps, chunk `pos`
+        // holds the full sum.
+        for step in 0..n - 1 {
+            let send_idx = (self.pos + 2 * n - 1 - step) % n;
+            self.send
+                .send(chunks[send_idx].clone())
+                .map_err(|_| anyhow::anyhow!("ring peer hung up"))?;
+            let incoming = self
+                .recv
+                .recv()
+                .map_err(|_| anyhow::anyhow!("ring recv failed"))?;
+            let recv_idx = (self.pos + 2 * n - 2 - step) % n;
+            chunks[recv_idx].add_assign(&incoming);
+        }
+        Ok(chunks.swap_remove(self.pos))
+    }
+}
+
+/// Build the `n` ring endpoints of one ring (test/mesh construction
+/// helper): endpoint `p` sends to `p+1 (mod n)`.
+pub fn build_ring(n: usize) -> Vec<RingEnd> {
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // endpoint p receives on channel p (fed by p-1) and sends on channel p+1.
+    let mut ends: Vec<RingEnd> = Vec::with_capacity(n);
+    let mut recv_iter = receivers.into_iter();
+    for p in 0..n {
+        ends.push(RingEnd {
+            pos: p,
+            size: n,
+            send: senders[(p + 1) % n].clone(),
+            recv: recv_iter.next().unwrap(),
+        });
+    }
+    ends
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn run_ring<F, R>(n: usize, f: F) -> Vec<R>
+    where
+        F: Fn(RingEnd, usize) -> R + Send + Sync + Clone + 'static,
+        R: Send + 'static,
+    {
+        let ends = build_ring(n);
+        let mut handles = Vec::new();
+        for (p, end) in ends.into_iter().enumerate() {
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(end, p)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_collects_in_order() {
+        for n in [1usize, 2, 3, 4, 8] {
+            let results = run_ring(n, move |end, p| {
+                let mine = Tensor::new(vec![p as f32; 4], vec![2, 2]);
+                end.all_gather(mine).unwrap()
+            });
+            for chunks in results {
+                assert_eq!(chunks.len(), n);
+                for (i, c) in chunks.iter().enumerate() {
+                    assert!(c.data.iter().all(|&x| x == i as f32), "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_distributes() {
+        for n in [2usize, 3, 4] {
+            let rows = 2 * n;
+            let results = run_ring(n, move |end, p| {
+                // partial[r][c] = p + r (so the sum over members of row r
+                // is n(n-1)/2 + n·r).
+                let data: Vec<f32> = (0..rows * 3)
+                    .map(|idx| (p + idx / 3) as f32)
+                    .collect();
+                let partial = Tensor::new(data, vec![rows, 3]);
+                (p, end.reduce_scatter(&partial).unwrap())
+            });
+            let base = (n * (n - 1) / 2) as f32;
+            for (p, chunk) in results {
+                assert_eq!(chunk.rows(), 2, "n={n}");
+                for r in 0..2 {
+                    let global_row = p * 2 + r;
+                    let want = base + (n * global_row) as f32;
+                    for c in 0..3 {
+                        assert_eq!(chunk.data[r * 3 + c], want, "n={n} p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rs_then_ag_is_all_reduce() {
+        // The identity the paper's Fig. 4(b) relies on.
+        let n = 4;
+        let rows = 8;
+        let results = run_ring(n, move |end, p| {
+            let partial = Tensor::new(
+                (0..rows * 2).map(|i| (p * 100 + i) as f32).collect(),
+                vec![rows, 2],
+            );
+            let chunk = end.reduce_scatter(&partial).unwrap();
+            let chunks = end.all_gather(chunk).unwrap();
+            Tensor::concat_rows(&chunks)
+        });
+        // Expected all-reduce: sum over p of (p*100 + i).
+        let base: f32 = (0..4).map(|p| (p * 100) as f32).sum();
+        for full in &results {
+            assert_eq!(full.shape, vec![rows, 2]);
+            for i in 0..rows * 2 {
+                assert_eq!(full.data[i], base + (4 * i) as f32);
+            }
+        }
+        // And every member agrees.
+        for w in results.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn property_ag_rs_random_sizes() {
+        prop::check("AG ∘ RS == all-reduce (random)", 8, |g| {
+            let n = g.usize_range(2, 5);
+            let rows_per = g.usize_range(1, 3);
+            let rows = n * rows_per;
+            let cols = g.usize_range(1, 4);
+            let seed = g.u64_range(0, u64::MAX);
+            let results = run_ring(n, move |end, p| {
+                let mut rng = crate::util::rng::Rng::new(seed ^ p as u64);
+                let data: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32()).collect();
+                let t = Tensor::new(data, vec![rows, cols]);
+                let rs = end.reduce_scatter(&t).unwrap();
+                (t, Tensor::concat_rows(&end.all_gather(rs).unwrap()))
+            });
+            // Host all-reduce oracle.
+            let mut want = Tensor::zeros(&[rows, cols]);
+            for (t, _) in &results {
+                want.add_assign(t);
+            }
+            for (_, got) in &results {
+                for (a, b) in got.data.iter().zip(&want.data) {
+                    prop::assert_prop((a - b).abs() < 1e-4, format!("{a} vs {b}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

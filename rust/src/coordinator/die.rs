@@ -1,0 +1,363 @@
+//! The die worker: one OS thread per computing die, executing Algorithm 1
+//! step commands against its own PJRT runtime and ring endpoints.
+//!
+//! A die owns, exactly as the paper's hardware does:
+//! * its weight-buffer contents — the 2D weight *tiles* of every layer
+//!   (the dies' buffers jointly form the unified weight pool, §III-A),
+//! * its activation-buffer contents — resident activation/gradient tiles
+//!   and the saved all-gathered inputs the backward pass reuses,
+//! * accumulated weight-gradient tiles (`dW +=` across mini-batches,
+//!   Algorithm 1), updated in place on `SgdStep` — weights never leave
+//!   the package during training.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::coordinator::collective::RingEnd;
+use crate::coordinator::mesh::{MeshCfg, Orient};
+use crate::runtime::{Runtime, Tensor};
+
+/// Die-local unary op fused onto a linear's output tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Gelu,
+}
+
+/// Commands the leader issues to a die.
+pub enum DieCmd {
+    /// Install a weight tile (and zero its gradient accumulator).
+    LoadWeight { key: String, tile: Tensor },
+    /// Forward of one linear: AG(input) → matmul → RS(partial) [→ gelu].
+    LinearFwd {
+        key: String,
+        orient: Orient,
+        /// Input tile `[w/g, in/s]`; `None` uses the resident activation.
+        input: Option<Tensor>,
+        /// Save the all-gathered input for the dW pass (Step 6-7 reuse).
+        save_input_key: Option<String>,
+        /// Apply gelu to the output tile, saving the pre-activation.
+        gelu_save_key: Option<String>,
+        return_output: bool,
+        keep_output: bool,
+    },
+    /// Backward of one linear: AG(dOut) → dX partial + dW → RS(dX).
+    LinearBwd {
+        key: String,
+        orient: Orient,
+        /// dOutput tile `[w/s, out/g]`; `None` uses the resident gradient.
+        dout: Option<Tensor>,
+        saved_input_key: String,
+        /// Apply gelu-backward (with the saved pre-activation) to the
+        /// reduced dInput tile before keeping/returning it.
+        gelu_bwd_key: Option<String>,
+        return_dinput: bool,
+        keep_dinput: bool,
+    },
+    /// This die's chunk of attention heads (Steps 10-12).
+    AttnFwd {
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+        save_key: String,
+    },
+    AttnBwd {
+        dout: Tensor,
+        save_key: String,
+    },
+    /// Apply `w -= lr·dW` to every weight tile; clear accumulators.
+    SgdStep { lr: f32 },
+    /// Report runtime stats (perf accounting).
+    GetStats,
+    Shutdown,
+}
+
+/// Replies from a die.
+pub enum DieReply {
+    Tile(Tensor),
+    Triple(Box<(Tensor, Tensor, Tensor)>),
+    Ack,
+    Stats(crate::runtime::client::RuntimeStats),
+    Err(String),
+}
+
+/// Everything a die thread needs at spawn time.
+pub struct DieSeat {
+    pub i: usize,
+    pub j: usize,
+    pub cfg: MeshCfg,
+    pub artifact_dir: std::path::PathBuf,
+    pub row_ring: RingEnd,
+    pub col_ring: RingEnd,
+    pub cmds: Receiver<DieCmd>,
+    pub replies: Sender<DieReply>,
+}
+
+struct DieState {
+    seat: DieSeat,
+    rt: Runtime,
+    weights: HashMap<String, Tensor>,
+    /// Lazily cached transposes of weight tiles (the dX path multiplies
+    /// by Wᵀ every mini-batch; weights change only on SgdStep — §Perf
+    /// item L3-2). Invalidated on LoadWeight / SgdStep.
+    weights_t: HashMap<String, Tensor>,
+    dweights: HashMap<String, Tensor>,
+    saved: HashMap<String, Tensor>,
+    resident_act: Option<Tensor>,
+    resident_dact: Option<Tensor>,
+}
+
+/// Die thread entry point.
+pub fn die_main(seat: DieSeat) {
+    let rt = match Runtime::open(seat.artifact_dir.clone()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = seat.replies.send(DieReply::Err(format!("runtime open: {e:#}")));
+            return;
+        }
+    };
+    let replies = seat.replies.clone();
+    let mut state = DieState {
+        seat,
+        rt,
+        weights: HashMap::new(),
+        weights_t: HashMap::new(),
+        dweights: HashMap::new(),
+        saved: HashMap::new(),
+        resident_act: None,
+        resident_dact: None,
+    };
+    loop {
+        let cmd = match state.seat.cmds.recv() {
+            Ok(c) => c,
+            Err(_) => return, // leader dropped: shut down
+        };
+        if matches!(cmd, DieCmd::Shutdown) {
+            return;
+        }
+        match state.step(cmd) {
+            Ok(Some(reply)) => {
+                let _ = replies.send(reply);
+            }
+            Ok(None) => {}
+            Err(e) => {
+                let _ = replies.send(DieReply::Err(format!("{e:#}")));
+                return;
+            }
+        }
+    }
+}
+
+/// The gather/scatter ring endpoints for an orientation (free fn so the
+/// borrow checker sees the disjoint field borrows).
+fn rings(seat: &DieSeat, orient: Orient) -> (&RingEnd, &RingEnd) {
+    match orient {
+        // Gather within columns (members differ in i → the col ring).
+        Orient::First => (&seat.col_ring, &seat.row_ring),
+        Orient::Second => (&seat.row_ring, &seat.col_ring),
+    }
+}
+
+impl DieState {
+
+    // Gelu runs on the host rather than through a PJRT dispatch: the
+    // tiles are tiny (w/C × i/R elements) and dispatch overhead is ~60 µs
+    // on this CPU client, ~50× the arithmetic (§Perf item L3-3). The
+    // formulas match the jnp `approximate=True` tanh gelu the artifacts
+    // use (pinned by `host_gelu_matches_artifact` below), so mesh-vs-dense
+    // equivalence is unaffected — both paths use the host version.
+
+    /// tanh-approximate gelu, matching `jax.nn.gelu(approximate=True)`.
+    pub(crate) fn gelu_fwd_host(t: &Tensor) -> Tensor {
+        const C0: f32 = 0.797_884_56; // sqrt(2/pi)
+        const C1: f32 = 0.044715;
+        let data = t
+            .data
+            .iter()
+            .map(|&x| 0.5 * x * (1.0 + (C0 * (x + C1 * x * x * x)).tanh()))
+            .collect();
+        Tensor::new(data, t.shape.clone())
+    }
+
+    /// d(gelu)/dx under cotangent `dy`.
+    pub(crate) fn gelu_bwd_host(pre: &Tensor, dy: &Tensor) -> Tensor {
+        const C0: f32 = 0.797_884_56;
+        const C1: f32 = 0.044715;
+        assert_eq!(pre.shape, dy.shape);
+        let data = pre
+            .data
+            .iter()
+            .zip(&dy.data)
+            .map(|(&x, &g)| {
+                let inner = C0 * (x + C1 * x * x * x);
+                let t = inner.tanh();
+                let dinner = C0 * (1.0 + 3.0 * C1 * x * x);
+                g * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * dinner)
+            })
+            .collect();
+        Tensor::new(data, pre.shape.clone())
+    }
+
+    fn step(&mut self, cmd: DieCmd) -> crate::Result<Option<DieReply>> {
+        match cmd {
+            DieCmd::LoadWeight { key, tile } => {
+                self.dweights.insert(key.clone(), Tensor::zeros(&tile.shape));
+                self.weights_t.remove(&key);
+                self.weights.insert(key, tile);
+                Ok(Some(DieReply::Ack))
+            }
+
+            DieCmd::LinearFwd {
+                key,
+                orient,
+                input,
+                save_input_key,
+                gelu_save_key,
+                return_output,
+                keep_output,
+            } => {
+                let tile = match input {
+                    Some(t) => t,
+                    None => self
+                        .resident_act
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!("no resident activation"))?,
+                };
+                let (gather, scatter) = rings(&self.seat, orient);
+                let x_full = Tensor::concat_rows(&gather.all_gather(tile)?);
+                if let Some(k) = save_input_key {
+                    self.saved.insert(k, x_full.clone());
+                }
+                let w = self
+                    .weights
+                    .get(&key)
+                    .ok_or_else(|| anyhow::anyhow!("weight '{key}' not loaded"))?;
+                let partial = self.rt.matmul(&x_full, w)?;
+                let mut out = scatter.reduce_scatter(&partial)?;
+                if let Some(k) = gelu_save_key {
+                    let pre = out.clone();
+                    out = Self::gelu_fwd_host(&pre);
+                    self.saved.insert(k, pre);
+                }
+                if keep_output {
+                    self.resident_act = Some(out.clone());
+                }
+                Ok(return_output.then_some(DieReply::Tile(out)))
+            }
+
+            DieCmd::LinearBwd {
+                key,
+                orient,
+                dout,
+                saved_input_key,
+                gelu_bwd_key,
+                return_dinput,
+                keep_dinput,
+            } => {
+                let dout_tile = match dout {
+                    Some(t) => t,
+                    None => self
+                        .resident_dact
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!("no resident gradient"))?,
+                };
+                let (gather, scatter) = rings(&self.seat, orient);
+                // Reuse the gathered dY for both dX and dW (Fig. 7(a)).
+                let dy_full = Tensor::concat_rows(&scatter.all_gather(dout_tile)?);
+                let w_t = match self.weights_t.get(&key) {
+                    Some(t) => t,
+                    None => {
+                        let w = self
+                            .weights
+                            .get(&key)
+                            .ok_or_else(|| anyhow::anyhow!("weight '{key}' not loaded"))?;
+                        self.weights_t.insert(key.clone(), w.transpose());
+                        &self.weights_t[&key]
+                    }
+                };
+                let dx_partial = self.rt.matmul(&dy_full, w_t)?;
+                let mut dx = gather.reduce_scatter(&dx_partial)?;
+
+                // dW += Xᵀ·dY with the input saved during forward.
+                let x_full = self
+                    .saved
+                    .get(&saved_input_key)
+                    .ok_or_else(|| anyhow::anyhow!("saved input '{saved_input_key}' missing"))?;
+                let dw = self.rt.matmul(&x_full.transpose(), &dy_full)?;
+                self.dweights
+                    .get_mut(&key)
+                    .ok_or_else(|| anyhow::anyhow!("no grad accum for '{key}'"))?
+                    .add_assign(&dw);
+
+                if let Some(k) = gelu_bwd_key {
+                    let pre = self
+                        .saved
+                        .get(&k)
+                        .ok_or_else(|| anyhow::anyhow!("saved pre-act '{k}' missing"))?;
+                    dx = Self::gelu_bwd_host(pre, &dx);
+                }
+                if keep_dinput {
+                    self.resident_dact = Some(dx.clone());
+                }
+                Ok(return_dinput.then_some(DieReply::Tile(dx)))
+            }
+
+            DieCmd::AttnFwd { q, k, v, save_key } => {
+                let hc = self.seat.cfg.heads_per_die();
+                let s = self.seat.cfg.model.seq_len;
+                let d = self.seat.cfg.model.head_dim();
+                let name = format!("attention_fwd_{hc}x{s}x{d}");
+                let out = self.rt.exec(
+                    &name,
+                    &[q.clone().into(), k.clone().into(), v.clone().into()],
+                )?;
+                self.saved.insert(format!("{save_key}.q"), q);
+                self.saved.insert(format!("{save_key}.k"), k);
+                self.saved.insert(format!("{save_key}.v"), v);
+                let o = out.into_iter().next().unwrap().reshaped(&[hc * s, d]);
+                Ok(Some(DieReply::Tile(o)))
+            }
+
+            DieCmd::AttnBwd { dout, save_key } => {
+                let hc = self.seat.cfg.heads_per_die();
+                let s = self.seat.cfg.model.seq_len;
+                let d = self.seat.cfg.model.head_dim();
+                let name = format!("attention_bwd_{hc}x{s}x{d}");
+                let q = self.saved.remove(&format!("{save_key}.q")).unwrap();
+                let k = self.saved.remove(&format!("{save_key}.k")).unwrap();
+                let v = self.saved.remove(&format!("{save_key}.v")).unwrap();
+                let out = self
+                    .rt
+                    .exec(&name, &[q.into(), k.into(), v.into(), dout.into()])?;
+                let mut it = out.into_iter();
+                let dq = it.next().unwrap().reshaped(&[hc * s, d]);
+                let dk = it.next().unwrap().reshaped(&[hc * s, d]);
+                let dv = it.next().unwrap().reshaped(&[hc * s, d]);
+                Ok(Some(DieReply::Triple(Box::new((dq, dk, dv)))))
+            }
+
+            DieCmd::SgdStep { lr } => {
+                for (key, w) in self.weights.iter_mut() {
+                    let g = self.dweights.get_mut(key).expect("grad accum exists");
+                    w.sub_scaled(g, lr);
+                    g.fill(0.0);
+                }
+                self.weights_t.clear(); // transposes are stale now
+                Ok(Some(DieReply::Ack))
+            }
+
+            DieCmd::GetStats => Ok(Some(DieReply::Stats(self.rt.stats()))),
+            DieCmd::Shutdown => unreachable!("handled by caller"),
+        }
+    }
+}
+
+/// Test hooks for the host gelu (pinned against the artifacts in
+/// `coordinator::tests::host_gelu_matches_artifact`).
+#[doc(hidden)]
+pub fn test_gelu_fwd(t: &Tensor) -> Tensor {
+    DieState::gelu_fwd_host(t)
+}
+#[doc(hidden)]
+pub fn test_gelu_bwd(pre: &Tensor, dy: &Tensor) -> Tensor {
+    DieState::gelu_bwd_host(pre, dy)
+}

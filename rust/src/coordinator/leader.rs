@@ -1,0 +1,710 @@
+//! The leader: owns the boundary activations (playing the DRAM + IO-die
+//! role of Fig. 6), scatters/gathers tiles to the die mesh, and runs the
+//! block-boundary ops (norms, residuals, embedding, LM head, loss) on its
+//! own runtime.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail};
+
+use crate::coordinator::collective::RingEnd;
+use crate::coordinator::die::{die_main, DieCmd, DieReply, DieSeat};
+use crate::coordinator::mesh::{MeshCfg, Orient};
+use crate::runtime::client::Arg;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// A live mesh of die threads plus the leader-side state.
+pub struct Coordinator {
+    pub cfg: MeshCfg,
+    cmd_tx: Vec<Sender<DieCmd>>,
+    reply_rx: Vec<Receiver<DieReply>>,
+    handles: Vec<JoinHandle<()>>,
+    rt: Runtime,
+    /// Leader-owned parameters: embedding, norms, LM head.
+    pub params: HashMap<String, Tensor>,
+    grads: HashMap<String, Tensor>,
+}
+
+/// Per-layer leader-side saved activations for backward.
+struct LayerSave {
+    x_in: Tensor,
+    x_mid: Tensor,
+    xn1: Tensor,
+    xn2: Tensor,
+}
+
+impl Coordinator {
+    /// Spawn the mesh and initialize parameters (deterministic from
+    /// `seed` and parameter names, so different mesh shapes of the same
+    /// model start from identical weights — the basis of the
+    /// 1×1-vs-R×C equivalence test).
+    pub fn new(cfg: MeshCfg, seed: u64) -> crate::Result<Coordinator> {
+        let artifact_dir = crate::runtime::artifact_dir();
+        let (rows, cols) = (cfg.rows, cfg.cols);
+
+        // Ring channel plumbing: one channel per directed ring edge.
+        let mut row_ends: Vec<Vec<Option<RingEnd>>> = build_rings_grid(rows, cols, true);
+        let mut col_ends: Vec<Vec<Option<RingEnd>>> = build_rings_grid(rows, cols, false);
+
+        let mut cmd_tx = Vec::new();
+        let mut reply_rx = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                let (ctx, crx) = channel();
+                let (rtx, rrx) = channel();
+                cmd_tx.push(ctx);
+                reply_rx.push(rrx);
+                let seat = DieSeat {
+                    i,
+                    j,
+                    cfg: cfg.clone(),
+                    artifact_dir: artifact_dir.clone(),
+                    row_ring: row_ends[i][j].take().expect("row ring end"),
+                    col_ring: col_ends[i][j].take().expect("col ring end"),
+                    cmds: crx,
+                    replies: rtx,
+                };
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("die-{i}-{j}"))
+                        .spawn(move || die_main(seat))
+                        .expect("spawn die thread"),
+                );
+            }
+        }
+
+        let rt = Runtime::open(artifact_dir)?;
+        let mut coord = Coordinator {
+            cfg,
+            cmd_tx,
+            reply_rx,
+            handles,
+            rt,
+            params: HashMap::new(),
+            grads: HashMap::new(),
+        };
+        coord.init_params(seed)?;
+        Ok(coord)
+    }
+
+    fn die_idx(&self, i: usize, j: usize) -> usize {
+        i * self.cfg.cols + j
+    }
+
+    fn send(&self, i: usize, j: usize, cmd: DieCmd) {
+        self.cmd_tx[self.die_idx(i, j)]
+            .send(cmd)
+            .expect("die thread alive");
+    }
+
+    fn recv(&self, i: usize, j: usize) -> crate::Result<DieReply> {
+        match self.reply_rx[self.die_idx(i, j)].recv() {
+            Ok(DieReply::Err(e)) => bail!("die ({i},{j}) failed: {e}"),
+            Ok(r) => Ok(r),
+            Err(_) => bail!("die ({i},{j}) hung up"),
+        }
+    }
+
+    fn recv_tile(&self, i: usize, j: usize) -> crate::Result<Tensor> {
+        match self.recv(i, j)? {
+            DieReply::Tile(t) => Ok(t),
+            _ => bail!("die ({i},{j}): expected tile"),
+        }
+    }
+
+    fn wait_acks(&self) -> crate::Result<()> {
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                match self.recv(i, j)? {
+                    DieReply::Ack => {}
+                    _ => bail!("expected ack from ({i},{j})"),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ────────────────────── parameter management ──────────────────────
+
+    fn init_params(&mut self, seed: u64) -> crate::Result<()> {
+        let m = self.cfg.model.clone();
+        let name_seed = |name: &str| -> u64 {
+            name.bytes()
+                .fold(seed ^ 0x51_7c_c1_b7_27_22_0a_95, |h, b| {
+                    (h ^ b as u64).wrapping_mul(0x100000001b3)
+                })
+        };
+        // Leader-owned params.
+        let mut add = |name: &str, t: Tensor| {
+            self.grads.insert(name.to_string(), Tensor::zeros(&t.shape));
+            self.params.insert(name.to_string(), t);
+        };
+        let mut rng = Rng::new(name_seed("embed"));
+        add("embed", Tensor::glorot(m.vocab, m.hidden, &mut rng));
+        let mut rng = Rng::new(name_seed("lm_head"));
+        add("lm_head", Tensor::glorot(m.hidden, m.vocab, &mut rng));
+        add("norm_f", Tensor::ones(&[1, m.hidden]));
+        for l in 0..m.layers {
+            add(&format!("l{l}.norm1"), Tensor::ones(&[1, m.hidden]));
+            add(&format!("l{l}.norm2"), Tensor::ones(&[1, m.hidden]));
+        }
+        // Die-owned weight tiles: create the full matrix deterministically,
+        // scatter 2D tiles per Algorithm 1 Step 1.
+        for l in 0..m.layers {
+            for (key, in_dim, out_dim, orient) in self.cfg.linears(l) {
+                let mut rng = Rng::new(name_seed(&key));
+                let w = Tensor::glorot(in_dim, out_dim, &mut rng);
+                self.scatter_weight(&key, &w, orient)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter weight `w[in, out]` as tiles: die (i,j) receives the block
+    /// (rows = scatter-pos slice of `in`, cols = gather-pos slice of `out`).
+    fn scatter_weight(&self, key: &str, w: &Tensor, orient: Orient) -> crate::Result<()> {
+        let (g_len, s_len) = self.cfg.rings(orient);
+        let (kt, nt) = (w.rows() / s_len, w.cols() / g_len);
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                let (g_pos, s_pos) = self.cfg.positions(i, j, orient);
+                let tile = w.row_block(s_pos * kt, kt).col_block(g_pos * nt, nt);
+                self.send(
+                    i,
+                    j,
+                    DieCmd::LoadWeight {
+                        key: key.to_string(),
+                        tile,
+                    },
+                );
+            }
+        }
+        self.wait_acks()
+    }
+
+    /// Reassemble the full weight from die tiles is not needed — weights
+    /// stay distributed for the lifetime of training (§III-A).
+
+    // ───────────────────── distributed linear layers ─────────────────────
+
+    /// Forward one linear over the mesh. `x` is the full `[w, in]`
+    /// activation (None → dies use their resident tiles). Returns the
+    /// gathered `[w, out]` output when `return_output`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linear_fwd(
+        &self,
+        key: &str,
+        orient: Orient,
+        x: Option<&Tensor>,
+        save_input_key: Option<&str>,
+        gelu_save_key: Option<&str>,
+        return_output: bool,
+        keep_output: bool,
+    ) -> crate::Result<Option<Tensor>> {
+        let (g_len, s_len) = self.cfg.rings(orient);
+        let w_tok = self.cfg.tokens;
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                let (g_pos, s_pos) = self.cfg.positions(i, j, orient);
+                let input = x.map(|x_full| {
+                    let rt = w_tok / g_len;
+                    let ct = x_full.cols() / s_len;
+                    x_full.row_block(g_pos * rt, rt).col_block(s_pos * ct, ct)
+                });
+                self.send(
+                    i,
+                    j,
+                    DieCmd::LinearFwd {
+                        key: key.to_string(),
+                        orient,
+                        input,
+                        save_input_key: save_input_key.map(str::to_string),
+                        gelu_save_key: gelu_save_key.map(str::to_string),
+                        return_output,
+                        keep_output,
+                    },
+                );
+            }
+        }
+        if !return_output {
+            return Ok(None);
+        }
+        // Output tiling: tokens by scatter-pos, features by gather-pos.
+        let mut out: Option<Tensor> = None;
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                let tile = self.recv_tile(i, j)?;
+                let (g_pos, s_pos) = self.cfg.positions(i, j, orient);
+                let out_t = out.get_or_insert_with(|| {
+                    Tensor::zeros(&[w_tok, tile.cols() * g_len])
+                });
+                let rt = w_tok / s_len;
+                out_t.set_block(s_pos * rt, g_pos * tile.cols(), &tile);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Backward one linear. `dout` is the full `[w, out]` gradient
+    /// (None → resident). Returns gathered `[w, in]` dInput if requested.
+    #[allow(clippy::too_many_arguments)]
+    pub fn linear_bwd(
+        &self,
+        key: &str,
+        orient: Orient,
+        dout: Option<&Tensor>,
+        saved_input_key: &str,
+        gelu_bwd_key: Option<&str>,
+        return_dinput: bool,
+        keep_dinput: bool,
+    ) -> crate::Result<Option<Tensor>> {
+        let (g_len, s_len) = self.cfg.rings(orient);
+        let w_tok = self.cfg.tokens;
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                let (g_pos, s_pos) = self.cfg.positions(i, j, orient);
+                // dOut tiling mirrors the fwd output: tokens by
+                // scatter-pos, features by gather-pos.
+                let dtile = dout.map(|d| {
+                    let rt = w_tok / s_len;
+                    let ct = d.cols() / g_len;
+                    d.row_block(s_pos * rt, rt).col_block(g_pos * ct, ct)
+                });
+                self.send(
+                    i,
+                    j,
+                    DieCmd::LinearBwd {
+                        key: key.to_string(),
+                        orient,
+                        dout: dtile,
+                        saved_input_key: saved_input_key.to_string(),
+                        gelu_bwd_key: gelu_bwd_key.map(str::to_string),
+                        return_dinput,
+                        keep_dinput,
+                    },
+                );
+            }
+        }
+        if !return_dinput {
+            return Ok(None);
+        }
+        // dInput tiling matches the fwd input: tokens by gather-pos,
+        // features by scatter-pos.
+        let mut out: Option<Tensor> = None;
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                let tile = self.recv_tile(i, j)?;
+                let (g_pos, s_pos) = self.cfg.positions(i, j, orient);
+                let out_t =
+                    out.get_or_insert_with(|| Tensor::zeros(&[w_tok, tile.cols() * s_len]));
+                let rt = w_tok / g_len;
+                out_t.set_block(g_pos * rt, s_pos * tile.cols(), &tile);
+            }
+        }
+        Ok(out)
+    }
+
+    // ───────────────────────── attention ─────────────────────────
+
+    /// Slice `[w, h]` Q/K/V into per-die head chunks `[hc·s, d]`.
+    fn head_chunks(&self, t: &Tensor) -> Vec<Tensor> {
+        let m = &self.cfg.model;
+        let (s, d) = (m.seq_len, m.head_dim());
+        let hc = self.cfg.heads_per_die();
+        let seqs = self.cfg.tokens / s;
+        let mut chunks = Vec::with_capacity(self.cfg.n_dies());
+        let mut hb = 0usize; // global head-batch index = si·heads + hi
+        for _die in 0..self.cfg.n_dies() {
+            let mut rows = Vec::with_capacity(hc);
+            for _ in 0..hc {
+                let (si, hi) = (hb / m.heads, hb % m.heads);
+                debug_assert!(si < seqs);
+                rows.push(t.row_block(si * s, s).col_block(hi * d, d));
+                hb += 1;
+            }
+            chunks.push(Tensor::concat_rows(&rows));
+        }
+        chunks
+    }
+
+    /// Inverse of `head_chunks`.
+    fn unchunk_heads(&self, chunks: &[Tensor]) -> Tensor {
+        let m = &self.cfg.model;
+        let (s, d) = (m.seq_len, m.head_dim());
+        let hc = self.cfg.heads_per_die();
+        let mut out = Tensor::zeros(&[self.cfg.tokens, m.hidden]);
+        let mut hb = 0usize;
+        for chunk in chunks {
+            for c in 0..hc {
+                let (si, hi) = (hb / m.heads, hb % m.heads);
+                let block = chunk.row_block(c * s, s);
+                out.set_block(si * s, hi * d, &block);
+                hb += 1;
+            }
+        }
+        out
+    }
+
+    /// Multi-head attention forward over the mesh (heads on dies).
+    pub fn attention_fwd(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        save_key: &str,
+    ) -> crate::Result<Tensor> {
+        let qs = self.head_chunks(q);
+        let ks = self.head_chunks(k);
+        let vs = self.head_chunks(v);
+        for (d, ((q, k), v)) in qs.into_iter().zip(ks).zip(vs).enumerate() {
+            let (i, j) = (d / self.cfg.cols, d % self.cfg.cols);
+            self.send(
+                i,
+                j,
+                DieCmd::AttnFwd {
+                    q,
+                    k,
+                    v,
+                    save_key: save_key.to_string(),
+                },
+            );
+        }
+        let mut outs = Vec::with_capacity(self.cfg.n_dies());
+        for d in 0..self.cfg.n_dies() {
+            let (i, j) = (d / self.cfg.cols, d % self.cfg.cols);
+            outs.push(self.recv_tile(i, j)?);
+        }
+        Ok(self.unchunk_heads(&outs))
+    }
+
+    /// Multi-head attention backward; returns `[w, 3h]` dQKV.
+    pub fn attention_bwd(&self, da: &Tensor, save_key: &str) -> crate::Result<Tensor> {
+        let chunks = self.head_chunks(da);
+        for (d, dout) in chunks.into_iter().enumerate() {
+            let (i, j) = (d / self.cfg.cols, d % self.cfg.cols);
+            self.send(
+                i,
+                j,
+                DieCmd::AttnBwd {
+                    dout,
+                    save_key: save_key.to_string(),
+                },
+            );
+        }
+        let mut dqs = Vec::new();
+        let mut dks = Vec::new();
+        let mut dvs = Vec::new();
+        for d in 0..self.cfg.n_dies() {
+            let (i, j) = (d / self.cfg.cols, d % self.cfg.cols);
+            match self.recv(i, j)? {
+                DieReply::Triple(t) => {
+                    let (dq, dk, dv) = *t;
+                    dqs.push(dq);
+                    dks.push(dk);
+                    dvs.push(dv);
+                }
+                _ => bail!("expected attention gradients from ({i},{j})"),
+            }
+        }
+        Ok(Tensor::concat_cols(&[
+            self.unchunk_heads(&dqs),
+            self.unchunk_heads(&dks),
+            self.unchunk_heads(&dvs),
+        ]))
+    }
+
+    // ───────────────────── leader-side primitives ─────────────────────
+
+    fn rms_fwd(&self, x: &Tensor, norm_key: &str) -> crate::Result<Tensor> {
+        let (r, c) = (x.rows(), x.cols());
+        let g = &self.params[norm_key];
+        let out = self.rt.exec(
+            &format!("rmsnorm_fwd_{r}x{c}"),
+            &[x.clone().into(), g.clone().reshaped(&[c]).into()],
+        )?;
+        Ok(out.into_iter().next().unwrap().reshaped(&[r, c]))
+    }
+
+    /// RMSNorm backward; accumulates the gain gradient and returns dx.
+    fn rms_bwd(&mut self, x: &Tensor, norm_key: &str, dy: &Tensor) -> crate::Result<Tensor> {
+        let (r, c) = (x.rows(), x.cols());
+        let g = &self.params[norm_key];
+        let out = self.rt.exec(
+            &format!("rmsnorm_bwd_{r}x{c}"),
+            &[
+                x.clone().into(),
+                g.clone().reshaped(&[c]).into(),
+                dy.clone().into(),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let dx = it.next().unwrap().reshaped(&[r, c]);
+        let dg = it.next().unwrap().reshaped(&[1, c]);
+        self.accum_grad(norm_key, &dg);
+        Ok(dx)
+    }
+
+    fn accum_grad(&mut self, key: &str, g: &Tensor) {
+        self.grads
+            .get_mut(key)
+            .expect("grad slot exists")
+            .add_assign(g);
+    }
+
+    // ───────────────────────── training ─────────────────────────
+
+    /// Embedding lookup (leader host op).
+    fn embed(&self, tokens: &[u32]) -> Tensor {
+        let e = &self.params["embed"];
+        let h = e.cols();
+        let mut out = Tensor::zeros(&[tokens.len(), h]);
+        for (r, &t) in tokens.iter().enumerate() {
+            let row = e.row_block(t as usize, 1);
+            out.set_block(r, 0, &row);
+        }
+        out
+    }
+
+    /// One forward+backward over a mini-batch; returns the loss.
+    /// Gradients accumulate (call [`Coordinator::sgd_step`] to apply).
+    pub fn grad_step(&mut self, tokens: &[u32], targets: &[i32]) -> crate::Result<f32> {
+        let m = self.cfg.model.clone();
+        let w = self.cfg.tokens;
+        assert_eq!(tokens.len(), w, "mini-batch must be {w} tokens");
+        let mut x = self.embed(tokens);
+        let mut saves: Vec<LayerSave> = Vec::with_capacity(m.layers);
+
+        // ── forward ──
+        for l in 0..m.layers {
+            let x_in = x.clone();
+            let xn1 = self.rms_fwd(&x, &format!("l{l}.norm1"))?;
+            let qkv = self
+                .linear_fwd(
+                    &format!("l{l}.w_qkv"),
+                    Orient::First,
+                    Some(&xn1),
+                    Some(&format!("l{l}.qkv_in")),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("qkv");
+            let (q, k, v) = (
+                qkv.col_block(0, m.hidden),
+                qkv.col_block(m.hidden, m.hidden),
+                qkv.col_block(2 * m.hidden, m.hidden),
+            );
+            let a = self.attention_fwd(&q, &k, &v, &format!("l{l}.attn"))?;
+            let o = self
+                .linear_fwd(
+                    &format!("l{l}.w_o"),
+                    Orient::Second,
+                    Some(&a),
+                    Some(&format!("l{l}.o_in")),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("o");
+            let mut x_mid = x_in.clone();
+            x_mid.add_assign(&o);
+            let xn2 = self.rms_fwd(&x_mid, &format!("l{l}.norm2"))?;
+            self.linear_fwd(
+                &format!("l{l}.w_up"),
+                Orient::First,
+                Some(&xn2),
+                Some(&format!("l{l}.up_in")),
+                Some(&format!("l{l}.gelu")),
+                false,
+                true,
+            )?;
+            let y = self
+                .linear_fwd(
+                    &format!("l{l}.w_down"),
+                    Orient::Second,
+                    None,
+                    Some(&format!("l{l}.down_in")),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("ffn out");
+            let mut x_out = x_mid.clone();
+            x_out.add_assign(&y);
+            saves.push(LayerSave {
+                x_in,
+                x_mid,
+                xn1,
+                xn2,
+            });
+            x = x_out;
+        }
+
+        let xnf = self.rms_fwd(&x, "norm_f")?;
+        let logits = self.rt.matmul(&xnf, &self.params["lm_head"])?;
+        let out = self.rt.exec(
+            &format!("xent_{}x{}", w, m.vocab),
+            &[logits.into(), Arg::I32(targets.to_vec())],
+        )?;
+        let loss = out[0].data[0];
+        let dlogits = out[1].clone().reshaped(&[w, m.vocab]);
+
+        // ── backward ──
+        let d_lm = self.rt.matmul(&xnf.transpose(), &dlogits)?;
+        self.accum_grad("lm_head", &d_lm);
+        let dxnf = self
+            .rt
+            .matmul(&dlogits, &self.params["lm_head"].transpose())?;
+        let mut dx = self.rms_bwd(&x, "norm_f", &dxnf)?;
+
+        for l in (0..m.layers).rev() {
+            let save = &saves[l];
+            // FFN block: x_out = x_mid + down(gelu(up(rms(x_mid))))
+            self.linear_bwd(
+                &format!("l{l}.w_down"),
+                Orient::Second,
+                Some(&dx),
+                &format!("l{l}.down_in"),
+                Some(&format!("l{l}.gelu")),
+                false,
+                true,
+            )?;
+            let dxn2 = self
+                .linear_bwd(
+                    &format!("l{l}.w_up"),
+                    Orient::First,
+                    None,
+                    &format!("l{l}.up_in"),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("dxn2");
+            let dmid_norm = self.rms_bwd(&save.x_mid, &format!("l{l}.norm2"), &dxn2)?;
+            let mut dmid = dx.clone();
+            dmid.add_assign(&dmid_norm);
+            // Attention block: x_mid = x_in + W_o(attn(W_qkv(rms(x_in))))
+            let da = self
+                .linear_bwd(
+                    &format!("l{l}.w_o"),
+                    Orient::Second,
+                    Some(&dmid),
+                    &format!("l{l}.o_in"),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("da");
+            let dqkv = self.attention_bwd(&da, &format!("l{l}.attn"))?;
+            let dxn1 = self
+                .linear_bwd(
+                    &format!("l{l}.w_qkv"),
+                    Orient::First,
+                    Some(&dqkv),
+                    &format!("l{l}.qkv_in"),
+                    None,
+                    true,
+                    false,
+                )?
+                .expect("dxn1");
+            let dx1 = self.rms_bwd(&save.x_in, &format!("l{l}.norm1"), &dxn1)?;
+            let mut dnext = dmid;
+            dnext.add_assign(&dx1);
+            dx = dnext;
+            let _ = &save.xn1;
+            let _ = &save.xn2;
+        }
+
+        // Embedding gradient: scatter-add.
+        {
+            let h = m.hidden;
+            let demb = self.grads.get_mut("embed").expect("embed grad");
+            for (r, &t) in tokens.iter().enumerate() {
+                let base = t as usize * h;
+                for c in 0..h {
+                    demb.data[base + c] += dx.data[r * h + c];
+                }
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Apply accumulated gradients everywhere (dies + leader) and clear.
+    pub fn sgd_step(&mut self, lr: f32) -> crate::Result<()> {
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                self.send(i, j, DieCmd::SgdStep { lr });
+            }
+        }
+        self.wait_acks()?;
+        for (key, p) in self.params.iter_mut() {
+            let g = self.grads.get_mut(key).expect("grad slot");
+            p.sub_scaled(g, lr);
+            g.fill(0.0);
+        }
+        Ok(())
+    }
+
+    /// Aggregate die runtime stats (perf accounting).
+    pub fn die_stats(&self) -> crate::Result<Vec<crate::runtime::client::RuntimeStats>> {
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                self.send(i, j, DieCmd::GetStats);
+            }
+        }
+        let mut out = Vec::new();
+        for i in 0..self.cfg.rows {
+            for j in 0..self.cfg.cols {
+                match self.recv(i, j)? {
+                    DieReply::Stats(s) => out.push(s),
+                    _ => bail!("expected stats"),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Leader runtime stats.
+    pub fn leader_stats(&self) -> crate::runtime::client::RuntimeStats {
+        self.rt.stats()
+    }
+
+    /// Stop all die threads.
+    pub fn shutdown(mut self) -> crate::Result<()> {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(DieCmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow!("die thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Build RingEnd grids: `horizontal=true` → row rings (ring over j for
+/// each i), else column rings (ring over i for each j).
+fn build_rings_grid(rows: usize, cols: usize, horizontal: bool) -> Vec<Vec<Option<RingEnd>>> {
+    let mut grid: Vec<Vec<Option<RingEnd>>> = (0..rows)
+        .map(|_| (0..cols).map(|_| None).collect())
+        .collect();
+    if horizontal {
+        for i in 0..rows {
+            let ends = crate::coordinator::collective::build_ring(cols);
+            for (j, end) in ends.into_iter().enumerate() {
+                grid[i][j] = Some(end);
+            }
+        }
+    } else {
+        for j in 0..cols {
+            let ends = crate::coordinator::collective::build_ring(rows);
+            for (i, end) in ends.into_iter().enumerate() {
+                grid[i][j] = Some(end);
+            }
+        }
+    }
+    grid
+}

@@ -1,0 +1,215 @@
+//! Mesh/model configuration for the functional coordinator and the
+//! Algorithm-1 tiling rules (the rust mirror of
+//! `python/compile/model.py::hecaton_tile_shapes`).
+
+use crate::config::ModelConfig;
+
+/// Ring orientation of a linear layer (see `parallel::hecaton`): the
+/// input is all-gathered within the *gather* rings and the output partial
+/// sums are reduce-scattered within the *scatter* rings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orient {
+    /// Gather within columns (ring length R), scatter within rows (C).
+    First,
+    /// Transposed (consecutive fused linears alternate).
+    Second,
+}
+
+/// Functional-path model description (mirrors the python `ModelCfg`).
+#[derive(Debug, Clone)]
+pub struct CoordModel {
+    pub name: String,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vocab: usize,
+}
+
+impl CoordModel {
+    pub fn from_config(m: &ModelConfig) -> CoordModel {
+        assert_eq!(
+            m.kv_heads, m.heads,
+            "functional path implements MHA models only"
+        );
+        CoordModel {
+            name: m.name.clone(),
+            hidden: m.hidden,
+            intermediate: m.intermediate,
+            layers: m.layers,
+            heads: m.heads,
+            seq_len: m.seq_len,
+            batch: m.batch,
+            vocab: m.vocab,
+        }
+    }
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+    pub fn qkv_out(&self) -> usize {
+        3 * self.hidden
+    }
+    pub fn batch_tokens(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// Coordinator deployment: a model on an R×C mesh with a mini-batch of
+/// `tokens` tokens. Must match an `aot.py` DEPLOYMENTS entry.
+#[derive(Debug, Clone)]
+pub struct MeshCfg {
+    pub model: CoordModel,
+    pub rows: usize,
+    pub cols: usize,
+    pub tokens: usize,
+}
+
+impl MeshCfg {
+    pub fn new(model: CoordModel, rows: usize, cols: usize, tokens: usize) -> MeshCfg {
+        let cfg = MeshCfg {
+            model,
+            rows,
+            cols,
+            tokens,
+        };
+        cfg.validate();
+        cfg
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Divisibility requirements of the functional tiling.
+    fn validate(&self) {
+        let m = &self.model;
+        let (r, c, w) = (self.rows, self.cols, self.tokens);
+        assert!(
+            w % m.seq_len == 0,
+            "tokens {w} must divide into whole sequences of {}",
+            m.seq_len
+        );
+        for (i, o) in [
+            (m.hidden, m.qkv_out()),
+            (m.hidden, m.hidden),
+            (m.hidden, m.intermediate),
+            (m.intermediate, m.hidden),
+        ] {
+            assert!(i % r == 0 && i % c == 0, "in_dim {i} must divide mesh");
+            assert!(o % r == 0 && o % c == 0, "out_dim {o} must divide mesh");
+        }
+        assert!(w % r == 0 && w % c == 0, "tokens {w} must divide mesh dims");
+        let head_batches = (w / m.seq_len) * m.heads;
+        assert!(
+            head_batches % self.n_dies() == 0,
+            "head batches {head_batches} must divide {} dies",
+            self.n_dies()
+        );
+    }
+
+    /// (gather_ring_len, scatter_ring_len) of an orientation.
+    pub fn rings(&self, orient: Orient) -> (usize, usize) {
+        match orient {
+            Orient::First => (self.rows, self.cols),
+            Orient::Second => (self.cols, self.rows),
+        }
+    }
+
+    /// Ring positions of die (i, j) under an orientation:
+    /// (gather_pos, scatter_pos).
+    pub fn positions(&self, i: usize, j: usize, orient: Orient) -> (usize, usize) {
+        match orient {
+            Orient::First => (i, j),
+            Orient::Second => (j, i),
+        }
+    }
+
+    /// Per-die matmul dims of a linear `[in → out]`: `(k, n)` with
+    /// `k = in/scatter_len`, `n = out/gather_len`.
+    pub fn tile_dims(&self, in_dim: usize, out_dim: usize, orient: Orient) -> (usize, usize) {
+        let (g, s) = self.rings(orient);
+        (in_dim / s, out_dim / g)
+    }
+
+    /// Head-batch chunk per die.
+    pub fn heads_per_die(&self) -> usize {
+        (self.tokens / self.model.seq_len) * self.model.heads / self.n_dies()
+    }
+
+    /// The four linears of layer `l`: (key, in, out, orient).
+    pub fn linears(&self, l: usize) -> [(String, usize, usize, Orient); 4] {
+        let m = &self.model;
+        [
+            (format!("l{l}.w_qkv"), m.hidden, m.qkv_out(), Orient::First),
+            (format!("l{l}.w_o"), m.hidden, m.hidden, Orient::Second),
+            (format!("l{l}.w_up"), m.hidden, m.intermediate, Orient::First),
+            (format!("l{l}.w_down"), m.intermediate, m.hidden, Orient::Second),
+        ]
+    }
+}
+
+/// Built-in functional presets (must mirror python `CONFIGS`).
+pub fn coord_model(name: &str) -> Option<CoordModel> {
+    let m = crate::config::presets::model_preset(name)?;
+    if m.kv_heads != m.heads {
+        return None;
+    }
+    Some(CoordModel::from_config(&m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_2x2() -> MeshCfg {
+        MeshCfg::new(coord_model("tiny").unwrap(), 2, 2, 64)
+    }
+
+    #[test]
+    fn tile_dims_match_python_pins() {
+        let cfg = tiny_2x2();
+        // Pinned against python/tests/test_model.py.
+        assert_eq!(cfg.tile_dims(64, 192, Orient::First), (32, 96)); // qkv
+        assert_eq!(cfg.tile_dims(64, 64, Orient::Second), (32, 32)); // o
+        assert_eq!(cfg.tile_dims(64, 256, Orient::First), (32, 128)); // up
+        assert_eq!(cfg.tile_dims(256, 64, Orient::Second), (128, 32)); // down
+        assert_eq!(cfg.heads_per_die(), 2);
+    }
+
+    #[test]
+    fn positions_and_rings() {
+        let cfg = tiny_2x2();
+        assert_eq!(cfg.rings(Orient::First), (2, 2));
+        assert_eq!(cfg.positions(1, 0, Orient::First), (1, 0));
+        assert_eq!(cfg.positions(1, 0, Orient::Second), (0, 1));
+    }
+
+    #[test]
+    fn one_by_one_mesh_is_dense() {
+        let cfg = MeshCfg::new(coord_model("tiny").unwrap(), 1, 1, 64);
+        assert_eq!(cfg.tile_dims(64, 192, Orient::First), (64, 192));
+        assert_eq!(cfg.heads_per_die(), 8);
+    }
+
+    #[test]
+    fn linears_enumerate_layer() {
+        let cfg = tiny_2x2();
+        let ls = cfg.linears(1);
+        assert_eq!(ls[0].0, "l1.w_qkv");
+        assert_eq!(ls[3].3, Orient::Second);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn indivisible_mesh_rejected() {
+        MeshCfg::new(coord_model("tiny").unwrap(), 3, 3, 63);
+    }
+
+    #[test]
+    fn gqa_models_rejected_for_functional_path() {
+        assert!(coord_model("llama2-70b").is_none());
+        assert!(coord_model("e2e-100m").is_some());
+    }
+}

@@ -1,0 +1,131 @@
+//! System energy model (paper §VI-A: RTL + PrimeTimePX numbers rescaled
+//! 28 nm → 7 nm; SRAM from a memory compiler; D2D from UCIe; DRAM from
+//! JEDEC / [O'Connor]).
+
+use crate::config::HardwareConfig;
+use crate::util::{Bytes, Energy, Seconds};
+
+/// Per-operation energy constants (7 nm).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// One FP32 MAC including local register traffic, pJ.
+    pub pj_per_mac: f64,
+    /// SRAM access energy, pJ/bit (averaged read/write).
+    pub sram_pj_per_bit: f64,
+    /// Vector-unit element-pass, pJ.
+    pub pj_per_vector_elem: f64,
+    /// D2D link energy, pJ/bit (from the package's link config).
+    pub d2d_pj_per_bit: f64,
+    /// DRAM access energy, pJ/bit.
+    pub dram_pj_per_bit: f64,
+    /// Static (leakage + clock tree) power per die, W. Accrues with
+    /// wall-clock time — the mechanism that penalizes slow schedules.
+    pub static_w_per_die: f64,
+    /// Number of dies (for the static term).
+    pub n_dies: usize,
+}
+
+impl EnergyModel {
+    pub fn new(hw: &HardwareConfig) -> EnergyModel {
+        EnergyModel {
+            pj_per_mac: 0.7,
+            sram_pj_per_bit: 0.085,
+            pj_per_vector_elem: 0.8,
+            d2d_pj_per_bit: hw.link.pj_per_bit,
+            dram_pj_per_bit: hw.dram.pj_per_bit,
+            static_w_per_die: 0.5,
+            n_dies: hw.n_dies(),
+        }
+    }
+
+    pub fn compute(&self, macs: f64) -> Energy {
+        Energy::pj(macs * self.pj_per_mac)
+    }
+    pub fn vector(&self, elem_passes: f64) -> Energy {
+        Energy::pj(elem_passes * self.pj_per_vector_elem)
+    }
+    pub fn sram(&self, bytes: Bytes) -> Energy {
+        Energy::pj(bytes.bits() * self.sram_pj_per_bit)
+    }
+    pub fn d2d(&self, bytes: Bytes) -> Energy {
+        Energy::pj(bytes.bits() * self.d2d_pj_per_bit)
+    }
+    pub fn dram(&self, bytes: Bytes) -> Energy {
+        Energy::pj(bytes.bits() * self.dram_pj_per_bit)
+    }
+    /// Static energy over a wall-clock interval.
+    pub fn static_energy(&self, time: Seconds) -> Energy {
+        Energy(self.static_w_per_die * self.n_dies as f64 * time.raw())
+    }
+}
+
+/// Energy breakdown of a simulated run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub compute: Energy,
+    pub sram: Energy,
+    pub nop: Energy,
+    pub dram: Energy,
+    pub static_e: Energy,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> Energy {
+        self.compute + self.sram + self.nop + self.dram + self.static_e
+    }
+    pub fn add(&mut self, other: EnergyBreakdown) {
+        self.compute += other.compute;
+        self.sram += other.sram;
+        self.nop += other.nop;
+        self.dram += other.dram;
+        self.static_e += other.static_e;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramKind, PackageKind};
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(&HardwareConfig::square(
+            16,
+            PackageKind::Standard,
+            DramKind::Ddr5_6400,
+        ))
+    }
+
+    #[test]
+    fn unit_energies() {
+        let m = model();
+        assert!((m.compute(1e12).raw() - 0.7).abs() < 1e-9); // 1 TMAC = 0.7 J
+        assert!((m.dram(Bytes(1.0)).raw() - 8.0 * 19e-12).abs() < 1e-22);
+        assert!((m.d2d(Bytes(1.0)).raw() - 8.0 * 0.5e-12).abs() < 1e-22);
+        // static: 16 dies × 0.5 W × 10 s = 80 J
+        assert!((m.static_energy(Seconds(10.0)).raw() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advanced_package_lowers_d2d_energy() {
+        let s = model();
+        let a = EnergyModel::new(&HardwareConfig::square(
+            16,
+            PackageKind::Advanced,
+            DramKind::Ddr5_6400,
+        ));
+        assert!(a.d2d_pj_per_bit < s.d2d_pj_per_bit);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let mut b = EnergyBreakdown::default();
+        b.add(EnergyBreakdown {
+            compute: Energy(1.0),
+            sram: Energy(0.5),
+            nop: Energy(0.25),
+            dram: Energy(0.25),
+            static_e: Energy(0.5),
+        });
+        assert_eq!(b.total(), Energy(2.5));
+    }
+}

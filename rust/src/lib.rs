@@ -1,0 +1,45 @@
+//! # Hecaton
+//!
+//! Reproduction of *"Hecaton: Training Large Language Models with Scalable
+//! Waferscale Chiplet Systems"* (cs.AR 2024) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate contains two cooperating halves:
+//!
+//! 1. **The chiplet system simulator** — the paper's evaluation testbed,
+//!    rebuilt from scratch: hardware models ([`arch`]), a step-level NoP
+//!    collective simulator ([`nop`]), per-die compute timing ([`compute`]),
+//!    a DRAM stream model ([`memory`]), the transformer workload
+//!    decomposition ([`workload`]), the four tensor-parallel methods
+//!    ([`parallel`]), Hecaton's fusion/overlap scheduling ([`sched`]) and
+//!    the system-level latency/energy simulator ([`sim`], [`energy`]).
+//!
+//! 2. **The functional distributed-training engine** — real numerics:
+//!    the [`runtime`] loads AOT-compiled JAX/Pallas artifacts via PJRT, the
+//!    [`coordinator`] executes the paper's Algorithm 1 (2D-tiled linear
+//!    layers with row/column all-gather + reduce-scatter) across simulated
+//!    dies running on threads, and [`train`] drives end-to-end training of
+//!    a small transformer with a loss curve.
+//!
+//! Experiment drivers reproducing every table and figure of the paper's
+//! evaluation live in [`report`].
+
+pub mod util;
+pub mod config;
+pub mod arch;
+pub mod nop;
+pub mod compute;
+pub mod memory;
+pub mod workload;
+pub mod parallel;
+pub mod sched;
+pub mod energy;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod train;
+pub mod report;
+pub mod cli;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

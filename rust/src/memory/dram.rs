@@ -1,0 +1,76 @@
+//! DRAM stream-bandwidth model.
+//!
+//! The paper drives DDR5-6400 through IO dies whose channel count scales
+//! with the package perimeter; latency is calibrated against Ramulator2
+//! stream traces (§VI-A). At the system-model level that reduces to a
+//! sustained-bandwidth stream with a small fixed per-burst overhead.
+
+use crate::config::HardwareConfig;
+use crate::util::{Bytes, Energy, Seconds};
+
+/// Aggregate DRAM model for a package.
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    /// Aggregate bandwidth, bytes/s (channels × per-channel).
+    pub bandwidth: f64,
+    /// Access energy, pJ/bit.
+    pub pj_per_bit: f64,
+    /// Effective bandwidth derating for non-ideal access patterns
+    /// (bank conflicts, refresh) — Ramulator2 stream traces sustain ~90%
+    /// of peak for sequential streams.
+    pub efficiency: f64,
+}
+
+impl DramModel {
+    pub fn new(hw: &HardwareConfig) -> DramModel {
+        DramModel {
+            bandwidth: hw.dram_bandwidth(),
+            pj_per_bit: hw.dram.pj_per_bit,
+            efficiency: 0.9,
+        }
+    }
+
+    /// Time to stream `bytes` through all channels.
+    pub fn stream_time(&self, bytes: Bytes) -> Seconds {
+        bytes.over_bandwidth(self.bandwidth * self.efficiency)
+    }
+
+    /// Access energy for `bytes`.
+    pub fn energy(&self, bytes: Bytes) -> Energy {
+        Energy::pj(bytes.bits() * self.pj_per_bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DramKind, PackageKind};
+
+    #[test]
+    fn stream_time_and_energy() {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let d = DramModel::new(&hw);
+        // 16 channels × 51.2 GB/s × 0.9
+        let bw = 16.0 * 51.2e9 * 0.9;
+        let t = d.stream_time(Bytes::gib(1.0));
+        assert!((t.raw() - Bytes::gib(1.0).raw() / bw).abs() < 1e-12);
+        let e = d.energy(Bytes(1.0));
+        assert!((e.raw() - 8.0 * 19.0e-12).abs() < 1e-20);
+    }
+
+    #[test]
+    fn hbm_is_faster_and_cheaper_per_bit() {
+        let ddr5 = DramModel::new(&HardwareConfig::square(
+            16,
+            PackageKind::Standard,
+            DramKind::Ddr5_6400,
+        ));
+        let hbm = DramModel::new(&HardwareConfig::square(
+            16,
+            PackageKind::Standard,
+            DramKind::Hbm2,
+        ));
+        assert!(hbm.bandwidth > ddr5.bandwidth);
+        assert!(hbm.pj_per_bit < ddr5.pj_per_bit);
+    }
+}

@@ -1,0 +1,8 @@
+//! Off-package memory model: DRAM stream timing and per-schedule traffic
+//! accounting (paper §III-A(c) and §III-B).
+
+pub mod dram;
+pub mod traffic;
+
+pub use dram::DramModel;
+pub use traffic::{BatchTraffic, TrafficModel};

@@ -1,0 +1,135 @@
+//! DRAM traffic accounting for the Hecaton schedule (paper §III-B).
+//!
+//! Per training batch, three traffic classes:
+//!
+//! * **Activations** — each *fusion-group boundary* streams the boundary
+//!   activation out during fwd (it is also the tensor the bwd pass
+//!   re-loads, twice: saved activation + incoming gradient) and streams
+//!   the activation gradient back. Fusing layers removes interior
+//!   boundaries — the paper's layer-fusion saving.
+//! * **Weights** — loaded once per batch per layer (amortized over all
+//!   mini-batches, §III-B), gradients written once, optimizer traffic
+//!   folded into a read-modify-write of the weight shard.
+//! * No HBM: everything goes through the perimeter DDR channels.
+
+use crate::config::{ModelConfig, ELEM_BYTES};
+use crate::util::Bytes;
+
+/// Per-batch DRAM traffic of one fusion group.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchTraffic {
+    /// Activation bytes streamed during the forward pass.
+    pub fwd_act: Bytes,
+    /// Activation bytes streamed during the backward pass.
+    pub bwd_act: Bytes,
+    /// Weight + gradient + optimizer bytes (amortized once per batch).
+    pub weights: Bytes,
+}
+
+impl BatchTraffic {
+    pub fn total(&self) -> Bytes {
+        self.fwd_act + self.bwd_act + self.weights
+    }
+    pub fn act_total(&self) -> Bytes {
+        self.fwd_act + self.bwd_act
+    }
+    pub fn add(&mut self, other: BatchTraffic) {
+        self.fwd_act += other.fwd_act;
+        self.bwd_act += other.bwd_act;
+        self.weights += other.weights;
+    }
+}
+
+/// Computes traffic for fusion groups of a model.
+#[derive(Debug, Clone)]
+pub struct TrafficModel {
+    /// Bytes of one boundary activation for the full batch `[B·s, h]`.
+    pub boundary_act: Bytes,
+}
+
+impl TrafficModel {
+    pub fn new(model: &ModelConfig) -> TrafficModel {
+        TrafficModel {
+            boundary_act: Bytes(
+                model.batch as f64 * model.seq_len as f64 * model.hidden as f64 * ELEM_BYTES,
+            ),
+        }
+    }
+
+    /// Traffic of a fusion group containing blocks with `group_weight_bytes`
+    /// total weights and `interior_boundaries` fused-away block boundaries.
+    ///
+    /// * fwd: load the group input + store the group output
+    ///   (`2 × boundary`), plus the saved interior activations are *not*
+    ///   written (fusion keeps them on-package; Fig. 6).
+    /// * bwd: load the saved input + load the incoming gradient + store the
+    ///   outgoing gradient (`3 × boundary`).
+    /// * weights: load + write gradient + optimizer read-modify-write
+    ///   (`3 ×` weights), once per batch.
+    pub fn group(&self, group_weight_bytes: Bytes) -> BatchTraffic {
+        BatchTraffic {
+            fwd_act: self.boundary_act * 2.0,
+            bwd_act: self.boundary_act * 3.0,
+            weights: group_weight_bytes * 3.0,
+        }
+    }
+
+    /// Traffic a *non-fused* schedule would add per interior boundary
+    /// (fwd store+load, bwd the full 3×) — used to report fusion savings.
+    pub fn interior_boundary(&self) -> BatchTraffic {
+        BatchTraffic {
+            fwd_act: self.boundary_act * 2.0,
+            bwd_act: self.boundary_act * 3.0,
+            weights: Bytes::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+
+    #[test]
+    fn boundary_size() {
+        let m = model_preset("tiny").unwrap();
+        let t = TrafficModel::new(&m);
+        let expect = (m.batch * m.seq_len * m.hidden) as f64 * 4.0;
+        assert!((t.boundary_act.raw() - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn group_traffic_composition() {
+        let m = model_preset("tiny").unwrap();
+        let t = TrafficModel::new(&m);
+        let g = t.group(Bytes::mib(10.0));
+        assert_eq!(g.fwd_act, t.boundary_act * 2.0);
+        assert_eq!(g.bwd_act, t.boundary_act * 3.0);
+        assert_eq!(g.weights, Bytes::mib(30.0));
+        assert_eq!(g.total(), g.fwd_act + g.bwd_act + g.weights);
+    }
+
+    #[test]
+    fn fusion_saves_interior_boundaries() {
+        let m = model_preset("tiny").unwrap();
+        let t = TrafficModel::new(&m);
+        // Two blocks fused = one group; unfused = two groups = one extra
+        // interior boundary of traffic.
+        let fused = t.group(Bytes::mib(2.0));
+        let mut unfused = t.group(Bytes::mib(1.0));
+        unfused.add(t.group(Bytes::mib(1.0)));
+        let saving = unfused.total() - fused.total();
+        assert!((saving.raw() - t.interior_boundary().total().raw()).abs() < 1.0);
+    }
+
+    #[test]
+    fn weights_amortized_once_per_batch() {
+        let m = model_preset("llama2-7b").unwrap();
+        let t = TrafficModel::new(&m);
+        // For b=1024 the activation term should dwarf the weight term
+        // (the paper: "weight access is amortized across multiple batches").
+        let layer_weights = Bytes((m.attn_params() + m.ffn_params()) as f64 * 4.0);
+        let g = t.group(layer_weights);
+        assert!(g.act_total().raw() > g.weights.raw());
+    }
+}

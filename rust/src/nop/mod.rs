@@ -1,0 +1,20 @@
+//! Network-on-package model.
+//!
+//! Three pieces:
+//! * [`topology`] — the bypass-ring construction over a row/column of dies
+//!   (paper Fig. 5(b)) and the serpentine Hamiltonian ring the flat-ring
+//!   baseline needs over the whole mesh.
+//! * [`collective`] — a *step-level* simulator for the collective
+//!   operations each training method issues (ring all-gather /
+//!   reduce-scatter, flat-ring and 2D-torus all-reduce, recursive-doubling
+//!   broadcast/reduce), producing link-latency, transmission-time, and
+//!   wire-byte costs.
+//! * [`analytic`] — the closed forms of paper Table III, used to validate
+//!   the simulator and to print the `table3` report.
+
+pub mod topology;
+pub mod collective;
+pub mod analytic;
+
+pub use collective::{CollectiveCost, CollectiveKind};
+pub use topology::{bypass_ring, serpentine_ring, RingKind};

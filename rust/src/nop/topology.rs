@@ -1,0 +1,218 @@
+//! Ring constructions over the die mesh.
+//!
+//! Hecaton's method needs a ring over the dies of each row/column. With
+//! only adjacent D2D connections, a plain loop would need a long
+//! wrap-around link (length = side − 1). The paper's **bypass ring**
+//! (Fig. 5(b)) instead visits even-indexed dies left-to-right and
+//! odd-indexed dies right-to-left: every hop then spans at most 2 adjacent
+//! links (the forwarding die passes traffic straight through its router's
+//! bypass wires), so the per-step latency is `2α` regardless of ring size.
+//!
+//! The flat-ring (Megatron) baseline needs one Hamiltonian ring over the
+//! *entire* mesh; the standard construction is the serpentine (boustrophedon)
+//! path, which exists with adjacent-only hops when the die count is even
+//! (the paper notes the layout constraint), plus one closing hop.
+
+use crate::arch::die::DieId;
+
+/// Which dimension a local ring spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingKind {
+    Row,
+    Col,
+}
+
+/// Bypass-ring visit order over `n` positions `0..n`.
+///
+/// Order: `0, 2, 4, …, (odd indices descending), 1` — consecutive entries
+/// differ by exactly 2 except the two "turnaround" hops, which differ by 1.
+pub fn bypass_ring(n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let mut order: Vec<usize> = (0..n).step_by(2).collect();
+    let mut odds: Vec<usize> = (0..n).skip(1).step_by(2).collect();
+    odds.reverse();
+    order.extend(odds);
+    order
+}
+
+/// Max hop distance (in adjacent links) between ring-consecutive dies,
+/// including the closing hop.
+pub fn max_hop(order: &[usize]) -> usize {
+    let n = order.len();
+    if n <= 1 {
+        return 0;
+    }
+    (0..n)
+        .map(|i| {
+            let a = order[i];
+            let b = order[(i + 1) % n];
+            a.abs_diff(b)
+        })
+        .max()
+        .unwrap()
+}
+
+/// Hamiltonian ring over a `rows × cols` mesh for the flat-ring baseline.
+///
+/// Standard grid-cycle construction: snake through columns `1..cols`
+/// row by row, then return up column 0 — every hop (including the closing
+/// one) is between adjacent dies. A grid Hamiltonian *cycle* exists iff
+/// the die count is even (the paper's flat-ring layout constraint:
+/// "necessitates an even number of dies"); when both dimensions are odd
+/// this returns the serpentine *path*, whose closing hop is long
+/// (`serpentine_closes_adjacent` reports false).
+pub fn serpentine_ring(rows: usize, cols: usize) -> Vec<DieId> {
+    if rows == 1 || cols == 1 {
+        // Degenerate line: the "ring" is the path; closure is only
+        // adjacent for n <= 2.
+        let mut path = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                path.push(DieId::new(r, c));
+            }
+        }
+        return path;
+    }
+    if rows % 2 == 0 {
+        cycle_even_rows(rows, cols)
+    } else if cols % 2 == 0 {
+        // Transpose the even-rows construction.
+        cycle_even_rows(cols, rows)
+            .into_iter()
+            .map(|d| DieId::new(d.col, d.row))
+            .collect()
+    } else {
+        // Odd × odd: no Hamiltonian cycle exists; fall back to the snake
+        // path (the closing hop is non-adjacent).
+        let mut path = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            if r % 2 == 0 {
+                for c in 0..cols {
+                    path.push(DieId::new(r, c));
+                }
+            } else {
+                for c in (0..cols).rev() {
+                    path.push(DieId::new(r, c));
+                }
+            }
+        }
+        path
+    }
+}
+
+/// Snake through columns `1..cols` over all (even many) rows, then return
+/// up column 0. Starts at (0,0) so the wrap hop (0,0)→(0,1)… wait — the
+/// cycle is emitted starting at (0,1); the wrap hop is (0,0)→(0,1).
+fn cycle_even_rows(rows: usize, cols: usize) -> Vec<DieId> {
+    debug_assert!(rows % 2 == 0 && cols >= 2);
+    let mut path = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        if r % 2 == 0 {
+            for c in 1..cols {
+                path.push(DieId::new(r, c));
+            }
+        } else {
+            for c in (1..cols).rev() {
+                path.push(DieId::new(r, c));
+            }
+        }
+    }
+    // Last snake die is (rows-1, 1); descend... return along column 0 from
+    // the bottom row back to the top.
+    for r in (0..rows).rev() {
+        path.push(DieId::new(r, 0));
+    }
+    path
+}
+
+/// Whether the flat ring closes with adjacent hops only — i.e. every hop of
+/// [`serpentine_ring`], *including the wrap-around*, spans distance 1.
+pub fn serpentine_closes_adjacent(rows: usize, cols: usize) -> bool {
+    let path = serpentine_ring(rows, cols);
+    if path.len() < 2 {
+        return true;
+    }
+    let wrap_ok = path[path.len() - 1].manhattan(path[0]) == 1;
+    let hops_ok = path.windows(2).all(|w| w[0].manhattan(w[1]) == 1);
+    wrap_ok && hops_ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn bypass_ring_small_cases() {
+        assert_eq!(bypass_ring(1), vec![0]);
+        assert_eq!(bypass_ring(2), vec![0, 1]);
+        assert_eq!(bypass_ring(4), vec![0, 2, 3, 1]);
+        assert_eq!(bypass_ring(5), vec![0, 2, 4, 3, 1]);
+        assert_eq!(bypass_ring(8), vec![0, 2, 4, 6, 7, 5, 3, 1]);
+    }
+
+    #[test]
+    fn bypass_ring_is_permutation_with_max_hop_2() {
+        for n in 1..=64 {
+            let order = bypass_ring(n);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "n={n}");
+            if n >= 2 {
+                assert!(max_hop(&order) <= 2, "n={n}, order={order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bypass_ring_property_random_sizes() {
+        prop::check("bypass ring max-hop <= 2", 128, |g| {
+            let n = g.usize_range(2, 1024);
+            let order = bypass_ring(n);
+            prop::assert_prop(max_hop(&order) <= 2, format!("n={n}"))?;
+            prop::assert_prop(order.len() == n, "length")
+        });
+    }
+
+    #[test]
+    fn serpentine_visits_every_die_adjacent() {
+        for (r, c) in [(1, 8), (2, 2), (4, 4), (3, 5), (8, 2), (3, 4), (5, 2)] {
+            let path = serpentine_ring(r, c);
+            assert_eq!(path.len(), r * c, "{r}x{c}");
+            for w in path.windows(2) {
+                assert_eq!(w[0].manhattan(w[1]), 1, "{r}x{c}: {:?}", w);
+            }
+            let mut seen: Vec<usize> = path.iter().map(|d| d.flat(c)).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..r * c).collect::<Vec<_>>(), "{r}x{c}");
+        }
+    }
+
+    #[test]
+    fn serpentine_ring_closure_constraint() {
+        // A grid Hamiltonian cycle exists iff the die count is even
+        // (paper: flat-ring "necessitates an even number of dies").
+        assert!(serpentine_closes_adjacent(2, 4));
+        assert!(serpentine_closes_adjacent(4, 4));
+        assert!(serpentine_closes_adjacent(3, 4)); // 12 dies: even, transposed construction
+        assert!(serpentine_closes_adjacent(1, 2));
+        assert!(!serpentine_closes_adjacent(3, 3)); // odd×odd: no cycle
+        assert!(!serpentine_closes_adjacent(5, 3));
+        assert!(!serpentine_closes_adjacent(1, 8)); // line: long wrap
+    }
+
+    #[test]
+    fn closure_property_even_die_counts() {
+        prop::check("even-count meshes (both dims >= 2) close adjacently", 64, |g| {
+            let rows = g.usize_range(2, 20);
+            let cols = g.usize_range(2, 20);
+            if rows * cols % 2 != 0 {
+                return Ok(()); // skip odd×odd
+            }
+            prop::assert_prop(
+                serpentine_closes_adjacent(rows, cols),
+                format!("{rows}x{cols}"),
+            )
+        });
+    }
+}

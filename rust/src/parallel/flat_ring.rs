@@ -1,0 +1,246 @@
+//! 1D-TP with flat-ring all-reduce — the Megatron baseline (Table I).
+//!
+//! Weights are column-split for the first linear(s) of a block and
+//! row-split for the last, so the block needs exactly one all-reduce of
+//! the full activation on the forward pass, executed as a ring all-reduce
+//! over a Hamiltonian ring spanning *all* `N` dies. Backward adds an
+//! all-gather of the saved activation (Table III: `3(N−1)` steps).
+//!
+//! 1D slicing replicates the full hidden dimension on every die, which
+//! (a) pins the mini-batch to a full sequence (`w = s`), (b) requires the
+//! complete `[s, h]` activation per die — the SRAM-overflow mechanism of
+//! Fig. 8 — and (c) makes the per-die matmuls skinny at large `N`,
+//! degrading PE utilization (§VI-B).
+
+use crate::compute::{DieCompute, MatmulShape};
+use crate::config::HardwareConfig;
+use crate::nop::analytic::{Method, Pass};
+use crate::nop::collective::{flat_ring_all_reduce, flat_ring_phase, CollectiveCost};
+use crate::nop::topology::serpentine_closes_adjacent;
+use crate::parallel::plan::{
+    act_bytes, attention_compute, vector_compute, BlockPlan, PlanInput, SramReport, TpPlanner,
+};
+use crate::util::Bytes;
+use crate::workload::ops::BlockDesc;
+
+pub struct FlatRingPlanner;
+
+/// Per-die matmul shapes of a block under 1D-TP: all but the last linear
+/// are column-split (`n/N`), the last is row-split (`k/N`).
+pub(crate) fn one_d_shapes(block: &BlockDesc, n_dies: usize, tokens: usize) -> Vec<MatmulShape> {
+    let last = block.linears.len() - 1;
+    block
+        .linears
+        .iter()
+        .enumerate()
+        .map(|(idx, l)| {
+            if idx == last && block.linears.len() > 1 {
+                MatmulShape::new(tokens, l.in_dim.div_ceil(n_dies), l.out_dim)
+            } else {
+                MatmulShape::new(tokens, l.in_dim, l.out_dim.div_ceil(n_dies))
+            }
+        })
+        .collect()
+}
+
+/// Shared 1D-TP compute/SRAM logic (flat and torus differ only in the
+/// all-reduce algorithm).
+pub(crate) fn one_d_block_plan(
+    block: &BlockDesc,
+    pass: Pass,
+    inp: &PlanInput,
+    tokens: usize,
+    nop: CollectiveCost,
+) -> BlockPlan {
+    let hw = inp.hw;
+    let n = hw.n_dies();
+    let dc = DieCompute::new(hw.die.clone());
+    let mut plan = BlockPlan {
+        nop,
+        ..Default::default()
+    };
+    for shape in one_d_shapes(block, n, tokens) {
+        match pass {
+            Pass::Fwd => {
+                let u = dc.utilization(shape);
+                plan.compute.add(dc.matmul(shape));
+                plan.min_utilization = if plan.min_utilization == 0.0 {
+                    u
+                } else {
+                    plan.min_utilization.min(u)
+                };
+            }
+            Pass::Bwd => {
+                let (dx, dw) = shape.backward();
+                for s in [dx, dw] {
+                    let u = dc.utilization(s);
+                    plan.compute.add(dc.matmul(s));
+                    plan.min_utilization = if plan.min_utilization == 0.0 {
+                        u
+                    } else {
+                        plan.min_utilization.min(u)
+                    };
+                }
+            }
+        }
+    }
+    if let Some(attn) = &block.attn {
+        let scale = if pass == Pass::Bwd { 2.0 } else { 1.0 };
+        plan.compute
+            .add(attention_compute(&dc, attn, tokens, 1.0 / n as f64).scaled(scale));
+    }
+    let vscale = if pass == Pass::Bwd { 2.0 } else { 1.0 };
+    plan.compute
+        .add(vector_compute(&dc, &block.vector, tokens, 1.0 / n as f64).scaled(vscale));
+    plan
+}
+
+/// 1D-TP SRAM accounting: full `[w, h]` input replica + the die's
+/// intermediate slice (§V-A(b): "1D-TP requires storing complete
+/// activations such as X and O on every die").
+pub(crate) fn one_d_sram_report(inp: &PlanInput, tokens: usize) -> SramReport {
+    let m = inp.model;
+    let n = inp.n_dies();
+    let widest_intermediate = crate::workload::transformer::layer_blocks(m)
+        .iter()
+        .flat_map(|b| b.linears.iter().map(|l| l.out_dim))
+        .max()
+        .unwrap_or(m.hidden);
+    let act_peak =
+        act_bytes(tokens, m.hidden) + act_bytes(tokens, widest_intermediate.div_ceil(n));
+    // Largest single linear's tile (linears execute sequentially).
+    let weight_peak = crate::workload::transformer::layer_blocks(m)
+        .iter()
+        .flat_map(|b| b.linears.iter().map(|l| l.weight_bytes() / n as f64))
+        .fold(Bytes::ZERO, Bytes::max);
+    SramReport {
+        act_peak,
+        weight_peak,
+        act_ok: act_peak.raw() <= inp.hw.die.act_buf.raw(),
+        weight_ok: weight_peak.raw() <= inp.hw.die.weight_buf.raw(),
+    }
+}
+
+impl TpPlanner for FlatRingPlanner {
+    fn method(&self) -> Method {
+        Method::FlatRing
+    }
+
+    fn minibatch_tokens(&self, inp: &PlanInput) -> usize {
+        // Pinned to one sequence: attention + the block-level all-reduce
+        // operate on full-`h`, full-`s` activations.
+        inp.model.seq_len.min(inp.batch_tokens())
+    }
+
+    fn block_plan(
+        &self,
+        block: &BlockDesc,
+        pass: Pass,
+        inp: &PlanInput,
+        tokens: usize,
+    ) -> BlockPlan {
+        let hw = inp.hw;
+        let n = hw.n_dies();
+        let volume = act_bytes(tokens, inp.model.hidden);
+        let nop = match pass {
+            Pass::Fwd => flat_ring_all_reduce(n, volume, &hw.link),
+            Pass::Bwd => {
+                flat_ring_all_reduce(n, volume, &hw.link).then(flat_ring_phase(n, volume, &hw.link))
+            }
+        };
+        one_d_block_plan(block, pass, inp, tokens, nop)
+    }
+
+    fn sram_report(&self, inp: &PlanInput) -> SramReport {
+        one_d_sram_report(inp, self.minibatch_tokens(inp))
+    }
+
+    fn layout_ok(&self, hw: &HardwareConfig) -> bool {
+        // Needs the Hamiltonian ring to close with adjacent hops
+        // (§V-A(c): "necessitates an even number of dies").
+        serpentine_closes_adjacent(hw.mesh_rows, hw.mesh_cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::nop::analytic::{table3, Block, NopParams};
+    use crate::workload::transformer::{attention_block, ffn_block};
+
+    fn setup(model: &str, dies: usize) -> (crate::config::ModelConfig, HardwareConfig) {
+        (
+            model_preset(model).unwrap(),
+            HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400),
+        )
+    }
+
+    #[test]
+    fn matches_table3() {
+        let (m, hw) = setup("gpt3-6.7b", 64);
+        let inp = PlanInput::new(&m, &hw);
+        let p = FlatRingPlanner;
+        let tokens = p.minibatch_tokens(&inp);
+        let gamma = act_bytes(tokens, m.hidden).over_bandwidth(hw.link.bandwidth);
+        let params = NopParams {
+            n: 64,
+            alpha: hw.link.latency,
+            gamma,
+            xi: crate::util::Seconds::ZERO,
+        };
+        for pass in [Pass::Fwd, Pass::Bwd] {
+            let plan = p.block_plan(&ffn_block(&m), pass, &inp, tokens);
+            let (l_cf, t_cf) = table3(Method::FlatRing, Block::Ffn, pass, &params);
+            assert!((plan.nop.link_latency.raw() - l_cf.raw()).abs() / l_cf.raw() < 1e-9);
+            assert!((plan.nop.transmission.raw() - t_cf.raw()).abs() / t_cf.raw() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sram_overflows_on_large_models() {
+        // The Fig. 8 asterisks: full [s, h] activations exceed 8 MB.
+        let (m, hw) = setup("llama2-70b", 256);
+        let inp = PlanInput::new(&m, &hw);
+        let r = FlatRingPlanner.sram_report(&inp);
+        assert!(!r.act_ok, "llama2-70b should overflow 1D-TP act buffer");
+        // act peak ≈ s·h·4B = 128 MiB
+        assert!(r.act_peak.raw() > Bytes::mib(100.0).raw());
+    }
+
+    #[test]
+    fn utilization_degrades_at_scale() {
+        // Same model on more dies → skinnier per-die matmuls → lower util.
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let small = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let large = HardwareConfig::square(1024, PackageKind::Standard, DramKind::Ddr5_6400);
+        let p = FlatRingPlanner;
+        let b = attention_block(&m);
+        let u_small = p
+            .block_plan(&b, Pass::Fwd, &PlanInput::new(&m, &small), m.seq_len)
+            .min_utilization;
+        let u_large = p
+            .block_plan(&b, Pass::Fwd, &PlanInput::new(&m, &large), m.seq_len)
+            .min_utilization;
+        assert!(
+            u_large < u_small,
+            "util should degrade: {u_small} -> {u_large}"
+        );
+    }
+
+    #[test]
+    fn layout_constraint() {
+        let even = HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400);
+        let odd = HardwareConfig::mesh(3, 3, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert!(FlatRingPlanner.layout_ok(&even));
+        assert!(!FlatRingPlanner.layout_ok(&odd));
+    }
+
+    #[test]
+    fn minibatch_is_one_sequence() {
+        let (m, hw) = setup("llama2-7b", 64);
+        let inp = PlanInput::new(&m, &hw);
+        assert_eq!(FlatRingPlanner.minibatch_tokens(&inp), m.seq_len);
+    }
+}

@@ -1,0 +1,367 @@
+//! The paper's distributed training method (§IV, Algorithm 1).
+//!
+//! Every tensor is 2D-tiled over the `R × C` die mesh. For a linear layer
+//! `Y[w,out] = X[w,in] · W[in,out]`:
+//!
+//! * **fwd**: all-gather the input slice within the *gather* dimension's
+//!   rings, multiply against the local weight tile, reduce-scatter the
+//!   partial outputs within the orthogonal rings. Per-die matmul:
+//!   `(w, in/C, out/R)` (gather over columns of length `R`).
+//! * **bwd**: the same two collectives on `dY`/`dX` (reusing the gathered
+//!   `dY` for both `dX` and `dW`, Fig. 7(a)) plus one extra all-gather of
+//!   the saved input for `dW` (Step 7).
+//!
+//! Consecutive linears alternate ring orientation because the output
+//! tiling is the transpose of the input tiling (Step 5 "mirrors the
+//! transposition"), which is what makes fusion communication-free.
+//!
+//! All collectives are ring all-gather / reduce-scatter on bypass rings —
+//! the only two primitives the architecture needs (§IV-B).
+
+use crate::compute::{DieCompute, MatmulShape};
+use crate::config::HardwareConfig;
+use crate::nop::analytic::{Method, Pass};
+use crate::nop::collective::{ring_step_collective, CollectiveCost, CollectiveKind};
+use crate::parallel::plan::{
+    act_bytes, attention_compute, fit_tokens, vector_compute, BlockPlan, PlanInput, SramReport,
+    TpPlanner, ACT_BUF_FILL,
+};
+use crate::util::Bytes;
+use crate::workload::ops::{BlockDesc, LinearSpec};
+
+pub struct HecatonPlanner;
+
+/// Ring orientation of one linear: gather the input over rings of
+/// `gather` dies, scatter the output over rings of `scatter` dies.
+#[derive(Debug, Clone, Copy)]
+struct Orientation {
+    gather: usize,
+    scatter: usize,
+}
+
+impl HecatonPlanner {
+    /// Orientation of the `idx`-th linear in a block: alternating, starting
+    /// with gather-within-columns (ring length = R). For the gated FFN the
+    /// up and gate projections share the input gather (idx 0 and 1 both
+    /// "first"), the down projection is transposed.
+    fn orientation(block: &BlockDesc, idx: usize, hw: &HardwareConfig) -> Orientation {
+        let first = Orientation {
+            gather: hw.mesh_rows,
+            scatter: hw.mesh_cols,
+        };
+        let second = Orientation {
+            gather: hw.mesh_cols,
+            scatter: hw.mesh_rows,
+        };
+        let is_last = idx + 1 == block.linears.len();
+        if is_last && block.linears.len() > 1 {
+            second
+        } else {
+            first
+        }
+    }
+
+    /// Per-die matmul shape of a linear under an orientation: the input is
+    /// gathered within rings of `o.gather` dies so its full width `in` is
+    /// split over the *other* dimension, and vice versa for the output.
+    fn die_shape(l: &LinearSpec, o: Orientation, tokens: usize) -> MatmulShape {
+        let k = l.in_dim.div_ceil(o.scatter);
+        let n = l.out_dim.div_ceil(o.gather);
+        MatmulShape::new(tokens, k, n)
+    }
+
+    /// Collectives of one linear's forward: AG(in) then RS(out).
+    fn linear_fwd_nop(
+        l: &LinearSpec,
+        o: Orientation,
+        tokens: usize,
+        hw: &HardwareConfig,
+    ) -> CollectiveCost {
+        // Per-ring volume: the ring's dies collectively hold [w, in/other]
+        // of the input; "other" = scatter dim for the input.
+        let ag_in = ring_step_collective(
+            CollectiveKind::AllGather,
+            o.gather,
+            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            &hw.link,
+        );
+        let rs_out = ring_step_collective(
+            CollectiveKind::ReduceScatter,
+            o.scatter,
+            act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+            &hw.link,
+        );
+        ag_in.then(rs_out)
+    }
+
+    /// Collectives of one linear's backward: AG(dOut) + RS(dIn) + AG(in)
+    /// (the extra Step-7 gather for `dW`).
+    fn linear_bwd_nop(
+        l: &LinearSpec,
+        o: Orientation,
+        tokens: usize,
+        hw: &HardwareConfig,
+    ) -> CollectiveCost {
+        let ag_dout = ring_step_collective(
+            CollectiveKind::AllGather,
+            o.scatter,
+            act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+            &hw.link,
+        );
+        let rs_din = ring_step_collective(
+            CollectiveKind::ReduceScatter,
+            o.gather,
+            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            &hw.link,
+        );
+        let ag_in = ring_step_collective(
+            CollectiveKind::AllGather,
+            o.gather,
+            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            &hw.link,
+        );
+        ag_dout.then(rs_din).then(ag_in)
+    }
+
+    /// Peak per-die activation bytes/token over a model's blocks: the
+    /// all-gathered input slice plus the partial output of the widest
+    /// linear (paper §V-A(b): the all-gathered `Z` dominates).
+    fn act_bytes_per_token(inp: &PlanInput) -> f64 {
+        let hw = inp.hw;
+        let mut worst: f64 = 0.0;
+        for block in crate::workload::transformer::layer_blocks(inp.model) {
+            for (idx, l) in block.linears.iter().enumerate() {
+                let o = Self::orientation(&block, idx, hw);
+                let width = l.in_dim.div_ceil(o.scatter) + l.out_dim.div_ceil(o.gather);
+                worst = worst.max(width as f64 * crate::config::ELEM_BYTES);
+            }
+        }
+        worst
+    }
+}
+
+impl TpPlanner for HecatonPlanner {
+    fn method(&self) -> Method {
+        Method::Hecaton
+    }
+
+    fn minibatch_tokens(&self, inp: &PlanInput) -> usize {
+        let budget = inp.hw.die.act_buf * ACT_BUF_FILL;
+        fit_tokens(
+            budget,
+            Self::act_bytes_per_token(inp),
+            1,
+            inp.batch_tokens(),
+        )
+    }
+
+    fn block_plan(
+        &self,
+        block: &BlockDesc,
+        pass: Pass,
+        inp: &PlanInput,
+        tokens: usize,
+    ) -> BlockPlan {
+        let hw = inp.hw;
+        let n = hw.n_dies() as f64;
+        let dc = DieCompute::new(hw.die.clone());
+        let mut plan = BlockPlan::default();
+
+        for (idx, l) in block.linears.iter().enumerate() {
+            let o = Self::orientation(block, idx, hw);
+            let fwd_shape = Self::die_shape(l, o, tokens);
+            match pass {
+                Pass::Fwd => {
+                    plan.nop = plan.nop.then(Self::linear_fwd_nop(l, o, tokens, hw));
+                    let cost = dc.matmul(fwd_shape);
+                    let u = dc.utilization(fwd_shape);
+                    plan.compute.add(cost);
+                    plan.min_utilization = if plan.min_utilization == 0.0 {
+                        u
+                    } else {
+                        plan.min_utilization.min(u)
+                    };
+                }
+                Pass::Bwd => {
+                    plan.nop = plan.nop.then(Self::linear_bwd_nop(l, o, tokens, hw));
+                    let (dx, dw) = fwd_shape.backward();
+                    for s in [dx, dw] {
+                        let u = dc.utilization(s);
+                        plan.compute.add(dc.matmul(s));
+                        plan.min_utilization = if plan.min_utilization == 0.0 {
+                            u
+                        } else {
+                            plan.min_utilization.min(u)
+                        };
+                    }
+                }
+            }
+        }
+
+        // Attention core: heads spread over all N dies (Step 10-12); the
+        // layout conversions are the RS/AG already counted per-linear.
+        if let Some(attn) = &block.attn {
+            let scale = match pass {
+                Pass::Fwd => 1.0,
+                Pass::Bwd => 2.0, // d(scores), d(context) ≈ 2× fwd core
+            };
+            plan.compute
+                .add(attention_compute(&dc, attn, tokens, 1.0 / n).scaled(scale));
+        }
+
+        // Vector work (norms, activations, residuals) sharded 1/N.
+        let vscale = match pass {
+            Pass::Fwd => 1.0,
+            Pass::Bwd => 2.0,
+        };
+        plan.compute
+            .add(vector_compute(&dc, &block.vector, tokens, 1.0 / n).scaled(vscale));
+
+        plan
+    }
+
+    fn sram_report(&self, inp: &PlanInput) -> SramReport {
+        let w = self.minibatch_tokens(inp);
+        let act_peak = Bytes(w as f64 * Self::act_bytes_per_token(inp));
+        // Largest single *linear*'s weights per die: linears execute
+        // sequentially, so only one tile must be resident at minimum
+        // (paper §III-B: when capacity is tight "the two linear layers in
+        // the FFN are processed sequentially"). Fusion *groups* may hold
+        // more — the scheduler checks group capacity separately.
+        let weight_peak = crate::workload::transformer::layer_blocks(inp.model)
+            .iter()
+            .flat_map(|b| b.linears.iter().map(|l| l.weight_bytes() / inp.n_dies() as f64))
+            .fold(Bytes::ZERO, Bytes::max);
+        SramReport {
+            act_peak,
+            weight_peak,
+            act_ok: act_peak.raw() <= inp.hw.die.act_buf.raw(),
+            weight_ok: weight_peak.raw() <= inp.hw.die.weight_buf.raw(),
+        }
+    }
+
+    fn layout_ok(&self, _hw: &HardwareConfig) -> bool {
+        true // §V-A(c): "no specific constraints on the number and layout"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::nop::analytic::{table3, Block, NopParams};
+    use crate::workload::transformer::{attention_block, ffn_block};
+
+    fn setup(model: &str, dies: usize) -> (crate::config::ModelConfig, HardwareConfig) {
+        (
+            model_preset(model).unwrap(),
+            HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400),
+        )
+    }
+
+    /// For an MHA / 4×-FFN model on a square mesh, the planner's NoP costs
+    /// must equal the paper's Table III closed forms.
+    #[test]
+    fn matches_table3_for_canonical_model() {
+        let (m, hw) = setup("gpt3-6.7b", 64);
+        let inp = PlanInput::new(&m, &hw);
+        let p = HecatonPlanner;
+        let tokens = 4096;
+        let gamma = act_bytes(tokens, m.hidden).over_bandwidth(hw.link.bandwidth);
+        let params = NopParams {
+            n: 64,
+            alpha: hw.link.latency,
+            gamma,
+            xi: crate::util::Seconds::ZERO,
+        };
+        for (block, bkind) in [
+            (attention_block(&m), Block::Attention),
+            (ffn_block(&m), Block::Ffn),
+        ] {
+            for pass in [Pass::Fwd, Pass::Bwd] {
+                let plan = p.block_plan(&block, pass, &inp, tokens);
+                let (l_cf, t_cf) = table3(Method::Hecaton, bkind, pass, &params);
+                assert!(
+                    (plan.nop.link_latency.raw() - l_cf.raw()).abs() / l_cf.raw() < 1e-9,
+                    "{bkind:?}/{pass:?} L: {} vs {}",
+                    plan.nop.link_latency.raw(),
+                    l_cf.raw()
+                );
+                assert!(
+                    (plan.nop.transmission.raw() - t_cf.raw()).abs() / t_cf.raw() < 1e-9,
+                    "{bkind:?}/{pass:?} T: {} vs {}",
+                    plan.nop.transmission.raw(),
+                    t_cf.raw()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_die_flops_are_total_over_n() {
+        let (m, hw) = setup("gpt3-6.7b", 64);
+        let inp = PlanInput::new(&m, &hw);
+        let p = HecatonPlanner;
+        let tokens = 2048;
+        let block = ffn_block(&m);
+        let plan = p.block_plan(&block, Pass::Fwd, &inp, tokens);
+        let total_macs = block.params() as f64 * tokens as f64;
+        let per_die = total_macs / 64.0;
+        assert!(
+            (plan.compute.macs - per_die).abs() / per_die < 0.01,
+            "{} vs {}",
+            plan.compute.macs,
+            per_die
+        );
+    }
+
+    #[test]
+    fn minibatch_fits_act_buffer_and_sram_feasible() {
+        for (name, dies) in [("tinyllama-1.1b", 16), ("llama2-70b", 256), ("llama3.1-405b", 1024)] {
+            let (m, hw) = setup(name, dies);
+            let inp = PlanInput::new(&m, &hw);
+            let p = HecatonPlanner;
+            let report = p.sram_report(&inp);
+            assert!(report.act_ok, "{name}: act {}", report.act_peak);
+            assert!(report.weight_ok, "{name}: weight {}", report.weight_peak);
+            assert!(p.minibatch_tokens(&inp) >= 1);
+        }
+    }
+
+    /// §V-B weak scaling: the chosen mini-batch (tokens) and SRAM peaks
+    /// stay ~constant when h and √N scale together.
+    #[test]
+    fn weak_scaling_constant_sram() {
+        let base = model_preset("tinyllama-1.1b").unwrap();
+        let mut peaks = Vec::new();
+        for (k, dies) in [(1usize, 16), (2, 64), (4, 256), (8, 1024)] {
+            let m = base.scaled(k);
+            let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400);
+            let inp = PlanInput::new(&m, &hw);
+            peaks.push(HecatonPlanner.sram_report(&inp).act_peak.raw());
+        }
+        let first = peaks[0];
+        for p in &peaks {
+            assert!((p - first).abs() / first < 0.05, "peaks {peaks:?}");
+        }
+    }
+
+    #[test]
+    fn bwd_has_more_comm_and_compute_than_fwd() {
+        let (m, hw) = setup("llama2-7b", 64);
+        let inp = PlanInput::new(&m, &hw);
+        let p = HecatonPlanner;
+        let block = ffn_block(&m);
+        let f = p.block_plan(&block, Pass::Fwd, &inp, 4096);
+        let b = p.block_plan(&block, Pass::Bwd, &inp, 4096);
+        assert!(b.nop.total() > f.nop.total());
+        assert!(b.compute.time.raw() > 1.9 * f.compute.time.raw());
+    }
+
+    #[test]
+    fn any_layout_is_ok() {
+        let hw = HardwareConfig::mesh(2, 8, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert!(HecatonPlanner.layout_ok(&hw));
+    }
+}

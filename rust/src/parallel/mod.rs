@@ -1,0 +1,20 @@
+//! The four distributed training methods compared in the paper:
+//!
+//! * [`hecaton`] — the paper's contribution (§IV, Algorithm 1): 2D matrix
+//!   tiling where every collective is a row/column-local all-gather or
+//!   reduce-scatter on bypass rings.
+//! * [`flat_ring`] — 1D-TP with flat-ring all-reduce (Megatron).
+//! * [`torus_ring`] — 1D-TP with 2D-torus all-reduce.
+//! * [`optimus`] — 2D-TP with broadcast/reduce (Optimus).
+//!
+//! Each planner turns a [`crate::workload::BlockDesc`] into per-die compute
+//! and NoP communication costs for one mini-batch, plus SRAM peak
+//! requirements and layout constraints (paper §V-A).
+
+pub mod plan;
+pub mod hecaton;
+pub mod flat_ring;
+pub mod torus_ring;
+pub mod optimus;
+
+pub use plan::{planner, BlockPlan, PlanInput, SramReport, TpPlanner};

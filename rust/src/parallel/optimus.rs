@@ -1,0 +1,188 @@
+//! 2D-TP with broadcast/reduce — the Optimus baseline [Xu & You].
+//!
+//! Optimus tiles weights and activations over a √N×√N grid like Hecaton,
+//! so its per-die matmul shapes (and hence compute time and utilization)
+//! match Hecaton's — the paper's §VI-B observation that "2D-TP methods
+//! maintain a more stable computation time". The difference is the
+//! collectives: broadcast and reduce, which "cannot utilize all available
+//! bandwidth" (§V-A). NoP cost comes from the paper's Table III closed
+//! forms (which are *pessimistic* relative to an idealized
+//! recursive-doubling schedule — see `nop::analytic::optimus_gap`); wire
+//! bytes for the energy model come from the idealized step schedule, which
+//! is volume- (not schedule-) determined.
+
+use crate::config::{HardwareConfig, ELEM_BYTES};
+use crate::nop::analytic::{table3, Method, NopParams, Pass};
+use crate::nop::collective::{recursive_doubling, CollectiveCost, CollectiveKind};
+use crate::parallel::hecaton::HecatonPlanner;
+use crate::parallel::plan::{
+    act_bytes, BlockPlan, PlanInput, SramReport, TpPlanner,
+};
+use crate::util::{Bytes, Seconds};
+use crate::workload::ops::BlockDesc;
+
+pub struct OptimusPlanner;
+
+impl OptimusPlanner {
+    /// Table III NoP cost for one block pass, at `tokens` tokens.
+    fn nop_cost(
+        &self,
+        block: &BlockDesc,
+        pass: Pass,
+        inp: &PlanInput,
+        tokens: usize,
+    ) -> CollectiveCost {
+        let hw = inp.hw;
+        let n = hw.n_dies();
+        let rn = (n as f64).sqrt();
+        let gamma = act_bytes(tokens, inp.model.hidden).over_bandwidth(hw.link.bandwidth);
+        // Weight-segment broadcasts happen once per *batch*, not per
+        // mini-batch: the segments stay staged in the (doubled) weight
+        // buffer — that staging is exactly Optimus's §V-A(b) SRAM burden.
+        // Amortize ξ over the batch's mini-batches, mirroring how the
+        // DRAM model amortizes weight loads.
+        let amortize = tokens as f64 / inp.batch_tokens() as f64;
+        let xi = Seconds(
+            (inp.model.hidden as f64).powi(2) * ELEM_BYTES / hw.link.bandwidth * amortize,
+        );
+        let params = NopParams {
+            n,
+            alpha: hw.link.latency,
+            gamma,
+            xi,
+        };
+        let (link_latency, transmission) = table3(Method::Optimus, block.kind, pass, &params);
+
+        // Wire bytes from the volume-determined ideal schedule: broadcasts
+        // of activation and weight chunks within each row/col (√N rings in
+        // parallel, each moving chunk×(√N−1) bytes).
+        let rni = rn.round() as usize;
+        let act_chunk = act_bytes(tokens, inp.model.hidden) / rn;
+        let wt_chunk = Bytes((inp.model.hidden as f64).powi(2) * ELEM_BYTES / rn);
+        let (n_act, n_wt) = match (block.kind, pass) {
+            (crate::nop::analytic::Block::Attention, Pass::Fwd) => (2.0, 4.0),
+            (crate::nop::analytic::Block::Ffn, Pass::Fwd) => (5.0, 8.0),
+            (crate::nop::analytic::Block::Attention, Pass::Bwd) => (4.0, 8.0),
+            (crate::nop::analytic::Block::Ffn, Pass::Bwd) => (10.0, 16.0),
+        };
+        let per_ring = recursive_doubling(CollectiveKind::Broadcast, rni, act_chunk, &hw.link)
+            .wire_bytes
+            * n_act
+            + recursive_doubling(CollectiveKind::Broadcast, rni, wt_chunk, &hw.link).wire_bytes
+                * n_wt;
+        CollectiveCost {
+            link_latency,
+            transmission,
+            wire_bytes: per_ring * rn, // √N rows/cols broadcast concurrently
+            steps: ((rn as usize).max(2).ilog2() as usize) * (n_act + n_wt) as usize,
+        }
+    }
+}
+
+impl TpPlanner for OptimusPlanner {
+    fn method(&self) -> Method {
+        Method::Optimus
+    }
+
+    fn minibatch_tokens(&self, inp: &PlanInput) -> usize {
+        // 2D tiling shards tokens like Hecaton.
+        HecatonPlanner.minibatch_tokens(inp)
+    }
+
+    fn block_plan(
+        &self,
+        block: &BlockDesc,
+        pass: Pass,
+        inp: &PlanInput,
+        tokens: usize,
+    ) -> BlockPlan {
+        // Compute side identical to Hecaton's 2D tiling; replace the NoP.
+        let mut plan = HecatonPlanner.block_plan(block, pass, inp, tokens);
+        plan.nop = self.nop_cost(block, pass, inp, tokens);
+        plan
+    }
+
+    fn sram_report(&self, inp: &PlanInput) -> SramReport {
+        // Activation side matches Hecaton; the weight buffer additionally
+        // stages broadcast segments from other dies (§V-A(b): "Optimus
+        // needs extra storage for segments broadcast from other dies,
+        // further burdening the already capacity-constrained weight
+        // buffer") — modelled as a full second copy of the weight tile.
+        let base = HecatonPlanner.sram_report(inp);
+        let weight_peak = base.weight_peak * 2.0;
+        SramReport {
+            act_peak: base.act_peak,
+            weight_peak,
+            act_ok: base.act_ok,
+            weight_ok: weight_peak.raw() <= inp.hw.die.weight_buf.raw(),
+        }
+    }
+
+    fn layout_ok(&self, hw: &HardwareConfig) -> bool {
+        // §V-A(c): "Optimus requires a square number of dies".
+        hw.mesh_rows == hw.mesh_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::nop::analytic::Block;
+
+    fn setup(dies: usize) -> (crate::config::ModelConfig, HardwareConfig) {
+        (
+            model_preset("gpt3-6.7b").unwrap(),
+            HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400),
+        )
+    }
+
+    #[test]
+    fn nop_matches_table3_closed_form() {
+        let (m, hw) = setup(64);
+        let inp = PlanInput::new(&m, &hw);
+        let p = OptimusPlanner;
+        let tokens = 2048;
+        let b = crate::workload::transformer::ffn_block(&m);
+        let plan = p.block_plan(&b, Pass::Fwd, &inp, tokens);
+        let gamma = act_bytes(tokens, m.hidden).over_bandwidth(hw.link.bandwidth);
+        let amortize = tokens as f64 / inp.batch_tokens() as f64;
+        let xi = Seconds((m.hidden as f64).powi(2) * ELEM_BYTES / hw.link.bandwidth * amortize);
+        let params = NopParams {
+            n: 64,
+            alpha: hw.link.latency,
+            gamma,
+            xi,
+        };
+        let (l_cf, t_cf) = table3(Method::Optimus, Block::Ffn, Pass::Fwd, &params);
+        assert!((plan.nop.link_latency.raw() - l_cf.raw()).abs() / l_cf.raw() < 1e-12);
+        assert!((plan.nop.transmission.raw() - t_cf.raw()).abs() / t_cf.raw() < 1e-12);
+    }
+
+    #[test]
+    fn compute_matches_hecaton() {
+        let (m, hw) = setup(64);
+        let inp = PlanInput::new(&m, &hw);
+        let b = crate::workload::transformer::attention_block(&m);
+        let h = HecatonPlanner.block_plan(&b, Pass::Fwd, &inp, 1024);
+        let o = OptimusPlanner.block_plan(&b, Pass::Fwd, &inp, 1024);
+        assert!((h.compute.time.raw() - o.compute.time.raw()).abs() < 1e-15);
+        assert_eq!(h.min_utilization, o.min_utilization);
+    }
+
+    #[test]
+    fn weight_buffer_burden() {
+        let (m, hw) = setup(64);
+        let inp = PlanInput::new(&m, &hw);
+        let h = HecatonPlanner.sram_report(&inp);
+        let o = OptimusPlanner.sram_report(&inp);
+        assert!((o.weight_peak.raw() - 2.0 * h.weight_peak.raw()).abs() < 1.0);
+    }
+
+    #[test]
+    fn requires_square() {
+        let rect = HardwareConfig::mesh(2, 8, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert!(!OptimusPlanner.layout_ok(&rect));
+    }
+}

@@ -1,0 +1,246 @@
+//! Shared planner types and helpers for the tensor-parallel methods.
+
+use crate::compute::pe::ComputeCost;
+use crate::compute::{DieCompute, MatmulShape};
+use crate::config::{HardwareConfig, ModelConfig, ELEM_BYTES};
+use crate::nop::analytic::{Method, Pass};
+use crate::nop::collective::CollectiveCost;
+use crate::util::Bytes;
+use crate::workload::ops::{AttnSpec, BlockDesc, VectorWork};
+
+/// Inputs every planner operates on.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanInput<'a> {
+    pub model: &'a ModelConfig,
+    pub hw: &'a HardwareConfig,
+}
+
+impl<'a> PlanInput<'a> {
+    pub fn new(model: &'a ModelConfig, hw: &'a HardwareConfig) -> PlanInput<'a> {
+        PlanInput { model, hw }
+    }
+    pub fn n_dies(&self) -> usize {
+        self.hw.n_dies()
+    }
+    /// Total tokens in one full training batch.
+    pub fn batch_tokens(&self) -> usize {
+        self.model.batch * self.model.seq_len
+    }
+}
+
+/// Cost of executing one block (Attention or FFN) for one mini-batch under
+/// a given method.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockPlan {
+    /// NoP communication for the mini-batch.
+    pub nop: CollectiveCost,
+    /// Per-die compute (matmuls + attention core + vector work).
+    pub compute: ComputeCost,
+    /// Worst matmul utilization in the block (diagnostic; drives the
+    /// paper's "1D-TP computation time increases" observation).
+    pub min_utilization: f64,
+}
+
+impl BlockPlan {
+    pub fn merge(&mut self, other: BlockPlan) {
+        self.nop = self.nop.then(other.nop);
+        self.compute.add(other.compute);
+        self.min_utilization = if self.min_utilization == 0.0 {
+            other.min_utilization
+        } else if other.min_utilization == 0.0 {
+            self.min_utilization
+        } else {
+            self.min_utilization.min(other.min_utilization)
+        };
+    }
+}
+
+/// Per-die SRAM requirements of a method (paper §V-A(b) / Fig. 8
+/// asterisks).
+#[derive(Debug, Clone, Copy)]
+pub struct SramReport {
+    /// Peak activation-buffer bytes per die.
+    pub act_peak: Bytes,
+    /// Peak weight-buffer bytes per die for the largest single block
+    /// (fusion may raise the *scheduled* requirement; see `sched`).
+    pub weight_peak: Bytes,
+    pub act_ok: bool,
+    pub weight_ok: bool,
+}
+
+impl SramReport {
+    pub fn feasible(&self) -> bool {
+        self.act_ok && self.weight_ok
+    }
+}
+
+/// A tensor-parallel method planner.
+pub trait TpPlanner {
+    fn method(&self) -> Method;
+
+    /// Tokens per mini-batch (the minimal execution unit of Fig. 6).
+    /// Hecaton/Optimus shard the token dimension and can pick the largest
+    /// count that fits SRAM; 1D-TP replicates the full hidden dimension so
+    /// its mini-batch is pinned to one sequence.
+    fn minibatch_tokens(&self, inp: &PlanInput) -> usize;
+
+    /// Cost of one block pass over a mini-batch of `tokens`.
+    fn block_plan(&self, block: &BlockDesc, pass: Pass, inp: &PlanInput, tokens: usize)
+        -> BlockPlan;
+
+    /// SRAM peaks at this method's chosen mini-batch size.
+    fn sram_report(&self, inp: &PlanInput) -> SramReport;
+
+    /// Whether the method can run on this mesh layout at all
+    /// (paper §V-A(c): flat-ring needs an even-die Hamiltonian ring,
+    /// Optimus needs a square).
+    fn layout_ok(&self, hw: &HardwareConfig) -> bool;
+
+    /// Per-die weight bytes when the given blocks are resident together
+    /// (layer-fusion capacity checks).
+    fn weight_bytes_per_die(&self, blocks: &[&BlockDesc], hw: &HardwareConfig) -> Bytes {
+        let total: Bytes = blocks.iter().map(|b| b.weight_bytes()).sum();
+        total / hw.n_dies() as f64
+    }
+}
+
+/// Factory.
+pub fn planner(method: Method) -> Box<dyn TpPlanner> {
+    match method {
+        Method::Hecaton => Box::new(crate::parallel::hecaton::HecatonPlanner),
+        Method::FlatRing => Box::new(crate::parallel::flat_ring::FlatRingPlanner),
+        Method::TorusRing => Box::new(crate::parallel::torus_ring::TorusRingPlanner),
+        Method::Optimus => Box::new(crate::parallel::optimus::OptimusPlanner),
+    }
+}
+
+// ───────────────────────── shared helpers ─────────────────────────
+
+/// Compute cost of the multi-head attention core on one die holding a
+/// `die_share` fraction of the heads, for `tokens` tokens.
+///
+/// Scores `QKᵀ` and context `SV` are `(s × d × s)` / `(s × s × d)` matmuls
+/// per head; softmax runs on the vector unit. When `die_share · heads < 1`
+/// (more dies than heads) the fractional share models the paper's
+/// head-splitting all-reduce case at the timing level.
+pub fn attention_compute(
+    dc: &DieCompute,
+    attn: &AttnSpec,
+    tokens: usize,
+    die_share: f64,
+) -> ComputeCost {
+    let seqs = tokens as f64 / attn.seq_len as f64;
+    let heads_here = attn.heads as f64 * die_share;
+    let reps = seqs * heads_here;
+    let s = attn.seq_len;
+    let d = attn.head_dim;
+    let scores = dc.matmul(MatmulShape::new(s, d, s)).scaled(reps);
+    let context = dc.matmul(MatmulShape::new(s, s, d)).scaled(reps);
+    let softmax = dc
+        .vector(crate::compute::VectorOpKind::Softmax, (s * s) as f64)
+        .scaled(reps);
+    let mut total = scores;
+    total.add(context);
+    total.add(softmax);
+    total
+}
+
+/// Vector work of a block on one die holding `die_share` of the elements.
+pub fn vector_compute(
+    dc: &DieCompute,
+    work: &[VectorWork],
+    tokens: usize,
+    die_share: f64,
+) -> ComputeCost {
+    let mut total = ComputeCost::ZERO;
+    for w in work {
+        total.add(dc.vector(w.kind, w.elems_per_token * tokens as f64 * die_share));
+    }
+    total
+}
+
+/// Bytes of an activation `[tokens, width]`.
+pub fn act_bytes(tokens: usize, width: usize) -> Bytes {
+    Bytes(tokens as f64 * width as f64 * ELEM_BYTES)
+}
+
+/// Largest mini-batch (in tokens) such that `per_token_bytes(w) ≤ budget`,
+/// assuming per-token cost is linear; clamps to `[min_tokens, max_tokens]`.
+pub fn fit_tokens(
+    budget: Bytes,
+    bytes_per_token: f64,
+    min_tokens: usize,
+    max_tokens: usize,
+) -> usize {
+    if bytes_per_token <= 0.0 {
+        return max_tokens;
+    }
+    let w = (budget.raw() / bytes_per_token).floor() as usize;
+    w.clamp(min_tokens, max_tokens)
+}
+
+/// Fraction of the activation buffer usable for live tensors; the rest is
+/// reserved for double-buffering the DRAM↔SRAM pipeline (Fig. 6 overlap).
+pub const ACT_BUF_FILL: f64 = 0.5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+
+    #[test]
+    fn fit_tokens_clamps() {
+        assert_eq!(fit_tokens(Bytes(100.0), 10.0, 1, 1000), 10);
+        assert_eq!(fit_tokens(Bytes(5.0), 10.0, 1, 1000), 1); // below min
+        assert_eq!(fit_tokens(Bytes(1e12), 10.0, 1, 1000), 1000); // above max
+        assert_eq!(fit_tokens(Bytes(0.0), 0.0, 1, 7), 7);
+    }
+
+    #[test]
+    fn attention_compute_scales_with_share() {
+        let dc = DieCompute::new(crate::config::HardwareConfig::paper_die());
+        let m = model_preset("tiny").unwrap();
+        let attn = crate::workload::transformer::attention_block(&m)
+            .attn
+            .unwrap();
+        let full = attention_compute(&dc, &attn, m.seq_len, 1.0);
+        let half = attention_compute(&dc, &attn, m.seq_len, 0.5);
+        assert!((full.time.raw() / half.time.raw() - 2.0).abs() < 1e-9);
+        assert!(full.macs > 0.0 && full.vector_elems > 0.0);
+    }
+
+    #[test]
+    fn block_plan_merge_takes_min_utilization() {
+        let mut a = BlockPlan {
+            min_utilization: 0.8,
+            ..Default::default()
+        };
+        let b = BlockPlan {
+            min_utilization: 0.3,
+            ..Default::default()
+        };
+        a.merge(b);
+        assert_eq!(a.min_utilization, 0.3);
+        // merging into a fresh plan adopts the other's utilization
+        let mut fresh = BlockPlan::default();
+        fresh.merge(a);
+        assert_eq!(fresh.min_utilization, 0.3);
+    }
+
+    #[test]
+    fn planner_factory_covers_all_methods() {
+        for m in Method::all() {
+            assert_eq!(planner(m).method(), m);
+        }
+    }
+
+    #[test]
+    fn plan_input_accessors() {
+        let m = model_preset("tiny").unwrap();
+        let hw = crate::config::HardwareConfig::square(4, PackageKind::Standard, DramKind::Ddr5_6400);
+        let inp = PlanInput::new(&m, &hw);
+        assert_eq!(inp.n_dies(), 4);
+        assert_eq!(inp.batch_tokens(), m.batch * m.seq_len);
+    }
+}

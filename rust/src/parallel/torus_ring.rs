@@ -1,0 +1,125 @@
+//! 1D-TP with 2D-torus all-reduce (Table I: [Mikami], [Ying]).
+//!
+//! Identical tiling, compute and SRAM behaviour to the flat-ring baseline —
+//! only the all-reduce algorithm changes: the 2D-torus variant halves
+//! transmission time by running vertical and horizontal rings concurrently,
+//! but on a physical mesh its wrap-around links span the whole side, so
+//! link latency *grows* (Table III: `4(N−√N)α` vs flat's `2(N−1)α` —
+//! better T, worse L; and still a whole-package collective, unlike
+//! Hecaton's row/column-local ones).
+
+use crate::config::HardwareConfig;
+use crate::nop::analytic::{Method, Pass};
+use crate::nop::collective::torus_all_reduce;
+use crate::parallel::flat_ring::{one_d_block_plan, one_d_sram_report};
+use crate::parallel::plan::{act_bytes, BlockPlan, PlanInput, SramReport, TpPlanner};
+use crate::workload::ops::BlockDesc;
+
+pub struct TorusRingPlanner;
+
+impl TpPlanner for TorusRingPlanner {
+    fn method(&self) -> Method {
+        Method::TorusRing
+    }
+
+    fn minibatch_tokens(&self, inp: &PlanInput) -> usize {
+        inp.model.seq_len.min(inp.batch_tokens())
+    }
+
+    fn block_plan(
+        &self,
+        block: &BlockDesc,
+        pass: Pass,
+        inp: &PlanInput,
+        tokens: usize,
+    ) -> BlockPlan {
+        let hw = inp.hw;
+        let side = (hw.n_dies() as f64).sqrt().round() as usize;
+        let volume = act_bytes(tokens, inp.model.hidden);
+        let ar = torus_all_reduce(side, volume, &hw.link);
+        let nop = match pass {
+            Pass::Fwd => ar,
+            // Bwd: AR + AG; on the torus the AG costs half the AR
+            // (Table III: 6(N−√N)α = 1.5 × 4(N−√N)α).
+            Pass::Bwd => {
+                let mut half = ar;
+                half.link_latency = half.link_latency * 0.5;
+                half.transmission = half.transmission * 0.5;
+                half.wire_bytes = half.wire_bytes * 0.5;
+                half.steps /= 2;
+                ar.then(half)
+            }
+        };
+        one_d_block_plan(block, pass, inp, tokens, nop)
+    }
+
+    fn sram_report(&self, inp: &PlanInput) -> SramReport {
+        one_d_sram_report(inp, self.minibatch_tokens(inp))
+    }
+
+    fn layout_ok(&self, hw: &HardwareConfig) -> bool {
+        // The cost model (and the paper's Table III) assumes a square
+        // torus; rectangular tori run but with "severe performance
+        // degradation" — we conservatively require square.
+        hw.mesh_rows == hw.mesh_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::nop::analytic::{table3, Block, NopParams};
+    use crate::workload::transformer::ffn_block;
+
+    #[test]
+    fn matches_table3() {
+        let m = model_preset("gpt3-6.7b").unwrap();
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let inp = PlanInput::new(&m, &hw);
+        let p = TorusRingPlanner;
+        let tokens = p.minibatch_tokens(&inp);
+        let gamma = act_bytes(tokens, m.hidden).over_bandwidth(hw.link.bandwidth);
+        let params = NopParams {
+            n: 64,
+            alpha: hw.link.latency,
+            gamma,
+            xi: crate::util::Seconds::ZERO,
+        };
+        for pass in [Pass::Fwd, Pass::Bwd] {
+            let plan = p.block_plan(&ffn_block(&m), pass, &inp, tokens);
+            let (l_cf, t_cf) = table3(Method::TorusRing, Block::Ffn, pass, &params);
+            assert!(
+                (plan.nop.link_latency.raw() - l_cf.raw()).abs() / l_cf.raw() < 1e-9,
+                "{pass:?} L"
+            );
+            assert!(
+                (plan.nop.transmission.raw() - t_cf.raw()).abs() / t_cf.raw() < 1e-9,
+                "{pass:?} T"
+            );
+        }
+    }
+
+    #[test]
+    fn transmission_beats_flat_but_latency_is_worse() {
+        use crate::parallel::flat_ring::FlatRingPlanner;
+        let m = model_preset("llama2-7b").unwrap();
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let inp = PlanInput::new(&m, &hw);
+        let tokens = m.seq_len;
+        let b = ffn_block(&m);
+        let flat = FlatRingPlanner.block_plan(&b, Pass::Fwd, &inp, tokens);
+        let torus = TorusRingPlanner.block_plan(&b, Pass::Fwd, &inp, tokens);
+        assert!(torus.nop.transmission < flat.nop.transmission);
+        assert!(torus.nop.link_latency > flat.nop.link_latency);
+    }
+
+    #[test]
+    fn square_layout_required() {
+        let sq = HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400);
+        let rect = HardwareConfig::mesh(2, 8, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert!(TorusRingPlanner.layout_ok(&sq));
+        assert!(!TorusRingPlanner.layout_ok(&rect));
+    }
+}

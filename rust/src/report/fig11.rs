@@ -1,0 +1,105 @@
+//! **Fig. 11** — Layout study: 16 dies arranged in every factor pair
+//! (1×16 … 16×1), latency & energy normalized to the square layout.
+//! Expected shape (§VI-F): square is best; among rectangles, the
+//! orientation that gives the *larger* FFN activation the *shorter* ring
+//! wins ("matching the larger activation to a short side leads to
+//! transferring large data chunks in fewer communication steps"). In our
+//! mesh convention the up-projection's big output is reduce-scattered
+//! within rows (rings of length `cols`) and divided over `rows`, so
+//! more-rows/fewer-cols rectangles win — the paper's "longer width" with
+//! its (length, width) axes transposed relative to our (rows, cols).
+
+use crate::config::presets::model_preset;
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::simulate;
+use crate::util::table::Table;
+
+pub struct Row {
+    pub rows: usize,
+    pub cols: usize,
+    pub rel_latency: f64,
+    pub rel_energy: f64,
+}
+
+pub fn run() -> Vec<Row> {
+    let model = model_preset("tinyllama-1.1b").expect("preset");
+    let layouts = crate::arch::package::Package::layouts_of(16);
+    let square = {
+        let hw = HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400);
+        simulate(&model, &hw, Method::Hecaton)
+    };
+    layouts
+        .iter()
+        .map(|p| {
+            let hw =
+                HardwareConfig::mesh(p.rows, p.cols, PackageKind::Standard, DramKind::Ddr5_6400);
+            let r = simulate(&model, &hw, Method::Hecaton);
+            Row {
+                rows: p.rows,
+                cols: p.cols,
+                rel_latency: r.latency / square.latency,
+                rel_energy: r.energy_total.raw() / square.energy_total.raw(),
+            }
+        })
+        .collect()
+}
+
+pub fn report() -> String {
+    let mut t = Table::new(&["layout (rows x cols)", "latency", "energy"])
+        .with_title("Fig. 11 — 16-die layout sweep, normalized to 4x4 (Hecaton, TinyLlama)")
+        .label_first();
+    for r in run() {
+        t.row(crate::table_row![
+            format!("{}x{}", r.rows, r.cols),
+            format!("{:.3}x", r.rel_latency),
+            format!("{:.3}x", r.rel_energy)
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_is_best() {
+        for r in run() {
+            assert!(
+                r.rel_latency >= 0.999,
+                "{}x{} beat the square: {}",
+                r.rows,
+                r.cols,
+                r.rel_latency
+            );
+        }
+    }
+
+    #[test]
+    fn big_activation_prefers_short_ring() {
+        // §VI-F asymmetry: the rectangle whose short ring carries the
+        // larger (4h) FFN activation wins — 8×2 over 2×8 in our axes.
+        let rows = run();
+        let get = |r: usize, c: usize| {
+            rows.iter()
+                .find(|x| x.rows == r && x.cols == c)
+                .unwrap()
+                .rel_latency
+        };
+        assert!(
+            get(8, 2) < get(2, 8),
+            "8x2 {} should beat 2x8 {}",
+            get(8, 2),
+            get(2, 8)
+        );
+        assert!(get(16, 1) < get(1, 16));
+    }
+
+    #[test]
+    fn all_five_layouts_present() {
+        let rows = run();
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().all(|r| r.rows * r.cols == 16));
+    }
+}

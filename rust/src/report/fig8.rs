@@ -1,0 +1,194 @@
+//! **Fig. 8** — Overall comparison: latency + energy of the four methods
+//! across the paper's workload pairings, standard and advanced packages.
+//! Values normalized to Hecaton per workload; SRAM-overflow methods are
+//! asterisked (they are still plotted, as in the paper).
+
+use crate::config::presets::paper_pairings;
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::{simulate, SimResult};
+use crate::util::table::Table;
+
+/// One measured cell of the figure.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model: String,
+    pub package: PackageKind,
+    pub method: Method,
+    pub result: SimResult,
+    /// Latency / energy relative to Hecaton on the same workload+package.
+    pub rel_latency: f64,
+    pub rel_energy: f64,
+}
+
+/// Run the full grid.
+pub fn run() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for w in paper_pairings() {
+            let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
+            let hecaton = simulate(&w.model, &hw, Method::Hecaton);
+            for method in Method::all() {
+                let r = if method == Method::Hecaton {
+                    hecaton.clone()
+                } else {
+                    simulate(&w.model, &hw, method)
+                };
+                cells.push(Cell {
+                    model: w.model.name.clone(),
+                    package,
+                    method,
+                    rel_latency: r.latency / hecaton.latency,
+                    rel_energy: r.energy_total.raw() / hecaton.energy_total.raw(),
+                    result: r,
+                });
+            }
+        }
+    }
+    cells
+}
+
+/// Render the paper-style table.
+pub fn report() -> String {
+    let cells = run();
+    let mut out = String::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        let mut t = Table::new(&[
+            "workload", "method", "latency", "norm", "compute%", "NoP%", "DRAM%", "energy",
+            "norm(E)", "SRAM",
+        ])
+        .with_title(&format!(
+            "Fig. 8 ({} package) — latency & energy vs Hecaton (A=1.00); * = SRAM overflow",
+            package.name()
+        ))
+        .label_first();
+        for c in cells.iter().filter(|c| c.package == package) {
+            let r = &c.result;
+            let b = &r.breakdown;
+            let lat = r.latency.raw();
+            let feasible = if r.feasible() { "ok" } else { "*" };
+            t.row(crate::table_row![
+                format!("{} (N={})", c.model, r.dies),
+                format!("{} ({})", c.method.tag(), c.method.name()),
+                r.latency,
+                format!("{:.2}x", c.rel_latency),
+                format!("{:.0}%", 100.0 * b.compute.raw() / lat),
+                format!(
+                    "{:.0}%",
+                    100.0 * (b.nop_transmission + b.nop_link).raw() / lat
+                ),
+                format!("{:.0}%", 100.0 * b.dram_exposed.raw() / lat),
+                r.energy_total,
+                format!("{:.2}x", c.rel_energy),
+                feasible
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    // Headline numbers (paper: 5.29× / 3.00× latency, 3.46× / 2.89× energy).
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        let best_lat = cells
+            .iter()
+            .filter(|c| c.package == package && c.method == Method::FlatRing)
+            .map(|c| c.rel_latency)
+            .fold(0.0, f64::max);
+        let best_e = cells
+            .iter()
+            .filter(|c| c.package == package && c.method == Method::FlatRing)
+            .map(|c| c.rel_energy)
+            .fold(0.0, f64::max);
+        out.push_str(&format!(
+            "Headline vs Megatron-TP ({}): {:.2}x latency, {:.2}x energy (paper: {})\n",
+            package.name(),
+            best_lat,
+            best_e,
+            match package {
+                PackageKind::Standard => "5.29x / 3.46x",
+                PackageKind::Advanced => "3.00x / 2.89x",
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_all_combinations() {
+        let cells = run();
+        assert_eq!(cells.len(), 2 * 4 * 4); // packages × workloads × methods
+        // Hecaton rows normalize to 1.
+        for c in cells.iter().filter(|c| c.method == Method::Hecaton) {
+            assert!((c.rel_latency - 1.0).abs() < 1e-12);
+            assert!((c.rel_energy - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_shape_holds() {
+        let cells = run();
+        // (a) Hecaton never loses on latency *among practically valid
+        // methods*. Infeasible (asterisked) methods may show lower bars —
+        // exactly the paper's point: torus-ring's halved transmission can
+        // look fast at small N while its SRAM demand disqualifies it.
+        for c in &cells {
+            if c.result.feasible() {
+                assert!(
+                    c.rel_latency >= 0.999,
+                    "{} {:?} beat hecaton while feasible: {}",
+                    c.model,
+                    c.method,
+                    c.rel_latency
+                );
+            }
+        }
+        // 1D-TP methods overflow SRAM on every paper workload (full [s,h]
+        // activations exceed the 8 MB buffer even for TinyLlama).
+        for c in &cells {
+            if c.method == Method::FlatRing || c.method == Method::TorusRing {
+                assert!(!c.result.sram.feasible(), "{} {:?}", c.model, c.method);
+            }
+        }
+        // (b) the standard-package flat-ring gap lands in the paper's
+        // regime on the largest workload.
+        let big = cells
+            .iter()
+            .find(|c| {
+                c.model == "llama3.1-405b"
+                    && c.package == PackageKind::Standard
+                    && c.method == Method::FlatRing
+            })
+            .unwrap();
+        assert!(
+            big.rel_latency > 2.5 && big.rel_latency < 12.0,
+            "flat-ring 405B: {}",
+            big.rel_latency
+        );
+        // (c) advanced package narrows the gap (paper: 5.29 -> 3.00).
+        let big_adv = cells
+            .iter()
+            .find(|c| {
+                c.model == "llama3.1-405b"
+                    && c.package == PackageKind::Advanced
+                    && c.method == Method::FlatRing
+            })
+            .unwrap();
+        assert!(
+            big_adv.rel_latency < big.rel_latency,
+            "advanced {} !< standard {}",
+            big_adv.rel_latency,
+            big.rel_latency
+        );
+    }
+
+    #[test]
+    fn report_renders_both_packages() {
+        let r = report();
+        assert!(r.contains("standard package"));
+        assert!(r.contains("advanced package"));
+        assert!(r.contains("Headline vs Megatron-TP"));
+    }
+}

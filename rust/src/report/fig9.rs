@@ -1,0 +1,123 @@
+//! **Fig. 9** — Scalability study: per-batch latency of each method across
+//! the model/die scaling sweep, normalized to the smallest model.
+//! Hecaton should stay ≈flat (weak scaling, §V-B); the baselines grow.
+
+use crate::config::presets::paper_pairings;
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::simulate;
+use crate::util::table::Table;
+
+/// Normalized latency series per (package, method).
+pub struct Series {
+    pub package: PackageKind,
+    pub method: Method,
+    /// (model name, dies, normalized latency).
+    pub points: Vec<(String, usize, f64)>,
+}
+
+pub fn run() -> Vec<Series> {
+    let mut out = Vec::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for method in Method::all() {
+            let mut points = Vec::new();
+            let mut base = None;
+            for w in paper_pairings() {
+                // The workloads' batch token counts and layer depths
+                // differ, so normalize to per-layer per-token latency —
+                // the quantity §V-B predicts constant for Hecaton.
+                let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
+                let r = simulate(&w.model, &hw, method);
+                let per_token = r.latency.raw()
+                    / (w.model.tokens_per_batch() as f64 * w.model.layers as f64);
+                let norm = match base {
+                    None => {
+                        base = Some(per_token);
+                        1.0
+                    }
+                    Some(b) => per_token / b,
+                };
+                points.push((w.model.name.clone(), w.dies, norm));
+            }
+            out.push(Series {
+                package,
+                method,
+                points,
+            });
+        }
+    }
+    out
+}
+
+pub fn report() -> String {
+    let series = run();
+    let mut out = String::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        let mut t = Table::new(&["method", "1.1B/16", "7B/64", "70B/256", "405B/1024"])
+            .with_title(&format!(
+                "Fig. 9 ({} package) — latency normalized to the smallest model",
+                package.name()
+            ))
+            .label_first();
+        for s in series.iter().filter(|s| s.package == package) {
+            let mut row = vec![s.method.name().to_string()];
+            for (_, _, v) in &s.points {
+                row.push(format!("{v:.2}"));
+            }
+            t.row(row);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hecaton_flat_baselines_grow() {
+        for s in run() {
+            let last = s.points.last().unwrap().2;
+            match s.method {
+                Method::Hecaton => assert!(
+                    last < 2.0,
+                    "hecaton should stay ~constant ({}, {:?}): {last}",
+                    s.package.name(),
+                    s.points
+                ),
+                Method::FlatRing => {
+                    if s.package == PackageKind::Standard {
+                        assert!(last > 2.0, "flat-ring should grow: {last}");
+                    }
+                }
+                _ => {}
+            }
+            // All series start at 1 by construction.
+            assert!((s.points[0].2 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standard_package_gap_is_wider() {
+        // §VI-C: lower D2D bandwidth → proportionally higher NoP overhead
+        // → the method gap is more pronounced on the standard package.
+        let series = run();
+        let grab = |p: PackageKind, m: Method| {
+            series
+                .iter()
+                .find(|s| s.package == p && s.method == m)
+                .unwrap()
+                .points
+                .last()
+                .unwrap()
+                .2
+        };
+        let std_gap = grab(PackageKind::Standard, Method::FlatRing)
+            / grab(PackageKind::Standard, Method::Hecaton);
+        let adv_gap = grab(PackageKind::Advanced, Method::FlatRing)
+            / grab(PackageKind::Advanced, Method::Hecaton);
+        assert!(std_gap > adv_gap, "std {std_gap} vs adv {adv_gap}");
+    }
+}

@@ -1,0 +1,102 @@
+//! **§VI-G** — energy-efficiency comparison against the A100 GPU cluster
+//! that trained Llama2-70B. The paper computes the GPU side from the
+//! published GPU-hours and power; we do the same.
+
+use crate::config::presets::model_preset;
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::simulate;
+use crate::util::table::Table;
+
+/// Published A100 baseline (Llama 2 paper, Table 2): 1,720,320 GPU-hours
+/// for the 70B model over ~2.0e12 tokens, 400 W TDP per A100.
+pub struct GpuBaseline {
+    pub gpu_hours: f64,
+    pub tokens: f64,
+    pub tdp_w: f64,
+}
+
+impl GpuBaseline {
+    pub fn llama2_70b() -> GpuBaseline {
+        GpuBaseline {
+            gpu_hours: 1_720_320.0,
+            tokens: 2.0e12,
+            tdp_w: 400.0,
+        }
+    }
+
+    /// Training FLOPs ≈ 6·params·tokens.
+    pub fn flops(&self, params: f64) -> f64 {
+        6.0 * params * self.tokens
+    }
+
+    /// Achieved FLOPS/W of the GPU cluster.
+    pub fn flops_per_watt(&self, params: f64) -> f64 {
+        let energy_j = self.gpu_hours * 3600.0 * self.tdp_w;
+        self.flops(params) / energy_j
+    }
+}
+
+pub struct Comparison {
+    pub gpu_flops_per_watt: f64,
+    pub hecaton_flops_per_watt: f64,
+    pub improvement: f64,
+}
+
+pub fn run() -> Comparison {
+    let model = model_preset("llama2-70b").expect("preset");
+    let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr5_6400);
+    let r = simulate(&model, &hw, Method::Hecaton);
+    let baseline = GpuBaseline::llama2_70b();
+    let gpu = baseline.flops_per_watt(model.total_params() as f64);
+    let hec = r.flops_per_watt();
+    Comparison {
+        gpu_flops_per_watt: gpu,
+        hecaton_flops_per_watt: hec,
+        improvement: hec / gpu,
+    }
+}
+
+pub fn report() -> String {
+    let c = run();
+    let mut t = Table::new(&["system", "FLOPS/W"])
+        .with_title("§VI-G — energy efficiency training Llama2-70B")
+        .label_first();
+    t.row(crate::table_row![
+        "A100 cluster (published GPU-hours x TDP)",
+        crate::util::fmt::flops(c.gpu_flops_per_watt)
+    ]);
+    t.row(crate::table_row![
+        "Hecaton (256 dies, standard pkg)",
+        crate::util::fmt::flops(c.hecaton_flops_per_watt)
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "Improvement: {:.2}x (paper: 22.36x)\n",
+        c.improvement
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_baseline_matches_public_math() {
+        let b = GpuBaseline::llama2_70b();
+        let fpw = b.flops_per_watt(70e9);
+        // 6·70e9·2e12 / (1.72e6·3600·400) ≈ 3.4e11 FLOPS/W
+        assert!(fpw > 2e11 && fpw < 5e11, "{fpw:.3e}");
+    }
+
+    #[test]
+    fn hecaton_improves_by_an_order_of_magnitude() {
+        let c = run();
+        assert!(
+            c.improvement > 5.0 && c.improvement < 80.0,
+            "improvement {:.2} should land in the paper's regime (22.36x)",
+            c.improvement
+        );
+    }
+}

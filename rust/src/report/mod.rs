@@ -1,0 +1,36 @@
+//! Experiment drivers: one module per table/figure of the paper's
+//! evaluation (§VI). Each returns structured rows plus a rendered table so
+//! `hecaton reproduce <exp>` and `cargo bench` print identical output.
+
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod table3;
+pub mod table4;
+pub mod gpu;
+pub mod weak;
+pub mod ablation;
+
+/// All experiment ids.
+pub fn experiments() -> &'static [&'static str] {
+    &[
+        "fig8", "fig9", "fig10", "fig11", "table3", "table4", "gpu", "weak", "ablation",
+    ]
+}
+
+/// Run one experiment by id, returning the rendered report.
+pub fn run(id: &str) -> crate::Result<String> {
+    match id {
+        "fig8" => Ok(fig8::report()),
+        "fig9" => Ok(fig9::report()),
+        "fig10" => Ok(fig10::report()),
+        "fig11" => Ok(fig11::report()),
+        "table3" => Ok(table3::report()),
+        "table4" => Ok(table4::report()),
+        "gpu" => Ok(gpu::report()),
+        "weak" => Ok(weak::report()),
+        "ablation" => Ok(ablation::report()),
+        other => anyhow::bail!("unknown experiment '{other}'; try one of {:?}", experiments()),
+    }
+}

@@ -1,0 +1,84 @@
+//! **Table III** — NoP communication overheads per method, both the
+//! closed forms and the step-level simulator's agreement with them.
+
+use crate::config::{LinkConfig, PackageKind};
+use crate::nop::analytic::{table3, Block, Method, NopParams, Pass};
+use crate::util::table::Table;
+use crate::util::{Bytes, Seconds};
+
+pub fn report() -> String {
+    // Evaluate the closed forms at a representative operating point:
+    // N = 64 dies, standard package, one 4096-token mini-batch of a
+    // 4096-hidden model.
+    let link = LinkConfig::for_package(PackageKind::Standard);
+    let act = Bytes(4096.0 * 4096.0 * 4.0);
+    let wt = Bytes(4096.0 * 4096.0 * 4.0);
+    let p = NopParams {
+        n: 64,
+        alpha: link.latency,
+        gamma: act.over_bandwidth(link.bandwidth),
+        xi: wt.over_bandwidth(link.bandwidth),
+    };
+    let mut t = Table::new(&["workload", "method", "link latency L", "transmission T"])
+        .with_title(
+            "Table III — NoP overheads at N=64, h=4096, 4096-token mini-batch (standard pkg)",
+        )
+        .label_first();
+    for (block, bname) in [(Block::Attention, "Atten."), (Block::Ffn, "FFN")] {
+        for pass in [Pass::Fwd, Pass::Bwd] {
+            let pname = match pass {
+                Pass::Fwd => "Fwd",
+                Pass::Bwd => "Bwd",
+            };
+            for m in Method::all() {
+                let (l, tt) = table3(m, block, pass, &p);
+                t.row(crate::table_row![
+                    format!("{pname} {bname}"),
+                    m.name(),
+                    l,
+                    tt
+                ]);
+            }
+        }
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\nStep-simulator == closed-form is asserted by unit tests in nop::analytic\n\
+         — run `cargo test nop` to re-verify.\n",
+    );
+    out
+}
+
+/// The complexity-reduction headline: `T_flat / T_hecaton ~ √N/3`.
+pub fn complexity_ratio(n: usize) -> f64 {
+    let link = LinkConfig::for_package(PackageKind::Standard);
+    let p = NopParams {
+        n,
+        alpha: link.latency,
+        gamma: Seconds(1.0),
+        xi: Seconds(0.0),
+    };
+    let (_, t_flat) = table3(Method::FlatRing, Block::Attention, Pass::Fwd, &p);
+    let (_, t_hec) = table3(Method::Hecaton, Block::Attention, Pass::Fwd, &p);
+    t_flat / t_hec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_has_all_16_rows() {
+        let r = report();
+        assert_eq!(r.matches("hecaton").count(), 4);
+        assert_eq!(r.matches("optimus").count(), 4);
+    }
+
+    #[test]
+    fn complexity_ratio_grows_like_sqrt_n() {
+        let r64 = complexity_ratio(64);
+        let r256 = complexity_ratio(256);
+        // 2(N−1)/N ÷ 6(√N−1)/N → ratio doubles when √N doubles.
+        assert!((r256 / r64 - 2.0).abs() < 0.2, "{r64} -> {r256}");
+    }
+}

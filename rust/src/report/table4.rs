@@ -1,0 +1,92 @@
+//! **Table IV** — proportion of link latency in total system latency at
+//! α = 10 ns. Expected shape: grows with scale and with advanced
+//! packaging, but stays single-digit percent — justifying dropping α from
+//! the weak-scaling analysis (§VI-E).
+
+use crate::config::presets::paper_pairings;
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::sim::system::simulate;
+use crate::util::table::Table;
+use crate::util::Seconds;
+
+pub struct Row {
+    pub model: String,
+    pub package: PackageKind,
+    pub proportion: f64,
+}
+
+pub fn run() -> Vec<Row> {
+    let mut rows = Vec::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for w in paper_pairings() {
+            let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400)
+                .with_link_latency(Seconds::ns(10.0));
+            let r = simulate(&w.model, &hw, Method::Hecaton);
+            rows.push(Row {
+                model: w.model.name.clone(),
+                package,
+                proportion: r.breakdown.nop_link.raw() / r.latency.raw(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn report() -> String {
+    let rows = run();
+    let mut t = Table::new(&["package", "llama-1.1B", "llama-7B", "llama-70B", "llama-405B"])
+        .with_title("Table IV — link latency share of system latency (alpha = 10 ns)")
+        .label_first();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        let mut row = vec![package.name().to_string()];
+        for r in rows.iter().filter(|r| r.package == package) {
+            row.push(crate::util::fmt::percent(r.proportion));
+        }
+        t.row(row);
+    }
+    let mut out = t.render();
+    out.push_str("Paper: 0.549%..4.399% (standard), 0.832%..7.678% (advanced)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportion_grows_with_scale_and_stays_small() {
+        for package in [PackageKind::Standard, PackageKind::Advanced] {
+            let series: Vec<f64> = run()
+                .into_iter()
+                .filter(|r| r.package == package)
+                .map(|r| r.proportion)
+                .collect();
+            assert_eq!(series.len(), 4);
+            for w in series.windows(2) {
+                assert!(w[1] > w[0], "{package:?}: {series:?} should grow");
+            }
+            // Paper's conclusion: contribution remains small (<10%).
+            assert!(series[3] < 0.10, "{package:?}: {series:?}");
+        }
+    }
+
+    #[test]
+    fn advanced_has_higher_share() {
+        // Higher bandwidth shrinks transmission time, not link latency.
+        let rows = run();
+        for w in paper_pairings() {
+            let s = rows
+                .iter()
+                .find(|r| r.model == w.model.name && r.package == PackageKind::Standard)
+                .unwrap()
+                .proportion;
+            let a = rows
+                .iter()
+                .find(|r| r.model == w.model.name && r.package == PackageKind::Advanced)
+                .unwrap()
+                .proportion;
+            assert!(a > s, "{}: adv {a} <= std {s}", w.model.name);
+        }
+    }
+}

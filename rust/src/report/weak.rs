@@ -1,0 +1,57 @@
+//! **§V-B** — weak-scaling verification: C(k), T(k), D(k), U_W(k), U_A(k)
+//! for Hecaton as the model width and die count scale together.
+
+use crate::config::presets::model_preset;
+use crate::config::PackageKind;
+use crate::nop::analytic::Method;
+use crate::sim::weak_scaling::weak_scaling_sweep;
+use crate::util::table::Table;
+
+pub fn report() -> String {
+    let base = model_preset("tinyllama-1.1b").expect("preset");
+    let mut out = String::new();
+    for method in [Method::Hecaton, Method::FlatRing] {
+        let pts = weak_scaling_sweep(&base, 16, PackageKind::Standard, method, &[1, 2, 4, 8]);
+        let mut t = Table::new(&[
+            "k", "dies", "hidden", "latency", "compute%", "NoP%", "DRAM%", "U_W/die", "U_A/die",
+        ])
+        .with_title(&format!(
+            "§V-B weak scaling — {} (h -> k·h, dies -> 16·k²)",
+            method.name()
+        ))
+        .label_first();
+        for p in &pts {
+            let r = &p.result;
+            let lat = r.latency.raw();
+            t.row(crate::table_row![
+                p.k,
+                p.dies,
+                p.hidden,
+                r.latency,
+                format!("{:.0}%", 100.0 * r.breakdown.compute.raw() / lat),
+                format!(
+                    "{:.0}%",
+                    100.0 * (r.breakdown.nop_transmission + r.breakdown.nop_link).raw() / lat
+                ),
+                format!("{:.0}%", 100.0 * r.breakdown.dram_exposed.raw() / lat),
+                p.u_weight,
+                p.u_act
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_renders_both_methods() {
+        let r = super::report();
+        assert!(r.contains("hecaton"));
+        assert!(r.contains("flat-ring"));
+        // 4 data rows each.
+        assert!(r.matches("16,384").count() >= 2 || r.contains("16384"));
+    }
+}

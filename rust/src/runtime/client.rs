@@ -1,0 +1,239 @@
+//! The PJRT execution engine: compile-on-first-use executable cache over
+//! the HLO-text artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::runtime::registry::{Dtype, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// Inputs to an artifact execution: f32 tensors or an i32 vector
+/// (targets for the cross-entropy artifact).
+#[derive(Debug, Clone)]
+pub enum Arg {
+    F32(Tensor),
+    I32(Vec<i32>),
+}
+
+impl From<Tensor> for Arg {
+    fn from(t: Tensor) -> Arg {
+        Arg::F32(t)
+    }
+}
+
+/// Execution statistics (feeds EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_time: Duration,
+    pub compilations: u64,
+    pub compile_time: Duration,
+}
+
+/// One thread's PJRT client + executable cache.
+///
+/// Not `Send`: each die thread constructs its own (see module docs).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (validates the manifest).
+    pub fn open(dir: PathBuf) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> crate::Result<Runtime> {
+        Self::open(crate::runtime::artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    fn compile(&self, name: &str) -> crate::Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        let mut stats = self.stats.borrow_mut();
+        stats.compilations += 1;
+        stats.compile_time += t0.elapsed();
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated (count + element count +
+    /// dtype) against the manifest and reshaped to the manifest dims.
+    /// Returns the output tuple as host tensors (shape = flat row-major,
+    /// caller re-interprets — artifact names encode the dims).
+    pub fn exec(&self, name: &str, args: &[Arg]) -> crate::Result<Vec<Tensor>> {
+        let spec = self.manifest.get(name)?.clone();
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} args given, {} expected",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        self.compile(name)?;
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, ispec.dtype) {
+                (Arg::F32(t), Dtype::F32) => {
+                    if t.len() != ispec.elems() {
+                        bail!(
+                            "artifact '{name}' input {i}: {} elems given, shape {:?} expects {}",
+                            t.len(),
+                            ispec.shape,
+                            ispec.elems()
+                        );
+                    }
+                    xla::Literal::vec1(&t.data).reshape(&dims)?
+                }
+                (Arg::I32(v), Dtype::I32) => {
+                    if v.len() != ispec.elems() {
+                        bail!("artifact '{name}' input {i}: i32 length mismatch");
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (a, d) => bail!("artifact '{name}' input {i}: dtype mismatch ({a:?} vs {d:?})"),
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.exec_time += t0.elapsed();
+        }
+        // return_tuple=True at lowering: unpack the tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let data = lit.to_vec::<f32>()?;
+            let n = data.len();
+            out.push(Tensor::new(data, vec![n]));
+        }
+        Ok(out)
+    }
+
+    /// Convenience: execute a matmul artifact `x[m,k] · w[k,n]`.
+    pub fn matmul(&self, x: &Tensor, w: &Tensor) -> crate::Result<Tensor> {
+        let (m, k) = (x.rows(), x.cols());
+        let n = w.cols();
+        assert_eq!(w.rows(), k, "matmul contraction mismatch");
+        let name = format!("matmul_{m}x{k}x{n}");
+        let out = self.exec(&name, &[x.clone().into(), w.clone().into()])?;
+        Ok(out.into_iter().next().unwrap().reshaped(&[m, n]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping runtime test: artifacts not built");
+            return None;
+        }
+        Some(Runtime::open(dir).expect("runtime opens"))
+    }
+
+    /// Naive host matmul for oracle checks.
+    fn host_matmul(x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, k, n) = (x.rows(), x.cols(), w.cols());
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let xv = x.data[i * k + l];
+                for j in 0..n {
+                    out[i * n + j] += xv * w.data[l * n + j];
+                }
+            }
+        }
+        Tensor::new(out, vec![m, n])
+    }
+
+    #[test]
+    fn matmul_artifact_matches_host() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(1);
+        let x = Tensor::glorot(64, 32, &mut rng);
+        let w = Tensor::glorot(32, 96, &mut rng);
+        let got = rt.matmul(&x, &w).unwrap();
+        let want = host_matmul(&x, &w);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        // Executable cache: second call shouldn't recompile.
+        let _ = rt.matmul(&x, &w).unwrap();
+        assert_eq!(rt.stats().compilations, 1);
+        assert_eq!(rt.stats().executions, 2);
+    }
+
+    #[test]
+    fn xent_artifact_returns_loss_and_grad() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = crate::util::rng::Rng::new(2);
+        let logits = Tensor::glorot(64, 64, &mut rng);
+        let targets: Vec<i32> = (0..64).map(|i| (i % 64) as i32).collect();
+        let out = rt
+            .exec("xent_64x64", &[logits.into(), Arg::I32(targets)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let loss = out[0].data[0];
+        // Near-uniform logits → loss ≈ ln(64)
+        assert!((loss - 64f32.ln()).abs() < 0.5, "loss {loss}");
+        assert_eq!(out[1].len(), 64 * 64);
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected() {
+        let Some(rt) = runtime() else { return };
+        let x = Tensor::zeros(&[8, 8]);
+        assert!(rt.exec("matmul_64x32x96", &[x.clone().into()]).is_err()); // arity
+        assert!(rt
+            .exec("matmul_64x32x96", &[x.clone().into(), x.clone().into()])
+            .is_err()); // element count
+        assert!(rt.exec("no_such_artifact", &[]).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! Python never runs at training time — artifacts are the only interface.
+//! One [`Runtime`] per OS thread (PJRT handles are not `Send`); each die
+//! thread of the coordinator owns its own, mirroring the physical reality
+//! that each die has its own execution engine.
+
+pub mod tensor;
+pub mod registry;
+pub mod client;
+
+pub use client::Runtime;
+pub use registry::{ArtifactSpec, Manifest};
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory: `$HECATON_ARTIFACTS` or ./artifacts.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("HECATON_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(ARTIFACT_DIR))
+}

@@ -1,0 +1,144 @@
+//! Artifact manifest: which entry points exist and their input signatures.
+//!
+//! Parsed from `artifacts/manifest.txt`, one line per artifact:
+//! `name <shape>:<dtype>;<shape>:<dtype>;…` with shapes like `64x32x96`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+/// Dtype of an artifact input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input's signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> crate::Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (name, rest) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow!("manifest line {}: missing signature", lineno + 1))?;
+            let inputs: crate::Result<Vec<InputSpec>> =
+                rest.split(';').map(parse_input).collect();
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    inputs: inputs?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest — is aot.py's DEPLOYMENTS list in sync?"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+}
+
+fn parse_input(s: &str) -> crate::Result<InputSpec> {
+    let (shape_s, dtype_s) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("bad input spec '{s}'"))?;
+    let shape: Result<Vec<usize>, _> = shape_s.split('x').map(str::parse).collect();
+    let dtype = match dtype_s {
+        "float32" => Dtype::F32,
+        "int32" => Dtype::I32,
+        other => bail!("unsupported dtype '{other}'"),
+    };
+    Ok(InputSpec {
+        shape: shape.map_err(|e| anyhow!("bad shape '{shape_s}': {e}"))?,
+        dtype,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_lines() {
+        let m = Manifest::parse(
+            "matmul_64x32x96 64x32:float32;32x96:float32\nxent_64x64 64x64:float32;64:int32\n",
+        )
+        .unwrap();
+        let mm = m.get("matmul_64x32x96").unwrap();
+        assert_eq!(mm.inputs.len(), 2);
+        assert_eq!(mm.inputs[0].shape, vec![64, 32]);
+        assert_eq!(mm.inputs[0].dtype, Dtype::F32);
+        assert_eq!(mm.inputs[0].elems(), 64 * 32);
+        let xe = m.get("xent_64x64").unwrap();
+        assert_eq!(xe.inputs[1].dtype, Dtype::I32);
+        assert!(m.contains("xent_64x64"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("lonely-name").is_err());
+        assert!(Manifest::parse("n 64x32:float16").is_err());
+        assert!(Manifest::parse("n ax3:float32").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = crate::runtime::artifact_dir();
+        if !dir.join("manifest.txt").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() > 30);
+        // Spot-check the tiny@2x2 contract.
+        assert!(m.contains("matmul_64x32x96"));
+        assert!(m.contains("attention_fwd_2x32x16"));
+        assert!(m.contains("rmsnorm_fwd_64x64"));
+        assert!(m.contains("xent_64x64"));
+    }
+}

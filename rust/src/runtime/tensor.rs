@@ -1,0 +1,265 @@
+//! Host tensor: the coordinator's working representation of activations,
+//! weights and gradients (row-major f32, rank 1–3).
+
+use crate::util::rng::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "data len {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    /// Gaussian init scaled Xavier-style for a [fan_in, fan_out] matrix.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Tensor {
+        let scale = (2.0 / (rows + cols) as f64).sqrt();
+        Tensor {
+            data: (0..rows * cols)
+                .map(|_| (rng.normal() * scale) as f32)
+                .collect(),
+            shape: vec![rows, cols],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![1.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on rank-{} tensor", self.shape.len());
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2D transpose (cache-blocked: the naive row-major→column-major walk
+    /// misses on every write for large matrices; 32×32 tiles keep both
+    /// the source rows and destination rows resident — §Perf item L3-1,
+    /// ~14× on 768×1152).
+    pub fn transpose(&self) -> Tensor {
+        const B: usize = 32;
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        for i0 in (0..r).step_by(B) {
+            let i1 = (i0 + B).min(r);
+            for j0 in (0..c).step_by(B) {
+                let j1 = (j0 + B).min(c);
+                for i in i0..i1 {
+                    let row = &self.data[i * c..i * c + c];
+                    for j in j0..j1 {
+                        out[j * r + i] = row[j];
+                    }
+                }
+            }
+        }
+        Tensor::new(out, vec![c, r])
+    }
+
+    /// Contiguous row block `[start, start+len)`.
+    pub fn row_block(&self, start: usize, len: usize) -> Tensor {
+        let c = self.cols();
+        assert!(start + len <= self.rows());
+        Tensor::new(
+            self.data[start * c..(start + len) * c].to_vec(),
+            vec![len, c],
+        )
+    }
+
+    /// Contiguous column block `[start, start+len)`.
+    pub fn col_block(&self, start: usize, len: usize) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        assert!(start + len <= c, "col block {}+{} > {}", start, len, c);
+        let mut out = Vec::with_capacity(r * len);
+        for i in 0..r {
+            out.extend_from_slice(&self.data[i * c + start..i * c + start + len]);
+        }
+        Tensor::new(out, vec![r, len])
+    }
+
+    /// Stack row blocks vertically (all must share the column count).
+    pub fn concat_rows(blocks: &[Tensor]) -> Tensor {
+        assert!(!blocks.is_empty());
+        let c = blocks[0].cols();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for b in blocks {
+            assert_eq!(b.cols(), c, "column mismatch in concat_rows");
+            data.extend_from_slice(&b.data);
+            rows += b.rows();
+        }
+        Tensor::new(data, vec![rows, c])
+    }
+
+    /// Stitch column blocks horizontally (all must share the row count).
+    pub fn concat_cols(blocks: &[Tensor]) -> Tensor {
+        assert!(!blocks.is_empty());
+        let r = blocks[0].rows();
+        let total_c: usize = blocks.iter().map(|b| b.cols()).sum();
+        let mut out = vec![0.0f32; r * total_c];
+        let mut offset = 0;
+        for b in blocks {
+            assert_eq!(b.rows(), r, "row mismatch in concat_cols");
+            let bc = b.cols();
+            for i in 0..r {
+                out[i * total_c + offset..i * total_c + offset + bc]
+                    .copy_from_slice(&b.data[i * bc..(i + 1) * bc]);
+            }
+            offset += bc;
+        }
+        Tensor::new(out, vec![r, total_c])
+    }
+
+    /// Copy `block` into this tensor at offset `(row0, col0)`.
+    pub fn set_block(&mut self, row0: usize, col0: usize, block: &Tensor) {
+        let c = self.cols();
+        let (br, bc) = (block.rows(), block.cols());
+        assert!(row0 + br <= self.rows() && col0 + bc <= c, "set_block out of range");
+        for i in 0..br {
+            let dst = (row0 + i) * c + col0;
+            self.data[dst..dst + bc].copy_from_slice(&block.data[i * bc..(i + 1) * bc]);
+        }
+    }
+
+    /// Element-wise `self += other`.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Element-wise `self -= scale * other` (SGD update).
+    pub fn sub_scaled(&mut self, other: &Tensor, scale: f32) {
+        assert_eq!(self.shape, other.shape, "sub_scaled shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= scale * b;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Max |element| — used in tests and gradient diagnostics.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize) -> Tensor {
+        Tensor::new((0..rows * cols).map(|x| x as f32).collect(), vec![rows, cols])
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = t2(3, 5);
+        let tt = a.transpose().transpose();
+        assert_eq!(a, tt);
+        assert_eq!(a.transpose().shape, vec![5, 3]);
+        assert_eq!(a.transpose().data[0 * 3 + 1], a.data[1 * 5 + 0]);
+    }
+
+    #[test]
+    fn blocks_and_concat_invert() {
+        let a = t2(4, 6);
+        let top = a.row_block(0, 2);
+        let bot = a.row_block(2, 2);
+        assert_eq!(Tensor::concat_rows(&[top, bot]), a);
+        let left = a.col_block(0, 3);
+        let right = a.col_block(3, 3);
+        assert_eq!(Tensor::concat_cols(&[left, right]), a);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = t2(2, 2);
+        let b = Tensor::ones(&[2, 2]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0]);
+        a.sub_scaled(&b, 2.0);
+        assert_eq!(a.data, vec![-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(a.max_abs(), 2.0);
+    }
+
+    #[test]
+    fn glorot_statistics() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::glorot(64, 256, &mut rng);
+        let mean: f32 = w.data.iter().sum::<f32>() / w.len() as f32;
+        let var: f32 =
+            w.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        let expect = 2.0 / (64.0 + 256.0);
+        assert!((var / expect - 1.0).abs() < 0.2, "var {var} vs {expect}");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn mismatched_add_panics() {
+        let mut a = t2(2, 2);
+        a.add_assign(&t2(2, 3));
+    }
+
+    #[test]
+    fn set_block_inverts_blocks() {
+        let a = t2(4, 6);
+        let mut b = Tensor::zeros(&[4, 6]);
+        for (r0, c0) in [(0, 0), (0, 3), (2, 0), (2, 3)] {
+            let blk = {
+                let rb = a.row_block(r0, 2);
+                rb.col_block(c0, 3)
+            };
+            b.set_block(r0, c0, &blk);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = t2(2, 6).reshaped(&[3, 4]);
+        assert_eq!(a.shape, vec![3, 4]);
+        assert_eq!(a.data[5], 5.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Layer-fusion planner (paper §III-B(b)).
+//!
+//! Fusing consecutive blocks keeps their boundary activation on-package,
+//! at the cost of keeping all fused weights resident in the (distributed)
+//! weight buffers. Greedy policy, as the paper describes: fuse as deep as
+//! the per-die weight buffer allows. "When the weight buffer capacity is
+//! tight, all matrix multiplications within the attention block are fused
+//! [a block is never split], while the two linear layers in the FFN are
+//! processed sequentially" — our granularity is the block (Attention or
+//! FFN), matching that.
+
+use crate::config::HardwareConfig;
+use crate::parallel::plan::TpPlanner;
+use crate::util::Bytes;
+use crate::workload::ops::BlockDesc;
+
+/// A run of consecutive blocks executed without touching DRAM in between.
+#[derive(Debug, Clone)]
+pub struct FusionGroup {
+    /// Indices into the block chain.
+    pub block_indices: Vec<usize>,
+    /// Per-die weight bytes the group holds resident.
+    pub weight_per_die: Bytes,
+}
+
+impl FusionGroup {
+    pub fn len(&self) -> usize {
+        self.block_indices.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.block_indices.is_empty()
+    }
+}
+
+/// Fraction of the weight buffer usable for resident weights (the rest
+/// holds gradients-in-progress / double-buffered tiles).
+pub const WEIGHT_BUF_FILL: f64 = 0.9;
+
+/// Greedily group a chain of blocks under the weight-buffer constraint.
+///
+/// A block whose weights alone exceed the budget still becomes a singleton
+/// group (it streams weight tiles; the planner's `sram_report` flags
+/// whether that is *feasible* — here we only decide fusion depth).
+pub fn plan_fusion(
+    blocks: &[BlockDesc],
+    planner: &dyn TpPlanner,
+    hw: &HardwareConfig,
+) -> Vec<FusionGroup> {
+    let budget = hw.die.weight_buf * WEIGHT_BUF_FILL;
+    let mut groups: Vec<FusionGroup> = Vec::new();
+    let mut current: Vec<usize> = Vec::new();
+
+    let weight_of = |indices: &[usize]| -> Bytes {
+        let refs: Vec<&BlockDesc> = indices.iter().map(|&i| &blocks[i]).collect();
+        planner.weight_bytes_per_die(&refs, hw)
+    };
+
+    for idx in 0..blocks.len() {
+        let mut attempt = current.clone();
+        attempt.push(idx);
+        if current.is_empty() || weight_of(&attempt).raw() <= budget.raw() {
+            current = attempt;
+        } else {
+            groups.push(FusionGroup {
+                weight_per_die: weight_of(&current),
+                block_indices: std::mem::take(&mut current),
+            });
+            current.push(idx);
+        }
+    }
+    if !current.is_empty() {
+        groups.push(FusionGroup {
+            weight_per_die: weight_of(&current),
+            block_indices: current,
+        });
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::nop::analytic::Method;
+    use crate::parallel::plan::planner;
+    use crate::workload::transformer::layer_blocks;
+
+    fn chain(model: &str, layers: usize) -> Vec<BlockDesc> {
+        let m = model_preset(model).unwrap();
+        let mut blocks = Vec::new();
+        for _ in 0..layers {
+            blocks.extend(layer_blocks(&m));
+        }
+        blocks
+    }
+
+    #[test]
+    fn groups_cover_all_blocks_in_order() {
+        let blocks = chain("llama2-7b", 4);
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let p = planner(Method::Hecaton);
+        let groups = plan_fusion(&blocks, p.as_ref(), &hw);
+        let flat: Vec<usize> = groups.iter().flat_map(|g| g.block_indices.clone()).collect();
+        assert_eq!(flat, (0..blocks.len()).collect::<Vec<_>>());
+        assert!(groups.iter().all(|g| !g.is_empty()));
+    }
+
+    #[test]
+    fn groups_respect_weight_budget_unless_singleton() {
+        let blocks = chain("llama2-70b", 2);
+        let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr5_6400);
+        let p = planner(Method::Hecaton);
+        let budget = hw.die.weight_buf * WEIGHT_BUF_FILL;
+        for g in plan_fusion(&blocks, p.as_ref(), &hw) {
+            assert!(
+                g.weight_per_die.raw() <= budget.raw() || g.len() == 1,
+                "group {:?} holds {}",
+                g.block_indices,
+                g.weight_per_die
+            );
+        }
+    }
+
+    #[test]
+    fn bigger_buffers_fuse_deeper() {
+        let blocks = chain("tinyllama-1.1b", 8);
+        let mut hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let p = planner(Method::Hecaton);
+        let tight = plan_fusion(&blocks, p.as_ref(), &hw);
+        hw.die.weight_buf = hw.die.weight_buf * 8.0;
+        let roomy = plan_fusion(&blocks, p.as_ref(), &hw);
+        assert!(
+            roomy.len() <= tight.len(),
+            "roomy {} vs tight {}",
+            roomy.len(),
+            tight.len()
+        );
+    }
+
+    #[test]
+    fn scaled_system_keeps_fusion_depth() {
+        // Weak scaling: weights/die constant → same fusion structure.
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let p = planner(Method::Hecaton);
+        let mut depths = Vec::new();
+        for (k, dies) in [(1usize, 16), (2, 64), (4, 256)] {
+            let sm = m.scaled(k);
+            let blocks: Vec<BlockDesc> = (0..4).flat_map(|_| layer_blocks(&sm)).collect();
+            let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400);
+            depths.push(plan_fusion(&blocks, p.as_ref(), &hw).len());
+        }
+        assert!(depths.windows(2).all(|w| w[0] == w[1]), "{depths:?}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Hecaton scheduling (paper §III-B, Fig. 6): layer fusion under the
+//! weight-buffer constraint, and the on-package-execution /
+//! off-package-memory-access overlap pipeline.
+
+pub mod fusion;
+pub mod pipeline;
+
+pub use fusion::{plan_fusion, FusionGroup};
+pub use pipeline::{overlap, StageTimes};

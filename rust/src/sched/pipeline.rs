@@ -1,0 +1,123 @@
+//! On-package execution ↔ off-package memory access overlap
+//! (paper §III-B(a), Fig. 6).
+//!
+//! Within one fusion group, mini-batches stream through a two-stage
+//! pipeline: stage A is on-package execution (compute + NoP), stage B is
+//! the DRAM traffic of the group boundary. With `n` mini-batches the
+//! critical path is `max(A_total, B_total)` plus one fill of the shorter
+//! stage; the *exposed* DRAM time (what Fig. 8's breakdown charts as
+//! "DRAM") is only the excess over the on-package stage.
+
+use crate::util::Seconds;
+
+/// Per-group stage times for one batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageTimes {
+    /// Total on-package execution (all mini-batches).
+    pub on_package: Seconds,
+    /// Total off-package DRAM streaming.
+    pub dram: Seconds,
+    /// Number of mini-batches (pipeline depth).
+    pub n_minibatches: usize,
+}
+
+/// Result of overlapping the two stages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapResult {
+    /// Wall-clock of the group.
+    pub latency: Seconds,
+    /// DRAM time not hidden behind on-package execution (the Fig. 8
+    /// "DRAM access" breakdown segment: "the segment [that] exceeds the
+    /// on-package execution, rather than the entire DRAM access time").
+    pub exposed_dram: Seconds,
+}
+
+/// Two-stage pipeline overlap.
+pub fn overlap(stages: StageTimes) -> OverlapResult {
+    let n = stages.n_minibatches.max(1) as f64;
+    let a = stages.on_package;
+    let b = stages.dram;
+    let fill = (a.min(b)) / n; // one mini-batch of the shorter stage
+    let latency = a.max(b) + fill;
+    OverlapResult {
+        latency,
+        exposed_dram: latency.saturating_sub(a),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn compute_bound_group_hides_dram() {
+        let r = overlap(StageTimes {
+            on_package: Seconds::ms(100.0),
+            dram: Seconds::ms(40.0),
+            n_minibatches: 20,
+        });
+        // latency = 100ms + 40/20 = 102ms; exposed dram = 2ms (fill only)
+        assert!((r.latency.raw() - 0.102).abs() < 1e-12);
+        assert!((r.exposed_dram.raw() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_bound_group_exposes_excess() {
+        let r = overlap(StageTimes {
+            on_package: Seconds::ms(40.0),
+            dram: Seconds::ms(100.0),
+            n_minibatches: 20,
+        });
+        assert!((r.latency.raw() - 0.102).abs() < 1e-12);
+        assert!((r.exposed_dram.raw() - 0.062).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_minibatch_serializes() {
+        let r = overlap(StageTimes {
+            on_package: Seconds::ms(10.0),
+            dram: Seconds::ms(10.0),
+            n_minibatches: 1,
+        });
+        assert!((r.latency.raw() - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_bounds_property() {
+        prop::check("max(A,B) <= latency <= A+B", 128, |g| {
+            let s = StageTimes {
+                on_package: Seconds(g.f64_range(1e-6, 1.0)),
+                dram: Seconds(g.f64_range(1e-6, 1.0)),
+                n_minibatches: g.usize_range(1, 1000),
+            };
+            let r = overlap(s);
+            prop::assert_prop(
+                r.latency.raw() >= s.on_package.max(s.dram).raw() - 1e-15,
+                "lower bound",
+            )?;
+            prop::assert_prop(
+                r.latency.raw() <= (s.on_package + s.dram).raw() + 1e-15,
+                "upper bound",
+            )?;
+            prop::assert_prop(
+                r.exposed_dram.raw() <= s.dram.raw() + 1e-15,
+                "exposed <= dram",
+            )
+        });
+    }
+
+    #[test]
+    fn deeper_pipelines_hide_more() {
+        let mk = |n| {
+            overlap(StageTimes {
+                on_package: Seconds::ms(50.0),
+                dram: Seconds::ms(50.0),
+                n_minibatches: n,
+            })
+            .latency
+        };
+        assert!(mk(100) < mk(10));
+        assert!(mk(10) < mk(1));
+    }
+}

@@ -1,0 +1,10 @@
+//! System-level simulator: combines the per-die compute model, the NoP
+//! collective costs, the DRAM stream model and the fusion/overlap schedule
+//! into end-to-end training latency and energy (the paper's evaluation
+//! testbed, §VI).
+
+pub mod system;
+pub mod weak_scaling;
+
+pub use system::{simulate, LatencyBreakdown, SimResult};
+pub use weak_scaling::{weak_scaling_sweep, WeakScalingPoint};

@@ -1,0 +1,116 @@
+//! Weak-scaling study (paper §V-B and Fig. 9).
+//!
+//! Scale the model's width by `k` (h → k·h) and the die count by `k²`;
+//! Hecaton's compute, NoP and DRAM components should hold nearly constant
+//! proportions, and per-die SRAM requirements should stay flat.
+
+use crate::config::hardware::{DramKind, PackageKind};
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::nop::analytic::Method;
+use crate::sim::system::{simulate, SimResult};
+use crate::util::Bytes;
+
+/// One point of the weak-scaling sweep.
+#[derive(Debug, Clone)]
+pub struct WeakScalingPoint {
+    pub k: usize,
+    pub dies: usize,
+    pub hidden: usize,
+    pub result: SimResult,
+    /// Per-die SRAM peaks (paper Eq. 9: U_W(k), U_A(k)).
+    pub u_weight: Bytes,
+    pub u_act: Bytes,
+}
+
+/// Run the sweep for one method: `k ∈ ks`, dies = base_dies·k².
+pub fn weak_scaling_sweep(
+    base: &ModelConfig,
+    base_dies: usize,
+    package: PackageKind,
+    method: Method,
+    ks: &[usize],
+) -> Vec<WeakScalingPoint> {
+    ks.iter()
+        .map(|&k| {
+            let model = if k == 1 { base.clone() } else { base.scaled(k) };
+            let dies = base_dies * k * k;
+            let hw = HardwareConfig::square(dies, package, DramKind::Ddr5_6400);
+            let result = simulate(&model, &hw, method);
+            WeakScalingPoint {
+                k,
+                dies,
+                hidden: model.hidden,
+                u_weight: result.sram.weight_peak,
+                u_act: result.sram.act_peak,
+                result,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+
+    fn sweep(method: Method) -> Vec<WeakScalingPoint> {
+        let base = model_preset("tinyllama-1.1b").unwrap();
+        weak_scaling_sweep(&base, 16, PackageKind::Standard, method, &[1, 2, 4, 8])
+    }
+
+    /// The headline weak-scaling claim: Hecaton's per-batch latency stays
+    /// ~constant while flat-ring's grows.
+    #[test]
+    fn hecaton_latency_is_flat_flat_ring_grows() {
+        let hec = sweep(Method::Hecaton);
+        let flat = sweep(Method::FlatRing);
+        let h0 = hec[0].result.latency.raw();
+        let hmax = hec.iter().map(|p| p.result.latency.raw()).fold(0.0, f64::max);
+        assert!(
+            hmax / h0 < 1.6,
+            "hecaton should stay ~flat: {:?}",
+            hec.iter().map(|p| p.result.latency.raw() / h0).collect::<Vec<_>>()
+        );
+        let f_growth = flat.last().unwrap().result.latency.raw() / flat[0].result.latency.raw();
+        assert!(
+            f_growth > 2.0,
+            "flat-ring should grow markedly, got {f_growth}"
+        );
+    }
+
+    /// Eq. 9: U_W and U_A constant for Hecaton.
+    #[test]
+    fn sram_requirements_stay_constant() {
+        let pts = sweep(Method::Hecaton);
+        let w0 = pts[0].u_weight.raw();
+        let a0 = pts[0].u_act.raw();
+        for p in &pts {
+            assert!((p.u_weight.raw() - w0).abs() / w0 < 0.1, "U_W at k={}", p.k);
+            assert!((p.u_act.raw() - a0).abs() / a0 < 0.1, "U_A at k={}", p.k);
+        }
+        // 1D-TP act requirement instead grows ∝ k (h grows, full replica).
+        let flat = sweep(Method::FlatRing);
+        let growth = flat.last().unwrap().u_act.raw() / flat[0].u_act.raw();
+        assert!(growth > 4.0, "flat-ring U_A growth {growth}");
+    }
+
+    /// Eq. 6–8: component proportions roughly constant for Hecaton.
+    #[test]
+    fn component_proportions_stay_constant() {
+        let pts = sweep(Method::Hecaton);
+        let frac = |p: &WeakScalingPoint| {
+            let b = &p.result.breakdown;
+            b.nop_transmission.raw() / p.result.latency.raw()
+        };
+        let f0 = frac(&pts[0]);
+        for p in &pts[1..] {
+            assert!(
+                (frac(p) - f0).abs() < 0.15,
+                "NoP fraction drifted: {} -> {} at k={}",
+                f0,
+                frac(p),
+                p.k
+            );
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! End-to-end training driver over the functional coordinator.
+//!
+//! Drives [`crate::coordinator::Coordinator`] through full batches of a
+//! synthetic corpus, accumulating gradients across mini-batches (the
+//! paper's Fig. 6 inner loop: `for n = 0 → N−1 … dW +=`) and applying one
+//! SGD step per batch. Logs the loss curve — the artifact
+//! `examples/train_e2e.rs` records into EXPERIMENTS.md.
+
+pub mod data;
+
+use crate::coordinator::{Coordinator, MeshCfg};
+use crate::train::data::Corpus;
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    /// Wall-clock of the whole batch (fwd+bwd+update).
+    pub wall: std::time::Duration,
+}
+
+/// Training-loop configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> TrainCfg {
+        TrainCfg {
+            steps: 20,
+            lr: 0.5,
+            seed: 1234,
+        }
+    }
+}
+
+/// Run the training loop; returns the per-step logs.
+///
+/// Each step draws `batch_tokens / minibatch_tokens` mini-batches from the
+/// corpus, accumulates gradients on the dies, then applies SGD.
+pub fn train(
+    coord: &mut Coordinator,
+    corpus: &mut Corpus,
+    cfg: TrainCfg,
+) -> crate::Result<Vec<StepLog>> {
+    let mesh: MeshCfg = coord.cfg.clone();
+    let w = mesh.tokens;
+    let n_mb = (mesh.model.batch_tokens() / w).max(1);
+    let mut logs = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let t0 = std::time::Instant::now();
+        let mut loss_sum = 0.0f32;
+        for _ in 0..n_mb {
+            let (tokens, targets) = corpus.minibatch(w);
+            loss_sum += coord.grad_step(&tokens, &targets)?;
+        }
+        // Scale the step to the mean gradient over mini-batches.
+        coord.sgd_step(cfg.lr / n_mb as f32)?;
+        let log = StepLog {
+            step,
+            loss: loss_sum / n_mb as f32,
+            wall: t0.elapsed(),
+        };
+        crate::log_info!(
+            "step {:>3}  loss {:.4}  ({} mini-batches, {:?})",
+            log.step,
+            log.loss,
+            n_mb,
+            log.wall
+        );
+        logs.push(log);
+    }
+    Ok(logs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{coord_model, MeshCfg};
+
+    #[test]
+    fn e2e_training_loss_decreases_on_mesh() {
+        if !crate::runtime::artifact_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let model = coord_model("tiny").unwrap();
+        let mut corpus = Corpus::next_token(model.vocab, model.seq_len, 99);
+        let cfg = MeshCfg::new(model, 2, 2, 64);
+        let mut coord = Coordinator::new(cfg, 7).unwrap();
+        let logs = train(
+            &mut coord,
+            &mut corpus,
+            TrainCfg {
+                steps: 16,
+                lr: 1.0,
+                seed: 0,
+            },
+        )
+        .unwrap();
+        assert_eq!(logs.len(), 16);
+        let first = logs.first().unwrap().loss;
+        let last = logs.last().unwrap().loss;
+        assert!(last < first - 0.25, "loss {first} -> {last}");
+        coord.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,345 @@
+//! Declarative command-line parser (clap replacement).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments, plus auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option or flag.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Specification of a subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> CommandSpec {
+        CommandSpec {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+}
+
+/// Parsed arguments of a matched subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    /// Get an option that has a default (panics if spec had no default and
+    /// the option is absent — use `get` for truly optional values).
+    pub fn value(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing option --{name}"))
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+    pub fn parse_value<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing option --{name}")))?;
+        raw.parse()
+            .map_err(|e| CliError(format!("invalid --{name} '{raw}': {e}")))
+    }
+}
+
+/// CLI error (unknown option, missing value, …).
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+/// An application: name, about, and subcommands.
+#[derive(Debug, Clone, Default)]
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: CommandSpec) -> App {
+        self.commands.push(c);
+        self
+    }
+
+    /// Render the top-level help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        let width = self.commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+        for c in &self.commands {
+            s.push_str(&format!("  {:width$}  {}\n", c.name, c.about, width = width));
+        }
+        s.push_str(&format!(
+            "\nRun '{} <command> --help' for command options.\n",
+            self.name
+        ));
+        s
+    }
+
+    /// Render help for one command.
+    pub fn command_help(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nUSAGE:\n  {} {}", self.name, cmd.name, cmd.about, self.name, cmd.name);
+        for (p, _) in &cmd.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !cmd.opts.is_empty() {
+            s.push_str(" [options]");
+        }
+        s.push('\n');
+        if !cmd.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &cmd.positional {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !cmd.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            let width = cmd.opts.iter().map(|o| o.name.len()).max().unwrap_or(0);
+            for o in &cmd.opts {
+                let default = match (o.is_flag, o.default) {
+                    (true, _) => String::new(),
+                    (false, Some(d)) => format!(" [default: {d}]"),
+                    (false, None) => " [required]".to_string(),
+                };
+                s.push_str(&format!(
+                    "  --{:width$}  {}{}\n",
+                    o.name,
+                    o.help,
+                    default,
+                    width = width
+                ));
+            }
+        }
+        s
+    }
+
+    /// Parse argv (excluding argv[0]). Returns `Ok(None)` when help was
+    /// requested (caller should print it and exit 0).
+    pub fn parse(&self, args: &[String]) -> Result<Option<Matches>, CliError> {
+        let Some(first) = args.first() else {
+            return Err(CliError(self.help()));
+        };
+        if first == "--help" || first == "-h" || first == "help" {
+            println!("{}", self.help());
+            return Ok(None);
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == first.as_str())
+            .ok_or_else(|| CliError(format!("unknown command '{first}'\n\n{}", self.help())))?;
+
+        let mut m = Matches {
+            command: cmd.name.to_string(),
+            ..Default::default()
+        };
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                m.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.command_help(cmd));
+                return Ok(None);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name} for '{}'", cmd.name)))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    m.flags.insert(name.to_string(), true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("option --{name} needs a value")))?
+                        }
+                    };
+                    m.values.insert(name.to_string(), value);
+                }
+            } else {
+                if m.positional.len() >= cmd.positional.len() {
+                    return Err(CliError(format!("unexpected argument '{a}'")));
+                }
+                m.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &cmd.opts {
+            if !o.is_flag && o.default.is_none() && !m.values.contains_key(o.name) {
+                return Err(CliError(format!("missing required option --{}", o.name)));
+            }
+        }
+        Ok(Some(m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("hecaton", "chiplet LLM training").command(
+            CommandSpec::new("simulate", "run the system simulator")
+                .opt("model", "llama2-70b", "model preset")
+                .opt("dies", "256", "number of dies")
+                .flag("advanced", "use advanced packaging")
+                .pos("out", "output path"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let m = app()
+            .parse(&argv(&["simulate", "--dies", "64", "--advanced", "result.txt"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.command, "simulate");
+        assert_eq!(m.value("model"), "llama2-70b");
+        assert_eq!(m.value("dies"), "64");
+        assert!(m.flag("advanced"));
+        assert_eq!(m.pos(0), Some("result.txt"));
+        let dies: usize = m.parse_value("dies").unwrap();
+        assert_eq!(dies, 64);
+    }
+
+    #[test]
+    fn equals_form() {
+        let m = app()
+            .parse(&argv(&["simulate", "--dies=16"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.value("dies"), "16");
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(app().parse(&argv(&["simulate", "--bogus", "1"])).is_err());
+        assert!(app().parse(&argv(&["nope"])).is_err());
+        assert!(app()
+            .parse(&argv(&["simulate", "a", "b"]))
+            .is_err()); // too many positionals
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(app().parse(&argv(&["simulate", "--dies"])).is_err());
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let a = App::new("x", "y")
+            .command(CommandSpec::new("c", "cmd").req("must", "required opt"));
+        assert!(a.parse(&argv(&["c"])).is_err());
+        let m = a.parse(&argv(&["c", "--must", "v"])).unwrap().unwrap();
+        assert_eq!(m.value("must"), "v");
+    }
+
+    #[test]
+    fn bad_typed_parse_reports_option() {
+        let m = app()
+            .parse(&argv(&["simulate", "--dies", "many"]))
+            .unwrap()
+            .unwrap();
+        let e = m.parse_value::<usize>("dies").unwrap_err();
+        assert!(e.0.contains("--dies"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = app().help();
+        assert!(h.contains("simulate"));
+        let cmd = &app().commands[0];
+        let ch = app().command_help(cmd);
+        assert!(ch.contains("--model"));
+        assert!(ch.contains("[default: llama2-70b]"));
+    }
+}

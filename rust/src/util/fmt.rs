@@ -1,0 +1,141 @@
+//! Human-readable formatting of quantities (used by `Display` impls and the
+//! report tables).
+
+/// Format a byte count with binary prefixes.
+pub fn bytes(v: f64) -> String {
+    let abs = v.abs();
+    const KIB: f64 = 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const TIB: f64 = 1024.0 * 1024.0 * 1024.0 * 1024.0;
+    if abs >= TIB {
+        format!("{:.2} TiB", v / TIB)
+    } else if abs >= GIB {
+        format!("{:.2} GiB", v / GIB)
+    } else if abs >= MIB {
+        format!("{:.2} MiB", v / MIB)
+    } else if abs >= KIB {
+        format!("{:.2} KiB", v / KIB)
+    } else {
+        format!("{:.0} B", v)
+    }
+}
+
+/// Format a duration in seconds with engineering prefixes.
+pub fn seconds(v: f64) -> String {
+    let abs = v.abs();
+    if abs == 0.0 {
+        "0 s".to_string()
+    } else if abs >= 1.0 {
+        format!("{:.3} s", v)
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", v * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} us", v * 1e6)
+    } else {
+        format!("{:.3} ns", v * 1e9)
+    }
+}
+
+/// Format an energy in joules with engineering prefixes.
+pub fn joules(v: f64) -> String {
+    let abs = v.abs();
+    if abs == 0.0 {
+        "0 J".to_string()
+    } else if abs >= 1e3 {
+        format!("{:.3} kJ", v * 1e-3)
+    } else if abs >= 1.0 {
+        format!("{:.3} J", v)
+    } else if abs >= 1e-3 {
+        format!("{:.3} mJ", v * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} uJ", v * 1e6)
+    } else if abs >= 1e-9 {
+        format!("{:.3} nJ", v * 1e9)
+    } else {
+        format!("{:.3} pJ", v * 1e12)
+    }
+}
+
+/// Format a count with thousands separators (`1234567 -> "1,234,567"`).
+pub fn count(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format a ratio as `x.xx×`.
+pub fn speedup(v: f64) -> String {
+    format!("{:.2}x", v)
+}
+
+/// Format a fraction as a percentage.
+pub fn percent(v: f64) -> String {
+    format!("{:.3}%", v * 100.0)
+}
+
+/// Format FLOP/s with engineering prefixes.
+pub fn flops(v: f64) -> String {
+    let abs = v.abs();
+    if abs >= 1e15 {
+        format!("{:.2} PFLOPS", v / 1e15)
+    } else if abs >= 1e12 {
+        format!("{:.2} TFLOPS", v / 1e12)
+    } else if abs >= 1e9 {
+        format!("{:.2} GFLOPS", v / 1e9)
+    } else {
+        format!("{:.2} MFLOPS", v / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_prefixes() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(2048.0), "2.00 KiB");
+        assert_eq!(bytes(8.0 * 1024.0 * 1024.0), "8.00 MiB");
+        assert_eq!(bytes(3.0 * 1024f64.powi(3)), "3.00 GiB");
+        assert_eq!(bytes(1.5 * 1024f64.powi(4)), "1.50 TiB");
+    }
+
+    #[test]
+    fn seconds_prefixes() {
+        assert_eq!(seconds(0.0), "0 s");
+        assert_eq!(seconds(2.5), "2.500 s");
+        assert_eq!(seconds(1.5e-3), "1.500 ms");
+        assert_eq!(seconds(3e-6), "3.000 us");
+        assert_eq!(seconds(10e-9), "10.000 ns");
+    }
+
+    #[test]
+    fn joules_prefixes() {
+        assert_eq!(joules(19e-12), "19.000 pJ");
+        assert_eq!(joules(2e-3), "2.000 mJ");
+        assert_eq!(joules(1500.0), "1.500 kJ");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn misc_formats() {
+        assert_eq!(speedup(5.29), "5.29x");
+        assert_eq!(percent(0.04399), "4.399%");
+        assert_eq!(flops(819.2e9), "819.20 GFLOPS");
+    }
+}

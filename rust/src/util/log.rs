@@ -1,0 +1,135 @@
+//! Tiny leveled logger writing to stderr (log-crate replacement, zero deps).
+//!
+//! Level comes from `HECATON_LOG` (`error|warn|info|debug|trace`,
+//! default `info`). The coordinator uses `debug` for per-collective traces.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // sentinel: uninitialized
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init() {
+    INIT.get_or_init(|| {
+        let level = std::env::var("HECATON_LOG")
+            .ok()
+            .and_then(|v| Level::from_str(&v))
+            .unwrap_or(Level::Info);
+        LEVEL.store(level as u8, Ordering::Relaxed);
+    });
+}
+
+/// Current log level.
+pub fn level() -> Level {
+    init();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, examples).
+pub fn set_level(l: Level) {
+    init();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[doc(hidden)]
+pub fn write(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{} {}] {}", l.name(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::log::write($crate::util::log::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_names() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_str("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_str("bogus"), None);
+        assert_eq!(Level::Warn.name(), "WARN ");
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared substrates: units, formatting, statistics, tables, PRNG,
+//! property testing, a TOML-subset parser and a CLI parser.
+//!
+//! These replace crates that are unavailable in the offline vendor set
+//! (`serde`, `clap`, `proptest`, `criterion` — see DESIGN.md).
+
+pub mod units;
+pub mod fmt;
+pub mod stats;
+pub mod table;
+pub mod rng;
+pub mod prop;
+pub mod toml;
+pub mod cli;
+pub mod log;
+
+pub use units::{Bytes, Energy, Seconds};

@@ -1,0 +1,174 @@
+//! Minimal property-based testing framework (proptest replacement).
+//!
+//! Usage (`no_run`: rustdoc test binaries can't locate the xla shared
+//! libraries this crate links — the in-module unit tests execute the same
+//! code):
+//! ```no_run
+//! use hecaton::util::prop::{self, Gen};
+//! prop::check("addition commutes", 256, |g| {
+//!     let a = g.u64_range(0, 1000);
+//!     let b = g.u64_range(0, 1000);
+//!     prop::assert_prop(a + b == b + a, format!("{a} + {b}"))
+//! });
+//! ```
+//!
+//! On failure the framework re-runs the case with progressively smaller
+//! generated sizes (coarse shrinking: it retries the failing seed family
+//! with the generator's size bound halved) and reports the smallest
+//! failing seed so the case is reproducible.
+
+use super::rng::Rng;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    /// Soft upper bound that shrinking reduces; generators should scale
+    /// their output magnitude by it.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64_range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// usize in [lo, min(hi, lo+size)] — shrinks toward `lo`.
+    pub fn sized(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        self.rng.range(lo, hi.max(lo))
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| lo + self.rng.next_f32() * (hi - lo))
+            .collect()
+    }
+
+    /// Expose the raw RNG for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper: `Ok(())` when `cond` holds, labelled `Err` otherwise.
+pub fn assert_prop(cond: bool, label: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(label.into())
+    }
+}
+
+/// Assert two floats are within `tol` absolutely or relatively.
+pub fn assert_close(a: f64, b: f64, tol: f64, label: impl Into<String>) -> PropResult {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if diff <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{}: {a} != {b} (diff {diff:.3e})", label.into()))
+    }
+}
+
+/// Run `cases` iterations of `property`. Panics with a reproducible seed on
+/// the first failure after coarse shrinking.
+pub fn check(name: &str, cases: u64, mut property: impl FnMut(&mut Gen) -> PropResult) {
+    // Base seed from the property name so independent properties are
+    // decorrelated but every run is deterministic.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    const DEFAULT_SIZE: usize = 64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed, DEFAULT_SIZE);
+        if let Err(first_msg) = property(&mut g) {
+            // Coarse shrink: re-run the same seed with smaller sizes and
+            // keep the smallest size that still fails.
+            let mut best = (DEFAULT_SIZE, first_msg);
+            let mut size = DEFAULT_SIZE / 2;
+            while size >= 1 {
+                let mut g = Gen::new(seed, size);
+                if let Err(msg) = property(&mut g) {
+                    best = (size, msg);
+                }
+                size /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check("trivially true", 50, |g| {
+            runs += 1;
+            let x = g.u64_range(0, 100);
+            assert_prop(x <= 100, "bound")
+        });
+        assert_eq!(runs, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        // Property fails whenever sized() produces >= 1 — shrinking should
+        // report the smallest size that still fails (size >= 1 always
+        // fails when hi bound allows >= 1).
+        let result = std::panic::catch_unwind(|| {
+            check("fails for nonzero", 5, |g| {
+                let v = g.sized(1, 1000);
+                assert_prop(v == 0, format!("v = {v}"))
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size 1"), "{msg}");
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "eq").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-9, "ne").is_err());
+        // relative: 1e9 vs 1e9+1 within 1e-6 relative
+        assert!(assert_close(1e9, 1e9 + 1.0, 1e-6, "rel").is_ok());
+    }
+}

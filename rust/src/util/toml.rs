@@ -1,0 +1,313 @@
+//! Minimal TOML-subset parser for configuration files.
+//!
+//! Supports the subset the config system needs: `[section]` and
+//! `[section.sub]` headers, `key = value` pairs with string, integer,
+//! float, boolean and homogeneous-array values, comments (`#`), and blank
+//! lines. Replaces `serde`/`toml`, which are not in the offline vendor set.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`x = 4` reads as 4.0).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed document: dotted-path section names → key → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    /// Keys outside any section live under the empty section name "".
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+        } else {
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let section = doc.sections.get_mut(&current).expect("section exists");
+            if section.insert(key.to_string(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key '{key}'")));
+            }
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(line, "embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, ParseError> = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers: underscores allowed as digit separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("unrecognized value '{s}'")))
+}
+
+/// Split on commas not nested in brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+            # top comment
+            name = "hecaton"
+            [hardware]
+            dies = 64            # inline comment
+            freq_ghz = 0.8
+            advanced = true
+            mesh = [8, 8]
+            [hardware.dram]
+            kind = "ddr5-6400"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("hecaton"));
+        assert_eq!(doc.get_int("hardware", "dies"), Some(64));
+        assert_eq!(doc.get_float("hardware", "freq_ghz"), Some(0.8));
+        assert_eq!(doc.get_bool("hardware", "advanced"), Some(true));
+        assert_eq!(doc.get_str("hardware.dram", "kind"), Some("ddr5-6400"));
+        let mesh = doc.get("hardware", "mesh").unwrap().as_array().unwrap();
+        assert_eq!(mesh, &[Value::Int(8), Value::Int(8)]);
+    }
+
+    #[test]
+    fn int_reads_as_float_too() {
+        let doc = parse("x = 4").unwrap();
+        assert_eq!(doc.get_float("", "x"), Some(4.0));
+        assert_eq!(doc.get_int("", "x"), Some(4));
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = parse("n = 1_024").unwrap();
+        assert_eq!(doc.get_int("", "n"), Some(1024));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = ").unwrap_err();
+        assert!(e.msg.contains("empty value") || e.msg.contains("key = value"));
+        let e = parse("[unclosed").unwrap_err();
+        assert!(e.msg.contains("unterminated"));
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let m = doc.get("", "m").unwrap().as_array().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].as_array().unwrap()[1], Value::Int(2));
+    }
+
+    #[test]
+    fn display_roundtrip_shapes() {
+        let v = Value::Array(vec![Value::Int(1), Value::Str("x".into())]);
+        assert_eq!(v.to_string(), "[1, \"x\"]");
+    }
+}

@@ -1,0 +1,242 @@
+//! Physical-unit newtypes used throughout the simulator.
+//!
+//! All three wrap `f64` in SI base units (bytes, seconds, joules) and exist
+//! to keep the system model honest: the type system catches e.g. adding a
+//! latency to an energy, the most common class of bug in analytic
+//! performance models.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+macro_rules! unit {
+    ($(#[$doc:meta])* $name:ident, $fmt_fn:path) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+            #[inline]
+            pub fn raw(self) -> f64 {
+                self.0
+            }
+            #[inline]
+            pub fn max(self, other: $name) -> $name {
+                $name(self.0.max(other.0))
+            }
+            #[inline]
+            pub fn min(self, other: $name) -> $name {
+                $name(self.0.min(other.0))
+            }
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+            /// Saturating subtraction: `max(self - other, 0)`. Used for
+            /// "excess over the overlapped stage" accounting (Fig 6).
+            #[inline]
+            pub fn saturating_sub(self, other: $name) -> $name {
+                $name((self.0 - other.0).max(0.0))
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: $name) {
+                self.0 -= rhs.0;
+            }
+        }
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+        impl Mul<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+        impl Mul<$name> for f64 {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: $name) -> $name {
+                $name(self * rhs.0)
+            }
+        }
+        impl Div<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+        impl Div<$name> for $name {
+            type Output = f64;
+            #[inline]
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|x| x.0).sum())
+            }
+        }
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{}", $fmt_fn(self.0))
+            }
+        }
+    };
+}
+
+unit!(
+    /// A data volume in bytes.
+    Bytes,
+    crate::util::fmt::bytes
+);
+unit!(
+    /// A time interval in seconds.
+    Seconds,
+    crate::util::fmt::seconds
+);
+unit!(
+    /// An energy in joules.
+    Energy,
+    crate::util::fmt::joules
+);
+
+impl Bytes {
+    #[inline]
+    pub fn mib(v: f64) -> Bytes {
+        Bytes(v * 1024.0 * 1024.0)
+    }
+    #[inline]
+    pub fn gib(v: f64) -> Bytes {
+        Bytes(v * 1024.0 * 1024.0 * 1024.0)
+    }
+    #[inline]
+    pub fn kib(v: f64) -> Bytes {
+        Bytes(v * 1024.0)
+    }
+    /// Number of bits (for pJ/bit energy models).
+    #[inline]
+    pub fn bits(self) -> f64 {
+        self.0 * 8.0
+    }
+}
+
+impl Seconds {
+    #[inline]
+    pub fn ns(v: f64) -> Seconds {
+        Seconds(v * 1e-9)
+    }
+    #[inline]
+    pub fn us(v: f64) -> Seconds {
+        Seconds(v * 1e-6)
+    }
+    #[inline]
+    pub fn ms(v: f64) -> Seconds {
+        Seconds(v * 1e-3)
+    }
+}
+
+impl Energy {
+    #[inline]
+    pub fn pj(v: f64) -> Energy {
+        Energy(v * 1e-12)
+    }
+    #[inline]
+    pub fn nj(v: f64) -> Energy {
+        Energy(v * 1e-9)
+    }
+    #[inline]
+    pub fn mj(v: f64) -> Energy {
+        Energy(v * 1e-3)
+    }
+}
+
+/// Bandwidth in bytes/second: `Bytes / Seconds`.
+impl Div<Seconds> for Bytes {
+    type Output = f64;
+    #[inline]
+    fn div(self, rhs: Seconds) -> f64 {
+        self.0 / rhs.0
+    }
+}
+
+/// Transmission time: `Bytes / bandwidth(B/s)`.
+impl Bytes {
+    #[inline]
+    pub fn over_bandwidth(self, bytes_per_sec: f64) -> Seconds {
+        Seconds(self.0 / bytes_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_and_units() {
+        let a = Bytes::mib(8.0);
+        assert_eq!(a.raw(), 8.0 * 1024.0 * 1024.0);
+        assert_eq!((a + a).raw(), 2.0 * a.raw());
+        assert_eq!((a * 2.0).raw(), 2.0 * a.raw());
+        assert!((a / a - 1.0).abs() < 1e-12);
+        assert_eq!(a.bits(), a.raw() * 8.0);
+    }
+
+    #[test]
+    fn saturating_sub_clamps_at_zero() {
+        let s = Seconds::ms(1.0);
+        let t = Seconds::ms(2.0);
+        assert_eq!(s.saturating_sub(t), Seconds::ZERO);
+        assert_eq!(t.saturating_sub(s), Seconds::ms(1.0));
+    }
+
+    #[test]
+    fn transmission_time() {
+        // 64 GiB over 64 GiB/s = 1 s
+        let t = Bytes::gib(64.0).over_bandwidth(Bytes::gib(64.0).raw());
+        assert!((t.raw() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sums_and_ordering() {
+        let total: Seconds = [Seconds::ns(1.0), Seconds::ns(2.0)].into_iter().sum();
+        assert!((total.raw() - 3e-9).abs() < 1e-20);
+        assert!(Seconds::ns(1.0) < Seconds::us(1.0));
+        assert_eq!(Seconds::ns(5.0).max(Seconds::ns(3.0)), Seconds::ns(5.0));
+    }
+
+    #[test]
+    fn energy_constructors() {
+        assert!((Energy::pj(1000.0).raw() - Energy::nj(1.0).raw()).abs() < 1e-24);
+    }
+}

@@ -1,0 +1,11 @@
+//! Transformer workload decomposition (paper Fig. 3).
+//!
+//! Turns a [`crate::config::ModelConfig`] into per-block operation lists
+//! (linear layers, multi-head attention, vector ops) that the
+//! tensor-parallel planners in [`crate::parallel`] distribute across dies.
+
+pub mod ops;
+pub mod transformer;
+
+pub use ops::{AttnSpec, BlockDesc, LinearSpec, VectorWork};
+pub use transformer::{attention_block, ffn_block, layer_blocks};

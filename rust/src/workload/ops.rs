@@ -1,0 +1,113 @@
+//! Operation descriptors for one transformer block.
+
+use crate::compute::VectorOpKind;
+use crate::config::ELEM_BYTES;
+use crate::nop::analytic::Block;
+use crate::util::Bytes;
+
+/// A (full, undistributed) linear layer `[*, in] × [in, out]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinearSpec {
+    pub name: &'static str,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl LinearSpec {
+    pub fn new(name: &'static str, in_dim: usize, out_dim: usize) -> LinearSpec {
+        LinearSpec { name, in_dim, out_dim }
+    }
+    /// Weight bytes of this linear.
+    pub fn weight_bytes(&self) -> Bytes {
+        Bytes(self.in_dim as f64 * self.out_dim as f64 * ELEM_BYTES)
+    }
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        self.in_dim as u64 * self.out_dim as u64
+    }
+}
+
+/// Multi-head attention work (scores + context matmuls + softmax),
+/// dynamic operands — no trainable weights (paper §II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnSpec {
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Sequence length the scores span.
+    pub seq_len: usize,
+}
+
+/// Element-wise / reduction work per token (vector unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VectorWork {
+    pub kind: VectorOpKind,
+    /// Elements per token (e.g. `h` for a LayerNorm over the hidden dim).
+    pub elems_per_token: f64,
+}
+
+/// One transformer block: an Attention or FFN block with its linears,
+/// optional attention core, and vector work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockDesc {
+    pub kind: Block,
+    pub linears: Vec<LinearSpec>,
+    pub attn: Option<AttnSpec>,
+    pub vector: Vec<VectorWork>,
+}
+
+impl BlockDesc {
+    /// Total weight bytes of the block.
+    pub fn weight_bytes(&self) -> Bytes {
+        self.linears.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Total weight parameters.
+    pub fn params(&self) -> u64 {
+        self.linears.iter().map(|l| l.params()).sum()
+    }
+
+    /// The widest activation this block materializes, in elements/token
+    /// (used for SRAM peak accounting).
+    pub fn max_act_width(&self) -> usize {
+        self.linears
+            .iter()
+            .map(|l| l.in_dim + l.out_dim)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Activation bytes crossing the block boundary for `tokens` tokens
+    /// (its input; equals the previous block's output).
+    pub fn boundary_act_bytes(&self, tokens: f64, hidden: usize) -> Bytes {
+        Bytes(tokens * hidden as f64 * ELEM_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_weight_accounting() {
+        let l = LinearSpec::new("up", 1024, 4096);
+        assert_eq!(l.params(), 1024 * 4096);
+        assert_eq!(l.weight_bytes(), Bytes(1024.0 * 4096.0 * 4.0));
+    }
+
+    #[test]
+    fn block_aggregates() {
+        let b = BlockDesc {
+            kind: Block::Ffn,
+            linears: vec![
+                LinearSpec::new("up", 64, 256),
+                LinearSpec::new("down", 256, 64),
+            ],
+            attn: None,
+            vector: vec![],
+        };
+        assert_eq!(b.params(), 2 * 64 * 256);
+        assert_eq!(b.max_act_width(), 320);
+        assert_eq!(b.boundary_act_bytes(10.0, 64), Bytes(10.0 * 64.0 * 4.0));
+    }
+}

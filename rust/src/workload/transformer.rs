@@ -1,0 +1,122 @@
+//! Decompose a transformer layer into its Attention and FFN blocks
+//! (paper Fig. 3).
+
+use crate::compute::VectorOpKind;
+use crate::config::ModelConfig;
+use crate::nop::analytic::Block;
+use crate::workload::ops::{AttnSpec, BlockDesc, LinearSpec, VectorWork};
+
+/// The Attention block: fused QKV projection, multi-head attention core,
+/// output projection, residual add and LayerNorm.
+pub fn attention_block(m: &ModelConfig) -> BlockDesc {
+    BlockDesc {
+        kind: Block::Attention,
+        linears: vec![
+            LinearSpec::new("w_qkv", m.hidden, m.qkv_out()),
+            LinearSpec::new("w_o", m.hidden, m.hidden),
+        ],
+        attn: Some(AttnSpec {
+            heads: m.heads,
+            kv_heads: m.kv_heads,
+            head_dim: m.head_dim(),
+            seq_len: m.seq_len,
+        }),
+        vector: vec![
+            VectorWork {
+                kind: VectorOpKind::Add, // residual
+                elems_per_token: m.hidden as f64,
+            },
+            VectorWork {
+                kind: VectorOpKind::LayerNorm,
+                elems_per_token: m.hidden as f64,
+            },
+        ],
+    }
+}
+
+/// The FFN block: up (+ gate for SwiGLU models) and down projections,
+/// activation, residual add and LayerNorm.
+pub fn ffn_block(m: &ModelConfig) -> BlockDesc {
+    let mut linears = vec![LinearSpec::new("w_up", m.hidden, m.intermediate)];
+    if m.is_gated() {
+        linears.push(LinearSpec::new("w_gate", m.hidden, m.intermediate));
+    }
+    linears.push(LinearSpec::new("w_down", m.intermediate, m.hidden));
+    BlockDesc {
+        kind: Block::Ffn,
+        linears,
+        attn: None,
+        vector: vec![
+            VectorWork {
+                kind: VectorOpKind::Activation,
+                elems_per_token: m.intermediate as f64,
+            },
+            VectorWork {
+                kind: VectorOpKind::Add,
+                elems_per_token: m.hidden as f64,
+            },
+            VectorWork {
+                kind: VectorOpKind::LayerNorm,
+                elems_per_token: m.hidden as f64,
+            },
+        ],
+    }
+}
+
+/// Both blocks of one layer, in execution order.
+pub fn layer_blocks(m: &ModelConfig) -> [BlockDesc; 2] {
+    [attention_block(m), ffn_block(m)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+
+    #[test]
+    fn mha_attention_block_params_are_4h2() {
+        let m = model_preset("gpt3-6.7b").unwrap();
+        let b = attention_block(&m);
+        // The paper's observation: a complete attention block's parameter
+        // volume is 4h² (QKV = 3h² + O = h²).
+        assert_eq!(b.params(), 4 * (m.hidden as u64).pow(2));
+        assert!(b.attn.is_some());
+    }
+
+    #[test]
+    fn classic_ffn_matches_model_accounting() {
+        let m = model_preset("bert-large").unwrap();
+        let b = ffn_block(&m);
+        assert_eq!(b.linears.len(), 2);
+        assert_eq!(b.params(), m.ffn_params());
+    }
+
+    #[test]
+    fn gated_ffn_has_three_linears() {
+        let m = model_preset("llama2-7b").unwrap();
+        let b = ffn_block(&m);
+        assert_eq!(b.linears.len(), 3);
+        assert_eq!(b.params(), m.ffn_params());
+    }
+
+    #[test]
+    fn layer_blocks_cover_stack_params() {
+        for name in ["bert-large", "llama2-70b", "tinyllama-1.1b"] {
+            let m = model_preset(name).unwrap();
+            let blocks = layer_blocks(&m);
+            let per_layer: u64 = blocks.iter().map(|b| b.params()).sum();
+            assert_eq!(
+                per_layer * m.layers as u64,
+                m.stack_params(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn ffn_widest_activation_is_up_projection() {
+        let m = model_preset("gpt3-6.7b").unwrap();
+        let b = ffn_block(&m);
+        assert_eq!(b.max_act_width(), m.hidden + m.intermediate);
+    }
+}

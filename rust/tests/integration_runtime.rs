@@ -1,0 +1,114 @@
+//! Integration tests over the runtime + coordinator: failure injection
+//! and cross-layer contracts.
+
+use hecaton::coordinator::{coord_model, Coordinator, MeshCfg};
+use hecaton::runtime::{Manifest, Runtime, Tensor};
+
+fn artifacts_ready() -> bool {
+    hecaton::runtime::artifact_dir().join("manifest.txt").exists()
+}
+
+/// A missing artifact directory is a clean error, not a panic.
+#[test]
+fn missing_artifact_dir_reports_cleanly() {
+    let Err(err) = Runtime::open(std::path::PathBuf::from("/nonexistent/path")) else {
+        panic!("opening a missing dir must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+/// A corrupt HLO file is a compile-time error surfaced with the artifact
+/// name, and does not poison the runtime for other artifacts.
+#[test]
+fn corrupt_artifact_is_isolated() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = tempdir();
+    std::fs::write(dir.join("manifest.txt"), "broken_2x2 2x2:float32\n").unwrap();
+    std::fs::write(dir.join("broken_2x2.hlo.txt"), "this is not HLO").unwrap();
+    let rt = Runtime::open(dir.clone()).unwrap();
+    let x = Tensor::zeros(&[2, 2]);
+    let err = rt.exec("broken_2x2", &[x.into()]).unwrap_err();
+    assert!(format!("{err:#}").contains("broken_2x2"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Manifest round-trip: every artifact the coordinator's tiny@2x2 mesh
+/// will request is present with the expected arity.
+#[test]
+fn manifest_covers_coordinator_contract() {
+    if !artifacts_ready() {
+        return;
+    }
+    let m = Manifest::load(&hecaton::runtime::artifact_dir()).unwrap();
+    // All tile matmuls of tiny@2x2 (pinned in python tests too).
+    for name in [
+        "matmul_64x32x96",
+        "matmul_64x96x32",
+        "matmul_32x64x96",
+        "matmul_64x32x32",
+        "matmul_32x64x32",
+        "matmul_64x32x128",
+        "matmul_64x128x32",
+        "matmul_32x64x128",
+        "matmul_128x64x32",
+        "matmul_64x64x64",
+        "attention_fwd_2x32x16",
+        "attention_bwd_2x32x16",
+        "rmsnorm_fwd_64x64",
+        "rmsnorm_bwd_64x64",
+        "gelu_fwd_32x128",
+        "gelu_bwd_32x128",
+        "xent_64x64",
+    ] {
+        assert!(m.contains(name), "missing artifact {name}");
+    }
+    for (name, arity) in [("matmul_64x32x96", 2), ("attention_bwd_2x32x16", 4), ("rmsnorm_bwd_64x64", 3)] {
+        assert_eq!(m.get(name).unwrap().inputs.len(), arity, "{name}");
+    }
+}
+
+/// Wrong-sized mini-batches are rejected before any die work happens.
+#[test]
+fn coordinator_rejects_bad_minibatch() {
+    if !artifacts_ready() {
+        return;
+    }
+    let cfg = MeshCfg::new(coord_model("tiny").unwrap(), 2, 2, 64);
+    let mut coord = Coordinator::new(cfg, 1).unwrap();
+    let tokens = vec![0u32; 32]; // must be 64
+    let targets = vec![0i32; 32];
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        coord.grad_step(&tokens, &targets)
+    }));
+    assert!(r.is_err(), "short mini-batch must be rejected");
+    coord.shutdown().ok();
+}
+
+/// Two coordinators with the same seed produce identical first losses
+/// (deterministic init + deterministic schedule).
+#[test]
+fn coordinator_is_deterministic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let loss = |seed| {
+        let cfg = MeshCfg::new(coord_model("tiny").unwrap(), 2, 2, 64);
+        let mut c = Coordinator::new(cfg, seed).unwrap();
+        let tokens: Vec<u32> = (0..64).map(|i| (i % 64) as u32).collect();
+        let targets: Vec<i32> = (0..64).map(|i| ((i + 1) % 64) as i32).collect();
+        let l = c.grad_step(&tokens, &targets).unwrap();
+        c.shutdown().unwrap();
+        l
+    };
+    assert_eq!(loss(5), loss(5));
+    assert_ne!(loss(5), loss(6)); // different init → different loss
+}
+
+fn tempdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hecaton-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}

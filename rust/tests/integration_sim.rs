@@ -1,0 +1,102 @@
+//! Integration tests over the full simulator stack: config → workload →
+//! parallel planners → scheduler → system simulator → reports.
+
+use hecaton::config::presets::{eval_models, model_preset, paper_pairings};
+use hecaton::config::{DramKind, HardwareConfig, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::sim::system::simulate;
+
+/// Every evaluation model simulates under every method on a mid-size mesh
+/// without panicking, and produces internally-consistent results.
+#[test]
+fn full_grid_is_well_formed() {
+    for name in eval_models() {
+        let model = model_preset(name).unwrap();
+        for package in [PackageKind::Standard, PackageKind::Advanced] {
+            let hw = HardwareConfig::square(64, package, DramKind::Ddr5_6400);
+            for method in Method::all() {
+                let r = simulate(&model, &hw, method);
+                assert!(r.latency.raw() > 0.0, "{name}/{method:?}");
+                assert!(r.energy_total.raw() > 0.0);
+                assert!(r.total_macs > 0.0);
+                assert!(r.min_utilization > 0.0 && r.min_utilization <= 1.0);
+                // Breakdown components sum to the latency (2% slack for
+                // pipeline fill accounting).
+                let sum = r.breakdown.total().raw();
+                assert!(
+                    (sum - r.latency.raw()).abs() / r.latency.raw() < 0.02,
+                    "{name}/{method:?}: {sum} vs {}",
+                    r.latency.raw()
+                );
+            }
+        }
+    }
+}
+
+/// The same model on the same mesh: more link bandwidth never hurts, more
+/// DRAM bandwidth never hurts, bigger buffers never hurt.
+#[test]
+fn monotonicity_in_resources() {
+    let model = model_preset("llama2-7b").unwrap();
+    let base = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+    let r_base = simulate(&model, &base, Method::Hecaton);
+
+    let mut fat_link = base.clone();
+    fat_link.link.bandwidth *= 4.0;
+    assert!(simulate(&model, &fat_link, Method::Hecaton).latency <= r_base.latency);
+
+    let hbm = base.clone().with_dram(DramKind::Hbm2);
+    assert!(simulate(&model, &hbm, Method::Hecaton).latency <= r_base.latency);
+
+    let mut big_buf = base.clone();
+    big_buf.die.weight_buf = big_buf.die.weight_buf * 4.0;
+    big_buf.die.act_buf = big_buf.die.act_buf * 4.0;
+    assert!(simulate(&model, &big_buf, Method::Hecaton).latency <= r_base.latency * 1.001);
+}
+
+/// MAC conservation: all four methods execute the same total MACs for the
+/// same workload (within ceil-induced padding).
+#[test]
+fn methods_agree_on_total_macs() {
+    let model = model_preset("gpt3-6.7b").unwrap();
+    let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+    let macs: Vec<f64> = Method::all()
+        .iter()
+        .map(|&m| simulate(&model, &hw, m).total_macs)
+        .collect();
+    for m in &macs {
+        assert!(
+            (m / macs[0] - 1.0).abs() < 0.05,
+            "MAC counts diverge: {macs:?}"
+        );
+    }
+}
+
+/// The paper's scaling pairings all run at full scale (1024 dies) within
+/// reasonable wall-time — guards against accidental quadratic blowups in
+/// the planner/simulator.
+#[test]
+fn full_scale_sweep_is_fast() {
+    let t0 = std::time::Instant::now();
+    for w in paper_pairings() {
+        let hw = HardwareConfig::square(w.dies, PackageKind::Advanced, DramKind::Ddr5_6400);
+        for m in Method::all() {
+            let _ = simulate(&w.model, &hw, m);
+        }
+    }
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "sweep took {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Reports render for every experiment id.
+#[test]
+fn all_reports_render() {
+    for id in hecaton::report::experiments() {
+        let out = hecaton::report::run(id).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(out.len() > 100, "{id} report suspiciously short");
+    }
+    assert!(hecaton::report::run("nope").is_err());
+}
