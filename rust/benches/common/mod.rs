@@ -69,6 +69,45 @@ impl Bench {
             self.results.len()
         );
     }
+
+    /// Write the suite's results as machine-readable JSON (one object per
+    /// bench) before printing the footer, so perf trajectories can be
+    /// tracked across commits (e.g. `BENCH_engine.json`).
+    #[allow(dead_code)] // each bench binary includes this module; not all emit JSON
+    pub fn finish_with_json(self, path: &str) {
+        let mut s = String::from("[\n");
+        for (i, (name, r)) in self.results.iter().enumerate() {
+            if i > 0 {
+                s.push_str(",\n");
+            }
+            s.push_str(&format!(
+                "  {{\"suite\": \"{}\", \"name\": \"{}\", \"iters\": {}, \
+                 \"mean_s\": {:e}, \"median_s\": {:e}, \"p95_s\": {:e}, \
+                 \"min_s\": {:e}, \"max_s\": {:e}}}",
+                json_escape(self.suite),
+                json_escape(name),
+                r.n,
+                r.mean,
+                r.median,
+                r.p95,
+                r.min,
+                r.max,
+            ));
+        }
+        s.push_str("\n]\n");
+        match std::fs::write(path, &s) {
+            Ok(()) => eprintln!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+        self.finish();
+    }
+}
+
+/// Minimal JSON string escaping (bench names are plain identifiers, but
+/// don't let a stray quote corrupt the file).
+#[allow(dead_code)]
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Prevent the optimizer from discarding a value.

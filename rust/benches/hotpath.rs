@@ -11,11 +11,16 @@ mod common;
 
 use hecaton::config::presets::model_preset;
 use hecaton::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
+use hecaton::memory::dram::DramModel;
 use hecaton::nop::analytic::Method;
-use hecaton::nop::collective::{flat_ring_all_reduce, ring_step_collective, CollectiveKind};
+use hecaton::nop::collective::{
+    flat_ring_all_reduce, ring_step_collective, ring_step_schedule, CollectiveKind,
+};
 use hecaton::runtime::Tensor;
-use hecaton::sim::system::simulate;
-use hecaton::util::Bytes;
+use hecaton::sched::pipeline::{overlap_chain_event, GroupStage};
+use hecaton::sim::engine::{EventEngine, Service};
+use hecaton::sim::system::{simulate, simulate_engine, EngineKind};
+use hecaton::util::{Bytes, Seconds};
 
 fn main() {
     let mut b = common::Bench::new("hotpath");
@@ -32,8 +37,49 @@ fn main() {
         common::black_box(simulate(&model405, &hw1024, Method::FlatRing));
     });
 
-    // ── NoP collective step simulator ──
+    // ── discrete-event engine hot paths ──
+    b.bench("engine/simulate_event_llama70b_256d", || {
+        common::black_box(simulate_engine(&model, &hw, Method::Hecaton, EngineKind::Event));
+    });
+    b.bench("engine/simulate_prefetch_llama70b_256d", || {
+        common::black_box(simulate_engine(
+            &model,
+            &hw,
+            Method::Hecaton,
+            EngineKind::EventPrefetch,
+        ));
+    });
     let link = LinkConfig::for_package(PackageKind::Standard);
+    let ring_sched = ring_step_schedule(CollectiveKind::AllGather, 64, Bytes::mib(64.0));
+    b.bench("engine/event_ring_ag_n64", || {
+        common::black_box(ring_sched.event_time(&link));
+    });
+    let dram = DramModel::new(&hw);
+    let chain: Vec<GroupStage> = (0..8)
+        .map(|_| GroupStage {
+            on_package: Seconds::ms(20.0),
+            dram_bytes: Bytes::gib(4.0),
+            n_minibatches: 256,
+        })
+        .collect();
+    b.bench("engine/overlap_chain_8x256", || {
+        common::black_box(overlap_chain_event(&chain, &dram, true));
+    });
+    b.bench("engine/raw_task_graph_10k", || {
+        let mut eng = EventEngine::new();
+        let pkg = eng.fifo("pkg");
+        let fabric = eng.fair("fabric", 1e11);
+        let mut prev = None;
+        for i in 0..5_000u64 {
+            let deps: Vec<_> = prev.into_iter().collect();
+            let d = eng.task(fabric, Service::Transfer(Bytes(1e6 + i as f64)), &deps);
+            let p = eng.task(pkg, Service::Busy(Seconds(1e-5)), &[d]);
+            prev = Some(p);
+        }
+        common::black_box(eng.run().makespan);
+    });
+
+    // ── NoP collective step simulator ──
     b.bench("nop/ring_ag_n32", || {
         common::black_box(ring_step_collective(
             CollectiveKind::AllGather,
@@ -101,5 +147,5 @@ fn main() {
         eprintln!("(artifacts not built — skipping runtime/coordinator benches)");
     }
 
-    b.finish();
+    b.finish_with_json("BENCH_engine.json");
 }

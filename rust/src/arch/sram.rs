@@ -18,14 +18,25 @@ pub struct SramTracker {
 }
 
 /// Error when an allocation would exceed capacity.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("{name} buffer overflow: requested {req}, used {used} of {cap}")]
+#[derive(Debug, PartialEq)]
 pub struct SramOverflow {
     pub name: &'static str,
     pub req: Bytes,
     pub used: Bytes,
     pub cap: Bytes,
 }
+
+impl std::fmt::Display for SramOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} buffer overflow: requested {}, used {} of {}",
+            self.name, self.req, self.used, self.cap
+        )
+    }
+}
+
+impl std::error::Error for SramOverflow {}
 
 impl SramTracker {
     pub fn new(name: &'static str, capacity: Bytes) -> SramTracker {

@@ -11,7 +11,7 @@ use anyhow::anyhow;
 use crate::config::presets::{eval_models, model_preset};
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::simulate;
+use crate::sim::system::{simulate_with, EngineKind, SimOptions};
 use crate::util::cli::{App, CommandSpec, Matches};
 use crate::util::table::Table;
 
@@ -26,6 +26,7 @@ pub fn app() -> App {
                 .opt("package", "standard", "packaging: standard | advanced")
                 .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
+                .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
                 .opt("config", "", "TOML config file (overrides the above)"),
         )
         .command(
@@ -86,7 +87,17 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
         (model, hw)
     };
     let method = Method::parse(m.value("method")).ok_or_else(|| anyhow!("bad method"))?;
-    let r = simulate(&model, &hw, method);
+    let engine = EngineKind::parse(m.value("engine"))
+        .ok_or_else(|| anyhow!("bad engine '{}'", m.value("engine")))?;
+    let r = simulate_with(
+        &model,
+        &hw,
+        method,
+        SimOptions {
+            engine,
+            ..SimOptions::default()
+        },
+    );
 
     let mut t = Table::new(&["metric", "value"]).label_first();
     let lat = r.latency.raw();
@@ -96,6 +107,7 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
         format!("{}x{} ({} dies, {})", hw.mesh_rows, hw.mesh_cols, r.dies, hw.package.name())
     ]);
     t.row(crate::table_row!["method", method.name()]);
+    t.row(crate::table_row!["engine", r.engine.name()]);
     t.row(crate::table_row!["batch latency", r.latency]);
     t.row(crate::table_row![
         "  compute",
@@ -265,6 +277,31 @@ mod tests {
             .unwrap()
             .unwrap();
         cmd_simulate(&m).unwrap();
+    }
+
+    #[test]
+    fn simulate_command_runs_event_engine() {
+        let a = app();
+        for engine in ["event", "event-prefetch"] {
+            let m = a
+                .parse(&argv(&[
+                    "simulate",
+                    "--model",
+                    "tinyllama-1.1b",
+                    "--dies",
+                    "16",
+                    "--engine",
+                    engine,
+                ]))
+                .unwrap()
+                .unwrap();
+            cmd_simulate(&m).unwrap();
+        }
+        let bad = a
+            .parse(&argv(&["simulate", "--engine", "bogus"]))
+            .unwrap()
+            .unwrap();
+        assert!(cmd_simulate(&bad).is_err());
     }
 
     #[test]

@@ -13,6 +13,14 @@
 //!    decomposition ([`workload`]), the four tensor-parallel methods
 //!    ([`parallel`]), Hecaton's fusion/overlap scheduling ([`sched`]) and
 //!    the system-level latency/energy simulator ([`sim`], [`energy`]).
+//!    Timing runs on one of **two engine backends**
+//!    ([`sim::system::EngineKind`]): the *analytic* closed forms of paper
+//!    Table III, or the *event* backend — a discrete-event core
+//!    ([`sim::engine`]: monotonic event queue, FIFO link/package
+//!    resources, fair-shared DRAM channels) that reproduces the closed
+//!    forms within 1% on uncongested meshes and additionally models what
+//!    they cannot: link contention, shared DRAM channels, skewed meshes
+//!    and cross-group overlap slack (see the `congestion` report).
 //!
 //! 2. **The functional distributed-training engine** — real numerics:
 //!    the [`runtime`] loads AOT-compiled JAX/Pallas artifacts via PJRT, the

@@ -4,8 +4,21 @@
 //! with the package perimeter; latency is calibrated against Ramulator2
 //! stream traces (§VI-A). At the system-model level that reduces to a
 //! sustained-bandwidth stream with a small fixed per-burst overhead.
+//!
+//! Two consumers:
+//! * the analytic path uses [`DramModel::stream_time`] (one closed-form
+//!   division);
+//! * the event path turns the channel pool into a **bandwidth-shared
+//!   resource** via [`DramModel::resource`]: when several streams are
+//!   active at once they fluidly split the aggregate bandwidth. The
+//!   built-in group chain ([`crate::sched::pipeline::overlap_chain_event`])
+//!   keeps its chunks ordered (double-buffered FIFO), so sharing engages
+//!   in custom engine scenarios — concurrent independent streams built
+//!   directly on the engine (see the tests below and the congestion
+//!   experiments) — not in `simulate`'s own schedule.
 
 use crate::config::HardwareConfig;
+use crate::sim::engine::{EventEngine, ResourceId};
 use crate::util::{Bytes, Energy, Seconds};
 
 /// Aggregate DRAM model for a package.
@@ -19,6 +32,8 @@ pub struct DramModel {
     /// (bank conflicts, refresh) — Ramulator2 stream traces sustain ~90%
     /// of peak for sequential streams.
     pub efficiency: f64,
+    /// Number of perimeter DRAM channels backing the aggregate bandwidth.
+    pub channels: usize,
 }
 
 impl DramModel {
@@ -27,12 +42,31 @@ impl DramModel {
             bandwidth: hw.dram_bandwidth(),
             pj_per_bit: hw.dram.pj_per_bit,
             efficiency: 0.9,
+            channels: hw.dram_channels(),
         }
+    }
+
+    /// Sustained aggregate bandwidth (bytes/s) after derating.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.bandwidth * self.efficiency
+    }
+
+    /// Sustained per-channel bandwidth (bytes/s).
+    pub fn channel_bandwidth(&self) -> f64 {
+        self.effective_bandwidth() / self.channels as f64
     }
 
     /// Time to stream `bytes` through all channels.
     pub fn stream_time(&self, bytes: Bytes) -> Seconds {
-        bytes.over_bandwidth(self.bandwidth * self.efficiency)
+        bytes.over_bandwidth(self.effective_bandwidth())
+    }
+
+    /// Register the channel pool as a fair-shared bandwidth resource on the
+    /// event engine. A single stream at a time drains at exactly
+    /// [`stream_time`](DramModel::stream_time); `k` concurrent streams each
+    /// progress at `1/k` of the pool.
+    pub fn resource(&self, eng: &mut EventEngine) -> ResourceId {
+        eng.fair("dram", self.effective_bandwidth())
     }
 
     /// Access energy for `bytes`.
@@ -45,6 +79,7 @@ impl DramModel {
 mod tests {
     use super::*;
     use crate::config::{DramKind, PackageKind};
+    use crate::sim::engine::Service;
 
     #[test]
     fn stream_time_and_energy() {
@@ -56,6 +91,8 @@ mod tests {
         assert!((t.raw() - Bytes::gib(1.0).raw() / bw).abs() < 1e-12);
         let e = d.energy(Bytes(1.0));
         assert!((e.raw() - 8.0 * 19.0e-12).abs() < 1e-20);
+        assert_eq!(d.channels, 16);
+        assert!((d.channel_bandwidth() - bw / 16.0).abs() < 1.0);
     }
 
     #[test]
@@ -72,5 +109,30 @@ mod tests {
         ));
         assert!(hbm.bandwidth > ddr5.bandwidth);
         assert!(hbm.pj_per_bit < ddr5.pj_per_bit);
+    }
+
+    /// A single stream through the event-engine resource equals the
+    /// closed-form stream time; two concurrent streams share the pool.
+    #[test]
+    fn resource_matches_stream_time_and_shares() {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let d = DramModel::new(&hw);
+        let bytes = Bytes::gib(2.0);
+
+        let mut eng = EventEngine::new();
+        let dram = d.resource(&mut eng);
+        let t = eng.task(dram, Service::Transfer(bytes), &[]);
+        let r = eng.run();
+        let want = d.stream_time(bytes).raw();
+        assert!((r.finish[t].raw() - want).abs() / want < 1e-9);
+
+        // Two equal concurrent streams: both finish at 2× the solo time.
+        let mut eng = EventEngine::new();
+        let dram = d.resource(&mut eng);
+        let a = eng.task(dram, Service::Transfer(bytes), &[]);
+        let b = eng.task(dram, Service::Transfer(bytes), &[]);
+        let r = eng.run();
+        assert!((r.finish[a].raw() - 2.0 * want).abs() / want < 1e-6);
+        assert!((r.finish[b].raw() - 2.0 * want).abs() / want < 1e-6);
     }
 }

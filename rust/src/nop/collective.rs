@@ -1,13 +1,26 @@
 //! Step-level collective-communication simulator.
 //!
-//! Each collective is executed step by step exactly as the schedule would
-//! run on the package: per step we account (a) the slowest link's fixed
-//! latency, (b) the transmission time of the largest chunk crossing any
-//! link, and (c) total bytes crossing all links (for D2D energy). The
-//! closed forms of paper Table III fall out of these schedules; the unit
-//! tests in [`crate::nop::analytic`] assert the match.
+//! Every collective is described as a [`CollectiveSchedule`]: an ordered
+//! list of synchronous steps, each naming the links that are active, the
+//! bytes each link carries and the hop distance each transfer spans. Two
+//! consumers derive from the same schedule:
+//!
+//! * [`CollectiveSchedule::cost`] folds it into the closed-form
+//!   [`CollectiveCost`] (per step: the slowest link's fixed latency, the
+//!   largest chunk's transmission time, total wire bytes) — the Table III
+//!   expressions fall out of these schedules and the unit tests in
+//!   [`crate::nop::analytic`] assert the match.
+//! * [`CollectiveSchedule::event_time`] replays the per-step link events on
+//!   the discrete-event engine ([`crate::sim::engine`]), one FIFO resource
+//!   per link with a barrier between steps. On an uncongested fabric this
+//!   reproduces `cost().total()` exactly (property-tested below); its value
+//!   is what the closed forms cannot express — [`event_time_concurrent`]
+//!   runs several schedules on one *shared* fabric, exposing link
+//!   contention (overlapping collectives, skewed meshes where logical
+//!   rings map onto the same physical links).
 
 use crate::config::LinkConfig;
+use crate::sim::engine::{EventEngine, Service, TaskId};
 use crate::util::{Bytes, Seconds};
 
 /// Which collective operation.
@@ -100,106 +113,287 @@ impl CollectiveCost {
     }
 }
 
-/// Ring all-gather / reduce-scatter over `n` dies connected by a **bypass
-/// ring** (per-step hop latency `2α`, paper Eq. 2).
+// ───────────────────────── schedules ─────────────────────────
+
+/// The set of links active in one step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinkSpan {
+    /// `len` links starting at `start` (the common uniform case, stored
+    /// compactly so the closed-form fold stays O(steps)).
+    Range { start: usize, len: usize },
+    /// Explicit link ids (for custom congestion scenarios).
+    Set(Vec<usize>),
+}
+
+impl LinkSpan {
+    pub fn range(start: usize, len: usize) -> LinkSpan {
+        LinkSpan::Range { start, len }
+    }
+
+    /// Number of active links.
+    pub fn count(&self) -> usize {
+        match self {
+            LinkSpan::Range { len, .. } => *len,
+            LinkSpan::Set(ids) => ids.len(),
+        }
+    }
+
+    /// One-past-the-largest link id (0 when empty).
+    pub fn end(&self) -> usize {
+        match self {
+            LinkSpan::Range { start, len } => start + len,
+            LinkSpan::Set(ids) => ids.iter().map(|&i| i + 1).max().unwrap_or(0),
+        }
+    }
+
+    /// Materialized link ids.
+    pub fn ids(&self) -> Vec<usize> {
+        match self {
+            LinkSpan::Range { start, len } => (*start..*start + *len).collect(),
+            LinkSpan::Set(ids) => ids.clone(),
+        }
+    }
+
+    fn offset(&mut self, by: usize) {
+        match self {
+            LinkSpan::Range { start, .. } => *start += by,
+            LinkSpan::Set(ids) => {
+                for i in ids.iter_mut() {
+                    *i += by;
+                }
+            }
+        }
+    }
+}
+
+/// One synchronous step: every active link concurrently moves `per_link`
+/// bytes across a transfer spanning `hops` adjacent links (the fixed
+/// latency multiplier: 1 for an adjacent hop, 2 for a bypass hop, `√N` for
+/// a torus wrap-around).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub per_link: Bytes,
+    pub hops: f64,
+    pub links: LinkSpan,
+}
+
+/// A collective as an ordered list of synchronous steps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CollectiveSchedule {
+    pub steps: Vec<Step>,
+}
+
+impl CollectiveSchedule {
+    /// Fold the schedule into the closed-form cost (per step: slowest
+    /// link's fixed latency + largest chunk's transmission; wire bytes sum
+    /// over all active links).
+    pub fn cost(&self, link: &LinkConfig) -> CollectiveCost {
+        let mut c = CollectiveCost::ZERO;
+        for s in &self.steps {
+            c.link_latency += link.latency * s.hops;
+            c.transmission += s.per_link.over_bandwidth(link.bandwidth);
+            c.wire_bytes += s.per_link * s.links.count() as f64;
+            c.steps += 1;
+        }
+        c
+    }
+
+    /// Sequential composition (step barrier in between).
+    pub fn then(mut self, mut other: CollectiveSchedule) -> CollectiveSchedule {
+        self.steps.append(&mut other.steps);
+        self
+    }
+
+    /// Repeat the whole schedule `times` times back-to-back.
+    pub fn repeat(self, times: usize) -> CollectiveSchedule {
+        let mut steps = Vec::with_capacity(self.steps.len() * times);
+        for _ in 0..times {
+            steps.extend(self.steps.iter().cloned());
+        }
+        CollectiveSchedule { steps }
+    }
+
+    /// Shift every link id by `by` — place two schedules on disjoint parts
+    /// of a shared fabric.
+    pub fn offset_links(mut self, by: usize) -> CollectiveSchedule {
+        for s in &mut self.steps {
+            s.links.offset(by);
+        }
+        self
+    }
+
+    /// Number of distinct link resources the schedule touches.
+    pub fn n_links(&self) -> usize {
+        self.steps.iter().map(|s| s.links.end()).max().unwrap_or(0)
+    }
+
+    /// Replay the schedule on the discrete-event engine (uncontended
+    /// fabric). Equals `cost(link).total()` — the property the event
+    /// engine is validated against.
+    pub fn event_time(&self, link: &LinkConfig) -> Seconds {
+        event_time_concurrent(&[self], link)
+    }
+}
+
+/// Replay several schedules **concurrently on one shared fabric**: one
+/// FIFO resource per link id, so schedules that name the same links
+/// contend (transfers serialize) while schedules on disjoint ids overlap
+/// freely. Returns the makespan.
+///
+/// This is the scenario class the closed forms cannot express:
+/// `CollectiveCost::alongside` assumes disjoint links and takes a max;
+/// here, sharing is decided by the link ids the schedules actually name.
+pub fn event_time_concurrent(schedules: &[&CollectiveSchedule], link: &LinkConfig) -> Seconds {
+    let mut eng = EventEngine::new();
+    let n_links = schedules.iter().map(|s| s.n_links()).max().unwrap_or(0);
+    let links: Vec<_> = (0..n_links).map(|i| eng.fifo(&format!("link{i}"))).collect();
+    for (si, sched) in schedules.iter().enumerate() {
+        // Zero-duration barrier tasks keep the dependency count linear in
+        // the number of transfers (each step fans into one barrier instead
+        // of all-to-all edges). Every schedule gets its own barrier
+        // resource so barriers never serialize across schedules.
+        let barrier_res = eng.fifo(&format!("barrier{si}"));
+        let mut barrier: Vec<TaskId> = Vec::new();
+        for step in &sched.steps {
+            let dur = link.latency * step.hops + step.per_link.over_bandwidth(link.bandwidth);
+            let mut cur = Vec::with_capacity(step.links.count());
+            for id in step.links.ids() {
+                cur.push(eng.task(links[id], Service::Busy(dur), &barrier));
+            }
+            barrier = vec![eng.task(barrier_res, Service::Busy(Seconds::ZERO), &cur)];
+        }
+    }
+    eng.run().makespan
+}
+
+// ───────────────────────── schedule builders ─────────────────────────
+
+/// Schedule of a ring all-gather / reduce-scatter over `n` dies connected
+/// by a **bypass ring** (per-step hop latency `2α`, paper Eq. 2).
 ///
 /// `volume` is the *total* data size `S`; each die holds `S/n` and after
 /// `n-1` steps every die holds (AG) or has reduced (RS) the full tensor.
+/// Every step all `n` ring links carry one chunk.
+pub fn ring_step_schedule(kind: CollectiveKind, n: usize, volume: Bytes) -> CollectiveSchedule {
+    assert!(
+        matches!(kind, CollectiveKind::AllGather | CollectiveKind::ReduceScatter),
+        "ring_step_schedule only models AG/RS"
+    );
+    if n <= 1 {
+        return CollectiveSchedule::default();
+    }
+    let chunk = volume / n as f64;
+    CollectiveSchedule {
+        steps: (0..n - 1)
+            .map(|_| Step {
+                per_link: chunk,
+                hops: 2.0, // bypass hop: up to 2 adjacent links
+                links: LinkSpan::range(0, n),
+            })
+            .collect(),
+    }
+}
+
+/// Ring all-gather / reduce-scatter cost (closed-form fold of
+/// [`ring_step_schedule`]).
 pub fn ring_step_collective(
     kind: CollectiveKind,
     n: usize,
     volume: Bytes,
     link: &LinkConfig,
 ) -> CollectiveCost {
-    assert!(
-        matches!(kind, CollectiveKind::AllGather | CollectiveKind::ReduceScatter),
-        "ring_step_collective only models AG/RS"
-    );
+    ring_step_schedule(kind, n, volume).cost(link)
+}
+
+/// One phase (RS or AG) of the flat ring: `n−1` steps of `S/n`, hop = `α`.
+pub fn flat_ring_phase_schedule(n: usize, volume: Bytes) -> CollectiveSchedule {
     if n <= 1 {
-        return CollectiveCost::ZERO;
+        return CollectiveSchedule::default();
     }
     let chunk = volume / n as f64;
-    let mut cost = CollectiveCost::ZERO;
-    for _step in 0..n - 1 {
-        // Every die sends its chunk to its ring successor simultaneously;
-        // the step completes when the slowest link finishes. Bypass hops
-        // traverse up to 2 adjacent links → 2α fixed latency.
-        cost.link_latency += link.latency * 2.0;
-        cost.transmission += chunk.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += chunk * n as f64; // n links active per step
-        cost.steps += 1;
+    CollectiveSchedule {
+        steps: (0..n - 1)
+            .map(|_| Step {
+                per_link: chunk,
+                hops: 1.0,
+                links: LinkSpan::range(0, n),
+            })
+            .collect(),
     }
-    cost
+}
+
+/// One phase (RS or AG) of the flat ring, as a cost.
+pub fn flat_ring_phase(n: usize, volume: Bytes, link: &LinkConfig) -> CollectiveCost {
+    flat_ring_phase_schedule(n, volume).cost(link)
 }
 
 /// Flat-ring all-reduce over all `n` dies of the package (Megatron
 /// baseline): a serpentine Hamiltonian ring with adjacent hops (`α` per
 /// step), running reduce-scatter then all-gather — `2(n−1)` steps
 /// (paper Eq. 1 / Table III).
+pub fn flat_ring_all_reduce_schedule(n: usize, volume: Bytes) -> CollectiveSchedule {
+    flat_ring_phase_schedule(n, volume).repeat(2)
+}
+
+/// Flat-ring all-reduce cost.
 pub fn flat_ring_all_reduce(n: usize, volume: Bytes, link: &LinkConfig) -> CollectiveCost {
     flat_ring_phase(n, volume, link).repeat(2)
 }
 
-/// One phase (RS or AG) of the flat ring: `n−1` steps of `S/n`, hop = `α`.
-pub fn flat_ring_phase(n: usize, volume: Bytes, link: &LinkConfig) -> CollectiveCost {
-    if n <= 1 {
-        return CollectiveCost::ZERO;
-    }
-    let chunk = volume / n as f64;
-    let mut cost = CollectiveCost::ZERO;
-    for _ in 0..n - 1 {
-        cost.link_latency += link.latency;
-        cost.transmission += chunk.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += chunk * n as f64;
-        cost.steps += 1;
-    }
-    cost
-}
-
-/// 2D-torus all-reduce over a `side × side` mesh (`N = side²` dies),
-/// the 1D-TP torus baseline [Mikami; Ying].
+/// 2D-torus all-reduce schedule over a `side × side` mesh (`N = side²`
+/// dies), the 1D-TP torus baseline [Mikami; Ying].
 ///
 /// The data is split in half; one half is reduced vertical-first, the other
 /// horizontal-first, concurrently. Each half runs RS(ring side, S/2) →
 /// AR(ring side, S/(2·side)) → AG(ring side, S/2). On the *physical mesh*
 /// the torus wrap-around link spans `side` adjacent hops, so every ring
 /// step pays `side·α` — this is exactly why the paper's bypass ring wins
-/// on latency (Table III: `4(N−√N)α` vs `8(√N−1)α`).
-pub fn torus_all_reduce(side: usize, volume: Bytes, link: &LinkConfig) -> CollectiveCost {
+/// on latency (Table III: `4(N−√N)α` vs `8(√N−1)α`). Each step both
+/// halves' `n` ring links are active (`2n` links total) in lockstep.
+pub fn torus_all_reduce_schedule(side: usize, volume: Bytes) -> CollectiveSchedule {
     if side <= 1 {
-        return CollectiveCost::ZERO;
+        return CollectiveSchedule::default();
     }
     let n = side * side;
     let half = volume * 0.5;
-    let hop = link.latency * side as f64; // wrap-around dominated step latency
-    let steps_per_half = 4 * (side - 1); // RS + (RS+AG of the inner AR) + AG
-    let mut cost = CollectiveCost::ZERO;
+    let hops = side as f64; // wrap-around dominated step latency
     // Phase chunk sizes, per the standard 2D algorithm on one half:
     //   RS over ring of `side` with S/2        → (side-1) steps of S/(2·side)
     //   AR over orthogonal ring on S/(2·side)  → 2(side-1) steps of S/(2·n)
     //   AG over ring of `side` with S/2        → (side-1) steps of S/(2·side)
     let rs_chunk = half / side as f64;
     let ar_chunk = half / n as f64;
+    let links = LinkSpan::range(0, 2 * n); // both halves, all rings
+    let mut steps = Vec::with_capacity(4 * (side - 1));
     for _ in 0..side - 1 {
-        cost.link_latency += hop;
-        cost.transmission += rs_chunk.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += rs_chunk * n as f64 * 2.0; // both halves, all rings
-        cost.steps += 1;
+        steps.push(Step {
+            per_link: rs_chunk,
+            hops,
+            links: links.clone(),
+        });
     }
     for _ in 0..2 * (side - 1) {
-        cost.link_latency += hop;
-        cost.transmission += ar_chunk.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += ar_chunk * n as f64 * 2.0;
-        cost.steps += 1;
+        steps.push(Step {
+            per_link: ar_chunk,
+            hops,
+            links: links.clone(),
+        });
     }
     for _ in 0..side - 1 {
-        cost.link_latency += hop;
-        cost.transmission += rs_chunk.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += rs_chunk * n as f64 * 2.0;
-        cost.steps += 1;
+        steps.push(Step {
+            per_link: rs_chunk,
+            hops,
+            links: links.clone(),
+        });
     }
-    debug_assert_eq!(cost.steps, steps_per_half);
-    cost
+    CollectiveSchedule { steps }
+}
+
+/// 2D-torus all-reduce cost.
+pub fn torus_all_reduce(side: usize, volume: Bytes, link: &LinkConfig) -> CollectiveCost {
+    let c = torus_all_reduce_schedule(side, volume).cost(link);
+    debug_assert!(side <= 1 || c.steps == 4 * (side - 1));
+    c
 }
 
 /// Recursive-doubling broadcast or reduce among `n` dies in a row/column
@@ -213,31 +407,41 @@ pub fn torus_all_reduce(side: usize, volume: Bytes, link: &LinkConfig) -> Collec
 /// [`crate::nop::analytic`]'s Table III forms for Optimus so that baseline
 /// comparisons remain faithful to the paper; this function exists to bound
 /// the gap (see `optimus_gap` test in `analytic.rs`).
+pub fn recursive_doubling_schedule(
+    kind: CollectiveKind,
+    n: usize,
+    volume: Bytes,
+) -> CollectiveSchedule {
+    assert!(
+        matches!(kind, CollectiveKind::Broadcast | CollectiveKind::Reduce),
+        "recursive_doubling models broadcast/reduce"
+    );
+    if n <= 1 {
+        return CollectiveSchedule::default();
+    }
+    let rounds = (n as f64).log2().ceil() as usize;
+    let mut steps = Vec::with_capacity(rounds);
+    let mut active = 1usize; // dies holding the message (bcast view)
+    for k in 0..rounds {
+        let senders = active.min(n - active);
+        steps.push(Step {
+            per_link: volume,
+            hops: (1usize << k) as f64,
+            links: LinkSpan::range(0, senders),
+        });
+        active = (2 * active).min(n);
+    }
+    CollectiveSchedule { steps }
+}
+
+/// Recursive-doubling broadcast/reduce cost.
 pub fn recursive_doubling(
     kind: CollectiveKind,
     n: usize,
     volume: Bytes,
     link: &LinkConfig,
 ) -> CollectiveCost {
-    assert!(
-        matches!(kind, CollectiveKind::Broadcast | CollectiveKind::Reduce),
-        "recursive_doubling models broadcast/reduce"
-    );
-    if n <= 1 {
-        return CollectiveCost::ZERO;
-    }
-    let rounds = (n as f64).log2().ceil() as usize;
-    let mut cost = CollectiveCost::ZERO;
-    let mut active = 1usize; // dies holding the message (bcast view)
-    for k in 0..rounds {
-        let hops = 1usize << k;
-        cost.link_latency += link.latency * hops as f64;
-        cost.transmission += volume.over_bandwidth(link.bandwidth);
-        cost.wire_bytes += volume * active.min(n - active) as f64;
-        cost.steps += 1;
-        active = (2 * active).min(n);
-    }
-    cost
+    recursive_doubling_schedule(kind, n, volume).cost(link)
 }
 
 #[cfg(test)]
@@ -373,5 +577,103 @@ mod tests {
         // Ring AG: every step all n links carry S/n → (n−1)·S total.
         let c = ring_step_collective(CollectiveKind::AllGather, n, s, &l);
         assert!((c.wire_bytes.raw() - (n - 1) as f64 * s.raw()).abs() < 1.0);
+    }
+
+    // ───────────── schedules & event execution ─────────────
+
+    #[test]
+    fn schedule_composition_matches_cost_composition() {
+        let l = link();
+        let a = ring_step_schedule(CollectiveKind::AllGather, 4, Bytes::mib(4.0));
+        let b = ring_step_schedule(CollectiveKind::ReduceScatter, 4, Bytes::mib(8.0));
+        let seq = a.clone().then(b.clone());
+        let want = a.cost(&l).then(b.cost(&l));
+        assert_eq!(seq.cost(&l), want);
+        let rep = a.clone().repeat(3);
+        assert_eq!(rep.cost(&l).steps, 3 * a.cost(&l).steps);
+    }
+
+    /// The event engine on an uncongested fabric reproduces the
+    /// closed-form total for every builder (the tentpole parity property).
+    #[test]
+    fn event_time_matches_analytic_uncongested() {
+        prop::check("event time == closed form", 48, |g| {
+            let l = link();
+            let s = Bytes(g.f64_range(1e4, 1e9));
+            let n = g.usize_range(2, 12);
+            let side = g.usize_range(2, 5);
+            let scheds = [
+                ring_step_schedule(CollectiveKind::AllGather, n, s),
+                flat_ring_all_reduce_schedule(n, s),
+                torus_all_reduce_schedule(side, s),
+                recursive_doubling_schedule(CollectiveKind::Broadcast, n, s),
+                // composed sequences must also match
+                ring_step_schedule(CollectiveKind::AllGather, n, s)
+                    .then(ring_step_schedule(CollectiveKind::ReduceScatter, n, s * 3.0)),
+            ];
+            for sched in scheds {
+                let analytic = sched.cost(&l).total().raw();
+                let event = sched.event_time(&l).raw();
+                prop::assert_close(event, analytic, 1e-9, format!("n={n} side={side}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Two collectives on one shared fabric contend (serialize on each
+    /// link); on disjoint links they overlap freely — the closed-form
+    /// `alongside` max is recovered, and the contended time is ~2×.
+    #[test]
+    fn shared_fabric_contends_disjoint_overlaps() {
+        let l = link();
+        let a = ring_step_schedule(CollectiveKind::AllGather, 8, Bytes::mib(32.0));
+        let single = a.event_time(&l).raw();
+
+        let shared = event_time_concurrent(&[&a, &a], &l).raw();
+        assert!(
+            shared > 1.9 * single && shared < 2.1 * single,
+            "shared fabric should ~2x: {shared} vs {single}"
+        );
+
+        let b = a.clone().offset_links(100);
+        let disjoint = event_time_concurrent(&[&a, &b], &l).raw();
+        assert!(
+            (disjoint - single).abs() / single < 1e-9,
+            "disjoint fabric should overlap: {disjoint} vs {single}"
+        );
+    }
+
+    /// A skewed mesh's row/col rings have different lengths; executing the
+    /// long-ring schedule while a short-ring schedule holds shared links
+    /// exposes contention no closed form in Table III expresses.
+    #[test]
+    fn skewed_mesh_sharing_is_slower_than_alongside() {
+        let l = link();
+        let rows = ring_step_schedule(CollectiveKind::AllGather, 16, Bytes::mib(64.0));
+        let cols = ring_step_schedule(CollectiveKind::ReduceScatter, 4, Bytes::mib(64.0));
+        let ideal = rows
+            .cost(&l)
+            .alongside(cols.cost(&l))
+            .total()
+            .raw();
+        let contended = event_time_concurrent(&[&rows, &cols], &l).raw();
+        assert!(
+            contended > ideal * 1.05,
+            "sharing must cost more than the disjoint-link max: {contended} vs {ideal}"
+        );
+    }
+
+    #[test]
+    fn link_span_accessors() {
+        let r = LinkSpan::range(2, 3);
+        assert_eq!(r.count(), 3);
+        assert_eq!(r.end(), 5);
+        assert_eq!(r.ids(), vec![2, 3, 4]);
+        let s = LinkSpan::Set(vec![1, 7]);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.end(), 8);
+        let mut o = s.clone();
+        o.offset(10);
+        assert_eq!(o.ids(), vec![11, 17]);
     }
 }

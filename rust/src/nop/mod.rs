@@ -7,8 +7,10 @@
 //! * [`collective`] — a *step-level* simulator for the collective
 //!   operations each training method issues (ring all-gather /
 //!   reduce-scatter, flat-ring and 2D-torus all-reduce, recursive-doubling
-//!   broadcast/reduce), producing link-latency, transmission-time, and
-//!   wire-byte costs.
+//!   broadcast/reduce). Each collective is a [`CollectiveSchedule`] of
+//!   per-step link events; the closed-form [`CollectiveCost`] and the
+//!   discrete-event replay ([`collective::event_time_concurrent`], which
+//!   models link contention the closed forms cannot) both derive from it.
 //! * [`analytic`] — the closed forms of paper Table III, used to validate
 //!   the simulator and to print the `table3` report.
 
@@ -16,5 +18,5 @@ pub mod topology;
 pub mod collective;
 pub mod analytic;
 
-pub use collective::{CollectiveCost, CollectiveKind};
+pub use collective::{CollectiveCost, CollectiveKind, CollectiveSchedule, LinkSpan, Step};
 pub use topology::{bypass_ring, serpentine_ring, RingKind};

@@ -6,7 +6,7 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::{simulate, SimResult};
+use crate::sim::system::{simulate_engine, EngineKind, SimResult};
 use crate::util::table::Table;
 
 /// One measured cell of the figure.
@@ -21,18 +21,24 @@ pub struct Cell {
     pub rel_energy: f64,
 }
 
-/// Run the full grid.
+/// Run the full grid with the default (analytic) timing backend.
 pub fn run() -> Vec<Cell> {
+    run_with(EngineKind::Analytic)
+}
+
+/// Run the full grid with an explicit timing backend (the engine column of
+/// each row records which one produced it).
+pub fn run_with(engine: EngineKind) -> Vec<Cell> {
     let mut cells = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         for w in paper_pairings() {
             let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
-            let hecaton = simulate(&w.model, &hw, Method::Hecaton);
+            let hecaton = simulate_engine(&w.model, &hw, Method::Hecaton, engine);
             for method in Method::all() {
                 let r = if method == Method::Hecaton {
                     hecaton.clone()
                 } else {
-                    simulate(&w.model, &hw, method)
+                    simulate_engine(&w.model, &hw, method, engine)
                 };
                 cells.push(Cell {
                     model: w.model.name.clone(),
@@ -54,8 +60,8 @@ pub fn report() -> String {
     let mut out = String::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         let mut t = Table::new(&[
-            "workload", "method", "latency", "norm", "compute%", "NoP%", "DRAM%", "energy",
-            "norm(E)", "SRAM",
+            "workload", "method", "engine", "latency", "norm", "compute%", "NoP%", "DRAM%",
+            "energy", "norm(E)", "SRAM",
         ])
         .with_title(&format!(
             "Fig. 8 ({} package) — latency & energy vs Hecaton (A=1.00); * = SRAM overflow",
@@ -70,6 +76,7 @@ pub fn report() -> String {
             t.row(crate::table_row![
                 format!("{} (N={})", c.model, r.dies),
                 format!("{} ({})", c.method.tag(), c.method.name()),
+                r.engine.name(),
                 r.latency,
                 format!("{:.2}x", c.rel_latency),
                 format!("{:.0}%", 100.0 * b.compute.raw() / lat),
@@ -190,5 +197,22 @@ mod tests {
         assert!(r.contains("standard package"));
         assert!(r.contains("advanced package"));
         assert!(r.contains("Headline vs Megatron-TP"));
+        assert!(r.contains("analytic"), "engine column missing");
+    }
+
+    /// The event backend drives the full Fig. 8 grid end-to-end and stays
+    /// within 1% of the analytic normalized latencies.
+    #[test]
+    fn event_engine_grid_matches_analytic() {
+        let analytic = run();
+        let event = run_with(EngineKind::Event);
+        assert_eq!(analytic.len(), event.len());
+        for (a, e) in analytic.iter().zip(&event) {
+            assert_eq!(e.result.engine, EngineKind::Event);
+            assert_eq!(a.model, e.model);
+            let rel = (e.result.latency.raw() - a.result.latency.raw()).abs()
+                / a.result.latency.raw();
+            assert!(rel < 0.01, "{} {:?}: {rel}", a.model, a.method);
+        }
     }
 }

@@ -11,11 +11,13 @@ pub mod table4;
 pub mod gpu;
 pub mod weak;
 pub mod ablation;
+pub mod congestion;
 
 /// All experiment ids.
 pub fn experiments() -> &'static [&'static str] {
     &[
         "fig8", "fig9", "fig10", "fig11", "table3", "table4", "gpu", "weak", "ablation",
+        "congestion",
     ]
 }
 
@@ -31,6 +33,7 @@ pub fn run(id: &str) -> crate::Result<String> {
         "gpu" => Ok(gpu::report()),
         "weak" => Ok(weak::report()),
         "ablation" => Ok(ablation::report()),
+        "congestion" => Ok(congestion::report()),
         other => anyhow::bail!("unknown experiment '{other}'; try one of {:?}", experiments()),
     }
 }

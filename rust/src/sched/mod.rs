@@ -6,4 +6,4 @@ pub mod fusion;
 pub mod pipeline;
 
 pub use fusion::{plan_fusion, FusionGroup};
-pub use pipeline::{overlap, StageTimes};
+pub use pipeline::{overlap, overlap_chain_event, overlap_event, ChainResult, GroupStage, StageTimes};

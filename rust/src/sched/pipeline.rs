@@ -8,7 +8,9 @@
 //! stage; the *exposed* DRAM time (what Fig. 8's breakdown charts as
 //! "DRAM") is only the excess over the on-package stage.
 
-use crate::util::Seconds;
+use crate::memory::dram::DramModel;
+use crate::sim::engine::{EventEngine, Service, TaskId};
+use crate::util::{Bytes, Seconds};
 
 /// Per-group stage times for one batch.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,7 +34,7 @@ pub struct OverlapResult {
     pub exposed_dram: Seconds,
 }
 
-/// Two-stage pipeline overlap.
+/// Two-stage pipeline overlap (closed form).
 pub fn overlap(stages: StageTimes) -> OverlapResult {
     let n = stages.n_minibatches.max(1) as f64;
     let a = stages.on_package;
@@ -42,6 +44,131 @@ pub fn overlap(stages: StageTimes) -> OverlapResult {
     OverlapResult {
         latency,
         exposed_dram: latency.saturating_sub(a),
+    }
+}
+
+/// [`overlap`] executed as actual event interleaving on the discrete-event
+/// engine: `n` DRAM chunks feed `n` on-package slots through two FIFO
+/// resources. Reproduces the closed form exactly (property-tested below).
+///
+/// This is the single-group *reference implementation* of the task-graph
+/// shape that [`overlap_chain_event`] builds per group; the chain variant
+/// constructs its own graph (it threads cross-group dependencies and uses
+/// the DRAM channel resource), so edits to scheduling semantics must be
+/// made there — this function exists to validate the engine against the
+/// closed form and for standalone single-group what-ifs.
+pub fn overlap_event(stages: StageTimes) -> OverlapResult {
+    let n = stages.n_minibatches.max(1);
+    let mut eng = EventEngine::new();
+    let pkg = eng.fifo("package");
+    let dram = eng.fifo("dram");
+    let a = stages.on_package / n as f64;
+    let b = stages.dram / n as f64;
+    let mut prev_d: Option<TaskId> = None;
+    let mut prev_p: Option<TaskId> = None;
+    for _ in 0..n {
+        let deps_d: Vec<TaskId> = prev_d.into_iter().collect();
+        let d = eng.task(dram, Service::Busy(b), &deps_d);
+        let mut deps_p = vec![d];
+        if let Some(p) = prev_p {
+            deps_p.push(p);
+        }
+        let p = eng.task(pkg, Service::Busy(a), &deps_p);
+        prev_d = Some(d);
+        prev_p = Some(p);
+    }
+    let run = eng.run();
+    OverlapResult {
+        latency: run.makespan,
+        exposed_dram: run.makespan.saturating_sub(stages.on_package),
+    }
+}
+
+/// One fusion group × pass as the event engine sees it: total on-package
+/// execution, DRAM bytes at the group boundary, and the pipeline depth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupStage {
+    pub on_package: Seconds,
+    pub dram_bytes: Bytes,
+    pub n_minibatches: usize,
+}
+
+/// Result of an event-driven group chain.
+#[derive(Debug, Clone)]
+pub struct ChainResult {
+    /// Wall-clock of the whole chain.
+    pub latency: Seconds,
+    /// Per-group span and exposed-DRAM breakdown, in chain order. Spans
+    /// sum to `latency`.
+    pub groups: Vec<OverlapResult>,
+}
+
+/// Cap on pipeline items simulated per group. Groups with more
+/// mini-batches are coalesced; the only term affected is the pipeline
+/// fill (`min(A,B)/n`), bounding the deviation from the exact depth at
+/// `min(A,B)/EVENT_ITEM_CAP` ≤ 0.2% of the group span.
+pub const EVENT_ITEM_CAP: usize = 512;
+
+/// Event-driven execution of a whole chain of fusion-group stages on one
+/// shared on-package slot and the fair-shared DRAM channel pool.
+///
+/// * `prefetch = false` reproduces the analytic serialization: a group's
+///   DRAM stream starts only after the previous group fully finishes
+///   (matches `Σ overlap(g)` to within the item cap).
+/// * `prefetch = true` lets the next group's DRAM stream start as soon as
+///   the channels are free — the double-buffered group boundary. DRAM
+///   chunks stay ordered on the channel pool (one stream in flight at a
+///   time, matching a double buffer that fills strictly ahead), which is
+///   exactly why prefetch can never lose: its task graph is the serial
+///   graph minus one dependency per boundary. On-package execution then
+///   runs back-to-back and the pipeline fill of interior groups is
+///   hidden: the overlap slack the closed-form `max()` cannot express.
+pub fn overlap_chain_event(stages: &[GroupStage], dram: &DramModel, prefetch: bool) -> ChainResult {
+    let mut eng = EventEngine::new();
+    let pkg = eng.fifo("package");
+    let dram_res = dram.resource(&mut eng);
+    let mut prev_d: Option<TaskId> = None;
+    let mut prev_p: Option<TaskId> = None;
+    let mut group_last: Vec<TaskId> = Vec::with_capacity(stages.len());
+    for st in stages {
+        let n = st.n_minibatches.max(1).min(EVENT_ITEM_CAP);
+        let a = st.on_package / n as f64;
+        let chunk = st.dram_bytes / n as f64;
+        for i in 0..n {
+            let mut deps_d: Vec<TaskId> = Vec::new();
+            if let Some(d) = prev_d {
+                deps_d.push(d);
+            }
+            if i == 0 && !prefetch {
+                if let Some(p) = prev_p {
+                    deps_d.push(p);
+                }
+            }
+            let d = eng.task(dram_res, Service::Transfer(chunk), &deps_d);
+            let mut deps_p = vec![d];
+            if let Some(p) = prev_p {
+                deps_p.push(p);
+            }
+            let p = eng.task(pkg, Service::Busy(a), &deps_p);
+            prev_d = Some(d);
+            prev_p = Some(p);
+        }
+        group_last.push(prev_p.expect("each group emits at least one item"));
+    }
+    let run = eng.run();
+    let mut groups = Vec::with_capacity(stages.len());
+    let mut prev_finish = Seconds::ZERO;
+    for (st, &p) in stages.iter().zip(&group_last) {
+        let span = run.finish[p] - prev_finish;
+        groups.push(OverlapResult {
+            latency: span,
+            exposed_dram: span.saturating_sub(st.on_package),
+        });
+        prev_finish = run.finish[p];
+    }
+    ChainResult {
+        latency: run.makespan,
+        groups,
     }
 }
 
@@ -105,6 +232,99 @@ mod tests {
                 "exposed <= dram",
             )
         });
+    }
+
+    /// The event-driven single-group pipeline reproduces the closed form
+    /// exactly — the core parity property of the engine refactor.
+    #[test]
+    fn event_overlap_matches_closed_form() {
+        prop::check("overlap_event == overlap", 96, |g| {
+            let s = StageTimes {
+                on_package: Seconds(g.f64_range(1e-6, 1.0)),
+                dram: Seconds(g.f64_range(1e-6, 1.0)),
+                n_minibatches: g.usize_range(1, 200),
+            };
+            let analytic = overlap(s);
+            let event = overlap_event(s);
+            prop::assert_close(
+                event.latency.raw(),
+                analytic.latency.raw(),
+                1e-9,
+                "latency",
+            )?;
+            prop::assert_close(
+                event.exposed_dram.raw() + 1e-15,
+                analytic.exposed_dram.raw() + 1e-15,
+                1e-9,
+                "exposed",
+            )
+        });
+    }
+
+    fn test_dram() -> crate::memory::dram::DramModel {
+        use crate::config::{DramKind, HardwareConfig, PackageKind};
+        crate::memory::dram::DramModel::new(&HardwareConfig::square(
+            16,
+            PackageKind::Standard,
+            DramKind::Ddr5_6400,
+        ))
+    }
+
+    /// Serial chain execution matches the per-group closed forms summed.
+    #[test]
+    fn chain_event_matches_analytic_serialization() {
+        let dram = test_dram();
+        prop::check("chain event == sum of overlaps", 32, |g| {
+            let n_groups = g.usize_range(1, 5);
+            let stages: Vec<GroupStage> = (0..n_groups)
+                .map(|_| GroupStage {
+                    on_package: Seconds(g.f64_range(1e-4, 0.5)),
+                    dram_bytes: Bytes(g.f64_range(1e6, 1e11)),
+                    n_minibatches: g.usize_range(1, 2000),
+                })
+                .collect();
+            let chain = overlap_chain_event(&stages, &dram, false);
+            let mut want = Seconds::ZERO;
+            for st in &stages {
+                want += overlap(StageTimes {
+                    on_package: st.on_package,
+                    dram: dram.stream_time(st.dram_bytes),
+                    n_minibatches: st.n_minibatches,
+                })
+                .latency;
+            }
+            // Item coalescing only perturbs the fill term: ≤ 1%.
+            prop::assert_close(chain.latency.raw(), want.raw(), 1e-2, "chain latency")?;
+            let span_sum: f64 = chain.groups.iter().map(|o| o.latency.raw()).sum();
+            prop::assert_close(span_sum, chain.latency.raw(), 1e-9, "spans sum")
+        });
+    }
+
+    /// Prefetching the next group's DRAM stream never hurts, and strictly
+    /// helps a multi-group chain (the interior pipeline fills are hidden).
+    #[test]
+    fn prefetch_hides_interior_fills() {
+        let dram = test_dram();
+        let stages: Vec<GroupStage> = (0..4)
+            .map(|i| GroupStage {
+                on_package: Seconds::ms(40.0 + 5.0 * i as f64),
+                dram_bytes: Bytes(dram.effective_bandwidth() * 0.030), // 30 ms stream
+                n_minibatches: 10,
+            })
+            .collect();
+        let serial = overlap_chain_event(&stages, &dram, false);
+        let pre = overlap_chain_event(&stages, &dram, true);
+        assert!(pre.latency <= serial.latency);
+        assert!(
+            pre.latency.raw() < serial.latency.raw() * 0.999,
+            "prefetch should strictly beat serialization: {} vs {}",
+            pre.latency,
+            serial.latency
+        );
+        // Interior groups run back-to-back on the package: no exposed DRAM.
+        for g in &pre.groups[1..] {
+            assert!(g.exposed_dram.raw() < 1e-9, "{:?}", pre.groups);
+        }
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Discrete-event simulation core.
+//!
+//! A monotonic event queue plus a small resource model, shared by every
+//! timing layer of the simulator:
+//!
+//! * **[`Sharing::Fifo`] resources** serve one task at a time in arrival
+//!   order — D2D links executing collective steps, the on-package
+//!   execution slot of the mini-batch pipeline.
+//! * **[`Sharing::Fair`] resources** are fluid bandwidth servers: all
+//!   active transfers progress simultaneously at `bandwidth / k` — the
+//!   DRAM channel pool ([`crate::memory::dram::DramModel::resource`]).
+//!
+//! Workloads are expressed as a task DAG: each [`task`](EventEngine::task)
+//! names the resource it occupies, the service it needs ([`Service::Busy`]
+//! duration or [`Service::Transfer`] bytes) and the tasks that must finish
+//! first. [`run`](EventEngine::run) executes the DAG and returns per-task
+//! start/finish times plus per-resource busy time.
+//!
+//! Determinism: ties are broken by event sequence number and task creation
+//! order, so the same graph always produces bit-identical results. The
+//! builder is immutable under `run`, so one graph can be re-run (and the
+//! engine can be cloned and extended for scenario sweeps).
+//!
+//! On congestion-free graphs the engine reproduces the closed-form models
+//! exactly: a single flow on a fair resource finishes at `bytes/bandwidth`,
+//! serialized steps on FIFO links sum, and the two-stage mini-batch
+//! pipeline lands on `max(A,B) + min(A,B)/n` (property-tested below and in
+//! [`crate::sched::pipeline`]).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::{Bytes, Seconds};
+
+/// Task handle returned by [`EventEngine::task`].
+pub type TaskId = usize;
+/// Resource handle returned by [`EventEngine::resource`].
+pub type ResourceId = usize;
+
+/// What a task asks of its resource.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Service {
+    /// Occupy the resource for a fixed duration (FIFO resources; on a fair
+    /// resource this is converted to `duration × bandwidth` service bytes).
+    Busy(Seconds),
+    /// Move this many bytes through the resource's bandwidth.
+    Transfer(Bytes),
+}
+
+/// How a resource serves concurrent tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharing {
+    /// One task at a time, in arrival order (exclusive server).
+    Fifo,
+    /// Fluid fair sharing: `k` active transfers each progress at
+    /// `bandwidth / k`.
+    Fair,
+}
+
+#[derive(Debug, Clone)]
+struct ResourceSpec {
+    name: String,
+    bandwidth: f64,
+    sharing: Sharing,
+}
+
+#[derive(Debug, Clone)]
+struct TaskSpec {
+    resource: ResourceId,
+    service: Service,
+    deps: Vec<TaskId>,
+}
+
+/// Task-graph builder and runner.
+#[derive(Debug, Clone, Default)]
+pub struct EventEngine {
+    resources: Vec<ResourceSpec>,
+    tasks: Vec<TaskSpec>,
+}
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Completion time of the last task (0 for an empty graph).
+    pub makespan: Seconds,
+    /// Per-task service start time (for FIFO tasks: when the resource
+    /// actually began serving, not queue arrival).
+    pub start: Vec<Seconds>,
+    /// Per-task completion time.
+    pub finish: Vec<Seconds>,
+    /// Per-resource total busy time (FIFO: sum of service durations;
+    /// fair: time with at least one active flow).
+    pub busy: Vec<Seconds>,
+    /// Number of events processed (diagnostic).
+    pub events: usize,
+}
+
+impl EventEngine {
+    pub fn new() -> EventEngine {
+        EventEngine::default()
+    }
+
+    /// Register a resource. `bandwidth` is in bytes/s and must be positive
+    /// and finite; FIFO resources that only ever serve [`Service::Busy`]
+    /// tasks can use [`fifo`](EventEngine::fifo) (bandwidth 1.0).
+    pub fn resource(&mut self, name: &str, sharing: Sharing, bandwidth: f64) -> ResourceId {
+        assert!(
+            bandwidth.is_finite() && bandwidth > 0.0,
+            "resource '{name}': bandwidth must be positive and finite"
+        );
+        self.resources.push(ResourceSpec {
+            name: name.to_string(),
+            bandwidth,
+            sharing,
+        });
+        self.resources.len() - 1
+    }
+
+    /// Exclusive FIFO resource for duration-based tasks.
+    pub fn fifo(&mut self, name: &str) -> ResourceId {
+        self.resource(name, Sharing::Fifo, 1.0)
+    }
+
+    /// Exclusive FIFO resource with a bandwidth (for byte transfers that
+    /// serialize, e.g. a D2D link).
+    pub fn fifo_bw(&mut self, name: &str, bandwidth: f64) -> ResourceId {
+        self.resource(name, Sharing::Fifo, bandwidth)
+    }
+
+    /// Fair-shared bandwidth resource (e.g. the DRAM channel pool).
+    pub fn fair(&mut self, name: &str, bandwidth: f64) -> ResourceId {
+        self.resource(name, Sharing::Fair, bandwidth)
+    }
+
+    /// Add a task. Dependencies must already exist (this makes cycles
+    /// impossible by construction).
+    pub fn task(&mut self, resource: ResourceId, service: Service, deps: &[TaskId]) -> TaskId {
+        let id = self.tasks.len();
+        assert!(resource < self.resources.len(), "unknown resource {resource}");
+        for &d in deps {
+            assert!(d < id, "task dependency {d} does not exist yet");
+        }
+        self.tasks.push(TaskSpec {
+            resource,
+            service,
+            deps: deps.to_vec(),
+        });
+        id
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn n_resources(&self) -> usize {
+        self.resources.len()
+    }
+
+    pub fn resource_name(&self, r: ResourceId) -> &str {
+        &self.resources[r].name
+    }
+
+    /// Execute the task graph.
+    pub fn run(&self) -> RunResult {
+        Sim::new(self).run()
+    }
+}
+
+// ───────────────────────── event queue ─────────────────────────
+
+#[derive(Debug, Clone, Copy)]
+enum EvKind {
+    /// A FIFO task finished its service.
+    FifoDone(TaskId),
+    /// Re-examine a fair resource (some flow may have drained). The `u64`
+    /// is the resource state version at scheduling time; stale checks are
+    /// skipped.
+    FairCheck(ResourceId, u64),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    time: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> Ordering {
+        // BinaryHeap pops the greatest element; reverse so the earliest
+        // time (then the earliest sequence number) pops first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+// ───────────────────────── run state ─────────────────────────
+
+#[derive(Debug, Clone)]
+struct Flow {
+    task: TaskId,
+    remaining: f64,
+    total: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+struct FairState {
+    flows: Vec<Flow>,
+    last: f64,
+    version: u64,
+}
+
+struct Sim<'a> {
+    eng: &'a EventEngine,
+    children: Vec<Vec<TaskId>>,
+    indeg: Vec<usize>,
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    busy: Vec<f64>,
+    fifo_until: Vec<f64>,
+    fair: Vec<FairState>,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    events: usize,
+    done: usize,
+}
+
+impl<'a> Sim<'a> {
+    fn new(eng: &'a EventEngine) -> Sim<'a> {
+        let nt = eng.tasks.len();
+        let nr = eng.resources.len();
+        let mut children: Vec<Vec<TaskId>> = vec![Vec::new(); nt];
+        let mut indeg = vec![0usize; nt];
+        for (id, t) in eng.tasks.iter().enumerate() {
+            indeg[id] = t.deps.len();
+            for &d in &t.deps {
+                children[d].push(id);
+            }
+        }
+        Sim {
+            eng,
+            children,
+            indeg,
+            start: vec![0.0; nt],
+            finish: vec![0.0; nt],
+            busy: vec![0.0; nr],
+            fifo_until: vec![0.0; nr],
+            fair: vec![FairState::default(); nr],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            events: 0,
+            done: 0,
+        }
+    }
+
+    fn push(&mut self, time: f64, kind: EvKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Ev { time, seq, kind });
+    }
+
+    /// A task's dependencies are all satisfied: hand it to its resource.
+    fn arrive(&mut self, task: TaskId, now: f64) {
+        let spec = &self.eng.tasks[task];
+        let resource = spec.resource;
+        let service = spec.service;
+        let rspec = &self.eng.resources[resource];
+        let bw = rspec.bandwidth;
+        match rspec.sharing {
+            Sharing::Fifo => {
+                let dur = match service {
+                    Service::Busy(d) => d.raw(),
+                    Service::Transfer(b) => b.raw() / bw,
+                };
+                let begin = now.max(self.fifo_until[resource]);
+                self.start[task] = begin;
+                let end = begin + dur;
+                self.fifo_until[resource] = end;
+                self.busy[resource] += dur;
+                self.push(end, EvKind::FifoDone(task));
+            }
+            Sharing::Fair => {
+                let bytes = match service {
+                    Service::Transfer(b) => b.raw(),
+                    Service::Busy(d) => d.raw() * bw,
+                };
+                self.start[task] = now;
+                self.advance_fair(resource, now);
+                self.fair[resource].flows.push(Flow {
+                    task,
+                    remaining: bytes,
+                    total: bytes,
+                });
+                self.reschedule_fair(resource, now);
+            }
+        }
+    }
+
+    /// Advance a fair resource's fluid state to time `to`.
+    fn advance_fair(&mut self, r: ResourceId, to: f64) {
+        let bw = self.eng.resources[r].bandwidth;
+        let st = &mut self.fair[r];
+        let dt = to - st.last;
+        st.last = to;
+        let k = st.flows.len();
+        if k == 0 || dt <= 0.0 {
+            return;
+        }
+        let rate = bw / k as f64;
+        for fl in &mut st.flows {
+            fl.remaining -= rate * dt;
+        }
+        self.busy[r] += dt;
+    }
+
+    /// Invalidate outstanding checks for `r` and schedule the next one.
+    fn reschedule_fair(&mut self, r: ResourceId, now: f64) {
+        let bw = self.eng.resources[r].bandwidth;
+        let st = &mut self.fair[r];
+        st.version += 1;
+        let version = st.version;
+        let k = st.flows.len();
+        if k == 0 {
+            return;
+        }
+        let min_rem = st
+            .flows
+            .iter()
+            .map(|f| f.remaining.max(0.0))
+            .fold(f64::INFINITY, f64::min);
+        let rate = bw / k as f64;
+        self.push(now + min_rem / rate, EvKind::FairCheck(r, version));
+    }
+
+    /// A flow is complete when its remaining service is zero up to
+    /// floating-point drift accumulated over rate changes.
+    fn flow_done(fl: &Flow) -> bool {
+        fl.remaining <= fl.total * 1e-12 + 1e-9
+    }
+
+    fn complete(&mut self, task: TaskId, now: f64) {
+        self.finish[task] = now;
+        self.done += 1;
+        for i in 0..self.children[task].len() {
+            let child = self.children[task][i];
+            self.indeg[child] -= 1;
+            if self.indeg[child] == 0 {
+                self.arrive(child, now);
+            }
+        }
+    }
+
+    fn run(mut self) -> RunResult {
+        // Roots arrive at t = 0 in creation order.
+        for id in 0..self.eng.tasks.len() {
+            if self.indeg[id] == 0 {
+                self.arrive(id, 0.0);
+            }
+        }
+        let mut now = 0.0f64;
+        while let Some(ev) = self.heap.pop() {
+            debug_assert!(ev.time >= now, "event queue must be monotonic");
+            now = ev.time;
+            self.events += 1;
+            match ev.kind {
+                EvKind::FifoDone(task) => self.complete(task, now),
+                EvKind::FairCheck(r, version) => {
+                    if self.fair[r].version != version {
+                        continue; // superseded by a later arrival/completion
+                    }
+                    self.advance_fair(r, now);
+                    let mut finished: Vec<TaskId> = Vec::new();
+                    self.fair[r].flows.retain(|fl| {
+                        if Self::flow_done(fl) {
+                            finished.push(fl.task);
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    for t in finished {
+                        self.complete(t, now);
+                    }
+                    self.reschedule_fair(r, now);
+                }
+            }
+        }
+        assert_eq!(
+            self.done,
+            self.eng.tasks.len(),
+            "all tasks must complete (the DAG is acyclic by construction)"
+        );
+        let makespan = self.finish.iter().copied().fold(0.0, f64::max);
+        RunResult {
+            makespan: Seconds(makespan),
+            start: self.start.into_iter().map(Seconds).collect(),
+            finish: self.finish.into_iter().map(Seconds).collect(),
+            busy: self.busy.into_iter().map(Seconds).collect(),
+            events: self.events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn empty_graph_runs() {
+        let eng = EventEngine::new();
+        let r = eng.run();
+        assert_eq!(r.makespan, Seconds::ZERO);
+        assert_eq!(r.events, 0);
+    }
+
+    #[test]
+    fn fifo_serializes_in_arrival_order() {
+        let mut eng = EventEngine::new();
+        let link = eng.fifo("link");
+        let a = eng.task(link, Service::Busy(Seconds(10.0)), &[]);
+        let b = eng.task(link, Service::Busy(Seconds(5.0)), &[]);
+        let r = eng.run();
+        // Both arrive at t=0; creation order wins the tie.
+        assert_eq!(r.finish[a], Seconds(10.0));
+        assert_eq!(r.finish[b], Seconds(15.0));
+        assert_eq!(r.start[b], Seconds(10.0));
+        assert_eq!(r.busy[link], Seconds(15.0));
+        assert_eq!(r.makespan, Seconds(15.0));
+    }
+
+    #[test]
+    fn dependencies_gate_start() {
+        let mut eng = EventEngine::new();
+        let r1 = eng.fifo("a");
+        let r2 = eng.fifo("b");
+        let t1 = eng.task(r1, Service::Busy(Seconds(3.0)), &[]);
+        let t2 = eng.task(r2, Service::Busy(Seconds(4.0)), &[t1]);
+        let t3 = eng.task(r1, Service::Busy(Seconds(1.0)), &[t2]);
+        let r = eng.run();
+        assert_eq!(r.finish[t1], Seconds(3.0));
+        assert_eq!(r.start[t2], Seconds(3.0));
+        assert_eq!(r.finish[t2], Seconds(7.0));
+        assert_eq!(r.finish[t3], Seconds(8.0));
+    }
+
+    #[test]
+    fn fifo_transfer_uses_bandwidth() {
+        let mut eng = EventEngine::new();
+        let link = eng.fifo_bw("link", 4.0);
+        let t = eng.task(link, Service::Transfer(Bytes(8.0)), &[]);
+        let r = eng.run();
+        assert_eq!(r.finish[t], Seconds(2.0));
+    }
+
+    #[test]
+    fn fair_share_splits_bandwidth() {
+        // bw = 2 B/s. Flow A (4 B) starts at t=0; flow B (4 B) is gated to
+        // t=1. Fluid sharing: A alone on [0,1) moves 2 B; both share on
+        // [1,3) at 1 B/s each, so A drains its last 2 B at t=3; B then runs
+        // alone at 2 B/s and drains its remaining 2 B at t=4.
+        let mut eng = EventEngine::new();
+        let gate = eng.fifo("gate");
+        let dram = eng.fair("dram", 2.0);
+        let a = eng.task(dram, Service::Transfer(Bytes(4.0)), &[]);
+        let g = eng.task(gate, Service::Busy(Seconds(1.0)), &[]);
+        let b = eng.task(dram, Service::Transfer(Bytes(4.0)), &[g]);
+        let r = eng.run();
+        assert!((r.finish[a].raw() - 3.0).abs() < 1e-9, "{:?}", r.finish);
+        assert!((r.finish[b].raw() - 4.0).abs() < 1e-9, "{:?}", r.finish);
+        // The resource was active the whole [0,4] interval.
+        assert!((r.busy[dram].raw() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_equal_flows_finish_together() {
+        let mut eng = EventEngine::new();
+        let dram = eng.fair("dram", 2.0);
+        let a = eng.task(dram, Service::Transfer(Bytes(4.0)), &[]);
+        let b = eng.task(dram, Service::Transfer(Bytes(4.0)), &[]);
+        let r = eng.run();
+        assert!((r.finish[a].raw() - 4.0).abs() < 1e-9);
+        assert!((r.finish[b].raw() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_single_flow_is_exact() {
+        // One flow at a time through a chain: completion times are exact
+        // multiples — the uncongested path must not accumulate drift.
+        let mut eng = EventEngine::new();
+        let dram = eng.fair("dram", 1e9);
+        let mut prev: Option<TaskId> = None;
+        for _ in 0..100 {
+            let deps: Vec<TaskId> = prev.into_iter().collect();
+            prev = Some(eng.task(dram, Service::Transfer(Bytes(1e6)), &deps));
+        }
+        let r = eng.run();
+        let expect = 100.0 * 1e6 / 1e9;
+        assert!(
+            (r.makespan.raw() - expect).abs() / expect < 1e-9,
+            "{} vs {expect}",
+            r.makespan.raw()
+        );
+    }
+
+    #[test]
+    fn zero_service_completes_at_dep_finish() {
+        let mut eng = EventEngine::new();
+        let res = eng.fifo("r");
+        let dram = eng.fair("d", 1.0);
+        let a = eng.task(res, Service::Busy(Seconds(2.0)), &[]);
+        let b = eng.task(res, Service::Busy(Seconds::ZERO), &[a]);
+        let c = eng.task(dram, Service::Transfer(Bytes::ZERO), &[a]);
+        let r = eng.run();
+        assert_eq!(r.finish[b], Seconds(2.0));
+        assert_eq!(r.finish[c], Seconds(2.0));
+    }
+
+    #[test]
+    fn reruns_are_deterministic() {
+        let mut eng = EventEngine::new();
+        let link = eng.fifo("link");
+        let dram = eng.fair("dram", 3.0);
+        let mut last = Vec::new();
+        for i in 0..20 {
+            let deps = last.clone();
+            let t = if i % 2 == 0 {
+                eng.task(link, Service::Busy(Seconds(0.5 + i as f64)), &deps)
+            } else {
+                eng.task(dram, Service::Transfer(Bytes(7.0 * i as f64)), &deps)
+            };
+            if i % 3 == 0 {
+                last = vec![t];
+            } else {
+                last.push(t);
+            }
+        }
+        let r1 = eng.run();
+        let r2 = eng.run();
+        assert_eq!(r1.finish, r2.finish);
+        assert_eq!(r1.start, r2.start);
+        assert_eq!(r1.events, r2.events);
+    }
+
+    /// The canonical two-stage pipeline (n DRAM chunks feeding n compute
+    /// slots) lands exactly on the analytic `max(A,B) + min(A,B)/n`.
+    #[test]
+    fn pipeline_identity_matches_closed_form() {
+        prop::check("2-stage pipeline == max+min/n", 64, |g| {
+            let a_total = g.f64_range(1e-4, 1.0);
+            let b_total = g.f64_range(1e-4, 1.0);
+            let n = g.usize_range(1, 64);
+            let mut eng = EventEngine::new();
+            let pkg = eng.fifo("pkg");
+            let dram = eng.fifo("dram");
+            let a = a_total / n as f64;
+            let b = b_total / n as f64;
+            let mut prev_d: Option<TaskId> = None;
+            let mut prev_p: Option<TaskId> = None;
+            for _ in 0..n {
+                let deps_d: Vec<TaskId> = prev_d.into_iter().collect();
+                let d = eng.task(dram, Service::Busy(Seconds(b)), &deps_d);
+                let mut deps_p = vec![d];
+                if let Some(p) = prev_p {
+                    deps_p.push(p);
+                }
+                let p = eng.task(pkg, Service::Busy(Seconds(a)), &deps_p);
+                prev_d = Some(d);
+                prev_p = Some(p);
+            }
+            let got = eng.run().makespan.raw();
+            let want = a_total.max(b_total) + a_total.min(b_total) / n as f64;
+            prop::assert_close(got, want, 1e-9, format!("n={n}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "does not exist yet")]
+    fn forward_dependencies_are_rejected() {
+        let mut eng = EventEngine::new();
+        let r = eng.fifo("r");
+        eng.task(r, Service::Busy(Seconds(1.0)), &[5]);
+    }
+
+    #[test]
+    fn resource_accessors() {
+        let mut eng = EventEngine::new();
+        let r = eng.fair("dram", 2.0);
+        assert_eq!(eng.resource_name(r), "dram");
+        assert_eq!(eng.n_resources(), 1);
+        assert_eq!(eng.n_tasks(), 0);
+    }
+}

@@ -2,9 +2,15 @@
 //! collective costs, the DRAM stream model and the fusion/overlap schedule
 //! into end-to-end training latency and energy (the paper's evaluation
 //! testbed, §VI).
+//!
+//! Timing is produced by one of two backends ([`system::EngineKind`]): the
+//! closed-form **analytic** path (Table III parity) or the **event** path
+//! running on the discrete-event core in [`engine`].
 
+pub mod engine;
 pub mod system;
 pub mod weak_scaling;
 
-pub use system::{simulate, LatencyBreakdown, SimResult};
+pub use engine::{EventEngine, RunResult, Service, Sharing};
+pub use system::{simulate, simulate_engine, EngineKind, LatencyBreakdown, SimResult};
 pub use weak_scaling::{weak_scaling_sweep, WeakScalingPoint};

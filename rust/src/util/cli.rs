@@ -103,9 +103,16 @@ impl Matches {
 }
 
 /// CLI error (unknown option, missing value, …).
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("{0}")]
+#[derive(Debug, PartialEq)]
 pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// An application: name, about, and subcommands.
 #[derive(Debug, Clone, Default)]

@@ -1,0 +1,194 @@
+//! Integration tests for the discrete-event engine refactor: event-backend
+//! vs analytic parity across every training method, per-pass parity of the
+//! step schedules against the Table III closed forms, and the congestion
+//! scenarios only the event engine can express.
+
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
+use hecaton::nop::analytic::{table3, Block, Method, NopParams, Pass};
+use hecaton::nop::collective::{
+    event_time_concurrent, flat_ring_all_reduce_schedule, flat_ring_phase_schedule,
+    ring_step_schedule, torus_all_reduce_schedule, CollectiveKind, CollectiveSchedule,
+};
+use hecaton::sim::system::{simulate_engine, EngineKind};
+use hecaton::util::prop;
+use hecaton::util::{Bytes, Seconds};
+
+fn link() -> LinkConfig {
+    LinkConfig::for_package(PackageKind::Standard)
+}
+
+/// `--engine event` end-to-end: on uncongested square meshes the event
+/// backend reproduces the analytic closed forms within 1% for **all four
+/// methods** (each simulated batch exercises both the forward and backward
+/// pass stages), and the latency breakdown stays self-consistent.
+#[test]
+fn event_vs_analytic_parity_property() {
+    prop::check("simulate event == analytic (<=1%)", 24, |g| {
+        let model = *g.pick(&["tinyllama-1.1b", "gpt3-6.7b"]);
+        let dies = *g.pick(&[4usize, 16, 64]);
+        let dram = *g.pick(&[DramKind::Ddr4_3200, DramKind::Ddr5_6400]);
+        let package = *g.pick(&[PackageKind::Standard, PackageKind::Advanced]);
+        let m = model_preset(model).unwrap();
+        let hw = HardwareConfig::square(dies, package, dram);
+        for method in Method::all() {
+            let an = simulate_engine(&m, &hw, method, EngineKind::Analytic);
+            let ev = simulate_engine(&m, &hw, method, EngineKind::Event);
+            prop::assert_close(
+                ev.latency.raw(),
+                an.latency.raw(),
+                1e-2,
+                format!("{model}/{dies}/{method:?} latency"),
+            )?;
+            prop::assert_close(
+                ev.breakdown.total().raw(),
+                ev.latency.raw(),
+                2e-2,
+                format!("{model}/{dies}/{method:?} breakdown sum"),
+            )?;
+            // Energy only depends on timing through the static term.
+            prop::assert_close(
+                ev.energy_total.raw(),
+                an.energy_total.raw(),
+                1e-2,
+                format!("{model}/{dies}/{method:?} energy"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Per-pass parity at the NoP level: the composed step schedules of the
+/// ring-based methods, replayed on the event engine, land exactly on the
+/// Table III closed forms for both passes.
+#[test]
+fn schedules_match_table3_both_passes() {
+    let l = link();
+    for n in [16usize, 64, 256] {
+        let rn = (n as f64).sqrt() as usize;
+        let act = Bytes(1.0e8);
+        let p = NopParams {
+            n,
+            alpha: l.latency,
+            gamma: act.over_bandwidth(l.bandwidth),
+            xi: Seconds::ZERO,
+        };
+        let per_ring = act / rn as f64;
+        let ag = |v: Bytes| ring_step_schedule(CollectiveKind::AllGather, rn, v);
+        let rs = |v: Bytes| ring_step_schedule(CollectiveKind::ReduceScatter, rn, v);
+
+        // Hecaton fwd Attention: AG(X) → RS(QKV) → AG(A) → RS(O).
+        let fwd = ag(per_ring)
+            .then(rs(per_ring * 3.0))
+            .then(ag(per_ring))
+            .then(rs(per_ring));
+        // Hecaton bwd Attention: per linear AG(dOut) → RS(dIn) → AG(in).
+        let bwd = ag(per_ring * 3.0)
+            .then(rs(per_ring))
+            .then(ag(per_ring))
+            .then(ag(per_ring))
+            .then(rs(per_ring))
+            .then(ag(per_ring));
+        for (sched, pass) in [(fwd, Pass::Fwd), (bwd, Pass::Bwd)] {
+            let (l_cf, t_cf) = table3(Method::Hecaton, Block::Attention, pass, &p);
+            let want = (l_cf + t_cf).raw();
+            let got = sched.event_time(&l).raw();
+            assert!(
+                (got - want).abs() / want < 1e-9,
+                "hecaton {pass:?} n={n}: {got} vs {want}"
+            );
+        }
+
+        // Flat ring: AR fwd; AR + AG bwd.
+        let fwd = flat_ring_all_reduce_schedule(n, act);
+        let bwd = flat_ring_all_reduce_schedule(n, act).then(flat_ring_phase_schedule(n, act));
+        for (sched, pass) in [(fwd, Pass::Fwd), (bwd, Pass::Bwd)] {
+            let (l_cf, t_cf) = table3(Method::FlatRing, Block::Ffn, pass, &p);
+            let want = (l_cf + t_cf).raw();
+            let got = sched.event_time(&l).raw();
+            assert!(
+                (got - want).abs() / want < 1e-9,
+                "flat-ring {pass:?} n={n}: {got} vs {want}"
+            );
+        }
+
+        // Torus fwd (bwd is covered end-to-end by the simulate-level
+        // parity test; its Table III row is 1.5× this schedule).
+        let torus = torus_all_reduce_schedule(rn, act);
+        let (l_cf, t_cf) = table3(Method::TorusRing, Block::Attention, Pass::Fwd, &p);
+        let want = (l_cf + t_cf).raw();
+        let got = torus.event_time(&l).raw();
+        assert!(
+            (got - want).abs() / want < 1e-9,
+            "torus fwd n={n}: {got} vs {want}"
+        );
+    }
+}
+
+/// Scenarios the closed forms cannot express, end-to-end.
+#[test]
+fn congestion_scenarios_are_expressible() {
+    let l = link();
+
+    // (a) Link contention: two collectives on a shared fabric serialize;
+    // the analytic `alongside` (disjoint links) is a strict lower bound.
+    let a = ring_step_schedule(CollectiveKind::AllGather, 8, Bytes::mib(32.0));
+    let b = ring_step_schedule(CollectiveKind::ReduceScatter, 8, Bytes::mib(32.0));
+    let ideal = a.cost(&l).alongside(b.cost(&l)).total().raw();
+    let contended = event_time_concurrent(&[&a, &b], &l).raw();
+    assert!(contended > ideal * 1.5, "{contended} vs {ideal}");
+
+    // (b) Skewed meshes run end-to-end under the event engine.
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    for (rows, cols) in [(2usize, 8usize), (1, 16), (4, 4)] {
+        let hw = HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
+        let r = simulate_engine(&m, &hw, Method::Hecaton, EngineKind::Event);
+        assert!(r.latency.raw() > 0.0, "{rows}x{cols}");
+        assert!(
+            (r.breakdown.total().raw() - r.latency.raw()).abs() / r.latency.raw() < 0.02,
+            "{rows}x{cols} breakdown"
+        );
+    }
+
+    // (c) Overlap slack: prefetch never loses to the serialized event
+    // schedule, which never loses to... itself; analytic stays the
+    // reference within 1%.
+    let m = model_preset("llama2-70b").unwrap();
+    let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr4_3200);
+    let an = simulate_engine(&m, &hw, Method::Hecaton, EngineKind::Analytic);
+    let ev = simulate_engine(&m, &hw, Method::Hecaton, EngineKind::Event);
+    let pre = simulate_engine(&m, &hw, Method::Hecaton, EngineKind::EventPrefetch);
+    assert!((ev.latency.raw() - an.latency.raw()).abs() / an.latency.raw() < 1e-2);
+    assert!(pre.latency <= ev.latency);
+}
+
+/// An empty schedule is free and a composed schedule's event time is the
+/// sum of its parts (barrier semantics).
+#[test]
+fn schedule_composition_event_times_add() {
+    let l = link();
+    assert_eq!(CollectiveSchedule::default().event_time(&l), Seconds::ZERO);
+    prop::check("then() adds event times", 32, |g| {
+        let n = g.usize_range(2, 10);
+        let s1 = ring_step_schedule(CollectiveKind::AllGather, n, Bytes(g.f64_range(1e4, 1e8)));
+        let s2 = flat_ring_phase_schedule(n, Bytes(g.f64_range(1e4, 1e8)));
+        let sum = s1.event_time(&l) + s2.event_time(&l);
+        let composed = s1.then(s2).event_time(&l);
+        prop::assert_close(composed.raw(), sum.raw(), 1e-9, "composition")
+    });
+}
+
+/// The engine column reaches the report layer: the Fig. 8 grid can be
+/// produced entirely by the event backend.
+#[test]
+fn fig8_grid_runs_on_event_engine() {
+    let cells = hecaton::report::fig8::run_with(EngineKind::Event);
+    assert_eq!(cells.len(), 2 * 4 * 4);
+    for c in &cells {
+        assert_eq!(c.result.engine, EngineKind::Event);
+    }
+    // Hecaton rows still normalize to 1 under the event engine.
+    for c in cells.iter().filter(|c| c.method == Method::Hecaton) {
+        assert!((c.rel_latency - 1.0).abs() < 1e-9);
+    }
+}

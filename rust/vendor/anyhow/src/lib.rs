@@ -1,0 +1,193 @@
+//! Minimal, dependency-free subset of the `anyhow` API, vendored so the
+//! crate builds with no network access (see `rust/Cargo.toml`).
+//!
+//! Implemented surface — exactly what this repository uses:
+//!
+//! * [`Error`]: an owned error with a context chain; `{}` prints the
+//!   outermost message, `{:#}` prints the whole chain joined by `: `
+//!   (matching anyhow's alternate formatting, which the CLI and tests rely
+//!   on).
+//! * [`Result<T>`] alias.
+//! * [`anyhow!`] / [`bail!`] macros with format-string support.
+//! * [`Context`] for adding context to `Result` and `Option`.
+//! * A blanket `From<E: std::error::Error>` so `?` converts any standard
+//!   error (the source chain is flattened into the context chain).
+//!
+//! Dropped relative to the real crate: downcasting, backtraces and
+//! `ensure!` — none are used here. Swap this path dependency for the real
+//! `anyhow` in `rust/Cargo.toml` if those are ever needed.
+
+use std::fmt;
+
+/// An error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (first, rest) = match self.chain.split_first() {
+            Some(x) => x,
+            None => return write!(f, "(empty error)"),
+        };
+        write!(f, "{first}")?;
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::anyhow!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::anyhow!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::anyhow!($err))
+    };
+}
+
+/// Add context to errors (and to `None`).
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "no such file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening manifest").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening manifest: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "fig8";
+        let e = anyhow!("unknown experiment '{name}'");
+        assert_eq!(format!("{e}"), "unknown experiment 'fig8'");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 + 2");
+        fn f() -> Result<()> {
+            bail!("boom {}", 42);
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "boom 42");
+    }
+}
