@@ -16,11 +16,15 @@ use hecaton::nop::analytic::Method;
 use hecaton::nop::collective::{
     flat_ring_all_reduce, ring_step_collective, ring_step_schedule, CollectiveKind,
 };
+use hecaton::parallel::plan::planner;
 use hecaton::runtime::Tensor;
+use hecaton::sched::fusion::plan_fusion;
 use hecaton::sched::pipeline::{overlap_chain_event, GroupStage};
 use hecaton::sim::engine::{EventEngine, Service};
 use hecaton::sim::system::{simulate, simulate_engine, EngineKind};
 use hecaton::util::{Bytes, Seconds};
+use hecaton::workload::ops::BlockDesc;
+use hecaton::workload::transformer::layer_blocks;
 
 fn main() {
     let mut b = common::Bench::new("hotpath");
@@ -35,6 +39,18 @@ fn main() {
     let hw1024 = HardwareConfig::square(1024, PackageKind::Standard, DramKind::Ddr5_6400);
     b.bench("sim/simulate_llama405b_1024d", || {
         common::black_box(simulate(&model405, &hw1024, Method::FlatRing));
+    });
+
+    // ── fusion planner (O(n) guard) ──
+    // 405B's full 126-layer / 252-block chain: the planner used to
+    // re-price the whole prefix per extension (O(n²)); this bench guards
+    // the incremental rewrite.
+    let chain405: Vec<BlockDesc> = (0..model405.layers)
+        .flat_map(|_| layer_blocks(&model405))
+        .collect();
+    let hec = planner(Method::Hecaton);
+    b.bench("sched/plan_fusion_252blocks", || {
+        common::black_box(plan_fusion(&chain405, hec.as_ref(), &hw1024));
     });
 
     // ── discrete-event engine hot paths ──

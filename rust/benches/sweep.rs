@@ -1,0 +1,83 @@
+//! Sweep-subsystem benchmarks: serial vs parallel wall-clock on the
+//! Fig. 8 grid (the acceptance bar is ≥2× on a ≥4-core runner — compare
+//! `sweep/fig8_grid_serial` vs `sweep/fig8_grid_parallel` in
+//! `BENCH_sweep.json`), plan-cache effectiveness across engine backends,
+//! and the O(n) fusion planner on the deepest paper chain.
+
+mod common;
+
+use hecaton::config::presets::{model_preset, paper_pairings};
+use hecaton::config::{DramKind, HardwareConfig, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::parallel::plan::planner;
+use hecaton::sched::fusion::plan_fusion;
+use hecaton::sim::sweep::{run_points_on, run_points_threads, PlanCache, SweepPoint};
+use hecaton::sim::system::EngineKind;
+use hecaton::workload::ops::BlockDesc;
+use hecaton::workload::transformer::layer_blocks;
+
+/// The Fig. 8 grid as a point list: 2 packages × 4 pairings × 4 methods.
+fn fig8_points(engine: EngineKind) -> Vec<SweepPoint> {
+    let mut points = Vec::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for w in paper_pairings() {
+            let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
+            for method in Method::all() {
+                points.push(SweepPoint::new(w.model.clone(), hw.clone(), method, engine));
+            }
+        }
+    }
+    points
+}
+
+fn main() {
+    let mut b = common::Bench::new("sweep");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!("(running on {cores} cores)");
+
+    // ── serial vs parallel: the acceptance-bar pair ──
+    let points = fig8_points(EngineKind::Analytic);
+    b.bench("sweep/fig8_grid_serial", || {
+        common::black_box(run_points_threads(&points, 1));
+    });
+    b.bench("sweep/fig8_grid_parallel", || {
+        common::black_box(run_points_threads(&points, 0));
+    });
+
+    // ── plan cache: all three engines over the parity mesh; cold vs a
+    // pre-warmed cache (plans shared across engines and iterations) ──
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let engine_points: Vec<SweepPoint> = Method::all()
+        .into_iter()
+        .flat_map(|method| {
+            EngineKind::all()
+                .into_iter()
+                .map(|e| SweepPoint::new(m.clone(), hw.clone(), method, e))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    b.bench("sweep/engines_x_methods_cold", || {
+        common::black_box(run_points_threads(&engine_points, 1));
+    });
+    let warm = PlanCache::new();
+    let _ = run_points_on(&warm, &engine_points, 1);
+    b.bench("sweep/engines_x_methods_warm_cache", || {
+        common::black_box(run_points_on(&warm, &engine_points, 1));
+    });
+
+    // ── fusion planner: O(n) guard on 405B's 252-block chain ──
+    let model405 = model_preset("llama3.1-405b").unwrap();
+    let hw1024 = HardwareConfig::square(1024, PackageKind::Standard, DramKind::Ddr5_6400);
+    let chain405: Vec<BlockDesc> = (0..model405.layers)
+        .flat_map(|_| layer_blocks(&model405))
+        .collect();
+    let hec = planner(Method::Hecaton);
+    b.bench("sweep/plan_fusion_252blocks", || {
+        common::black_box(plan_fusion(&chain405, hec.as_ref(), &hw1024));
+    });
+
+    b.finish_with_json("BENCH_sweep.json");
+}

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `simulate`  — run the system simulator on one (model, hardware, method)
+//! * `sweep`     — run a scenario grid in parallel (memoized planning,
+//!   Pareto-annotated table/CSV/JSON output)
 //! * `reproduce` — regenerate a paper table/figure (fig8, fig9, …)
 //! * `train`     — functional distributed training with a loss curve
 //! * `info`      — show presets and the resolved configuration
@@ -9,8 +11,9 @@
 use anyhow::anyhow;
 
 use crate::config::presets::{eval_models, model_preset};
-use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
 use crate::nop::analytic::Method;
+use crate::sim::sweep::{self, PlanCache, SweepGrid};
 use crate::sim::system::{simulate_with, EngineKind, SimOptions};
 use crate::util::cli::{App, CommandSpec, Matches};
 use crate::util::table::Table;
@@ -28,6 +31,17 @@ pub fn app() -> App {
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
                 .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
                 .opt("config", "", "TOML config file (overrides the above)"),
+        )
+        .command(
+            CommandSpec::new("sweep", "run a scenario grid in parallel (plan cache + Pareto)")
+                .opt("models", "tinyllama-1.1b", "comma list of model presets, or 'all'")
+                .opt("meshes", "4x4", "comma list of RxC meshes and/or square die counts, e.g. 4x4,2x8,64")
+                .opt("packages", "standard", "comma list: standard,advanced or 'all'")
+                .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
+                .opt("methods", "all", "comma list of TP methods, or 'all'")
+                .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("threads", "0", "worker threads (0 = one per core; 1 = serial)")
+                .opt("format", "table", "output format: table | csv | json"),
         )
         .command(
             CommandSpec::new("reproduce", "regenerate a paper table/figure")
@@ -53,6 +67,7 @@ pub fn run(args: &[String]) -> crate::Result<i32> {
     };
     match m.command.as_str() {
         "simulate" => cmd_simulate(&m),
+        "sweep" => cmd_sweep(&m),
         "reproduce" => cmd_reproduce(&m),
         "train" => cmd_train(&m),
         "info" => cmd_info(),
@@ -65,7 +80,24 @@ fn parse_mesh(s: &str) -> crate::Result<(usize, usize)> {
     let (r, c) = s
         .split_once('x')
         .ok_or_else(|| anyhow!("mesh must be RxC, e.g. 4x4"))?;
-    Ok((r.parse()?, c.parse()?))
+    let (r, c): (usize, usize) = (r.trim().parse()?, c.trim().parse()?);
+    if r == 0 || c == 0 {
+        return Err(anyhow!(
+            "degenerate mesh {r}x{c}: need at least 1 row and 1 column of dies"
+        ));
+    }
+    Ok((r, c))
+}
+
+/// Percentage cell for breakdown rows: `part / total` rendered with
+/// `decimals` digits, or an em-dash when the total is zero or non-finite
+/// (a zero-latency degenerate run must not print NaN%).
+fn pct(part: f64, total: f64, decimals: usize) -> String {
+    if total > 0.0 && total.is_finite() && part.is_finite() {
+        format!("{:.*}%", decimals, 100.0 * part / total)
+    } else {
+        "—".to_string()
+    }
 }
 
 fn cmd_simulate(m: &Matches) -> crate::Result<()> {
@@ -80,9 +112,9 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
         let dram = DramKind::parse(m.value("dram")).ok_or_else(|| anyhow!("bad dram"))?;
         let hw = if !m.value("mesh").is_empty() {
             let (r, c) = parse_mesh(m.value("mesh"))?;
-            HardwareConfig::mesh(r, c, package, dram)
+            HardwareConfig::try_mesh(r, c, package, dram)?
         } else {
-            HardwareConfig::square(m.parse_value("dies")?, package, dram)
+            HardwareConfig::try_square(m.parse_value("dies")?, package, dram)?
         };
         (model, hw)
     };
@@ -111,23 +143,23 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     t.row(crate::table_row!["batch latency", r.latency]);
     t.row(crate::table_row![
         "  compute",
-        format!("{} ({:.1}%)", r.breakdown.compute, 100.0 * r.breakdown.compute.raw() / lat)
+        format!("{} ({})", r.breakdown.compute, pct(r.breakdown.compute.raw(), lat, 1))
     ]);
     t.row(crate::table_row![
         "  NoP transmission",
         format!(
-            "{} ({:.1}%)",
+            "{} ({})",
             r.breakdown.nop_transmission,
-            100.0 * r.breakdown.nop_transmission.raw() / lat
+            pct(r.breakdown.nop_transmission.raw(), lat, 1)
         )
     ]);
     t.row(crate::table_row![
         "  NoP link latency",
-        format!("{} ({:.2}%)", r.breakdown.nop_link, 100.0 * r.breakdown.nop_link.raw() / lat)
+        format!("{} ({})", r.breakdown.nop_link, pct(r.breakdown.nop_link.raw(), lat, 2))
     ]);
     t.row(crate::table_row![
         "  exposed DRAM",
-        format!("{} ({:.1}%)", r.breakdown.dram_exposed, 100.0 * r.breakdown.dram_exposed.raw() / lat)
+        format!("{} ({})", r.breakdown.dram_exposed, pct(r.breakdown.dram_exposed.raw(), lat, 1))
     ]);
     t.row(crate::table_row!["energy / batch", r.energy_total]);
     t.row(crate::table_row![
@@ -144,7 +176,10 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     ]);
     t.row(crate::table_row![
         "PE utilization (worst block)",
-        format!("{:.1}%", 100.0 * r.min_utilization)
+        match r.min_utilization {
+            Some(u) => format!("{:.1}%", 100.0 * u),
+            None => "—".to_string(),
+        }
     ]);
     t.row(crate::table_row![
         "mini-batch",
@@ -159,6 +194,135 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
         if r.feasible() { "yes" } else { "NO (SRAM overflow or layout)" }
     ]);
     println!("{}", t.render());
+    Ok(())
+}
+
+fn list_items(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty()).collect()
+}
+
+fn parse_model_list(s: &str) -> crate::Result<Vec<ModelConfig>> {
+    let names: Vec<&str> = if s.eq_ignore_ascii_case("all") {
+        eval_models().to_vec()
+    } else {
+        list_items(s)
+    };
+    if names.is_empty() {
+        return Err(anyhow!("empty model list"));
+    }
+    names
+        .iter()
+        .map(|n| model_preset(n).ok_or_else(|| anyhow!("unknown model '{n}'")))
+        .collect()
+}
+
+/// Meshes come as `RxC` layouts and/or bare square die counts; both are
+/// validated (no zero rows/cols, square counts must be perfect squares).
+fn parse_mesh_list(s: &str) -> crate::Result<Vec<(usize, usize)>> {
+    let items = list_items(s);
+    if items.is_empty() {
+        return Err(anyhow!("empty mesh list"));
+    }
+    items
+        .iter()
+        .map(|item| {
+            if item.contains('x') {
+                parse_mesh(item)
+            } else {
+                let n: usize = item
+                    .parse()
+                    .map_err(|e| anyhow!("bad mesh '{item}': {e}"))?;
+                let hw =
+                    HardwareConfig::try_square(n, PackageKind::Standard, DramKind::Ddr5_6400)?;
+                Ok((hw.mesh_rows, hw.mesh_cols))
+            }
+        })
+        .collect()
+}
+
+fn parse_package_list(s: &str) -> crate::Result<Vec<PackageKind>> {
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(vec![PackageKind::Standard, PackageKind::Advanced]);
+    }
+    list_items(s)
+        .iter()
+        .map(|x| PackageKind::parse(x).ok_or_else(|| anyhow!("bad package '{x}'")))
+        .collect()
+}
+
+fn parse_dram_list(s: &str) -> crate::Result<Vec<DramKind>> {
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(vec![DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2]);
+    }
+    list_items(s)
+        .iter()
+        .map(|x| DramKind::parse(x).ok_or_else(|| anyhow!("bad dram '{x}'")))
+        .collect()
+}
+
+fn parse_method_list(s: &str) -> crate::Result<Vec<Method>> {
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(Method::all().to_vec());
+    }
+    list_items(s)
+        .iter()
+        .map(|x| Method::parse(x).ok_or_else(|| anyhow!("bad method '{x}'")))
+        .collect()
+}
+
+fn parse_engine_list(s: &str) -> crate::Result<Vec<EngineKind>> {
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(EngineKind::all().to_vec());
+    }
+    list_items(s)
+        .iter()
+        .map(|x| EngineKind::parse(x).ok_or_else(|| anyhow!("bad engine '{x}'")))
+        .collect()
+}
+
+fn cmd_sweep(m: &Matches) -> crate::Result<()> {
+    let grid = SweepGrid {
+        models: parse_model_list(m.value("models"))?,
+        meshes: parse_mesh_list(m.value("meshes"))?,
+        packages: parse_package_list(m.value("packages"))?,
+        drams: parse_dram_list(m.value("drams"))?,
+        methods: parse_method_list(m.value("methods"))?,
+        engines: parse_engine_list(m.value("engines"))?,
+    };
+    if grid.is_empty() {
+        return Err(anyhow!("empty sweep grid"));
+    }
+    // Validate the output format *before* burning cores on the grid.
+    let format = m.value("format");
+    if !matches!(format, "table" | "csv" | "json") {
+        return Err(anyhow!("bad format '{format}' (table | csv | json)"));
+    }
+    let threads: usize = m.parse_value("threads")?;
+    let points = grid.points()?;
+    let t0 = std::time::Instant::now();
+    let cache = PlanCache::new();
+    let results = sweep::run_points_on(&cache, &points, threads);
+    let wall = t0.elapsed();
+    let front = sweep::pareto_front(
+        &results
+            .iter()
+            .map(|r| (r.latency.raw(), r.energy_total.raw()))
+            .collect::<Vec<_>>(),
+    );
+    match format {
+        "table" => println!("{}", sweep::render_table(&points, &results, &front)),
+        "csv" => print!("{}", sweep::render_csv(&points, &results, &front)),
+        "json" => print!("{}", sweep::render_json(&points, &results, &front)),
+        _ => unreachable!("format validated above"),
+    }
+    // Run stats go to stderr so stdout stays machine-parseable.
+    eprintln!(
+        "sweep: {} points, {} plans built, {} cache hits, {:?} wall",
+        points.len(),
+        cache.misses(),
+        cache.hits(),
+        wall
+    );
     Ok(())
 }
 
@@ -256,6 +420,7 @@ mod tests {
     fn app_parses_all_subcommands() {
         let a = app();
         assert!(a.parse(&argv(&["simulate", "--model", "tiny"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["sweep", "--models", "tiny"])).unwrap().is_some());
         assert!(a.parse(&argv(&["reproduce", "fig8"])).unwrap().is_some());
         assert!(a.parse(&argv(&["train", "--steps", "3"])).unwrap().is_some());
         assert!(a.parse(&argv(&["info"])).unwrap().is_some());
@@ -267,6 +432,85 @@ mod tests {
         assert_eq!(parse_mesh("4x4").unwrap(), (4, 4));
         assert_eq!(parse_mesh("2x8").unwrap(), (2, 8));
         assert!(parse_mesh("44").is_err());
+        // Regression: degenerate meshes are parse errors, not downstream
+        // panics / division by zero.
+        assert!(parse_mesh("0x4").is_err());
+        assert!(parse_mesh("4x0").is_err());
+    }
+
+    /// Regression: `simulate` rejects degenerate hardware with a clean
+    /// error (no panic), for both --mesh and --dies forms.
+    #[test]
+    fn simulate_rejects_degenerate_hardware() {
+        let a = app();
+        for args in [
+            vec!["simulate", "--mesh", "0x4"],
+            vec!["simulate", "--mesh", "4x0"],
+            vec!["simulate", "--dies", "0"],
+            vec!["simulate", "--dies", "12"], // not a perfect square
+        ] {
+            let m = a.parse(&argv(&args)).unwrap().unwrap();
+            let r = cmd_simulate(&m);
+            assert!(r.is_err(), "{args:?} should error cleanly");
+        }
+    }
+
+    /// Regression: breakdown percentages guard against a zero/non-finite
+    /// denominator instead of printing NaN%.
+    #[test]
+    fn pct_guards_zero_total() {
+        assert_eq!(pct(0.5, 0.0, 1), "—");
+        assert_eq!(pct(0.5, f64::NAN, 1), "—");
+        assert_eq!(pct(f64::NAN, 1.0, 1), "—");
+        assert_eq!(pct(0.5, 2.0, 1), "25.0%");
+        assert_eq!(pct(0.25, 1.0, 2), "25.00%");
+    }
+
+    #[test]
+    fn sweep_list_parsers() {
+        assert_eq!(parse_model_list("all").unwrap().len(), eval_models().len());
+        assert_eq!(
+            parse_model_list("tinyllama-1.1b, llama2-7b").unwrap().len(),
+            2
+        );
+        assert!(parse_model_list("nope").is_err());
+        assert_eq!(parse_mesh_list("4x4,16,2x8").unwrap(), vec![(4, 4), (4, 4), (2, 8)]);
+        assert!(parse_mesh_list("0x4").is_err());
+        assert!(parse_mesh_list("12").is_err());
+        assert_eq!(parse_package_list("all").unwrap().len(), 2);
+        assert_eq!(parse_dram_list("all").unwrap().len(), 3);
+        assert_eq!(parse_method_list("all").unwrap().len(), 4);
+        assert_eq!(parse_engine_list("event,analytic").unwrap().len(), 2);
+        assert!(parse_engine_list("warp-drive").is_err());
+    }
+
+    #[test]
+    fn sweep_command_runs_all_formats() {
+        let a = app();
+        for format in ["table", "csv", "json"] {
+            let m = a
+                .parse(&argv(&[
+                    "sweep",
+                    "--models",
+                    "tinyllama-1.1b",
+                    "--meshes",
+                    "4x4",
+                    "--methods",
+                    "hecaton,flat-ring",
+                    "--threads",
+                    "2",
+                    "--format",
+                    format,
+                ]))
+                .unwrap()
+                .unwrap();
+            cmd_sweep(&m).unwrap();
+        }
+        let bad = a
+            .parse(&argv(&["sweep", "--format", "yaml"]))
+            .unwrap()
+            .unwrap();
+        assert!(cmd_sweep(&bad).is_err());
     }
 
     #[test]

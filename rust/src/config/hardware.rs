@@ -237,6 +237,43 @@ impl HardwareConfig {
         Self::mesh(side, side, package, dram)
     }
 
+    /// [`Self::mesh`] that rejects degenerate layouts with a proper error
+    /// instead of letting a zero-die package panic or divide by zero
+    /// downstream (planner per-die shares, DRAM channel math). User-facing
+    /// entry points (CLI, sweep grids) construct hardware through this.
+    pub fn try_mesh(
+        rows: usize,
+        cols: usize,
+        package: PackageKind,
+        dram: DramKind,
+    ) -> crate::Result<HardwareConfig> {
+        if rows == 0 || cols == 0 {
+            anyhow::bail!(
+                "degenerate mesh {rows}x{cols}: need at least 1 row and 1 column of dies"
+            );
+        }
+        Ok(Self::mesh(rows, cols, package, dram))
+    }
+
+    /// [`Self::square`] with validation instead of a panic: `n` must be a
+    /// positive perfect square.
+    pub fn try_square(
+        n: usize,
+        package: PackageKind,
+        dram: DramKind,
+    ) -> crate::Result<HardwareConfig> {
+        if n == 0 {
+            anyhow::bail!("die count must be at least 1");
+        }
+        let side = (n as f64).sqrt().round() as usize;
+        if side * side != n {
+            anyhow::bail!(
+                "die count {n} is not a perfect square; use an explicit RxC mesh for rectangles"
+            );
+        }
+        Self::try_mesh(side, side, package, dram)
+    }
+
     /// Swap the DRAM generation (Fig. 10 sweep).
     pub fn with_dram(mut self, kind: DramKind) -> HardwareConfig {
         self.dram = DramConfig::preset(kind);
@@ -287,6 +324,26 @@ mod tests {
             HardwareConfig::square(12, PackageKind::Standard, DramKind::Ddr5_6400)
         });
         assert!(r.is_err());
+    }
+
+    /// Regression: degenerate layouts are rejected with errors, not
+    /// panics or downstream division by zero.
+    #[test]
+    fn try_constructors_reject_degenerate_hardware() {
+        assert!(HardwareConfig::try_mesh(0, 4, PackageKind::Standard, DramKind::Ddr5_6400)
+            .is_err());
+        assert!(HardwareConfig::try_mesh(4, 0, PackageKind::Standard, DramKind::Ddr5_6400)
+            .is_err());
+        assert!(HardwareConfig::try_square(0, PackageKind::Standard, DramKind::Ddr5_6400)
+            .is_err());
+        assert!(HardwareConfig::try_square(12, PackageKind::Standard, DramKind::Ddr5_6400)
+            .is_err());
+        let ok = HardwareConfig::try_mesh(2, 8, PackageKind::Standard, DramKind::Ddr5_6400)
+            .unwrap();
+        assert_eq!(ok.n_dies(), 16);
+        let sq =
+            HardwareConfig::try_square(16, PackageKind::Advanced, DramKind::Hbm2).unwrap();
+        assert_eq!((sq.mesh_rows, sq.mesh_cols), (4, 4));
     }
 
     #[test]

@@ -62,24 +62,14 @@ pub(crate) fn one_d_block_plan(
     for shape in one_d_shapes(block, n, tokens) {
         match pass {
             Pass::Fwd => {
-                let u = dc.utilization(shape);
                 plan.compute.add(dc.matmul(shape));
-                plan.min_utilization = if plan.min_utilization == 0.0 {
-                    u
-                } else {
-                    plan.min_utilization.min(u)
-                };
+                plan.note_utilization(dc.utilization(shape));
             }
             Pass::Bwd => {
                 let (dx, dw) = shape.backward();
                 for s in [dx, dw] {
-                    let u = dc.utilization(s);
                     plan.compute.add(dc.matmul(s));
-                    plan.min_utilization = if plan.min_utilization == 0.0 {
-                        u
-                    } else {
-                        plan.min_utilization.min(u)
-                    };
+                    plan.note_utilization(dc.utilization(s));
                 }
             }
         }
@@ -219,10 +209,12 @@ mod tests {
         let b = attention_block(&m);
         let u_small = p
             .block_plan(&b, Pass::Fwd, &PlanInput::new(&m, &small), m.seq_len)
-            .min_utilization;
+            .min_utilization
+            .expect("attention block has matmuls");
         let u_large = p
             .block_plan(&b, Pass::Fwd, &PlanInput::new(&m, &large), m.seq_len)
-            .min_utilization;
+            .min_utilization
+            .expect("attention block has matmuls");
         assert!(
             u_large < u_small,
             "util should degrade: {u_small} -> {u_large}"

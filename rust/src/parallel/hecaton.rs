@@ -173,26 +173,15 @@ impl TpPlanner for HecatonPlanner {
             match pass {
                 Pass::Fwd => {
                     plan.nop = plan.nop.then(Self::linear_fwd_nop(l, o, tokens, hw));
-                    let cost = dc.matmul(fwd_shape);
-                    let u = dc.utilization(fwd_shape);
-                    plan.compute.add(cost);
-                    plan.min_utilization = if plan.min_utilization == 0.0 {
-                        u
-                    } else {
-                        plan.min_utilization.min(u)
-                    };
+                    plan.compute.add(dc.matmul(fwd_shape));
+                    plan.note_utilization(dc.utilization(fwd_shape));
                 }
                 Pass::Bwd => {
                     plan.nop = plan.nop.then(Self::linear_bwd_nop(l, o, tokens, hw));
                     let (dx, dw) = fwd_shape.backward();
                     for s in [dx, dw] {
-                        let u = dc.utilization(s);
                         plan.compute.add(dc.matmul(s));
-                        plan.min_utilization = if plan.min_utilization == 0.0 {
-                            u
-                        } else {
-                            plan.min_utilization.min(u)
-                        };
+                        plan.note_utilization(dc.utilization(s));
                     }
                 }
             }

@@ -38,19 +38,26 @@ pub struct BlockPlan {
     pub compute: ComputeCost,
     /// Worst matmul utilization in the block (diagnostic; drives the
     /// paper's "1D-TP computation time increases" observation).
-    pub min_utilization: f64,
+    /// `None` until the first matmul is recorded — a genuine 0.0 from a
+    /// degenerate shape is a real measurement and must not be dropped.
+    pub min_utilization: Option<f64>,
 }
 
 impl BlockPlan {
+    /// Record one matmul's utilization, keeping the running minimum.
+    pub fn note_utilization(&mut self, u: f64) {
+        self.min_utilization = Some(match self.min_utilization {
+            None => u,
+            Some(m) => m.min(u),
+        });
+    }
+
     pub fn merge(&mut self, other: BlockPlan) {
         self.nop = self.nop.then(other.nop);
         self.compute.add(other.compute);
-        self.min_utilization = if self.min_utilization == 0.0 {
-            other.min_utilization
-        } else if other.min_utilization == 0.0 {
-            self.min_utilization
-        } else {
-            self.min_utilization.min(other.min_utilization)
+        self.min_utilization = match (self.min_utilization, other.min_utilization) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
         };
     }
 }
@@ -213,19 +220,48 @@ mod tests {
     #[test]
     fn block_plan_merge_takes_min_utilization() {
         let mut a = BlockPlan {
-            min_utilization: 0.8,
+            min_utilization: Some(0.8),
             ..Default::default()
         };
         let b = BlockPlan {
-            min_utilization: 0.3,
+            min_utilization: Some(0.3),
             ..Default::default()
         };
         a.merge(b);
-        assert_eq!(a.min_utilization, 0.3);
+        assert_eq!(a.min_utilization, Some(0.3));
         // merging into a fresh plan adopts the other's utilization
         let mut fresh = BlockPlan::default();
         fresh.merge(a);
-        assert_eq!(fresh.min_utilization, 0.3);
+        assert_eq!(fresh.min_utilization, Some(0.3));
+    }
+
+    /// Regression (min-utilization under-reporting): a *genuine* zero
+    /// utilization is a measurement, not "unset" — it must survive merges
+    /// and stay distinguishable from a plan with no matmuls at all.
+    #[test]
+    fn zero_utilization_is_not_unset() {
+        let mut degenerate = BlockPlan::default();
+        assert_eq!(degenerate.min_utilization, None, "fresh plan is unset");
+        degenerate.note_utilization(0.0);
+        assert_eq!(degenerate.min_utilization, Some(0.0));
+
+        let mut healthy = BlockPlan {
+            min_utilization: Some(0.9),
+            ..Default::default()
+        };
+        healthy.merge(degenerate);
+        assert_eq!(
+            healthy.min_utilization,
+            Some(0.0),
+            "zero-utilization block must drag the minimum to 0"
+        );
+
+        // note_utilization keeps the running minimum.
+        let mut p = BlockPlan::default();
+        p.note_utilization(0.7);
+        p.note_utilization(0.4);
+        p.note_utilization(0.6);
+        assert_eq!(p.min_utilization, Some(0.4));
     }
 
     #[test]

@@ -10,7 +10,8 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::{simulate_with, SimOptions};
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::SimOptions;
 use crate::util::table::Table;
 
 pub struct Row {
@@ -28,38 +29,60 @@ pub struct Row {
 }
 
 pub fn run() -> Vec<Row> {
-    paper_pairings()
+    // Four ablation variants per pairing, executed as one parallel sweep.
+    // The variants differ in `SimOptions` (plan-cache keys include the
+    // ablation switches) and, for the fusion pair, in hardware:
+    // fusion ablation runs at 4× weight buffers — with the paper's 8 MB a
+    // layer's two blocks never co-reside (each alone nearly fills the
+    // buffer, §III-B: "the fusion depth is constrained by the capacity of
+    // weight buffers"), so block-level fusion is a no-op on these
+    // workloads. 32 MB buffers let Attention+FFN fuse, isolating the
+    // fusion saving.
+    let pairings = paper_pairings();
+    let mut points = Vec::new();
+    for w in &pairings {
+        let hw = HardwareConfig::square(w.dies, PackageKind::Standard, DramKind::Ddr5_6400);
+        let mut hw_big = hw.clone();
+        hw_big.die.weight_buf = hw_big.die.weight_buf * 4.0;
+        points.push(SweepPoint::with_opts(
+            w.model.clone(),
+            hw.clone(),
+            Method::Hecaton,
+            SimOptions::default(),
+        ));
+        points.push(SweepPoint::with_opts(
+            w.model.clone(),
+            hw,
+            Method::Hecaton,
+            SimOptions {
+                bypass_router: false,
+                ..Default::default()
+            },
+        ));
+        points.push(SweepPoint::with_opts(
+            w.model.clone(),
+            hw_big.clone(),
+            Method::Hecaton,
+            SimOptions::default(),
+        ));
+        points.push(SweepPoint::with_opts(
+            w.model.clone(),
+            hw_big,
+            Method::Hecaton,
+            SimOptions {
+                fusion: false,
+                ..Default::default()
+            },
+        ));
+    }
+    let results = run_points(&points);
+    pairings
         .iter()
-        .map(|w| {
-            let hw = HardwareConfig::square(w.dies, PackageKind::Standard, DramKind::Ddr5_6400);
-            let full = simulate_with(&w.model, &hw, Method::Hecaton, SimOptions::default());
-            let no_bypass = simulate_with(
-                &w.model,
-                &hw,
-                Method::Hecaton,
-                SimOptions {
-                    bypass_router: false,
-                    ..Default::default()
-                },
-            );
-            // Fusion ablation at 4× weight buffers: with the paper's 8 MB
-            // a layer's two blocks never co-reside (each alone nearly
-            // fills the buffer — §III-B: "the fusion depth is constrained
-            // by the capacity of weight buffers"), so block-level fusion
-            // is a no-op on these workloads. 32 MB buffers let
-            // Attention+FFN fuse, isolating the fusion saving.
-            let mut hw_big = hw.clone();
-            hw_big.die.weight_buf = hw_big.die.weight_buf * 4.0;
-            let fused_big = simulate_with(&w.model, &hw_big, Method::Hecaton, SimOptions::default());
-            let no_fusion = simulate_with(
-                &w.model,
-                &hw_big,
-                Method::Hecaton,
-                SimOptions {
-                    fusion: false,
-                    ..Default::default()
-                },
-            );
+        .zip(results.chunks(4))
+        .map(|(w, chunk)| {
+            let [full, no_bypass, fused_big, no_fusion] = chunk else {
+                unreachable!("four variants per pairing");
+            };
             Row {
                 model: w.model.name.clone(),
                 dies: w.dies,

@@ -14,7 +14,8 @@ use crate::config::presets::model_preset;
 use crate::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
 use crate::nop::analytic::Method;
 use crate::nop::collective::{event_time_concurrent, ring_step_schedule, CollectiveKind};
-use crate::sim::system::{simulate_engine, EngineKind};
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 use crate::util::Bytes;
 
@@ -23,15 +24,27 @@ pub fn report() -> String {
     let mut out = String::new();
 
     // ── 1. engine parity on an uncongested mesh ──
+    // One sweep per section: methods × engines, all points in parallel,
+    // three engines per method sharing one memoized plan.
     let m = model_preset("tinyllama-1.1b").expect("preset");
     let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let parity_points: Vec<SweepPoint> = Method::all()
+        .into_iter()
+        .flat_map(|method| {
+            EngineKind::all()
+                .into_iter()
+                .map(|e| SweepPoint::new(m.clone(), hw.clone(), method, e))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let parity = run_points(&parity_points);
     let mut t = Table::new(&["method", "analytic", "event", "rel err", "event-prefetch"])
         .with_title("Engine parity — tinyllama-1.1b @ 4x4, uncongested (event must match ≤1%)")
         .label_first();
-    for method in Method::all() {
-        let an = simulate_engine(&m, &hw, method, EngineKind::Analytic);
-        let ev = simulate_engine(&m, &hw, method, EngineKind::Event);
-        let pre = simulate_engine(&m, &hw, method, EngineKind::EventPrefetch);
+    for (method, chunk) in Method::all().into_iter().zip(parity.chunks(3)) {
+        let [an, ev, pre] = chunk else {
+            unreachable!("three engines per method");
+        };
         let rel = (ev.latency.raw() - an.latency.raw()).abs() / an.latency.raw();
         t.row(crate::table_row![
             method.name(),
@@ -45,15 +58,24 @@ pub fn report() -> String {
     out.push('\n');
 
     // ── 2. overlap slack: prefetch across fusion-group boundaries ──
+    let slack_workloads = [("llama2-7b", 64usize), ("llama2-70b", 256)];
+    let slack_points: Vec<SweepPoint> = slack_workloads
+        .iter()
+        .flat_map(|&(name, dies)| {
+            let m = model_preset(name).expect("preset");
+            let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr4_3200);
+            EngineKind::all()
+                .into_iter()
+                .map(move |e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+        })
+        .collect();
+    let slack = run_points(&slack_points);
     let mut t = Table::new(&["workload", "engine", "latency", "exposed DRAM", "vs analytic"])
         .with_title("Overlap slack — cross-group DRAM prefetch (DDR4 to stress the channels)")
         .label_first();
-    for (name, dies) in [("llama2-7b", 64usize), ("llama2-70b", 256)] {
-        let m = model_preset(name).expect("preset");
-        let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr4_3200);
-        let an = simulate_engine(&m, &hw, Method::Hecaton, EngineKind::Analytic);
-        for engine in EngineKind::all() {
-            let r = simulate_engine(&m, &hw, Method::Hecaton, engine);
+    for (&(name, dies), chunk) in slack_workloads.iter().zip(slack.chunks(3)) {
+        let an = &chunk[0]; // EngineKind::all()[0] is Analytic
+        for (engine, r) in EngineKind::all().into_iter().zip(chunk) {
             t.row(crate::table_row![
                 format!("{} (N={})", name, dies),
                 engine.name(),
@@ -98,13 +120,25 @@ pub fn report() -> String {
 
     // ── 4. skewed meshes: same die count, different layouts ──
     let m = model_preset("tinyllama-1.1b").expect("preset");
+    let skew_layouts = [(4usize, 4usize), (2, 8), (1, 16)];
+    let skew_engines = [EngineKind::Analytic, EngineKind::Event];
+    let skew_points: Vec<SweepPoint> = skew_layouts
+        .iter()
+        .flat_map(|&(rows, cols)| {
+            let hw =
+                HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
+            let m = m.clone();
+            skew_engines
+                .into_iter()
+                .map(move |e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+        })
+        .collect();
+    let skew = run_points(&skew_points);
     let mut t = Table::new(&["mesh", "engine", "latency", "NoP share"])
         .with_title("Skewed meshes — Hecaton on 16 dies (row/col rings change length)")
         .label_first();
-    for (rows, cols) in [(4usize, 4usize), (2, 8), (1, 16)] {
-        let hw = HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
-        for engine in [EngineKind::Analytic, EngineKind::Event] {
-            let r = simulate_engine(&m, &hw, Method::Hecaton, engine);
+    for (&(rows, cols), chunk) in skew_layouts.iter().zip(skew.chunks(skew_engines.len())) {
+        for (engine, r) in skew_engines.into_iter().zip(chunk) {
             let nop = (r.breakdown.nop_transmission + r.breakdown.nop_link).raw();
             t.row(crate::table_row![
                 format!("{rows}x{cols}"),

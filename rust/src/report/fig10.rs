@@ -6,7 +6,8 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::simulate;
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
 pub struct Row {
@@ -18,17 +19,32 @@ pub struct Row {
 
 pub fn run() -> Vec<Row> {
     let kinds = [DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2];
-    let mut rows = Vec::new();
+    let pairings = paper_pairings();
+    let mut points = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
-        for w in paper_pairings() {
-            let lat = |k: DramKind| {
+        for w in &pairings {
+            for k in kinds {
                 let hw = HardwareConfig::square(w.dies, package, k);
-                simulate(&w.model, &hw, Method::Hecaton).latency.raw()
-            };
-            let base = lat(DramKind::Ddr5_6400);
+                points.push(SweepPoint::new(
+                    w.model.clone(),
+                    hw,
+                    Method::Hecaton,
+                    EngineKind::Analytic,
+                ));
+            }
+        }
+    }
+    let results = run_points(&points);
+
+    let mut rows = Vec::new();
+    let mut chunks = results.chunks(kinds.len());
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for w in &pairings {
+            let chunk = chunks.next().expect("one chunk per row");
+            let base = chunk[1].latency.raw(); // DDR5-6400
             let mut speedups = [0.0; 3];
-            for (i, k) in kinds.iter().enumerate() {
-                speedups[i] = base / lat(*k);
+            for (i, r) in chunk.iter().enumerate() {
+                speedups[i] = base / r.latency.raw();
             }
             rows.push(Row {
                 model: w.model.name.clone(),
@@ -57,19 +73,39 @@ pub struct KneeRow {
 pub fn run_knee(package: PackageKind) -> Vec<KneeRow> {
     let w = &paper_pairings()[2]; // llama2-70b / 256 dies
     let kinds = [DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2];
-    let base = {
-        let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
-        simulate(&w.model, &hw, Method::Hecaton).latency.raw()
-    };
-    [1.0 / 32.0, 1.0 / 16.0, 1.0 / 8.0, 1.0 / 4.0, 1.0 / 2.0, 1.0]
+    let scales = [1.0 / 32.0, 1.0 / 16.0, 1.0 / 8.0, 1.0 / 4.0, 1.0 / 2.0, 1.0];
+
+    // Point 0 is the full-provision DDR5 baseline; then 3 DRAM kinds per
+    // channel scale. The scaled channel bandwidth makes each hardware
+    // config distinct — the sweep plan cache keys on the full config, so
+    // no scaled variant ever reuses a full-provision plan.
+    let mut points = vec![SweepPoint::new(
+        w.model.clone(),
+        HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400),
+        Method::Hecaton,
+        EngineKind::Analytic,
+    )];
+    for &scale in &scales {
+        for k in kinds {
+            let mut hw = HardwareConfig::square(w.dies, package, k);
+            hw.dram.channel_bandwidth *= scale;
+            points.push(SweepPoint::new(
+                w.model.clone(),
+                hw,
+                Method::Hecaton,
+                EngineKind::Analytic,
+            ));
+        }
+    }
+    let results = run_points(&points);
+    let base = results[0].latency.raw();
+    scales
         .iter()
-        .map(|&scale| {
+        .zip(results[1..].chunks(kinds.len()))
+        .map(|(&scale, chunk)| {
             let mut speedups = [0.0; 3];
-            for (i, k) in kinds.iter().enumerate() {
-                let mut hw = HardwareConfig::square(w.dies, package, *k);
-                hw.dram.channel_bandwidth *= scale;
-                let lat = simulate(&w.model, &hw, Method::Hecaton).latency.raw();
-                speedups[i] = base / lat;
+            for (i, r) in chunk.iter().enumerate() {
+                speedups[i] = base / r.latency.raw();
             }
             KneeRow {
                 channel_scale: scale,

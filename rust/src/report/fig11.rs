@@ -12,7 +12,8 @@
 use crate::config::presets::model_preset;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::simulate;
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
 pub struct Row {
@@ -25,22 +26,34 @@ pub struct Row {
 pub fn run() -> Vec<Row> {
     let model = model_preset("tinyllama-1.1b").expect("preset");
     let layouts = crate::arch::package::Package::layouts_of(16);
-    let square = {
-        let hw = HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400);
-        simulate(&model, &hw, Method::Hecaton)
-    };
+    // Point 0 is the 4×4 normalization baseline, then one point per layout
+    // — all executed on the parallel sweep runner.
+    let mut points = vec![SweepPoint::new(
+        model.clone(),
+        HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400),
+        Method::Hecaton,
+        EngineKind::Analytic,
+    )];
+    for p in &layouts {
+        let hw =
+            HardwareConfig::mesh(p.rows, p.cols, PackageKind::Standard, DramKind::Ddr5_6400);
+        points.push(SweepPoint::new(
+            model.clone(),
+            hw,
+            Method::Hecaton,
+            EngineKind::Analytic,
+        ));
+    }
+    let results = run_points(&points);
+    let square = &results[0];
     layouts
         .iter()
-        .map(|p| {
-            let hw =
-                HardwareConfig::mesh(p.rows, p.cols, PackageKind::Standard, DramKind::Ddr5_6400);
-            let r = simulate(&model, &hw, Method::Hecaton);
-            Row {
-                rows: p.rows,
-                cols: p.cols,
-                rel_latency: r.latency / square.latency,
-                rel_energy: r.energy_total.raw() / square.energy_total.raw(),
-            }
+        .zip(&results[1..])
+        .map(|(p, r)| Row {
+            rows: p.rows,
+            cols: p.cols,
+            rel_latency: r.latency / square.latency,
+            rel_energy: r.energy_total.raw() / square.energy_total.raw(),
         })
         .collect()
 }

@@ -6,7 +6,8 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::{simulate_engine, EngineKind, SimResult};
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::{EngineKind, SimResult};
 use crate::util::table::Table;
 
 /// One measured cell of the figure.
@@ -27,28 +28,39 @@ pub fn run() -> Vec<Cell> {
 }
 
 /// Run the full grid with an explicit timing backend (the engine column of
-/// each row records which one produced it).
+/// each row records which one produced it). The grid executes on the
+/// parallel sweep runner — same rows, same order, many cores.
 pub fn run_with(engine: EngineKind) -> Vec<Cell> {
-    let mut cells = Vec::new();
+    let mut points = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         for w in paper_pairings() {
             let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
-            let hecaton = simulate_engine(&w.model, &hw, Method::Hecaton, engine);
             for method in Method::all() {
-                let r = if method == Method::Hecaton {
-                    hecaton.clone()
-                } else {
-                    simulate_engine(&w.model, &hw, method, engine)
-                };
-                cells.push(Cell {
-                    model: w.model.name.clone(),
-                    package,
-                    method,
-                    rel_latency: r.latency / hecaton.latency,
-                    rel_energy: r.energy_total.raw() / hecaton.energy_total.raw(),
-                    result: r,
-                });
+                points.push(SweepPoint::new(w.model.clone(), hw.clone(), method, engine));
             }
+        }
+    }
+    let results = run_points(&points);
+
+    let mut cells = Vec::new();
+    let hec_idx = Method::all()
+        .iter()
+        .position(|&m| m == Method::Hecaton)
+        .expect("hecaton is a method");
+    for (chunk, pts) in results
+        .chunks(Method::all().len())
+        .zip(points.chunks(Method::all().len()))
+    {
+        let hecaton = &chunk[hec_idx];
+        for (r, p) in chunk.iter().zip(pts) {
+            cells.push(Cell {
+                model: p.model.name.clone(),
+                package: p.hw.package,
+                method: p.method,
+                rel_latency: r.latency / hecaton.latency,
+                rel_energy: r.energy_total.raw() / hecaton.energy_total.raw(),
+                result: r.clone(),
+            });
         }
     }
     cells

@@ -5,7 +5,8 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::simulate;
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
 /// Normalized latency series per (package, method).
@@ -17,17 +18,36 @@ pub struct Series {
 }
 
 pub fn run() -> Vec<Series> {
-    let mut out = Vec::new();
+    // Expand the whole study as one sweep (parallel execution; chunked
+    // back into series below — same rows as the old serial loops).
+    let pairings = paper_pairings();
+    let mut sweep_points = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         for method in Method::all() {
+            for w in &pairings {
+                let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
+                sweep_points.push(SweepPoint::new(
+                    w.model.clone(),
+                    hw,
+                    method,
+                    EngineKind::Analytic,
+                ));
+            }
+        }
+    }
+    let results = run_points(&sweep_points);
+
+    let mut out = Vec::new();
+    let mut chunks = results.chunks(pairings.len());
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for method in Method::all() {
+            let chunk = chunks.next().expect("one chunk per series");
             let mut points = Vec::new();
             let mut base = None;
-            for w in paper_pairings() {
+            for (w, r) in pairings.iter().zip(chunk) {
                 // The workloads' batch token counts and layer depths
                 // differ, so normalize to per-layer per-token latency —
                 // the quantity §V-B predicts constant for Hecaton.
-                let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
-                let r = simulate(&w.model, &hw, method);
                 let per_token = r.latency.raw()
                     / (w.model.tokens_per_batch() as f64 * w.model.layers as f64);
                 let norm = match base {

@@ -41,6 +41,13 @@ pub const WEIGHT_BUF_FILL: f64 = 0.9;
 /// A block whose weights alone exceed the budget still becomes a singleton
 /// group (it streams weight tiles; the planner's `sram_report` flags
 /// whether that is *feasible* — here we only decide fusion depth).
+///
+/// The running group weight is tracked incrementally — each block is
+/// priced once via `weight_bytes_per_die`, making the planner O(n) in the
+/// chain length (it used to re-price the whole prefix on every attempted
+/// extension, O(n²) — pathological for deep chains like 405B's 252-block
+/// layer stack). Per-die weight pricing is linear in the block set, so the
+/// incremental sum and the whole-group pricing agree.
 pub fn plan_fusion(
     blocks: &[BlockDesc],
     planner: &dyn TpPlanner,
@@ -49,32 +56,48 @@ pub fn plan_fusion(
     let budget = hw.die.weight_buf * WEIGHT_BUF_FILL;
     let mut groups: Vec<FusionGroup> = Vec::new();
     let mut current: Vec<usize> = Vec::new();
-
-    let weight_of = |indices: &[usize]| -> Bytes {
-        let refs: Vec<&BlockDesc> = indices.iter().map(|&i| &blocks[i]).collect();
-        planner.weight_bytes_per_die(&refs, hw)
-    };
+    let mut current_weight = Bytes::ZERO;
 
     for idx in 0..blocks.len() {
-        let mut attempt = current.clone();
-        attempt.push(idx);
-        if current.is_empty() || weight_of(&attempt).raw() <= budget.raw() {
-            current = attempt;
+        let w = planner.weight_bytes_per_die(&[&blocks[idx]], hw);
+        if current.is_empty() || (current_weight + w).raw() <= budget.raw() {
+            current.push(idx);
+            current_weight += w;
         } else {
             groups.push(FusionGroup {
-                weight_per_die: weight_of(&current),
+                weight_per_die: current_weight,
                 block_indices: std::mem::take(&mut current),
             });
             current.push(idx);
+            current_weight = w;
         }
     }
     if !current.is_empty() {
         groups.push(FusionGroup {
-            weight_per_die: weight_of(&current),
+            weight_per_die: current_weight,
             block_indices: current,
         });
     }
     groups
+}
+
+/// Every block as its own group — the no-fusion ablation (one DRAM
+/// round-trip per block boundary). Shared by `sim::system`'s
+/// `fusion: false` path so the ablation and the planner agree on group
+/// bookkeeping.
+pub fn singleton_groups(
+    blocks: &[BlockDesc],
+    planner: &dyn TpPlanner,
+    hw: &HardwareConfig,
+) -> Vec<FusionGroup> {
+    blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| FusionGroup {
+            weight_per_die: planner.weight_bytes_per_die(&[b], hw),
+            block_indices: vec![i],
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -136,6 +159,92 @@ mod tests {
             roomy.len(),
             tight.len()
         );
+    }
+
+    /// The old O(n²) planner, kept as the reference implementation: every
+    /// attempted extension re-prices the whole prefix through the planner.
+    fn plan_fusion_quadratic(
+        blocks: &[BlockDesc],
+        planner: &dyn TpPlanner,
+        hw: &HardwareConfig,
+    ) -> Vec<FusionGroup> {
+        let budget = hw.die.weight_buf * WEIGHT_BUF_FILL;
+        let mut groups: Vec<FusionGroup> = Vec::new();
+        let mut current: Vec<usize> = Vec::new();
+        let weight_of = |indices: &[usize]| -> Bytes {
+            let refs: Vec<&BlockDesc> = indices.iter().map(|&i| &blocks[i]).collect();
+            planner.weight_bytes_per_die(&refs, hw)
+        };
+        for idx in 0..blocks.len() {
+            let mut attempt = current.clone();
+            attempt.push(idx);
+            if current.is_empty() || weight_of(&attempt).raw() <= budget.raw() {
+                current = attempt;
+            } else {
+                groups.push(FusionGroup {
+                    weight_per_die: weight_of(&current),
+                    block_indices: std::mem::take(&mut current),
+                });
+                current.push(idx);
+            }
+        }
+        if !current.is_empty() {
+            groups.push(FusionGroup {
+                weight_per_die: weight_of(&current),
+                block_indices: current,
+            });
+        }
+        groups
+    }
+
+    /// Regression for the O(n²) → O(n) rewrite: identical groups (and
+    /// near-identical group weights) across models, methods and buffer
+    /// sizes, including a roomy-buffer config where groups fuse deep.
+    #[test]
+    fn incremental_matches_quadratic_reference() {
+        for (model, dies) in [("tinyllama-1.1b", 16usize), ("llama2-7b", 64), ("llama2-70b", 256)]
+        {
+            let blocks = chain(model, 8);
+            for wbuf_scale in [1.0, 8.0] {
+                let mut hw =
+                    HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400);
+                hw.die.weight_buf = hw.die.weight_buf * wbuf_scale;
+                for method in Method::all() {
+                    let p = planner(method);
+                    let fast = plan_fusion(&blocks, p.as_ref(), &hw);
+                    let slow = plan_fusion_quadratic(&blocks, p.as_ref(), &hw);
+                    let fast_idx: Vec<&[usize]> =
+                        fast.iter().map(|g| g.block_indices.as_slice()).collect();
+                    let slow_idx: Vec<&[usize]> =
+                        slow.iter().map(|g| g.block_indices.as_slice()).collect();
+                    assert_eq!(
+                        fast_idx, slow_idx,
+                        "{model}/{method:?}/wbuf×{wbuf_scale}: groups diverged"
+                    );
+                    for (f, s) in fast.iter().zip(&slow) {
+                        let rel = (f.weight_per_die.raw() - s.weight_per_die.raw()).abs()
+                            / s.weight_per_die.raw().max(1.0);
+                        assert!(rel < 1e-9, "{model}/{method:?}: weight {rel}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_groups_cover_all_blocks() {
+        let blocks = chain("llama2-7b", 2);
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let p = planner(Method::Hecaton);
+        let groups = singleton_groups(&blocks, p.as_ref(), &hw);
+        assert_eq!(groups.len(), blocks.len());
+        for (i, g) in groups.iter().enumerate() {
+            assert_eq!(g.block_indices, vec![i]);
+            assert_eq!(
+                g.weight_per_die.raw(),
+                p.weight_bytes_per_die(&[&blocks[i]], &hw).raw()
+            );
+        }
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod fusion;
 pub mod pipeline;
 
-pub use fusion::{plan_fusion, FusionGroup};
+pub use fusion::{plan_fusion, singleton_groups, FusionGroup};
 pub use pipeline::{overlap, overlap_chain_event, overlap_event, ChainResult, GroupStage, StageTimes};

@@ -7,10 +7,22 @@
 //! closed-form **analytic** path (Table III parity) or the **event** path
 //! running on the discrete-event core in [`engine`].
 
+//!
+//! Simulation proceeds in three phases — **plan** (workload decomposition,
+//! fusion schedule), **price** (per-group stage costs, traffic, energy)
+//! and **time** (a backend turns the stage chain into wall-clock). The
+//! first two are captured in an immutable [`system::SimPlan`]; the
+//! [`sweep`] module runs grids of points in parallel with memoized plans.
+
 pub mod engine;
+pub mod sweep;
 pub mod system;
 pub mod weak_scaling;
 
 pub use engine::{EventEngine, RunResult, Service, Sharing};
-pub use system::{simulate, simulate_engine, EngineKind, LatencyBreakdown, SimResult};
+pub use sweep::{pareto_front, run_points, run_points_threads, PlanCache, SweepGrid, SweepPoint};
+pub use system::{
+    simulate, simulate_engine, simulate_with, EngineKind, LatencyBreakdown, PlanOptions, SimPlan,
+    SimResult,
+};
 pub use weak_scaling::{weak_scaling_sweep, WeakScalingPoint};

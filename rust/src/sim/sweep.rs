@@ -1,0 +1,639 @@
+//! Parallel design-space sweeps with memoized planning.
+//!
+//! Every report driver (`fig8`…`congestion`) and the `hecaton sweep` CLI
+//! runs a grid of simulations; this module makes that grid a first-class
+//! workload:
+//!
+//! * [`SweepGrid`] — a cross-product descriptor
+//!   (models × meshes × packages × DRAM × methods × engines) expanded into
+//!   a deterministically-ordered point list;
+//! * [`run_points`] — a chunked self-scheduling thread pool
+//!   (std::thread + channels, no external deps) that executes any point
+//!   list in parallel. Results are returned **in point order**, so
+//!   parallel output is byte-identical to serial execution and independent
+//!   of the thread count;
+//! * [`PlanCache`] — a memoized [`SimPlan`] store keyed by
+//!   (model, hw, method, plan options): the plan + price phases run once
+//!   per distinct point and are shared across all [`EngineKind`] backends
+//!   and worker threads;
+//! * [`pareto_front`] — latency × energy Pareto annotation for sweep
+//!   output, plus table/CSV/JSON renderers used by the CLI.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::nop::analytic::Method;
+use crate::sim::system::{EngineKind, PlanOptions, SimOptions, SimPlan, SimResult};
+use crate::util::table::Table;
+
+/// One point of a sweep: a fully-specified simulation.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub model: ModelConfig,
+    pub hw: HardwareConfig,
+    pub method: Method,
+    pub opts: SimOptions,
+}
+
+impl SweepPoint {
+    /// A point with default ablation switches and an explicit backend.
+    pub fn new(
+        model: ModelConfig,
+        hw: HardwareConfig,
+        method: Method,
+        engine: EngineKind,
+    ) -> SweepPoint {
+        SweepPoint {
+            model,
+            hw,
+            method,
+            opts: SimOptions {
+                engine,
+                ..SimOptions::default()
+            },
+        }
+    }
+
+    /// A point with explicit ablation switches (used by the ablation
+    /// report driver).
+    pub fn with_opts(
+        model: ModelConfig,
+        hw: HardwareConfig,
+        method: Method,
+        opts: SimOptions,
+    ) -> SweepPoint {
+        SweepPoint {
+            model,
+            hw,
+            method,
+            opts,
+        }
+    }
+}
+
+/// A cross-product scenario grid. `points()` expands it in a fixed nested
+/// order (models → meshes → packages → drams → methods → engines), which
+/// both defines the output ordering and keeps consecutive points sharing
+/// a plan-cache key next to each other.
+#[derive(Debug, Clone, Default)]
+pub struct SweepGrid {
+    pub models: Vec<ModelConfig>,
+    /// Mesh layouts as (rows, cols).
+    pub meshes: Vec<(usize, usize)>,
+    pub packages: Vec<crate::config::PackageKind>,
+    pub drams: Vec<crate::config::DramKind>,
+    pub methods: Vec<Method>,
+    pub engines: Vec<EngineKind>,
+}
+
+impl SweepGrid {
+    /// Expand the cross product into a deterministic point list.
+    /// Degenerate meshes (zero rows or columns) are rejected here, so a
+    /// grid built programmatically gets the same validation as the CLI.
+    pub fn points(&self) -> crate::Result<Vec<SweepPoint>> {
+        let mut out = Vec::new();
+        for model in &self.models {
+            for &(rows, cols) in &self.meshes {
+                for &package in &self.packages {
+                    for &dram in &self.drams {
+                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                        for &method in &self.methods {
+                            for &engine in &self.engines {
+                                out.push(SweepPoint::new(
+                                    model.clone(),
+                                    hw.clone(),
+                                    method,
+                                    engine,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Number of points the grid expands to.
+    pub fn len(&self) -> usize {
+        self.models.len()
+            * self.meshes.len()
+            * self.packages.len()
+            * self.drams.len()
+            * self.methods.len()
+            * self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ───────────────────────── plan cache ─────────────────────────
+
+/// FNV-1a over a stream of 64-bit words — deterministic, dependency-free.
+fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint of every field of a model config. Exhaustive destructuring
+/// (no `..`) makes adding a `ModelConfig` field a compile error here, so
+/// the cache key can never silently ignore a new parameter.
+fn model_fingerprint(m: &ModelConfig) -> u64 {
+    let ModelConfig {
+        name,
+        hidden,
+        intermediate,
+        layers,
+        heads,
+        kv_heads,
+        seq_len,
+        batch,
+        vocab,
+    } = m;
+    fnv1a(
+        [
+            *hidden as u64,
+            *intermediate as u64,
+            *layers as u64,
+            *heads as u64,
+            *kv_heads as u64,
+            *seq_len as u64,
+            *batch as u64,
+            *vocab as u64,
+        ]
+        .into_iter()
+        .chain(name.bytes().map(|b| b as u64)),
+    )
+}
+
+/// Fingerprint of every field of a hardware config — two configs with any
+/// differing parameter (even a scaled channel bandwidth or link latency,
+/// as the fig10/table4 sweeps produce) get distinct plan-cache keys.
+/// Exhaustive destructuring (no `..`) makes adding a field to any of the
+/// hardware structs a compile error here rather than a silent cache alias.
+fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
+    let HardwareConfig {
+        mesh_rows,
+        mesh_cols,
+        package,
+        die,
+        link,
+        dram,
+    } = hw;
+    let crate::config::DieConfig {
+        freq_hz,
+        pe_rows,
+        pe_cols,
+        lanes,
+        vec_width,
+        weight_buf,
+        act_buf,
+        area_mm2,
+    } = die;
+    let crate::config::LinkConfig {
+        bandwidth,
+        latency,
+        pj_per_bit: link_pj,
+    } = link;
+    let crate::config::DramConfig {
+        kind,
+        channel_bandwidth,
+        pj_per_bit: dram_pj,
+    } = dram;
+    fnv1a([
+        *mesh_rows as u64,
+        *mesh_cols as u64,
+        match package {
+            crate::config::PackageKind::Standard => 0u64,
+            crate::config::PackageKind::Advanced => 1,
+        },
+        freq_hz.to_bits(),
+        *pe_rows as u64,
+        *pe_cols as u64,
+        *lanes as u64,
+        *vec_width as u64,
+        weight_buf.raw().to_bits(),
+        act_buf.raw().to_bits(),
+        area_mm2.to_bits(),
+        bandwidth.to_bits(),
+        latency.raw().to_bits(),
+        link_pj.to_bits(),
+        match kind {
+            crate::config::DramKind::Ddr4_3200 => 0u64,
+            crate::config::DramKind::Ddr5_6400 => 1,
+            crate::config::DramKind::Hbm2 => 2,
+        },
+        channel_bandwidth.to_bits(),
+        dram_pj.to_bits(),
+    ])
+}
+
+/// Cache key of one plan: model + hardware fingerprints, method, and the
+/// planning-phase ablation switches (the timing backend is *not* part of
+/// the key — that is the whole point of the plan/price/time split).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    model_name: String,
+    model_fp: u64,
+    hw_fp: u64,
+    method: Method,
+    opts: PlanOptions,
+}
+
+impl PlanKey {
+    fn of(model: &ModelConfig, hw: &HardwareConfig, method: Method, opts: PlanOptions) -> PlanKey {
+        PlanKey {
+            model_name: model.name.clone(),
+            model_fp: model_fingerprint(model),
+            hw_fp: hw_fingerprint(hw),
+            method,
+            opts,
+        }
+    }
+}
+
+/// Memoized [`SimPlan`] store shared by all workers of a sweep.
+///
+/// `SimPlan::build` is a pure function, so a cache hit returns a plan
+/// whose timed results are byte-identical to a cold build (asserted in
+/// `tests/integration_sim.rs`).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<SimPlan>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch or build the plan for one (model, hw, method, opts) point.
+    pub fn plan(
+        &self,
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> Arc<SimPlan> {
+        let key = PlanKey::of(model, hw, method, opts);
+        if let Some(p) = self.plans.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(p);
+        }
+        // Build outside the lock (plans are pure; a racing duplicate build
+        // produces an identical plan and the first insert wins).
+        let built = Arc::new(SimPlan::build(model, hw, method, opts));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.plans.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert(built))
+    }
+
+    /// Simulate one sweep point through the cache.
+    pub fn simulate(&self, p: &SweepPoint) -> SimResult {
+        self.plan(&p.model, &p.hw, p.method, p.opts.plan_opts())
+            .time(p.opts.engine)
+    }
+
+    /// Number of cache hits so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of plans built (cache misses).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct plans resident.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ───────────────────────── parallel runner ─────────────────────────
+
+/// Default worker count: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run a point list on the default thread count.
+pub fn run_points(points: &[SweepPoint]) -> Vec<SimResult> {
+    run_points_threads(points, default_threads())
+}
+
+/// Run a point list on an explicit thread count (`0` = all cores).
+pub fn run_points_threads(points: &[SweepPoint], threads: usize) -> Vec<SimResult> {
+    let cache = PlanCache::new();
+    run_points_on(&cache, points, threads)
+}
+
+/// Run a point list against a caller-owned plan cache.
+///
+/// Workers self-schedule through an atomic cursor (work stealing at
+/// point granularity: a worker that finishes early simply claims the next
+/// unclaimed index), stream `(index, result)` pairs over a channel, and
+/// the collector re-assembles them in point order — output is identical
+/// regardless of `threads`.
+pub fn run_points_on(cache: &PlanCache, points: &[SweepPoint], threads: usize) -> Vec<SimResult> {
+    let threads = if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+    .min(points.len().max(1));
+
+    if threads <= 1 || points.len() <= 1 {
+        return points.iter().map(|p| cache.simulate(p)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, SimResult)>();
+    let mut slots: Vec<Option<SimResult>> = vec![None; points.len()];
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let r = cache.simulate(&points[i]);
+                if tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every point produced a result"))
+        .collect()
+}
+
+// ───────────────────────── pareto + renderers ─────────────────────────
+
+/// Mark the Pareto frontier of a (latency, energy) point set: `true` for
+/// every point not dominated by another (dominated = some other point is
+/// no worse on both axes and strictly better on at least one).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|&(lat, en)| {
+            !points.iter().any(|&(l, e)| {
+                l <= lat && e <= en && (l < lat || e < en)
+            })
+        })
+        .collect()
+}
+
+fn row_strings(p: &SweepPoint, r: &SimResult, pareto: bool) -> [String; 10] {
+    [
+        p.model.name.clone(),
+        format!("{}x{}", p.hw.mesh_rows, p.hw.mesh_cols),
+        p.hw.package.name().to_string(),
+        p.hw.dram.kind.name().to_string(),
+        p.method.name().to_string(),
+        p.opts.engine.name().to_string(),
+        format!("{}", r.latency),
+        format!("{}", r.energy_total),
+        if r.feasible() { "yes" } else { "no" }.to_string(),
+        if pareto { "*" } else { "" }.to_string(),
+    ]
+}
+
+/// Render sweep results as a paper-style table (CLI `--format table`).
+pub fn render_table(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
+    let mut t = Table::new(&[
+        "model", "mesh", "package", "dram", "method", "engine", "latency", "energy", "feasible",
+        "pareto",
+    ])
+    .with_title("Sweep — * marks the latency × energy Pareto frontier")
+    .label_first();
+    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
+        t.row(row_strings(p, r, on).to_vec());
+    }
+    t.render()
+}
+
+/// CSV field quoting for the one free-form column (model names are
+/// usually preset identifiers, but `SweepGrid.models` is public API).
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Minimal JSON string escaping for the free-form model-name column.
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render sweep results as CSV with raw SI values (CLI `--format csv`).
+pub fn render_csv(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
+    let mut out = String::from(
+        "model,mesh,package,dram,method,engine,latency_s,energy_j,feasible,pareto\n",
+    );
+    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
+        out.push_str(&format!(
+            "{},{}x{},{},{},{},{},{:e},{:e},{},{}\n",
+            csv_field(&p.model.name),
+            p.hw.mesh_rows,
+            p.hw.mesh_cols,
+            p.hw.package.name(),
+            p.hw.dram.kind.name(),
+            p.method.name(),
+            p.opts.engine.name(),
+            r.latency.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out
+}
+
+/// Render sweep results as a JSON array (CLI `--format json`).
+pub fn render_json(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
+    let mut out = String::from("[\n");
+    for (i, ((p, r), &on)) in points.iter().zip(results).zip(pareto).enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"package\": \"{}\", \
+             \"dram\": \"{}\", \"method\": \"{}\", \"engine\": \"{}\", \
+             \"latency_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
+            json_escape(&p.model.name),
+            p.hw.mesh_rows,
+            p.hw.mesh_cols,
+            p.hw.package.name(),
+            p.hw.dram.kind.name(),
+            p.method.name(),
+            p.opts.engine.name(),
+            r.latency.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, PackageKind};
+    use crate::sim::system::simulate_engine;
+
+    fn small_grid() -> SweepGrid {
+        SweepGrid {
+            models: vec![model_preset("tinyllama-1.1b").unwrap()],
+            meshes: vec![(4, 4), (2, 8)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            methods: Method::all().to_vec(),
+            engines: vec![EngineKind::Analytic],
+        }
+    }
+
+    #[test]
+    fn grid_expands_in_deterministic_order() {
+        let g = small_grid();
+        let pts = g.points().unwrap();
+        assert_eq!(pts.len(), g.len());
+        assert_eq!(pts.len(), 2 * 4);
+        // meshes outer, methods inner.
+        assert_eq!((pts[0].hw.mesh_rows, pts[0].hw.mesh_cols), (4, 4));
+        assert_eq!(pts[0].method, Method::all()[0]);
+        assert_eq!(pts[3].method, Method::all()[3]);
+        assert_eq!((pts[4].hw.mesh_rows, pts[4].hw.mesh_cols), (2, 8));
+        // Expansion is reproducible.
+        let again = g.points().unwrap();
+        for (a, b) in pts.iter().zip(&again) {
+            assert_eq!(a.model.name, b.model.name);
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.hw, b.hw);
+        }
+        // Degenerate meshes are rejected at expansion time.
+        let mut bad = small_grid();
+        bad.meshes.push((0, 4));
+        assert!(bad.points().is_err());
+    }
+
+    #[test]
+    fn runner_matches_direct_simulation() {
+        let pts = small_grid().points().unwrap();
+        let results = run_points_threads(&pts, 2);
+        assert_eq!(results.len(), pts.len());
+        for (p, r) in pts.iter().zip(&results) {
+            let direct = simulate_engine(&p.model, &p.hw, p.method, p.opts.engine);
+            assert_eq!(r.latency.raw().to_bits(), direct.latency.raw().to_bits());
+            assert_eq!(
+                r.energy_total.raw().to_bits(),
+                direct.energy_total.raw().to_bits()
+            );
+            assert_eq!(r.method, p.method);
+        }
+    }
+
+    #[test]
+    fn plan_cache_shares_across_engines() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let pts: Vec<SweepPoint> = EngineKind::all()
+            .into_iter()
+            .map(|e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+            .collect();
+        let cache = PlanCache::new();
+        let _ = run_points_on(&cache, &pts, 1);
+        assert_eq!(cache.len(), 1, "three engines share one plan");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn distinct_hardware_gets_distinct_plans() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let mut scaled = hw.clone();
+        scaled.dram.channel_bandwidth *= 0.5; // fig10-knee style variant
+        assert_ne!(hw_fingerprint(&hw), hw_fingerprint(&scaled));
+        let cache = PlanCache::new();
+        cache.plan(&m, &hw, Method::Hecaton, PlanOptions::default());
+        cache.plan(&m, &scaled, Method::Hecaton, PlanOptions::default());
+        assert_eq!(cache.len(), 2);
+
+        // Ablation switches key separately too.
+        cache.plan(
+            &m,
+            &hw,
+            Method::Hecaton,
+            PlanOptions {
+                fusion: false,
+                ..PlanOptions::default()
+            },
+        );
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn pareto_front_marks_nondominated() {
+        // (1,4) and (2,2) and (4,1) form the frontier; (3,3) is dominated
+        // by (2,2); the duplicate optimum stays on the frontier.
+        let pts = [(1.0, 4.0), (2.0, 2.0), (4.0, 1.0), (3.0, 3.0), (2.0, 2.0)];
+        assert_eq!(pareto_front(&pts), vec![true, true, true, false, true]);
+        assert_eq!(pareto_front(&[]), Vec::<bool>::new());
+        assert_eq!(pareto_front(&[(1.0, 1.0)]), vec![true]);
+    }
+
+    #[test]
+    fn renderers_cover_all_rows() {
+        let pts = small_grid().points().unwrap();
+        let results = run_points_threads(&pts, 2);
+        let front = pareto_front(
+            &results
+                .iter()
+                .map(|r| (r.latency.raw(), r.energy_total.raw()))
+                .collect::<Vec<_>>(),
+        );
+        let table = render_table(&pts, &results, &front);
+        assert!(table.contains("Pareto"));
+        assert!(table.contains("tinyllama-1.1b"));
+        let csv = render_csv(&pts, &results, &front);
+        assert_eq!(csv.lines().count(), pts.len() + 1, "header + one line per point");
+        assert!(csv.starts_with("model,mesh,"));
+        let json = render_json(&pts, &results, &front);
+        assert!(json.trim_start().starts_with('['));
+        assert_eq!(json.matches("\"model\"").count(), pts.len());
+        // At least one sweep row sits on the frontier.
+        assert!(front.iter().any(|&b| b));
+    }
+}

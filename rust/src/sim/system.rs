@@ -1,7 +1,21 @@
 //! End-to-end system simulation of one training batch (fwd + bwd).
 //!
-//! Two timing backends share one workload decomposition (config →
-//! workload → parallel planner → fusion schedule):
+//! Simulation is split into three explicit phases:
+//!
+//! 1. **plan** — config → workload → parallel planner → fusion schedule:
+//!    which blocks fuse into which groups, the mini-batch size, SRAM and
+//!    layout feasibility. Pure function of (model, hw, method, ablations).
+//! 2. **price** — per (fusion group × pass) stage costs: on-package
+//!    execution time, DRAM boundary traffic, energy terms, MAC counts.
+//! 3. **time** — a timing backend turns the priced stage chain into
+//!    wall-clock latency and the exposed-DRAM breakdown segment.
+//!
+//! Phases 1–2 are captured in an immutable [`SimPlan`], computed once and
+//! reusable across all [`EngineKind`] backends — the memoization unit of
+//! the sweep subsystem ([`crate::sim::sweep`]). [`simulate_with`] is the
+//! one-shot composition `SimPlan::build(..).time(engine)`.
+//!
+//! Timing backends:
 //!
 //! * [`EngineKind::Analytic`] — the paper's closed forms: per fusion group
 //!   × pass, `max(on-package, DRAM) + fill` (Table III parity).
@@ -19,7 +33,7 @@ use crate::memory::dram::DramModel;
 use crate::memory::traffic::TrafficModel;
 use crate::nop::analytic::{Method, Pass};
 use crate::parallel::plan::{planner, BlockPlan, PlanInput, SramReport};
-use crate::sched::fusion::plan_fusion;
+use crate::sched::fusion::{plan_fusion, singleton_groups, FusionGroup};
 use crate::sched::pipeline::{overlap, overlap_chain_event, GroupStage, StageTimes};
 use crate::util::{Bytes, Energy, Seconds};
 use crate::workload::ops::BlockDesc;
@@ -108,8 +122,10 @@ pub struct SimResult {
     pub n_minibatches: usize,
     /// Number of fusion groups per layer chain.
     pub fusion_groups: usize,
-    /// Worst PE-array utilization across blocks.
-    pub min_utilization: f64,
+    /// Worst PE-array utilization across blocks. `None` when the plan
+    /// recorded no matmul at all (degenerate workload); a genuine 0.0 is
+    /// reported as `Some(0.0)`, not dropped.
+    pub min_utilization: Option<f64>,
     /// Total DRAM bytes per batch (before overlap).
     pub dram_bytes: Bytes,
     /// Total MACs executed across the package per batch.
@@ -136,9 +152,11 @@ impl SimResult {
     }
 }
 
-/// Ablation switches for [`simulate_with`] (DESIGN.md design choices).
-#[derive(Debug, Clone, Copy)]
-pub struct SimOptions {
+/// Ablation switches of the *planning* phases — everything except the
+/// timing backend. A [`SimPlan`] is immutable for a fixed
+/// (model, hw, method, `PlanOptions`) and valid for every [`EngineKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanOptions {
     /// Layer fusion (§III-B(b)); `false` forces one DRAM round-trip per
     /// block boundary.
     pub fusion: bool,
@@ -146,8 +164,37 @@ pub struct SimOptions {
     /// the conventional router that serializes ring forwarding with the
     /// die's own injection (halving effective ring bandwidth).
     pub bypass_router: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions {
+            fusion: true,
+            bypass_router: true,
+        }
+    }
+}
+
+/// Ablation switches plus timing backend for [`simulate_with`]
+/// (DESIGN.md design choices).
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Layer fusion (§III-B(b)).
+    pub fusion: bool,
+    /// The high-throughput bypass NoP router (§III-A(b)).
+    pub bypass_router: bool,
     /// Timing backend.
     pub engine: EngineKind,
+}
+
+impl SimOptions {
+    /// The planning-phase subset of these options.
+    pub fn plan_opts(self) -> PlanOptions {
+        PlanOptions {
+            fusion: self.fusion,
+            bypass_router: self.bypass_router,
+        }
+    }
 }
 
 impl Default for SimOptions {
@@ -156,6 +203,219 @@ impl Default for SimOptions {
             fusion: true,
             bypass_router: true,
             engine: EngineKind::Analytic,
+        }
+    }
+}
+
+/// Immutable output of the plan + price phases for one
+/// (model, hw, method, [`PlanOptions`]) point.
+///
+/// Everything here is independent of the timing backend: the fusion
+/// schedule, per-(group × pass) stage costs, engine-independent breakdown
+/// and energy terms, traffic and MAC totals, feasibility. [`SimPlan::time`]
+/// turns it into a [`SimResult`] under any [`EngineKind`] — so one plan
+/// serves all three backends and is the value memoized by the sweep
+/// plan cache.
+#[derive(Debug, Clone)]
+pub struct SimPlan {
+    /// Model name (carried into `SimResult::model`).
+    pub model_name: String,
+    pub method: Method,
+    pub opts: PlanOptions,
+    pub dies: usize,
+    /// Tokens per mini-batch and pipeline depth.
+    pub minibatch_tokens: usize,
+    pub n_minibatches: usize,
+    /// The fusion schedule over one layer's block chain.
+    pub groups: Vec<FusionGroup>,
+    pub sram: SramReport,
+    pub layout_ok: bool,
+    /// Priced stage chain: one [`GroupStage`] per (group × pass), in
+    /// chain order — the timing backends' input.
+    pub stages: Vec<GroupStage>,
+    /// Engine-independent breakdown terms (`dram_exposed` left at zero;
+    /// the time phase fills it).
+    pub breakdown: LatencyBreakdown,
+    /// Engine-independent energy terms (`static_e` left at zero; the time
+    /// phase charges it on final wall-clock).
+    pub energy: EnergyBreakdown,
+    pub min_utilization: Option<f64>,
+    pub dram_bytes: Bytes,
+    pub total_macs: f64,
+    dram: DramModel,
+    emodel: EnergyModel,
+}
+
+impl SimPlan {
+    /// Phases 1–2: decompose the workload and price the stage chain.
+    pub fn build(
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> SimPlan {
+        // ── plan: workload decomposition under the method ──
+        let hw_eff;
+        let hw = if opts.bypass_router {
+            hw
+        } else {
+            // Conventional router: forwarding and injection share the ring
+            // datapath (arch::router::Router::forward_inject_throughput).
+            let mut h = hw.clone();
+            h.link.bandwidth *=
+                crate::arch::router::Router::baseline().forward_inject_throughput();
+            hw_eff = h;
+            &hw_eff
+        };
+        let inp = PlanInput::new(model, hw);
+        let p = planner(method);
+        let tokens = p.minibatch_tokens(&inp);
+        let n_mb = inp.batch_tokens().div_ceil(tokens);
+
+        // One layer's block chain; all layers are identical so we plan one
+        // layer and scale by the layer count (fusion never crosses the
+        // identical-layer boundary pattern differently).
+        let blocks: Vec<BlockDesc> = layer_blocks(model).to_vec();
+        let groups = if opts.fusion {
+            plan_fusion(&blocks, p.as_ref(), hw)
+        } else {
+            // Ablation: every block is its own group (one DRAM round-trip
+            // per block boundary).
+            singleton_groups(&blocks, p.as_ref(), hw)
+        };
+
+        // ── price: per-(group × pass) stage costs, traffic and energy ──
+        let traffic_model = TrafficModel::new(model);
+        let emodel = EnergyModel::new(hw);
+
+        let mut breakdown = LatencyBreakdown::default();
+        let mut energy = EnergyBreakdown::default();
+        let mut min_util: Option<f64> = None;
+        let mut dram_bytes = Bytes::ZERO;
+        let mut total_macs = 0.0;
+        let n_dies = hw.n_dies() as f64;
+        let mut stages: Vec<GroupStage> = Vec::with_capacity(2 * groups.len());
+
+        for group in &groups {
+            // Aggregate the group's per-mini-batch plan for each pass.
+            for pass in [Pass::Fwd, Pass::Bwd] {
+                let mut plan = BlockPlan::default();
+                for &bi in &group.block_indices {
+                    plan.merge(p.block_plan(&blocks[bi], pass, &inp, tokens));
+                }
+                min_util = match (min_util, plan.min_utilization) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+
+                // Per-batch on-package execution: n_mb mini-batches.
+                let on_package =
+                    (plan.compute.time + plan.nop.total()) * n_mb as f64 * model.layers as f64;
+
+                // DRAM stage of this group & pass (whole batch), per layer.
+                let group_weights = group.weight_per_die * n_dies;
+                let t = traffic_model.group(group_weights);
+                let pass_bytes = match pass {
+                    Pass::Fwd => t.fwd_act + t.weights * (1.0 / 3.0),
+                    Pass::Bwd => t.bwd_act + t.weights * (2.0 / 3.0),
+                } * model.layers as f64;
+                dram_bytes += pass_bytes;
+                stages.push(GroupStage {
+                    on_package,
+                    dram_bytes: pass_bytes,
+                    n_minibatches: n_mb,
+                });
+
+                let scale = n_mb as f64 * model.layers as f64;
+                breakdown.compute += plan.compute.time * scale;
+                breakdown.nop_transmission += plan.nop.transmission * scale;
+                breakdown.nop_link += plan.nop.link_latency * scale;
+
+                // Energy.
+                energy.compute += emodel.compute(plan.compute.macs * n_dies) * scale
+                    + emodel.vector(plan.compute.vector_elems * n_dies) * scale;
+                energy.sram += emodel.sram(Bytes(
+                    plan.compute.sram_elems * n_dies * crate::config::ELEM_BYTES,
+                )) * scale;
+                energy.nop += emodel.d2d(plan.nop.wire_bytes) * scale;
+                energy.dram += emodel.dram(pass_bytes);
+                total_macs += plan.compute.macs * n_dies * scale;
+            }
+        }
+
+        SimPlan {
+            model_name: model.name.clone(),
+            method,
+            opts,
+            dies: hw.n_dies(),
+            minibatch_tokens: tokens,
+            n_minibatches: n_mb,
+            sram: p.sram_report(&inp),
+            layout_ok: p.layout_ok(hw),
+            groups,
+            stages,
+            breakdown,
+            energy,
+            min_utilization: min_util,
+            dram_bytes,
+            total_macs,
+            dram: DramModel::new(hw),
+            emodel,
+        }
+    }
+
+    /// Phase 3: run a timing backend over the priced stage chain.
+    ///
+    /// Calling this repeatedly with different engines (or the same engine)
+    /// on one plan produces byte-identical results to building a fresh
+    /// plan each time — the property the sweep plan cache relies on.
+    pub fn time(&self, engine: EngineKind) -> SimResult {
+        let mut breakdown = self.breakdown;
+        let mut energy = self.energy;
+        let mut latency = Seconds::ZERO;
+        match engine {
+            EngineKind::Analytic => {
+                for st in &self.stages {
+                    let ov = overlap(StageTimes {
+                        on_package: st.on_package,
+                        dram: self.dram.stream_time(st.dram_bytes),
+                        n_minibatches: st.n_minibatches,
+                    });
+                    latency += ov.latency;
+                    breakdown.dram_exposed += ov.exposed_dram;
+                }
+            }
+            EngineKind::Event | EngineKind::EventPrefetch => {
+                let chain = overlap_chain_event(
+                    &self.stages,
+                    &self.dram,
+                    engine == EngineKind::EventPrefetch,
+                );
+                latency = chain.latency;
+                for g in &chain.groups {
+                    breakdown.dram_exposed += g.exposed_dram;
+                }
+            }
+        }
+
+        energy.static_e = self.emodel.static_energy(latency);
+        SimResult {
+            model: self.model_name.clone(),
+            method: self.method,
+            engine,
+            dies: self.dies,
+            latency,
+            breakdown,
+            energy,
+            energy_total: energy.total(),
+            sram: self.sram,
+            layout_ok: self.layout_ok,
+            minibatch_tokens: self.minibatch_tokens,
+            n_minibatches: self.n_minibatches,
+            fusion_groups: self.groups.len(),
+            min_utilization: self.min_utilization,
+            dram_bytes: self.dram_bytes,
+            total_macs: self.total_macs,
         }
     }
 }
@@ -183,153 +443,14 @@ pub fn simulate_engine(
     )
 }
 
-/// [`simulate`] with ablation switches.
+/// [`simulate`] with ablation switches: plan + price once, then time.
 pub fn simulate_with(
     model: &ModelConfig,
     hw: &HardwareConfig,
     method: Method,
     opts: SimOptions,
 ) -> SimResult {
-    let hw_eff;
-    let hw = if opts.bypass_router {
-        hw
-    } else {
-        // Conventional router: forwarding and injection share the ring
-        // datapath (arch::router::Router::forward_inject_throughput).
-        let mut h = hw.clone();
-        h.link.bandwidth *= crate::arch::router::Router::baseline().forward_inject_throughput();
-        hw_eff = h;
-        &hw_eff
-    };
-    let inp = PlanInput::new(model, hw);
-    let p = planner(method);
-    let tokens = p.minibatch_tokens(&inp);
-    let batch_tokens = inp.batch_tokens();
-    let n_mb = batch_tokens.div_ceil(tokens);
-
-    // One layer's block chain; all layers are identical so we plan one
-    // layer and scale by the layer count (fusion never crosses the
-    // identical-layer boundary pattern differently).
-    let blocks: Vec<BlockDesc> = layer_blocks(model).to_vec();
-    let groups = if opts.fusion {
-        plan_fusion(&blocks, p.as_ref(), hw)
-    } else {
-        // Ablation: every block is its own group (one DRAM round-trip per
-        // block boundary).
-        (0..blocks.len())
-            .map(|i| crate::sched::fusion::FusionGroup {
-                weight_per_die: p.weight_bytes_per_die(&[&blocks[i]], hw),
-                block_indices: vec![i],
-            })
-            .collect()
-    };
-
-    let traffic_model = TrafficModel::new(model);
-    let dram = DramModel::new(hw);
-    let emodel = EnergyModel::new(hw);
-
-    let mut breakdown = LatencyBreakdown::default();
-    let mut energy = EnergyBreakdown::default();
-    let mut min_util = f64::INFINITY;
-    let mut dram_bytes = Bytes::ZERO;
-    let mut total_macs = 0.0;
-    let n_dies = hw.n_dies() as f64;
-    let mut stages: Vec<GroupStage> = Vec::with_capacity(2 * groups.len());
-
-    for group in &groups {
-        // Aggregate the group's per-mini-batch plan for each pass.
-        for pass in [Pass::Fwd, Pass::Bwd] {
-            let mut plan = BlockPlan::default();
-            for &bi in &group.block_indices {
-                plan.merge(p.block_plan(&blocks[bi], pass, &inp, tokens));
-            }
-            if plan.min_utilization > 0.0 {
-                min_util = min_util.min(plan.min_utilization);
-            }
-
-            // Per-batch on-package execution: n_mb mini-batches.
-            let on_package =
-                (plan.compute.time + plan.nop.total()) * n_mb as f64 * model.layers as f64;
-
-            // DRAM stage of this group & pass (whole batch), per layer.
-            let group_weights = group.weight_per_die * n_dies;
-            let t = traffic_model.group(group_weights);
-            let pass_bytes = match pass {
-                Pass::Fwd => t.fwd_act + t.weights * (1.0 / 3.0),
-                Pass::Bwd => t.bwd_act + t.weights * (2.0 / 3.0),
-            } * model.layers as f64;
-            dram_bytes += pass_bytes;
-            stages.push(GroupStage {
-                on_package,
-                dram_bytes: pass_bytes,
-                n_minibatches: n_mb,
-            });
-
-            let scale = n_mb as f64 * model.layers as f64;
-            breakdown.compute += plan.compute.time * scale;
-            breakdown.nop_transmission += plan.nop.transmission * scale;
-            breakdown.nop_link += plan.nop.link_latency * scale;
-
-            // Energy.
-            energy.compute += emodel.compute(plan.compute.macs * n_dies) * scale
-                + emodel.vector(plan.compute.vector_elems * n_dies) * scale;
-            energy.sram += emodel.sram(Bytes(
-                plan.compute.sram_elems * n_dies * crate::config::ELEM_BYTES,
-            )) * scale;
-            energy.nop += emodel.d2d(plan.nop.wire_bytes) * scale;
-            energy.dram += emodel.dram(pass_bytes);
-            total_macs += plan.compute.macs * n_dies * scale;
-        }
-    }
-
-    // Timing backend: turn the group-chain stages into wall-clock time and
-    // the exposed-DRAM breakdown segment.
-    let mut latency = Seconds::ZERO;
-    match opts.engine {
-        EngineKind::Analytic => {
-            for st in &stages {
-                let ov = overlap(StageTimes {
-                    on_package: st.on_package,
-                    dram: dram.stream_time(st.dram_bytes),
-                    n_minibatches: st.n_minibatches,
-                });
-                latency += ov.latency;
-                breakdown.dram_exposed += ov.exposed_dram;
-            }
-        }
-        EngineKind::Event | EngineKind::EventPrefetch => {
-            let chain = overlap_chain_event(
-                &stages,
-                &dram,
-                opts.engine == EngineKind::EventPrefetch,
-            );
-            latency = chain.latency;
-            for g in &chain.groups {
-                breakdown.dram_exposed += g.exposed_dram;
-            }
-        }
-    }
-
-    energy.static_e = emodel.static_energy(latency);
-    let energy_total = energy.total();
-    SimResult {
-        model: model.name.clone(),
-        method,
-        engine: opts.engine,
-        dies: hw.n_dies(),
-        latency,
-        breakdown,
-        energy,
-        energy_total,
-        sram: p.sram_report(&inp),
-        layout_ok: p.layout_ok(hw),
-        minibatch_tokens: tokens,
-        n_minibatches: n_mb,
-        fusion_groups: groups.len(),
-        min_utilization: if min_util.is_finite() { min_util } else { 0.0 },
-        dram_bytes,
-        total_macs,
-    }
+    SimPlan::build(model, hw, method, opts.plan_opts()).time(opts.engine)
 }
 
 #[cfg(test)]
@@ -490,5 +611,68 @@ mod tests {
         // as MACs, attention bwd approximated at 2×
         let ratio = r.total_macs / expect;
         assert!((0.8..1.25).contains(&ratio), "macs ratio {ratio}");
+    }
+
+    fn assert_bitwise_eq(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.latency.raw().to_bits(), b.latency.raw().to_bits(), "latency");
+        assert_eq!(
+            a.energy_total.raw().to_bits(),
+            b.energy_total.raw().to_bits(),
+            "energy"
+        );
+        assert_eq!(a.breakdown, b.breakdown, "breakdown");
+        assert_eq!(a.energy, b.energy, "energy breakdown");
+        assert_eq!(a.min_utilization, b.min_utilization);
+        assert_eq!(a.fusion_groups, b.fusion_groups);
+        assert_eq!(a.n_minibatches, b.n_minibatches);
+        assert_eq!(a.dram_bytes.raw().to_bits(), b.dram_bytes.raw().to_bits());
+        assert_eq!(a.total_macs.to_bits(), b.total_macs.to_bits());
+    }
+
+    /// One `SimPlan` timed under every backend is byte-identical to a
+    /// fresh plan per backend — the memoization contract of the sweep
+    /// plan cache.
+    #[test]
+    fn one_plan_serves_all_engines() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        for method in Method::all() {
+            let plan = SimPlan::build(&m, &hw, method, PlanOptions::default());
+            for engine in EngineKind::all() {
+                let shared = plan.time(engine);
+                let fresh = simulate_engine(&m, &hw, method, engine);
+                assert_eq!(shared.engine, engine);
+                assert_bitwise_eq(&shared, &fresh);
+            }
+            // Re-timing the same plan is idempotent (the plan is immutable).
+            let a = plan.time(EngineKind::Analytic);
+            let b = plan.time(EngineKind::Analytic);
+            assert_bitwise_eq(&a, &b);
+        }
+    }
+
+    /// The plan records the schedule shape the result reports.
+    #[test]
+    fn plan_exposes_schedule_shape() {
+        let m = model_preset("llama2-7b").unwrap();
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let plan = SimPlan::build(&m, &hw, Method::Hecaton, PlanOptions::default());
+        assert_eq!(plan.stages.len(), 2 * plan.groups.len());
+        assert!(plan.min_utilization.is_some(), "real workloads record utilization");
+        let r = plan.time(EngineKind::Analytic);
+        assert_eq!(r.fusion_groups, plan.groups.len());
+        assert_eq!(r.minibatch_tokens, plan.minibatch_tokens);
+
+        // The no-fusion ablation prices every block as its own group.
+        let nofuse = SimPlan::build(
+            &m,
+            &hw,
+            Method::Hecaton,
+            PlanOptions {
+                fusion: false,
+                ..PlanOptions::default()
+            },
+        );
+        assert!(nofuse.groups.iter().all(|g| g.len() == 1));
     }
 }

@@ -7,7 +7,8 @@
 use crate::config::hardware::{DramKind, PackageKind};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::nop::analytic::Method;
-use crate::sim::system::{simulate, SimResult};
+use crate::sim::sweep::{run_points, SweepPoint};
+use crate::sim::system::{EngineKind, SimResult};
 use crate::util::Bytes;
 
 /// One point of the weak-scaling sweep.
@@ -30,20 +31,28 @@ pub fn weak_scaling_sweep(
     method: Method,
     ks: &[usize],
 ) -> Vec<WeakScalingPoint> {
-    ks.iter()
+    // All k-points run in parallel on the sweep runner (each scaled model
+    // is a distinct plan-cache key).
+    let points: Vec<SweepPoint> = ks
+        .iter()
         .map(|&k| {
             let model = if k == 1 { base.clone() } else { base.scaled(k) };
             let dies = base_dies * k * k;
             let hw = HardwareConfig::square(dies, package, DramKind::Ddr5_6400);
-            let result = simulate(&model, &hw, method);
-            WeakScalingPoint {
-                k,
-                dies,
-                hidden: model.hidden,
-                u_weight: result.sram.weight_peak,
-                u_act: result.sram.act_peak,
-                result,
-            }
+            SweepPoint::new(model, hw, method, EngineKind::Analytic)
+        })
+        .collect();
+    let results = run_points(&points);
+    ks.iter()
+        .zip(points)
+        .zip(results)
+        .map(|((&k, p), result)| WeakScalingPoint {
+            k,
+            dies: p.hw.n_dies(),
+            hidden: p.model.hidden,
+            u_weight: result.sram.weight_peak,
+            u_act: result.sram.act_peak,
+            result,
         })
         .collect()
 }

@@ -4,7 +4,10 @@
 use hecaton::config::presets::{eval_models, model_preset, paper_pairings};
 use hecaton::config::{DramKind, HardwareConfig, PackageKind};
 use hecaton::nop::analytic::Method;
-use hecaton::sim::system::simulate;
+use hecaton::sim::sweep::{
+    pareto_front, run_points_on, run_points_threads, PlanCache, SweepGrid, SweepPoint,
+};
+use hecaton::sim::system::{simulate, simulate_engine, EngineKind, SimResult};
 
 /// Every evaluation model simulates under every method on a mid-size mesh
 /// without panicking, and produces internally-consistent results.
@@ -19,7 +22,8 @@ fn full_grid_is_well_formed() {
                 assert!(r.latency.raw() > 0.0, "{name}/{method:?}");
                 assert!(r.energy_total.raw() > 0.0);
                 assert!(r.total_macs > 0.0);
-                assert!(r.min_utilization > 0.0 && r.min_utilization <= 1.0);
+                let min_util = r.min_utilization.expect("real workloads record utilization");
+                assert!(min_util > 0.0 && min_util <= 1.0);
                 // Breakdown components sum to the latency (2% slack for
                 // pipeline fill accounting).
                 let sum = r.breakdown.total().raw();
@@ -91,7 +95,9 @@ fn full_scale_sweep_is_fast() {
     );
 }
 
-/// Reports render for every experiment id.
+/// Reports render for every experiment id — the golden-shape guard for
+/// the sweep-runner refactor of the report drivers: every driver now runs
+/// its grid through `sim::sweep` and must keep producing its rows.
 #[test]
 fn all_reports_render() {
     for id in hecaton::report::experiments() {
@@ -99,4 +105,151 @@ fn all_reports_render() {
         assert!(out.len() > 100, "{id} report suspiciously short");
     }
     assert!(hecaton::report::run("nope").is_err());
+}
+
+// ───────────────────────── sweep subsystem ─────────────────────────
+
+fn assert_bitwise_eq(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.model, b.model, "{ctx}: model");
+    assert_eq!(a.method, b.method, "{ctx}: method");
+    assert_eq!(a.engine, b.engine, "{ctx}: engine");
+    assert_eq!(
+        a.latency.raw().to_bits(),
+        b.latency.raw().to_bits(),
+        "{ctx}: latency"
+    );
+    assert_eq!(
+        a.energy_total.raw().to_bits(),
+        b.energy_total.raw().to_bits(),
+        "{ctx}: energy"
+    );
+    assert_eq!(a.breakdown, b.breakdown, "{ctx}: breakdown");
+    assert_eq!(a.energy, b.energy, "{ctx}: energy breakdown");
+    assert_eq!(a.min_utilization, b.min_utilization, "{ctx}: min_utilization");
+    assert_eq!(a.fusion_groups, b.fusion_groups, "{ctx}: fusion groups");
+    assert_eq!(a.n_minibatches, b.n_minibatches, "{ctx}: n_minibatches");
+    assert_eq!(
+        a.dram_bytes.raw().to_bits(),
+        b.dram_bytes.raw().to_bits(),
+        "{ctx}: dram bytes"
+    );
+    assert_eq!(a.total_macs.to_bits(), b.total_macs.to_bits(), "{ctx}: macs");
+}
+
+fn test_grid() -> Vec<SweepPoint> {
+    SweepGrid {
+        models: vec![
+            model_preset("tinyllama-1.1b").unwrap(),
+            model_preset("llama2-7b").unwrap(),
+        ],
+        meshes: vec![(4, 4), (2, 8)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic, EngineKind::Event],
+    }
+    .points()
+    .expect("valid grid")
+}
+
+/// Parallel sweep output is byte-identical to serial execution and
+/// independent of the worker count.
+#[test]
+fn parallel_sweep_is_bitwise_deterministic() {
+    let points = test_grid();
+    let serial = run_points_threads(&points, 1);
+    assert_eq!(serial.len(), points.len());
+    for threads in [2, 3, 8] {
+        let parallel = run_points_threads(&points, threads);
+        assert_eq!(parallel.len(), serial.len());
+        for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+            assert_bitwise_eq(s, p, &format!("threads={threads} point={i}"));
+        }
+    }
+}
+
+/// A plan-cache hit produces a `SimResult` byte-identical to a cold run
+/// (and to the plain `simulate_engine` path).
+#[test]
+fn plan_cache_hit_matches_cold_run() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let points: Vec<SweepPoint> = EngineKind::all()
+        .into_iter()
+        .map(|e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+        .collect();
+
+    let cache = PlanCache::new();
+    let cold = run_points_on(&cache, &points, 1);
+    assert_eq!(cache.misses(), 1, "one plan serves all engines");
+    assert_eq!(cache.hits(), 2);
+    let warm = run_points_on(&cache, &points, 1);
+    assert_eq!(cache.misses(), 1, "warm pass builds nothing");
+    for (i, (c, w)) in cold.iter().zip(&warm).enumerate() {
+        assert_bitwise_eq(c, w, &format!("warm point={i}"));
+    }
+    for (p, c) in points.iter().zip(&cold) {
+        let direct = simulate_engine(&p.model, &p.hw, p.method, p.opts.engine);
+        assert_bitwise_eq(c, &direct, "cached vs direct");
+    }
+}
+
+/// The sweep's Pareto annotation: on the Fig. 8-style method grid, every
+/// feasible-and-fastest point must sit on the latency × energy frontier,
+/// and at least one point is always on it.
+#[test]
+fn sweep_pareto_annotation_is_consistent() {
+    let points = SweepGrid {
+        models: vec![model_preset("tinyllama-1.1b").unwrap()],
+        meshes: vec![(4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic],
+    }
+    .points()
+    .expect("valid grid");
+    let results = run_points_threads(&points, 2);
+    let metrics: Vec<(f64, f64)> = results
+        .iter()
+        .map(|r| (r.latency.raw(), r.energy_total.raw()))
+        .collect();
+    let front = pareto_front(&metrics);
+    assert!(front.iter().any(|&b| b), "frontier can't be empty");
+    // A frontier point is not dominated by any other result.
+    for (i, &on) in front.iter().enumerate() {
+        let dominated = metrics.iter().enumerate().any(|(j, &(l, e))| {
+            j != i
+                && l <= metrics[i].0
+                && e <= metrics[i].1
+                && (l < metrics[i].0 || e < metrics[i].1)
+        });
+        assert_eq!(on, !dominated, "point {i}");
+    }
+}
+
+/// The refactored report drivers keep their golden shapes: fig8's grid
+/// still normalizes Hecaton rows to exactly 1.0 and row counts are
+/// unchanged (the drivers now execute on the parallel sweep runner).
+#[test]
+fn refactored_drivers_keep_golden_shapes() {
+    let cells = hecaton::report::fig8::run();
+    assert_eq!(cells.len(), 2 * 4 * 4);
+    for c in cells.iter().filter(|c| c.method == Method::Hecaton) {
+        assert!((c.rel_latency - 1.0).abs() < 1e-12);
+        assert!((c.rel_energy - 1.0).abs() < 1e-12);
+    }
+    // And each fig8 cell matches a direct (serial) simulation bitwise.
+    let w = &paper_pairings()[0];
+    let hw = HardwareConfig::square(w.dies, PackageKind::Standard, DramKind::Ddr5_6400);
+    let direct = simulate(&w.model, &hw, Method::Hecaton);
+    let cell = cells
+        .iter()
+        .find(|c| {
+            c.model == w.model.name
+                && c.package == PackageKind::Standard
+                && c.method == Method::Hecaton
+        })
+        .unwrap();
+    assert_bitwise_eq(&cell.result, &direct, "fig8 vs direct");
 }
