@@ -1,0 +1,76 @@
+//! Cluster-layer benchmarks: hybrid TP×DP×PP planning and timing on the
+//! paper-scale presets, the 1F1B event DAG, and the cluster sweep runner.
+//! Emits `BENCH_cluster.json` (CI artifact) so cluster-path perf is
+//! tracked across commits like the engine and sweep suites.
+
+mod common;
+
+use hecaton::config::cluster::{cluster_preset, InterKind, InterPkgLink};
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::sim::cluster::{run_cluster_points, ClusterGrid, ClusterPlan};
+use hecaton::sim::sweep::PlanCache;
+use hecaton::sim::system::{EngineKind, PlanOptions};
+
+fn main() {
+    let mut b = common::Bench::new("cluster");
+
+    // ── plan + price: the 405B-class hybrid through a cold cache ──
+    let (model405, cluster405) = cluster_preset("405b-cluster").expect("preset");
+    b.bench("cluster/405b_plan_cold", || {
+        let cache = PlanCache::new();
+        common::black_box(
+            ClusterPlan::build(
+                &model405,
+                &cluster405,
+                Method::Hecaton,
+                PlanOptions::default(),
+                &cache,
+            )
+            .expect("preset is valid"),
+        );
+    });
+
+    // ── time: analytic closed forms vs the 1F1B event DAG on one plan ──
+    let cache = PlanCache::new();
+    let plan = ClusterPlan::build(
+        &model405,
+        &cluster405,
+        Method::Hecaton,
+        PlanOptions::default(),
+        &cache,
+    )
+    .expect("preset is valid");
+    b.bench("cluster/405b_time_analytic", || {
+        common::black_box(plan.time(EngineKind::Analytic));
+    });
+    b.bench("cluster/405b_time_event_1f1b", || {
+        common::black_box(plan.time(EngineKind::Event));
+    });
+
+    // ── sweep: the tiny-cluster shape grid, serial vs parallel ──
+    let grid = ClusterGrid {
+        models: vec![model_preset("tinyllama-1.1b").expect("preset")],
+        meshes: vec![(4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic, EngineKind::Event],
+        n_packages: vec![4],
+        dp: vec![1, 2, 4],
+        pp: vec![1, 2, 4],
+        inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+    };
+    let (points, _) = grid.points().expect("grid expands");
+    b.bench("cluster/shape_grid_serial", || {
+        let r = run_cluster_points(&PlanCache::new(), &points, 1);
+        common::black_box(r.expect("grid points are valid"));
+    });
+    b.bench("cluster/shape_grid_parallel", || {
+        let r = run_cluster_points(&PlanCache::new(), &points, 0);
+        common::black_box(r.expect("grid points are valid"));
+    });
+
+    b.finish_with_json("BENCH_cluster.json");
+}

@@ -1,5 +1,5 @@
 //! Mini-criterion: a bench harness for `harness = false` bench targets
-//! (criterion is not in the offline vendor set — see DESIGN.md).
+//! (criterion is not in the offline vendor set — see ARCHITECTURE.md).
 //!
 //! Usage inside a bench binary:
 //! ```ignore

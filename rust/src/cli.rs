@@ -10,12 +10,15 @@
 
 use anyhow::anyhow;
 
+use crate::config::cluster::{cluster_preset, cluster_presets, ClusterConfig, InterPkgLink};
 use crate::config::presets::{eval_models, model_preset};
 use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
 use crate::nop::analytic::Method;
+use crate::sim::cluster::{run_cluster_points, simulate_cluster, ClusterGrid};
 use crate::sim::sweep::{self, PlanCache, SweepGrid};
 use crate::sim::system::{simulate_with, EngineKind, SimOptions};
-use crate::util::cli::{App, CommandSpec, Matches};
+use crate::util::cli::{parse_list, App, CliError, CommandSpec, Matches};
+use crate::util::fmt::pct;
 use crate::util::table::Table;
 
 /// Build the CLI application spec.
@@ -30,6 +33,10 @@ pub fn app() -> App {
                 .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
                 .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
+                .opt("n-packages", "1", "packages in the cluster (must equal dp x pp)")
+                .opt("dp", "1", "data-parallel replicas across packages")
+                .opt("pp", "1", "pipeline stages across packages (1F1B)")
+                .opt("inter-bw", "substrate", "inter-package fabric: substrate | optical | <GB/s>")
                 .opt("config", "", "TOML config file (overrides the above)"),
         )
         .command(
@@ -40,12 +47,16 @@ pub fn app() -> App {
                 .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
                 .opt("methods", "all", "comma list of TP methods, or 'all'")
                 .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
+                .opt("dp", "1", "comma list of data-parallel widths")
+                .opt("pp", "1", "comma list of pipeline depths")
+                .opt("inter-bw", "substrate", "comma list of fabrics: substrate | optical | <GB/s>")
                 .opt("threads", "0", "worker threads (0 = one per core; 1 = serial)")
                 .opt("format", "table", "output format: table | csv | json"),
         )
         .command(
             CommandSpec::new("reproduce", "regenerate a paper table/figure")
-                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | all"),
+                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | all"),
         )
         .command(
             CommandSpec::new("train", "functional distributed training (real numerics)")
@@ -89,17 +100,6 @@ fn parse_mesh(s: &str) -> crate::Result<(usize, usize)> {
     Ok((r, c))
 }
 
-/// Percentage cell for breakdown rows: `part / total` rendered with
-/// `decimals` digits, or an em-dash when the total is zero or non-finite
-/// (a zero-latency degenerate run must not print NaN%).
-fn pct(part: f64, total: f64, decimals: usize) -> String {
-    if total > 0.0 && total.is_finite() && part.is_finite() {
-        format!("{:.*}%", decimals, 100.0 * part / total)
-    } else {
-        "—".to_string()
-    }
-}
-
 fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     let (model, hw) = if !m.value("config").is_empty() {
         let setup = crate::config::file::load(m.value("config"))?;
@@ -121,6 +121,24 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     let method = Method::parse(m.value("method")).ok_or_else(|| anyhow!("bad method"))?;
     let engine = EngineKind::parse(m.value("engine"))
         .ok_or_else(|| anyhow!("bad engine '{}'", m.value("engine")))?;
+
+    // Cluster knobs (`--n-packages`, matching the sweep axis; `--package`
+    // remains the packaging *kind*): anything beyond the degenerate 1×1×1
+    // shape routes through the cluster simulator; the defaults keep the
+    // established single-package path (and its output) untouched. The
+    // fabric spec is validated even when unused, so a typo never passes
+    // silently.
+    let packages: usize = m.parse_value("n-packages")?;
+    let dp: usize = m.parse_value("dp")?;
+    let pp: usize = m.parse_value("pp")?;
+    let inter = InterPkgLink::parse(m.value("inter-bw")).ok_or_else(|| {
+        anyhow!("bad inter-bw '{}' (substrate | optical | <GB/s>)", m.value("inter-bw"))
+    })?;
+    if packages != 1 || dp != 1 || pp != 1 {
+        let cluster = ClusterConfig::try_new(hw, packages, dp, pp, inter)?;
+        return print_cluster_simulation(&model, &cluster, method, engine);
+    }
+
     let r = simulate_with(
         &model,
         &hw,
@@ -197,107 +215,247 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     Ok(())
 }
 
-fn list_items(s: &str) -> Vec<&str> {
-    s.split(',').map(str::trim).filter(|x| !x.is_empty()).collect()
+/// `hecaton simulate` with cluster knobs: one cluster batch, rendered with
+/// the hybrid-parallelism breakdown.
+fn print_cluster_simulation(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    method: Method,
+    engine: EngineKind,
+) -> crate::Result<()> {
+    let r = simulate_cluster(model, cluster, method, engine)?;
+    let lat = r.latency.raw();
+    let hw = &cluster.package_hw;
+    let mut t = Table::new(&["metric", "value"]).label_first();
+    t.row(crate::table_row!["model", model.name.clone()]);
+    t.row(crate::table_row![
+        "cluster",
+        format!(
+            "{} packages (dp={} x pp={}), {} dies total",
+            r.packages, r.dp, r.pp, r.total_dies
+        )
+    ]);
+    t.row(crate::table_row![
+        "package",
+        format!("{}x{} dies, {}", hw.mesh_rows, hw.mesh_cols, hw.package.name())
+    ]);
+    t.row(crate::table_row![
+        "fabric",
+        format!("{:.0} GB/s, {}", cluster.inter.gbs(), cluster.inter.latency)
+    ]);
+    t.row(crate::table_row!["method (in-package TP)", method.name()]);
+    t.row(crate::table_row!["engine", r.engine.name()]);
+    t.row(crate::table_row!["batch latency", r.latency]);
+    t.row(crate::table_row![
+        "  pipeline bubble",
+        format!("{} ({})", r.bubble, pct(r.bubble.raw(), lat, 1))
+    ]);
+    t.row(crate::table_row![
+        "  stage p2p fill",
+        format!("{} ({})", r.p2p, pct(r.p2p.raw(), lat, 2))
+    ]);
+    t.row(crate::table_row![
+        "  grad all-reduce",
+        format!("{} ({})", r.grad_allreduce, pct(r.grad_allreduce.raw(), lat, 1))
+    ]);
+    t.row(crate::table_row!["stage latency", r.stage.latency]);
+    t.row(crate::table_row!["1F1B microbatches", r.microbatches]);
+    t.row(crate::table_row!["energy / batch", r.energy_total]);
+    t.row(crate::table_row![
+        "throughput",
+        format!("{:.0} tokens/s", r.tokens_per_sec())
+    ]);
+    t.row(crate::table_row![
+        "feasible",
+        if r.feasible() { "yes" } else { "NO (SRAM overflow or layout)" }
+    ]);
+    println!("{}", t.render());
+    Ok(())
 }
 
 fn parse_model_list(s: &str) -> crate::Result<Vec<ModelConfig>> {
-    let names: Vec<&str> = if s.eq_ignore_ascii_case("all") {
-        eval_models().to_vec()
-    } else {
-        list_items(s)
-    };
-    if names.is_empty() {
-        return Err(anyhow!("empty model list"));
+    if s.eq_ignore_ascii_case("all") {
+        return eval_models()
+            .iter()
+            .map(|n| model_preset(n).ok_or_else(|| anyhow!("unknown model '{n}'")))
+            .collect();
     }
-    names
-        .iter()
-        .map(|n| model_preset(n).ok_or_else(|| anyhow!("unknown model '{n}'")))
-        .collect()
+    parse_list(s, "model", |n| {
+        model_preset(n).ok_or_else(|| CliError(format!("unknown model '{n}'")))
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 /// Meshes come as `RxC` layouts and/or bare square die counts; both are
 /// validated (no zero rows/cols, square counts must be perfect squares).
 fn parse_mesh_list(s: &str) -> crate::Result<Vec<(usize, usize)>> {
-    let items = list_items(s);
-    if items.is_empty() {
-        return Err(anyhow!("empty mesh list"));
-    }
-    items
-        .iter()
-        .map(|item| {
-            if item.contains('x') {
-                parse_mesh(item)
-            } else {
-                let n: usize = item
-                    .parse()
-                    .map_err(|e| anyhow!("bad mesh '{item}': {e}"))?;
-                let hw =
-                    HardwareConfig::try_square(n, PackageKind::Standard, DramKind::Ddr5_6400)?;
-                Ok((hw.mesh_rows, hw.mesh_cols))
-            }
-        })
-        .collect()
+    parse_list(s, "mesh", |item| {
+        if item.contains('x') {
+            parse_mesh(item).map_err(|e| CliError(format!("{e:#}")))
+        } else {
+            let n: usize = item
+                .parse()
+                .map_err(|e| CliError(format!("bad mesh '{item}': {e}")))?;
+            let hw = HardwareConfig::try_square(n, PackageKind::Standard, DramKind::Ddr5_6400)
+                .map_err(|e| CliError(format!("{e:#}")))?;
+            Ok((hw.mesh_rows, hw.mesh_cols))
+        }
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 fn parse_package_list(s: &str) -> crate::Result<Vec<PackageKind>> {
     if s.eq_ignore_ascii_case("all") {
         return Ok(vec![PackageKind::Standard, PackageKind::Advanced]);
     }
-    list_items(s)
-        .iter()
-        .map(|x| PackageKind::parse(x).ok_or_else(|| anyhow!("bad package '{x}'")))
-        .collect()
+    parse_list(s, "package", |x| {
+        PackageKind::parse(x).ok_or_else(|| CliError(format!("bad package '{x}'")))
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 fn parse_dram_list(s: &str) -> crate::Result<Vec<DramKind>> {
     if s.eq_ignore_ascii_case("all") {
         return Ok(vec![DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2]);
     }
-    list_items(s)
-        .iter()
-        .map(|x| DramKind::parse(x).ok_or_else(|| anyhow!("bad dram '{x}'")))
-        .collect()
+    parse_list(s, "dram", |x| {
+        DramKind::parse(x).ok_or_else(|| CliError(format!("bad dram '{x}'")))
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 fn parse_method_list(s: &str) -> crate::Result<Vec<Method>> {
     if s.eq_ignore_ascii_case("all") {
         return Ok(Method::all().to_vec());
     }
-    list_items(s)
-        .iter()
-        .map(|x| Method::parse(x).ok_or_else(|| anyhow!("bad method '{x}'")))
-        .collect()
+    parse_list(s, "method", |x| {
+        Method::parse(x).ok_or_else(|| CliError(format!("bad method '{x}'")))
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 fn parse_engine_list(s: &str) -> crate::Result<Vec<EngineKind>> {
     if s.eq_ignore_ascii_case("all") {
         return Ok(EngineKind::all().to_vec());
     }
-    list_items(s)
-        .iter()
-        .map(|x| EngineKind::parse(x).ok_or_else(|| anyhow!("bad engine '{x}'")))
-        .collect()
+    parse_list(s, "engine", |x| {
+        EngineKind::parse(x).ok_or_else(|| CliError(format!("bad engine '{x}'")))
+    })
+    .map_err(|e| anyhow!("{e}"))
+}
+
+/// Positive-integer comma lists (the `--n-packages/--dp/--pp` axes).
+fn parse_usize_list(s: &str, what: &str) -> crate::Result<Vec<usize>> {
+    parse_list(s, what, |x| {
+        let v: usize = x
+            .parse()
+            .map_err(|e| CliError(format!("bad {what} '{x}': {e}")))?;
+        if v == 0 {
+            return Err(CliError(format!("{what} must be >= 1")));
+        }
+        Ok(v)
+    })
+    .map_err(|e| anyhow!("{e}"))
+}
+
+fn parse_inter_list(s: &str) -> crate::Result<Vec<InterPkgLink>> {
+    parse_list(s, "inter-bw", |x| {
+        InterPkgLink::parse(x)
+            .ok_or_else(|| CliError(format!("bad inter-bw '{x}' (substrate | optical | <GB/s>)")))
+    })
+    .map_err(|e| anyhow!("{e}"))
 }
 
 fn cmd_sweep(m: &Matches) -> crate::Result<()> {
-    let grid = SweepGrid {
-        models: parse_model_list(m.value("models"))?,
-        meshes: parse_mesh_list(m.value("meshes"))?,
-        packages: parse_package_list(m.value("packages"))?,
-        drams: parse_dram_list(m.value("drams"))?,
-        methods: parse_method_list(m.value("methods"))?,
-        engines: parse_engine_list(m.value("engines"))?,
-    };
-    if grid.is_empty() {
-        return Err(anyhow!("empty sweep grid"));
-    }
     // Validate the output format *before* burning cores on the grid.
     let format = m.value("format");
     if !matches!(format, "table" | "csv" | "json") {
         return Err(anyhow!("bad format '{format}' (table | csv | json)"));
     }
     let threads: usize = m.parse_value("threads")?;
+    let models = parse_model_list(m.value("models"))?;
+    let meshes = parse_mesh_list(m.value("meshes"))?;
+    let pkg_kinds = parse_package_list(m.value("packages"))?;
+    let drams = parse_dram_list(m.value("drams"))?;
+    let methods = parse_method_list(m.value("methods"))?;
+    let engines = parse_engine_list(m.value("engines"))?;
+
+    // Cluster axes: the degenerate defaults (1×1×1, one fabric) keep the
+    // established single-package sweep (and its exact output) untouched.
+    // The fabric list is validated even when unused, so a typo never
+    // passes silently — and a *multi-valued* fabric list is itself a
+    // cluster axis, never dropped.
+    let n_packages = parse_usize_list(m.value("n-packages"), "n-packages")?;
+    let dp = parse_usize_list(m.value("dp"), "dp")?;
+    let pp = parse_usize_list(m.value("pp"), "pp")?;
+    let inter = parse_inter_list(m.value("inter-bw"))?;
+    if n_packages != [1] || dp != [1] || pp != [1] || inter.len() > 1 {
+        let grid = ClusterGrid {
+            models,
+            meshes,
+            packages: pkg_kinds,
+            drams,
+            methods,
+            engines,
+            n_packages,
+            dp,
+            pp,
+            inter,
+        };
+        let (points, skipped) = grid.points()?;
+        if points.is_empty() {
+            return Err(anyhow!(
+                "cluster sweep grid is empty ({skipped} combinations skipped: \
+                 dp x pp must equal n-packages, dp must divide the batch, pp <= layers)"
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let cache = PlanCache::new();
+        let results = run_cluster_points(&cache, &points, threads)?;
+        let wall = t0.elapsed();
+        let front = sweep::pareto_front(
+            &results
+                .iter()
+                .map(|r| (r.latency.raw(), r.energy_total.raw()))
+                .collect::<Vec<_>>(),
+        );
+        match format {
+            "table" => println!(
+                "{}",
+                crate::sim::cluster::render_cluster_table(&points, &results, &front)
+            ),
+            "csv" => print!(
+                "{}",
+                crate::sim::cluster::render_cluster_csv(&points, &results, &front)
+            ),
+            "json" => print!(
+                "{}",
+                crate::sim::cluster::render_cluster_json(&points, &results, &front)
+            ),
+            _ => unreachable!("format validated above"),
+        }
+        eprintln!(
+            "cluster sweep: {} points ({} combinations skipped), {} plans built, {} cache hits, {:?} wall",
+            points.len(),
+            skipped,
+            cache.misses(),
+            cache.hits(),
+            wall
+        );
+        return Ok(());
+    }
+
+    let grid = SweepGrid {
+        models,
+        meshes,
+        packages: pkg_kinds,
+        drams,
+        methods,
+        engines,
+    };
+    if grid.is_empty() {
+        return Err(anyhow!("empty sweep grid"));
+    }
     let points = grid.points()?;
     let t0 = std::time::Instant::now();
     let cache = PlanCache::new();
@@ -404,6 +562,33 @@ fn cmd_info() -> crate::Result<()> {
         die.act_buf,
         die.area_mm2
     );
+    let methods: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+    println!("TP methods: {}", methods.join(" | "));
+    let engines: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
+    println!("Engine backends: {}", engines.join(" | "));
+    println!(
+        "Sweep axes: --models --meshes --packages --drams --methods --engines \
+         (comma lists; most accept 'all'), --threads, --format table|csv|json"
+    );
+    println!(
+        "Cluster knobs (simulate + sweep): --n-packages/--dp/--pp \
+         (dp x pp must equal the package count; TP stays in-package), \
+         --inter-bw substrate|optical|<GB/s>"
+    );
+    println!("Cluster presets (see `hecaton reproduce cluster`):");
+    for name in cluster_presets() {
+        let (m, c) = cluster_preset(name).expect("preset resolves");
+        println!(
+            "  {name}: {} on {} x {}x{}-die packages, dp={} x pp={}, {:.0} GB/s fabric",
+            m.name,
+            c.packages,
+            c.package_hw.mesh_rows,
+            c.package_hw.mesh_cols,
+            c.dp,
+            c.pp,
+            c.inter.gbs()
+        );
+    }
     println!("Functional (train) presets: tiny, e2e-100m — see aot.py DEPLOYMENTS");
     Ok(())
 }
@@ -551,5 +736,105 @@ mod tests {
     #[test]
     fn info_runs() {
         cmd_info().unwrap();
+    }
+
+    #[test]
+    fn cluster_list_parsers() {
+        assert_eq!(parse_usize_list("1,2, 4", "dp").unwrap(), vec![1, 2, 4]);
+        assert!(parse_usize_list("0", "dp").is_err());
+        assert!(parse_usize_list("x", "dp").is_err());
+        assert!(parse_usize_list("", "dp").is_err());
+        let inter = parse_inter_list("substrate,optical,128").unwrap();
+        assert_eq!(inter.len(), 3);
+        assert!((inter[2].bandwidth - 128.0e9).abs() < 1.0);
+        assert!(parse_inter_list("warp").is_err());
+    }
+
+    /// `simulate` with cluster knobs routes through the cluster simulator;
+    /// malformed shapes error cleanly.
+    #[test]
+    fn simulate_cluster_flags() {
+        let a = app();
+        let m = a
+            .parse(&argv(&[
+                "simulate",
+                "--model",
+                "tinyllama-1.1b",
+                "--dies",
+                "16",
+                "--n-packages",
+                "4",
+                "--dp",
+                "2",
+                "--pp",
+                "2",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
+        for args in [
+            // dp x pp != packages
+            vec!["simulate", "--dies", "16", "--n-packages", "4", "--dp", "2", "--pp", "1"],
+            // unknown fabric
+            vec!["simulate", "--dies", "16", "--dp", "2", "--n-packages", "2", "--inter-bw", "x"],
+            // unknown fabric is rejected even on the degenerate 1x1x1 shape
+            vec!["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--inter-bw", "warp"],
+            // pp deeper than the layer stack
+            vec![
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--n-packages", "23",
+                "--dp", "1", "--pp", "23",
+            ],
+        ] {
+            let m = a.parse(&argv(&args)).unwrap().unwrap();
+            assert!(cmd_simulate(&m).is_err(), "{args:?} should error cleanly");
+        }
+    }
+
+    #[test]
+    fn sweep_cluster_axes_run_all_formats() {
+        let a = app();
+        for format in ["table", "csv", "json"] {
+            let m = a
+                .parse(&argv(&[
+                    "sweep",
+                    "--models",
+                    "tinyllama-1.1b",
+                    "--meshes",
+                    "4x4",
+                    "--methods",
+                    "hecaton",
+                    "--n-packages",
+                    "4",
+                    "--dp",
+                    "1,2,4",
+                    "--pp",
+                    "1,2,4",
+                    "--threads",
+                    "2",
+                    "--format",
+                    format,
+                ]))
+                .unwrap()
+                .unwrap();
+            cmd_sweep(&m).unwrap();
+        }
+        // A grid whose every combination is inconsistent errors out.
+        let bad = a
+            .parse(&argv(&[
+                "sweep",
+                "--models",
+                "tinyllama-1.1b",
+                "--meshes",
+                "4x4",
+                "--n-packages",
+                "4",
+                "--dp",
+                "3",
+                "--pp",
+                "3",
+            ]))
+            .unwrap()
+            .unwrap();
+        assert!(cmd_sweep(&bad).is_err());
     }
 }

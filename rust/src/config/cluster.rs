@@ -1,0 +1,283 @@
+//! Cluster configuration: many packages joined by an off-package fabric.
+//!
+//! A [`ClusterConfig`] wraps the existing per-package [`HardwareConfig`]
+//! with the two cluster-level axes the hybrid-parallelism layer needs:
+//! how many packages there are, and how they are partitioned between
+//! **data parallelism** (`dp` replicas, gradient all-reduce over the
+//! fabric) and **pipeline parallelism** (`pp` layer stages, activations
+//! forwarded over the fabric). Tensor parallelism stays *inside* a
+//! package, where the paper's NoP collectives live — the composition the
+//! wafer/chiplet co-exploration literature (WATOS; Duan et al.'s
+//! distributed-training survey) treats as the baseline hybrid.
+//!
+//! The degenerate cluster (`packages == dp == pp == 1`) is, by
+//! construction and by regression test (`tests/integration_cluster.rs`),
+//! bitwise identical to the single-package simulator.
+
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::util::Seconds;
+
+/// The off-package interconnect joining packages (board traces + retimers,
+/// or an optical fabric). Modeled at the system level as a **shared
+/// fair-share resource**: a single stream sustains `bandwidth`; `k`
+/// concurrent streams each progress at `bandwidth / k`
+/// (see [`crate::sched::onef1b`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterPkgLink {
+    /// Sustained fabric bandwidth for a single stream, bytes/s.
+    pub bandwidth: f64,
+    /// Per-transfer latency (serialization + switch/retimer traversal).
+    pub latency: Seconds,
+    /// Transfer energy, pJ/bit.
+    pub pj_per_bit: f64,
+}
+
+/// Named fabric technology presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterKind {
+    /// Organic board / substrate traces with retimers: modest bandwidth,
+    /// PCB-scale latency, off-package driver energy.
+    Substrate,
+    /// Co-packaged optics: an order of magnitude more bandwidth at lower
+    /// pJ/bit.
+    Optical,
+}
+
+impl InterKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InterKind::Substrate => "substrate",
+            InterKind::Optical => "optical",
+        }
+    }
+}
+
+impl InterPkgLink {
+    /// Fabric preset for a named technology.
+    pub fn preset(kind: InterKind) -> InterPkgLink {
+        match kind {
+            InterKind::Substrate => InterPkgLink {
+                bandwidth: 64.0e9,
+                latency: Seconds::ns(250.0),
+                pj_per_bit: 4.0,
+            },
+            InterKind::Optical => InterPkgLink {
+                bandwidth: 512.0e9,
+                latency: Seconds::ns(100.0),
+                pj_per_bit: 1.0,
+            },
+        }
+    }
+
+    /// Parse a fabric spec: a preset name (`substrate` | `optical`) or a
+    /// bare number interpreted as GB/s on substrate-preset latency/energy.
+    pub fn parse(s: &str) -> Option<InterPkgLink> {
+        match s.to_ascii_lowercase().as_str() {
+            "substrate" | "pcb" | "sub" => Some(InterPkgLink::preset(InterKind::Substrate)),
+            "optical" | "opt" => Some(InterPkgLink::preset(InterKind::Optical)),
+            other => {
+                let gbs: f64 = other.parse().ok()?;
+                if !(gbs.is_finite() && gbs > 0.0) {
+                    return None;
+                }
+                Some(InterPkgLink {
+                    bandwidth: gbs * 1.0e9,
+                    ..InterPkgLink::preset(InterKind::Substrate)
+                })
+            }
+        }
+    }
+
+    /// Bandwidth in GB/s (rendered in sweep tables).
+    pub fn gbs(&self) -> f64 {
+        self.bandwidth / 1.0e9
+    }
+}
+
+/// A cluster of identical packages: `packages = dp × pp` copies of
+/// `package_hw` joined by `inter`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of packages in the cluster.
+    pub packages: usize,
+    /// Data-parallel replicas (gradient all-reduce over the fabric).
+    pub dp: usize,
+    /// Pipeline stages (layer partitioning; activations over the fabric).
+    pub pp: usize,
+    /// The off-package fabric.
+    pub inter: InterPkgLink,
+    /// The per-package hardware every intra-package TP method runs on.
+    pub package_hw: HardwareConfig,
+}
+
+impl ClusterConfig {
+    /// The degenerate single-package cluster — exactly today's simulator.
+    pub fn single(package_hw: HardwareConfig) -> ClusterConfig {
+        ClusterConfig {
+            packages: 1,
+            dp: 1,
+            pp: 1,
+            inter: InterPkgLink::preset(InterKind::Substrate),
+            package_hw,
+        }
+    }
+
+    /// Validated constructor: all counts positive and `dp · pp == packages`.
+    pub fn try_new(
+        package_hw: HardwareConfig,
+        packages: usize,
+        dp: usize,
+        pp: usize,
+        inter: InterPkgLink,
+    ) -> crate::Result<ClusterConfig> {
+        if packages == 0 || dp == 0 || pp == 0 {
+            anyhow::bail!("cluster needs at least 1 package, dp >= 1 and pp >= 1");
+        }
+        if dp * pp != packages {
+            anyhow::bail!(
+                "cluster shape mismatch: dp {dp} x pp {pp} != {packages} packages"
+            );
+        }
+        Ok(ClusterConfig {
+            packages,
+            dp,
+            pp,
+            inter,
+            package_hw,
+        })
+    }
+
+    /// Whether this is the degenerate single-package cluster.
+    pub fn is_single(&self) -> bool {
+        self.packages == 1 && self.dp == 1 && self.pp == 1
+    }
+
+    /// Total computing dies across all packages.
+    pub fn total_dies(&self) -> usize {
+        self.packages * self.package_hw.n_dies()
+    }
+
+    /// The "Megatron-style TP spanning the cluster" baseline as a virtual
+    /// single package: the per-package meshes are stitched side by side
+    /// and the D2D link bandwidth is clamped to the fabric's share — a
+    /// ring crossing the cluster traverses the fabric `packages` times
+    /// concurrently, so each crossing sustains `inter.bandwidth/packages`,
+    /// and a ring collective is paced by its slowest link. Per-hop latency
+    /// keeps the on-package α (crossings are a vanishing hop fraction),
+    /// and the per-channel DRAM bandwidth is rescaled so the virtual
+    /// package's *aggregate* DRAM bandwidth equals the physical packages'
+    /// sum (the stitched mesh has less perimeter than the packages it
+    /// replaces; the baseline must not lose memory bandwidth to a
+    /// modeling artifact).
+    pub fn tp_across_hw(&self) -> HardwareConfig {
+        if self.packages == 1 {
+            return self.package_hw.clone();
+        }
+        let mut hw = self.package_hw.clone();
+        hw.mesh_cols *= self.packages;
+        let per_crossing = self.inter.bandwidth / self.packages as f64;
+        hw.link.bandwidth = hw.link.bandwidth.min(per_crossing);
+        let physical_channels = self.packages * self.package_hw.dram_channels();
+        hw.dram.channel_bandwidth *= physical_channels as f64 / hw.dram_channels() as f64;
+        hw
+    }
+}
+
+/// Paper-scale cluster presets: `(model preset, cluster shape)`.
+///
+/// * `tiny-cluster` — TinyLlama on 4 × (4×4-die) packages, dp=2 × pp=2,
+///   substrate fabric. The CI smoke and property-test workhorse.
+/// * `405b-cluster` — Llama3.1-405B on 16 × (16×16-die) packages,
+///   dp=8 × pp=2 (63 layers/stage, 128-sequence sub-batch), substrate
+///   fabric. The headline weak-scaling/hybrid configuration: a single
+///   package cannot hold the model at the paper's die budget, so this is
+///   the smallest shape where the hybrid-vs-TP-across question is real.
+pub fn cluster_preset(name: &str) -> Option<(crate::config::ModelConfig, ClusterConfig)> {
+    let (model_name, dies, packages, dp, pp, inter) = match name.to_ascii_lowercase().as_str() {
+        "tiny-cluster" => ("tinyllama-1.1b", 16, 4, 2, 2, InterKind::Substrate),
+        "405b-cluster" => ("llama3.1-405b", 256, 16, 8, 2, InterKind::Substrate),
+        _ => return None,
+    };
+    let model = crate::config::presets::model_preset(model_name)?;
+    let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr5_6400);
+    let cluster = ClusterConfig::try_new(hw, packages, dp, pp, InterPkgLink::preset(inter))
+        .expect("presets are well-formed");
+    Some((model, cluster))
+}
+
+/// All cluster preset names (for `hecaton info`).
+pub fn cluster_presets() -> &'static [&'static str] {
+    &["tiny-cluster", "405b-cluster"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400)
+    }
+
+    #[test]
+    fn try_new_enforces_shape() {
+        assert!(ClusterConfig::try_new(hw(), 4, 2, 2, InterPkgLink::preset(InterKind::Substrate))
+            .is_ok());
+        assert!(ClusterConfig::try_new(hw(), 4, 2, 1, InterPkgLink::preset(InterKind::Substrate))
+            .is_err());
+        assert!(ClusterConfig::try_new(hw(), 0, 1, 1, InterPkgLink::preset(InterKind::Substrate))
+            .is_err());
+        let c = ClusterConfig::single(hw());
+        assert!(c.is_single());
+        assert_eq!(c.total_dies(), 16);
+    }
+
+    #[test]
+    fn inter_link_parse_forms() {
+        let sub = InterPkgLink::parse("substrate").unwrap();
+        assert_eq!(sub, InterPkgLink::preset(InterKind::Substrate));
+        let opt = InterPkgLink::parse("optical").unwrap();
+        assert!(opt.bandwidth > sub.bandwidth);
+        let n = InterPkgLink::parse("128").unwrap();
+        assert!((n.bandwidth - 128.0e9).abs() < 1.0);
+        assert_eq!(n.latency, sub.latency);
+        assert!(InterPkgLink::parse("bogus").is_none());
+        assert!(InterPkgLink::parse("-3").is_none());
+        assert!(InterPkgLink::parse("0").is_none());
+    }
+
+    #[test]
+    fn tp_across_stitches_and_clamps() {
+        let c =
+            ClusterConfig::try_new(hw(), 4, 2, 2, InterPkgLink::preset(InterKind::Substrate))
+                .unwrap();
+        let t = c.tp_across_hw();
+        assert_eq!(t.n_dies(), 64);
+        assert_eq!(t.mesh_rows, 4);
+        assert_eq!(t.mesh_cols, 16);
+        // 64 GB/s fabric / 4 crossings = 16 GB/s < 32 GB/s d2d.
+        assert!((t.link.bandwidth - 16.0e9).abs() < 1.0);
+        // Aggregate DRAM bandwidth matches the 4 physical packages, not
+        // the stitched mesh's smaller perimeter.
+        let want = 4.0 * hw().dram_bandwidth();
+        assert!(
+            (t.dram_bandwidth() - want).abs() / want < 1e-12,
+            "{} vs {}",
+            t.dram_bandwidth(),
+            want
+        );
+        // Degenerate: identity.
+        let single = ClusterConfig::single(hw());
+        assert_eq!(single.tp_across_hw(), hw());
+    }
+
+    #[test]
+    fn presets_resolve_and_divide_evenly() {
+        for name in cluster_presets() {
+            let (model, cluster) = cluster_preset(name).unwrap();
+            assert_eq!(cluster.dp * cluster.pp, cluster.packages, "{name}");
+            assert_eq!(model.batch % cluster.dp, 0, "{name}: dp must divide batch");
+            assert!(cluster.pp <= model.layers, "{name}");
+        }
+        assert!(cluster_preset("nope").is_none());
+    }
+}

@@ -1,8 +1,22 @@
 //! Hardware configuration: computing die, package, D2D link, DRAM.
 //!
 //! All numbers trace to paper §VI-A (28 nm RTL rescaled to 7 nm, UCIe link
-//! parameters, DDR5-6400 via Ramulator2/JEDEC) — see DESIGN.md for the
-//! calibration table.
+//! parameters, DDR5-6400 via Ramulator2/JEDEC). Calibration table:
+//!
+//! | parameter | value | source |
+//! |---|---|---|
+//! | die clock | 800 MHz | §VI-A, 28 nm synthesis |
+//! | PE array | 4×4, 32 lanes × 8-wide vector MACs | Fig. 5(c), Simba-like |
+//! | die SRAM | 8 MB weight + 8 MB activation | §VI-A |
+//! | die area | 30.08 mm² (7 nm) | §VI-A rescale |
+//! | D2D link (standard pkg) | x16 UCIe @ 16 GT/s = 32 GB/s, 2 ns, 0.5 pJ/bit | §VI-A, 110 µm pitch |
+//! | D2D link (advanced pkg) | x64 UCIe @ 16 GT/s = 128 GB/s, 2 ns, 0.25 pJ/bit | §VI-A, 45 µm pitch |
+//! | DDR4-3200 channel | 25.6 GB/s, 22 pJ/bit | JEDEC |
+//! | DDR5-6400 channel | 51.2 GB/s, 19 pJ/bit | §VI-A, Ramulator2 |
+//! | HBM2 stack | 307.2 GB/s, 3.9 pJ/bit | O'Connor et al. |
+//! | DRAM channels | 2·(rows + cols), one per perimeter die edge | §III-A(c) |
+//!
+//! How these layers compose is described in ARCHITECTURE.md.
 
 use crate::util::{Bytes, Seconds};
 

@@ -1,11 +1,14 @@
 //! Configuration: model presets (paper §VI-A workloads), hardware presets
-//! (die, package, D2D link, DRAM) and TOML-file loading.
+//! (die, package, D2D link, DRAM), cluster-of-packages shapes and
+//! TOML-file loading.
 
 pub mod model;
 pub mod hardware;
+pub mod cluster;
 pub mod presets;
 pub mod file;
 
+pub use cluster::{cluster_preset, cluster_presets, ClusterConfig, InterKind, InterPkgLink};
 pub use hardware::{DieConfig, DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
 pub use model::ModelConfig;
 pub use presets::{hardware_preset, model_preset, paper_pairings, PaperWorkload};

@@ -8,7 +8,7 @@
 //! `dY` for both `dX` and `dW` (Fig. 7(a)). Weights live as 2D tiles in
 //! the dies' (simulated) weight buffers for the lifetime of training.
 //!
-//! Documented simplifications vs. silicon (see DESIGN.md):
+//! Documented simplifications vs. silicon (see ARCHITECTURE.md):
 //! * the leader mediates block-boundary ops (norms, residuals, loss) and
 //!   the attention head re-shard — volumes identical to the paper's
 //!   Steps 2/5/10-12, with the leader standing in for the DRAM path;

@@ -1,0 +1,194 @@
+//! Hybrid TP×DP×PP decomposition across a cluster of packages.
+//!
+//! Any intra-package tensor-parallel method ([`crate::nop::analytic::Method`])
+//! composes with the two cluster-level axes of a [`ClusterConfig`]:
+//!
+//! * **Data parallelism** — the global batch is split into `dp` equal
+//!   sub-batches; each replica holds the full (per-stage) weights and the
+//!   replicas ring-all-reduce gradients over the off-package fabric at the
+//!   end of the batch (`2·(dp−1)/dp` of the stage's weight bytes per
+//!   package, the standard ring volume).
+//! * **Pipeline parallelism** — the layer stack is split into `pp`
+//!   contiguous stages of (near-)equal depth; stage boundaries forward
+//!   one microbatch's activation `[tokens_mb, h]` over the fabric each
+//!   step, scheduled 1F1B ([`crate::sched::onef1b`]).
+//!
+//! This module is the *planning* half: it turns `(model, cluster)` into
+//! per-stage sub-models (which the existing per-package planner stack
+//! prices unchanged) plus the fabric traffic volumes. Timing lives in
+//! [`crate::sim::cluster`].
+
+use crate::config::{ClusterConfig, ModelConfig, ELEM_BYTES};
+use crate::util::Bytes;
+
+/// The hybrid decomposition of one model over one cluster.
+#[derive(Debug, Clone)]
+pub struct HybridSpec {
+    /// One sub-model per pipeline stage, in stage order. Stages differ only
+    /// in layer count: the first `layers % pp` stages carry the remainder
+    /// layer, so stage 0 is always a critical (deepest) stage. For the
+    /// degenerate cluster this is exactly `[model]`.
+    pub stage_models: Vec<ModelConfig>,
+    /// Per-replica batch size (`model.batch / dp`).
+    pub sub_batch: usize,
+    /// Per-stage gradient bytes the DP all-reduce moves (full stage
+    /// weights, FP32).
+    pub grad_bytes: Vec<Bytes>,
+    /// Bytes of one full sub-batch boundary activation `[sub_tokens, h]`.
+    pub act_bytes: Bytes,
+}
+
+impl HybridSpec {
+    /// Decompose `model` over `cluster`, validating divisibility:
+    /// `dp` must divide the batch and `pp` must not exceed the layer count
+    /// (`dp · pp == packages` is a [`ClusterConfig`] invariant, re-checked
+    /// here for hand-built configs).
+    pub fn plan(model: &ModelConfig, cluster: &ClusterConfig) -> crate::Result<HybridSpec> {
+        if cluster.dp == 0 || cluster.pp == 0 || cluster.dp * cluster.pp != cluster.packages {
+            anyhow::bail!(
+                "cluster shape mismatch: dp {} x pp {} != {} packages",
+                cluster.dp,
+                cluster.pp,
+                cluster.packages
+            );
+        }
+        if model.batch % cluster.dp != 0 {
+            anyhow::bail!(
+                "dp {} does not divide the global batch {} ({})",
+                cluster.dp,
+                model.batch,
+                model.name
+            );
+        }
+        if cluster.pp > model.layers {
+            anyhow::bail!(
+                "pp {} exceeds the {}-layer stack ({})",
+                cluster.pp,
+                model.layers,
+                model.name
+            );
+        }
+        let sub_batch = model.batch / cluster.dp;
+        let base_layers = model.layers / cluster.pp;
+        let n_big = model.layers % cluster.pp;
+
+        let mut stage_models = Vec::with_capacity(cluster.pp);
+        let mut grad_bytes = Vec::with_capacity(cluster.pp);
+        for s in 0..cluster.pp {
+            let layers = base_layers + usize::from(s < n_big);
+            let sm = if cluster.is_single() {
+                // Degenerate cluster: the stage *is* the model — identical
+                // config (and name) keeps results bitwise equal to the
+                // single-package simulator.
+                model.clone()
+            } else {
+                ModelConfig {
+                    // Name keeps the original as a prefix (SwiGLU gating is
+                    // keyed off the "llama" substring) and encodes the
+                    // stage shape, so distinct stages render distinctly.
+                    name: format!("{}~{}Lxb{}", model.name, layers, sub_batch),
+                    layers,
+                    batch: sub_batch,
+                    ..model.clone()
+                }
+            };
+            grad_bytes.push(Bytes(sm.stack_params() as f64 * ELEM_BYTES));
+            stage_models.push(sm);
+        }
+
+        let sub_tokens = sub_batch as f64 * model.seq_len as f64;
+        Ok(HybridSpec {
+            stage_models,
+            sub_batch,
+            grad_bytes,
+            act_bytes: Bytes(sub_tokens * model.hidden as f64 * ELEM_BYTES),
+        })
+    }
+
+    /// Number of pipeline stages.
+    pub fn n_stages(&self) -> usize {
+        self.stage_models.len()
+    }
+
+    /// Ring-all-reduce fabric volume per package for stage `s`
+    /// (`2·(dp−1)/dp` of the stage's gradient bytes; zero when `dp == 1`).
+    pub fn allreduce_bytes(&self, s: usize, dp: usize) -> Bytes {
+        if dp <= 1 {
+            Bytes::ZERO
+        } else {
+            self.grad_bytes[s] * (2.0 * (dp as f64 - 1.0) / dp as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+    use crate::config::presets::model_preset;
+    use crate::config::{DramKind, HardwareConfig, PackageKind};
+
+    fn cluster(packages: usize, dp: usize, pp: usize) -> ClusterConfig {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        ClusterConfig::try_new(hw, packages, dp, pp, InterPkgLink::preset(InterKind::Substrate))
+            .unwrap()
+    }
+
+    #[test]
+    fn degenerate_spec_is_the_model_itself() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let spec = HybridSpec::plan(&m, &ClusterConfig::single(hw)).unwrap();
+        assert_eq!(spec.n_stages(), 1);
+        assert_eq!(spec.stage_models[0], m);
+        assert_eq!(spec.sub_batch, m.batch);
+        assert_eq!(spec.allreduce_bytes(0, 1), Bytes::ZERO);
+    }
+
+    #[test]
+    fn stages_cover_all_layers_and_keep_gating() {
+        let m = model_preset("llama3.1-405b").unwrap(); // 126 layers
+        for pp in [2usize, 3, 4, 5] {
+            let spec = HybridSpec::plan(&m, &cluster(2 * pp, 2, pp)).unwrap();
+            let total: usize = spec.stage_models.iter().map(|s| s.layers).sum();
+            assert_eq!(total, m.layers, "pp={pp}");
+            // Remainder layers land on the leading stages; stage 0 is critical.
+            let max = spec.stage_models.iter().map(|s| s.layers).max().unwrap();
+            assert_eq!(spec.stage_models[0].layers, max, "pp={pp}");
+            for s in &spec.stage_models {
+                assert!(s.is_gated(), "stage names must keep the llama gating");
+                assert_eq!(s.batch, m.batch / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_volume_is_ring_shaped() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let spec = HybridSpec::plan(&m, &cluster(4, 4, 1)).unwrap();
+        let grad = spec.grad_bytes[0];
+        assert_eq!(grad, Bytes(m.stack_params() as f64 * ELEM_BYTES));
+        let v = spec.allreduce_bytes(0, 4);
+        assert!((v.raw() - grad.raw() * 1.5).abs() < 1e-6); // 2·3/4
+    }
+
+    #[test]
+    fn invalid_shapes_are_rejected() {
+        let m = model_preset("tinyllama-1.1b").unwrap(); // 22 layers, batch 1024
+        assert!(HybridSpec::plan(&m, &cluster(4, 4, 1)).is_ok());
+        // dp does not divide the batch (1024 % 3 != 0)
+        assert!(HybridSpec::plan(&m, &cluster(3, 3, 1)).is_err());
+        // pp deeper than the stack
+        assert!(HybridSpec::plan(&m, &cluster(23, 1, 23)).is_err());
+        // hand-built shape mismatch
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let bad = ClusterConfig {
+            packages: 4,
+            dp: 3,
+            pp: 1,
+            inter: InterPkgLink::preset(InterKind::Substrate),
+            package_hw: hw,
+        };
+        assert!(HybridSpec::plan(&m, &bad).is_err());
+    }
+}

@@ -10,11 +10,17 @@
 //! Each planner turns a [`crate::workload::BlockDesc`] into per-die compute
 //! and NoP communication costs for one mini-batch, plus SRAM peak
 //! requirements and layout constraints (paper §V-A).
+//!
+//! [`hybrid`] composes any of the four intra-package TP methods with
+//! inter-package data and pipeline parallelism over a
+//! [`crate::config::ClusterConfig`].
 
 pub mod plan;
 pub mod hecaton;
 pub mod flat_ring;
 pub mod torus_ring;
 pub mod optimus;
+pub mod hybrid;
 
+pub use hybrid::HybridSpec;
 pub use plan::{planner, BlockPlan, PlanInput, SramReport, TpPlanner};

@@ -1,4 +1,4 @@
-//! **Ablations** — the two architecture-level design choices DESIGN.md
+//! **Ablations** — the two architecture-level design choices ARCHITECTURE.md
 //! calls out, isolated:
 //!
 //! * the high-throughput **bypass NoP router** (§III-A(b)): without the

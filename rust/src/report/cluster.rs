@@ -1,0 +1,239 @@
+//! **Cluster** — hybrid TP×DP×PP across packages vs Megatron-style TP
+//! spanning the cluster, plus cluster-level weak scaling.
+//!
+//! The paper's headline gap (5.29× over Megatron TP on Llama3.1-405B) is
+//! a statement about multi-package systems: once a model outgrows one
+//! package, the alternative to Hecaton's hybrid (TP inside the package,
+//! DP/PP across the fabric) is stretching tensor parallelism over the
+//! fabric itself — every ring all-reduce then crosses the off-package
+//! links and is paced by their per-crossing share
+//! ([`ClusterConfig::tp_across_hw`]). This driver prices both on the
+//! `405b-cluster` preset, smoke-checks the `tiny-cluster` preset under
+//! every engine backend, and runs DP weak scaling (global batch and
+//! replica count grown together).
+
+use crate::config::cluster::{cluster_preset, ClusterConfig};
+use crate::config::ModelConfig;
+use crate::nop::analytic::Method;
+use crate::sim::cluster::{simulate_cluster, ClusterPlan};
+use crate::sim::sweep::PlanCache;
+use crate::sim::system::{simulate_engine, EngineKind, PlanOptions};
+use crate::util::fmt::pct;
+use crate::util::table::Table;
+
+/// The tiny-cluster smoke grid: the hybrid under every engine backend —
+/// one [`ClusterPlan`] priced once, timed per backend.
+fn tiny_table() -> String {
+    let (model, cluster) = cluster_preset("tiny-cluster").expect("preset");
+    let cache = PlanCache::new();
+    let plan = ClusterPlan::build(&model, &cluster, Method::Hecaton, PlanOptions::default(), &cache)
+        .expect("preset shapes are valid");
+    let mut t = Table::new(&[
+        "engine", "latency", "bubble", "p2p", "allreduce", "energy", "tokens/s",
+    ])
+    .with_title(&format!(
+        "Cluster smoke — {} on {} packages (dp={} x pp={}), hecaton TP in-package",
+        model.name, cluster.packages, cluster.dp, cluster.pp
+    ))
+    .label_first();
+    for engine in EngineKind::all() {
+        let r = plan.time(engine);
+        let lat = r.latency.raw();
+        t.row(crate::table_row![
+            r.engine.name(),
+            r.latency,
+            pct(r.bubble.raw(), lat, 1),
+            pct(r.p2p.raw(), lat, 1),
+            pct(r.grad_allreduce.raw(), lat, 1),
+            r.energy_total,
+            format!("{:.0}", r.tokens_per_sec())
+        ]);
+    }
+    t.render()
+}
+
+/// Hybrid-vs-TP-across rows for one cluster preset. Returns the rendered
+/// table and the headline speedup (TP-across latency / hybrid latency).
+fn comparison(model: &ModelConfig, cluster: &ClusterConfig) -> (String, f64) {
+    let mut t = Table::new(&[
+        "scheme", "engine", "dies", "latency", "bubble", "allreduce", "energy", "tokens/s",
+        "SRAM",
+    ])
+    .with_title(&format!(
+        "Cluster — {}: Hecaton hybrid (TP-in-package x dp={} x pp={}) vs TP spanning {} packages \
+         ({:.0} GB/s fabric)",
+        model.name, cluster.dp, cluster.pp, cluster.packages, cluster.inter.gbs()
+    ))
+    .label_first();
+
+    let cache = PlanCache::new();
+    let plan = ClusterPlan::build(model, cluster, Method::Hecaton, PlanOptions::default(), &cache)
+        .expect("preset shapes are valid");
+    let mut hybrid_latency = f64::INFINITY;
+    for engine in [EngineKind::Analytic, EngineKind::Event] {
+        let r = plan.time(engine);
+        let lat = r.latency.raw();
+        if engine == EngineKind::Analytic {
+            hybrid_latency = lat;
+        }
+        t.row(crate::table_row![
+            "hybrid hecaton",
+            r.engine.name(),
+            r.total_dies,
+            r.latency,
+            pct(r.bubble.raw(), lat, 1),
+            pct(r.grad_allreduce.raw(), lat, 1),
+            r.energy_total,
+            format!("{:.0}", r.tokens_per_sec()),
+            if r.feasible() { "ok" } else { "*" }
+        ]);
+    }
+
+    // Megatron-style baseline: flat-ring TP stretched over the whole
+    // cluster, every ring crossing paced by its fabric share.
+    let across_hw = cluster.tp_across_hw();
+    let across = simulate_engine(model, &across_hw, Method::FlatRing, EngineKind::Analytic);
+    let lat = across.latency.raw();
+    t.row(crate::table_row![
+        "TP-across flat-ring",
+        across.engine.name(),
+        across.dies,
+        across.latency,
+        "—",
+        "—",
+        across.energy_total,
+        format!("{:.0}", across.tokens_per_sec(model)),
+        if across.feasible() { "ok" } else { "*" }
+    ]);
+
+    let speedup = lat / hybrid_latency;
+    let mut out = t.render();
+    out.push_str(&format!(
+        "Hybrid speedup over TP-across-packages: {speedup:.2}x\n"
+    ));
+    (out, speedup)
+}
+
+/// DP weak scaling: grow the global batch and the replica count together;
+/// per-replica work is constant, so latency stays near-flat for as long
+/// as the gradient all-reduce stays small next to compute. On this
+/// model's *shared* fabric all `dp` rings contend for one medium, so the
+/// ring term is `2·(dp−1)·grad/β` — linear in `dp`, not the bounded
+/// `2·grad/β` asymptote of per-replica links — and eventually caps weak
+/// scaling; the table's allreduce column makes that crossover visible.
+fn weak_scaling() -> String {
+    let (base, base_cluster) = cluster_preset("tiny-cluster").expect("preset");
+    let mut t = Table::new(&[
+        "k", "packages", "global batch", "latency", "allreduce", "tokens/s", "efficiency",
+    ])
+    .with_title("Cluster weak scaling — dp = k replicas, global batch x k, pp = 1")
+    .label_first();
+    let mut t1 = 0.0;
+    for k in [1usize, 2, 4, 8] {
+        let model = ModelConfig {
+            name: format!("{}@dp{k}", base.name),
+            batch: base.batch * k,
+            ..base.clone()
+        };
+        let cluster = ClusterConfig::try_new(
+            base_cluster.package_hw.clone(),
+            k,
+            k,
+            1,
+            base_cluster.inter.clone(),
+        )
+        .expect("k x 1 shapes are valid");
+        let r = simulate_cluster(&model, &cluster, Method::Hecaton, EngineKind::Analytic)
+            .expect("weak-scaling shapes are valid");
+        let lat = r.latency.raw();
+        if k == 1 {
+            t1 = lat;
+        }
+        t.row(crate::table_row![
+            k,
+            r.packages,
+            model.batch,
+            r.latency,
+            pct(r.grad_allreduce.raw(), lat, 1),
+            format!("{:.0}", r.tokens_per_sec()),
+            format!("{:.0}%", 100.0 * t1 / lat)
+        ]);
+    }
+    t.render()
+}
+
+/// Render the full cluster report.
+pub fn report() -> String {
+    let mut out = String::new();
+    out.push_str(&tiny_table());
+    out.push('\n');
+    let (model, cluster) = cluster_preset("405b-cluster").expect("preset");
+    let (table, _) = comparison(&model, &cluster);
+    out.push_str(&table);
+    out.push('\n');
+    out.push_str(&weak_scaling());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gap: on the 405B-class preset the hybrid must beat
+    /// TP stretched across packages decisively (the paper's single-package
+    /// gap is 5.29×; crossing a substrate fabric only widens it).
+    #[test]
+    fn hybrid_beats_tp_across_packages() {
+        let (model, cluster) = cluster_preset("405b-cluster").unwrap();
+        let (_, speedup) = comparison(&model, &cluster);
+        assert!(
+            speedup > 2.0,
+            "hybrid should beat TP-across by >2x, got {speedup:.2}x"
+        );
+        assert!(speedup.is_finite());
+    }
+
+    /// Weak scaling: doubling replicas and batch together keeps latency
+    /// near-flat at these scales — the shared-fabric ring term
+    /// (`2·(dp−1)·grad/β`, linear in dp) is still dwarfed by compute for
+    /// TinyLlama-class stages at k = 8.
+    #[test]
+    fn dp_weak_scaling_is_near_flat() {
+        let (base, base_cluster) = cluster_preset("tiny-cluster").unwrap();
+        let mut latencies = Vec::new();
+        for k in [1usize, 8] {
+            let model = ModelConfig {
+                name: format!("{}@dp{k}", base.name),
+                batch: base.batch * k,
+                ..base.clone()
+            };
+            let cluster = ClusterConfig::try_new(
+                base_cluster.package_hw.clone(),
+                k,
+                k,
+                1,
+                base_cluster.inter.clone(),
+            )
+            .unwrap();
+            let r =
+                simulate_cluster(&model, &cluster, Method::Hecaton, EngineKind::Analytic).unwrap();
+            latencies.push(r.latency.raw());
+        }
+        let eff = latencies[0] / latencies[1];
+        assert!(eff > 0.8, "weak-scaling efficiency {eff:.2} at k=8");
+        // And throughput grows ~k: same time, k x the tokens.
+        assert!(latencies[1] < latencies[0] * 1.25);
+    }
+
+    #[test]
+    fn report_renders_all_sections() {
+        let r = report();
+        assert!(r.contains("Cluster smoke"));
+        assert!(r.contains("llama3.1-405b"));
+        assert!(r.contains("Hybrid speedup over TP-across-packages"));
+        assert!(r.contains("weak scaling"));
+        for engine in EngineKind::all() {
+            assert!(r.contains(engine.name()), "missing engine {}", engine.name());
+        }
+    }
+}

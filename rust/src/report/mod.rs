@@ -12,12 +12,13 @@ pub mod gpu;
 pub mod weak;
 pub mod ablation;
 pub mod congestion;
+pub mod cluster;
 
 /// All experiment ids.
 pub fn experiments() -> &'static [&'static str] {
     &[
         "fig8", "fig9", "fig10", "fig11", "table3", "table4", "gpu", "weak", "ablation",
-        "congestion",
+        "congestion", "cluster",
     ]
 }
 
@@ -34,6 +35,7 @@ pub fn run(id: &str) -> crate::Result<String> {
         "weak" => Ok(weak::report()),
         "ablation" => Ok(ablation::report()),
         "congestion" => Ok(congestion::report()),
+        "cluster" => Ok(cluster::report()),
         other => anyhow::bail!("unknown experiment '{other}'; try one of {:?}", experiments()),
     }
 }

@@ -1,0 +1,667 @@
+//! Cluster-level simulation: hybrid TP×DP×PP over many packages.
+//!
+//! [`ClusterPlan`] extends the plan → price → time split of
+//! [`crate::sim::system`] from one package to a [`ClusterConfig`]:
+//!
+//! * **plan** — [`HybridSpec`] decomposes the model into per-stage
+//!   sub-models (pipeline parallelism) over per-replica sub-batches (data
+//!   parallelism); each stage sub-model is priced by the *existing*
+//!   per-package [`SimPlan`] machinery, fetched through the sweep
+//!   [`PlanCache`] so identical stages (and repeated sweep points) share
+//!   one plan + price pass.
+//! * **time** — the per-stage latency under any [`EngineKind`] feeds the
+//!   1F1B schedule ([`crate::sched::onef1b`]): the analytic backend uses
+//!   the closed-form bubble + boundary-transfer + gradient-all-reduce
+//!   terms, the event backends execute the 1F1B task DAG with every
+//!   boundary activation and gradient ring riding the **shared
+//!   inter-package fabric as a fair-share resource** — congestion on a
+//!   slow fabric is actually priced.
+//!
+//! Invariant (regression-tested in `tests/integration_cluster.rs`): the
+//! degenerate cluster — 1 package, `dp = pp = 1` — produces results
+//! bitwise identical to the single-package simulator for every TP method
+//! and every engine backend.
+
+use std::sync::Arc;
+
+use crate::config::cluster::{ClusterConfig, InterPkgLink};
+use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::nop::analytic::Method;
+use crate::parallel::hybrid::HybridSpec;
+use crate::sched::onef1b::{onef1b_analytic, onef1b_event, Fabric, PipelineStage};
+use crate::sim::sweep::{csv_field, json_escape, parallel_map, PlanCache};
+use crate::sim::system::{EngineKind, PlanOptions, SimPlan, SimResult};
+use crate::util::table::Table;
+use crate::util::{Bytes, Energy, Seconds};
+
+/// Cap on 1F1B microbatches simulated per cluster batch. Deeper plans are
+/// coalesced exactly like the per-package pipeline's
+/// [`crate::sched::pipeline::EVENT_ITEM_CAP`]: both timing backends use
+/// the same effective depth, so the cap never splits them apart.
+pub const CLUSTER_MB_CAP: usize = 256;
+
+/// Immutable cluster plan: per-stage sub-plans plus fabric volumes.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    pub model_name: String,
+    pub method: Method,
+    pub opts: PlanOptions,
+    pub cluster: ClusterConfig,
+    /// The hybrid decomposition (stage sub-models, gradient volumes).
+    pub spec: HybridSpec,
+    /// One priced per-package plan per pipeline stage, in stage order;
+    /// stage 0 is the critical (deepest) stage. At most two are distinct
+    /// (ceil/floor layer split) and they are shared via the plan cache.
+    pub stage_plans: Vec<Arc<SimPlan>>,
+    /// 1F1B depth: the stage planner's mini-batch count, capped.
+    pub microbatches: usize,
+    /// Bytes of one microbatch boundary activation `[tokens_mb, h]`.
+    pub act_mb_bytes: Bytes,
+    /// Global tokens per batch (all replicas) — throughput denominator.
+    pub batch_tokens: u64,
+}
+
+/// Result of simulating one training batch on a cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    pub model: String,
+    pub method: Method,
+    pub engine: EngineKind,
+    pub packages: usize,
+    pub dp: usize,
+    pub pp: usize,
+    pub total_dies: usize,
+    pub microbatches: usize,
+    /// Wall-clock for one full global batch (fwd + bwd + grad all-reduce).
+    pub latency: Seconds,
+    /// Pipeline-bubble overhead (zero when `pp == 1`). For the event
+    /// backends this is the residual over the stage work and the
+    /// closed-form transfer estimates, so on a *congested* fabric it also
+    /// absorbs the transfer overrun the closed forms cannot see — compare
+    /// against the analytic row to separate the two.
+    pub bubble: Seconds,
+    /// Boundary activation/gradient transfer fill on the critical path
+    /// (closed-form, uncongested estimate).
+    pub p2p: Seconds,
+    /// Exposed DP gradient all-reduce (closed-form estimate; the event
+    /// backends price the actual streams inside the 1F1B DAG).
+    pub grad_allreduce: Seconds,
+    /// The critical stage's per-package result (breakdown, SRAM,
+    /// feasibility — identical to the single-package simulator's output
+    /// on a degenerate cluster).
+    pub stage: SimResult,
+    pub energy: EnergyBreakdown,
+    pub energy_total: Energy,
+    /// Global tokens per batch (all replicas).
+    pub batch_tokens: u64,
+}
+
+impl ClusterResult {
+    /// Practically valid: the stage layout/SRAM admits the TP method.
+    pub fn feasible(&self) -> bool {
+        self.stage.feasible()
+    }
+    /// Cluster training throughput, tokens/s.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.batch_tokens as f64 / self.latency.raw()
+    }
+}
+
+impl ClusterPlan {
+    /// Decompose and price: stage sub-plans via `cache`, fabric volumes
+    /// via [`HybridSpec`]. Fails on shapes the model cannot satisfy
+    /// (`dp ∤ batch`, `pp > layers`, `dp·pp ≠ packages`).
+    pub fn build(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        method: Method,
+        opts: PlanOptions,
+        cache: &PlanCache,
+    ) -> crate::Result<ClusterPlan> {
+        let spec = HybridSpec::plan(model, cluster)?;
+        let stage_plans: Vec<Arc<SimPlan>> = spec
+            .stage_models
+            .iter()
+            .map(|sm| cache.plan(sm, &cluster.package_hw, method, opts))
+            .collect();
+        let microbatches = stage_plans[0].n_minibatches.clamp(1, CLUSTER_MB_CAP);
+        let act_mb_bytes = spec.act_bytes / microbatches as f64;
+        Ok(ClusterPlan {
+            model_name: model.name.clone(),
+            method,
+            opts,
+            cluster: cluster.clone(),
+            spec,
+            stage_plans,
+            microbatches,
+            act_mb_bytes,
+            batch_tokens: model.tokens_per_batch(),
+        })
+    }
+
+    /// Closed-form DP ring all-reduce time for stage `s`'s gradients over
+    /// the fabric (zero when `dp == 1`).
+    ///
+    /// All `dp` replicas' rings run concurrently over the one shared
+    /// fabric, so the medium carries `dp ×` the per-package ring volume —
+    /// under fluid fair sharing that is exactly a `dp ×` longer stream.
+    pub fn allreduce_time(&self, s: usize) -> Seconds {
+        let dp = self.cluster.dp;
+        let vol = self.spec.allreduce_bytes(s, dp);
+        if vol.raw() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        (vol * dp as f64).over_bandwidth(self.cluster.inter.bandwidth)
+            + self.cluster.inter.latency * (2.0 * (dp as f64 - 1.0))
+    }
+
+    /// Stage `s`'s all-reduce as fabric wire bytes for the event DAG:
+    /// all replicas' concurrent rings (`dp ×` the per-package volume)
+    /// with the ring hop latency folded in.
+    fn allreduce_wire(&self, s: usize) -> Bytes {
+        let dp = self.cluster.dp;
+        let vol = self.spec.allreduce_bytes(s, dp);
+        if vol.raw() <= 0.0 {
+            return Bytes::ZERO;
+        }
+        Bytes(
+            vol.raw() * dp as f64
+                + self.cluster.inter.latency.raw()
+                    * self.cluster.inter.bandwidth
+                    * (2.0 * (dp as f64 - 1.0)),
+        )
+    }
+
+    /// Time the cluster under a backend.
+    ///
+    /// All pipeline stages are timed at the critical (deepest) stage's
+    /// cost — with a remainder layer the floor stages are modeled one
+    /// layer pessimistically, which keeps the analytic closed form and
+    /// the homogeneous 1F1B DAG in lockstep. Energy, by contrast, counts
+    /// every stage's true priced work.
+    pub fn time(&self, engine: EngineKind) -> ClusterResult {
+        let dp = self.cluster.dp;
+        let dpf = dp as f64;
+        let pp = self.cluster.pp;
+        let m = self.microbatches;
+        let fabric = Fabric {
+            bandwidth: self.cluster.inter.bandwidth,
+            latency: self.cluster.inter.latency,
+        };
+
+        // Critical stage under the requested backend (the degenerate
+        // cluster's entire result).
+        let stage = self.stage_plans[0].time(engine);
+
+        // ── pipeline ──
+        // All dp replicas run the same 1F1B schedule in lockstep over the
+        // one shared fabric, so every boundary crossing carries dp × the
+        // per-replica activation bytes — the same traffic the energy
+        // accounting below charges.
+        let wire_mb = self.act_mb_bytes * dpf;
+        let (pipeline_latency, p2p) = if pp == 1 {
+            (stage.latency, Seconds::ZERO)
+        } else {
+            let (fa, ba) = self.stage_plans[0].analytic_pass_latency();
+            // Zero-cost degenerate stage chains must not divide 0/0 into
+            // NaN latency; an even split is exact when both passes are 0.
+            let ratio_f = if (fa + ba).raw() > 0.0 {
+                fa.raw() / (fa + ba).raw()
+            } else {
+                0.5
+            };
+            let slot = PipelineStage {
+                fwd: stage.latency * ratio_f / m as f64,
+                bwd: stage.latency * (1.0 - ratio_f) / m as f64,
+            };
+            let stages_vec = vec![slot; pp];
+            let hop = wire_mb.over_bandwidth(fabric.bandwidth) + fabric.latency;
+            let p2p = hop * (2 * (pp - 1)) as f64;
+            let lat = if engine.is_event() {
+                // DP gradient rings ride the same fair-shared fabric.
+                let tails: Vec<Bytes> = (0..pp).map(|s| self.allreduce_wire(s)).collect();
+                onef1b_event(&stages_vec, m, wire_mb, &tails, &fabric)
+            } else {
+                onef1b_analytic(&stages_vec, m, wire_mb, &fabric)
+            };
+            (lat, p2p)
+        };
+
+        // ── DP gradient all-reduce ──
+        // The event 1F1B DAG already carries the gradient streams; the
+        // analytic path (and the DAG-less pp == 1 case) charges stage 0's
+        // ring serially — it drains last, and the other stages' rings
+        // overlap its remaining backwards.
+        let ar = self.allreduce_time(0);
+        let latency = if pp > 1 && engine.is_event() {
+            pipeline_latency
+        } else if dp > 1 {
+            pipeline_latency + ar
+        } else {
+            pipeline_latency
+        };
+        let bubble = if pp == 1 {
+            Seconds::ZERO
+        } else {
+            let mut b = pipeline_latency
+                .saturating_sub(stage.latency)
+                .saturating_sub(p2p);
+            if engine.is_event() {
+                // The event makespan folds the gradient rings in; keep the
+                // bubble and all-reduce columns disjoint in the breakdown.
+                b = b.saturating_sub(ar);
+            }
+            b
+        };
+
+        // ── energy: true per-stage dynamic work × dp replicas ──
+        let mut dynamic = EnergyBreakdown::default();
+        for plan in &self.stage_plans {
+            dynamic.add(plan.energy);
+        }
+        let mut energy = EnergyBreakdown {
+            compute: dynamic.compute * dpf,
+            sram: dynamic.sram * dpf,
+            nop: dynamic.nop * dpf,
+            dram: dynamic.dram * dpf,
+            static_e: dynamic.static_e * dpf, // zero in priced plans
+        };
+        // Fabric traffic (boundary activations + gradient rings) at the
+        // fabric's pJ/bit, filed under the network bucket.
+        let mut fabric_bytes = Bytes::ZERO;
+        if pp > 1 {
+            fabric_bytes += self.act_mb_bytes * ((2 * (pp - 1) * m) as f64) * dpf;
+        }
+        for s in 0..pp {
+            fabric_bytes += self.spec.allreduce_bytes(s, dp) * dpf;
+        }
+        energy.nop += Energy::pj(fabric_bytes.bits() * self.cluster.inter.pj_per_bit);
+        // Static power: every die in the cluster for the full wall-clock.
+        energy.static_e += EnergyModel::new(&self.cluster.package_hw).static_energy(latency)
+            * (self.cluster.packages as f64);
+
+        ClusterResult {
+            model: self.model_name.clone(),
+            method: self.method,
+            engine,
+            packages: self.cluster.packages,
+            dp,
+            pp,
+            total_dies: self.cluster.total_dies(),
+            microbatches: m,
+            latency,
+            bubble,
+            p2p,
+            grad_allreduce: ar,
+            stage,
+            energy,
+            energy_total: energy.total(),
+            batch_tokens: self.batch_tokens,
+        }
+    }
+}
+
+/// Simulate one training batch of `model` on `cluster` using an
+/// intra-package TP `method` and a timing backend.
+///
+/// One-shot convenience with a private plan cache. To time several
+/// backends on the same cluster, build a [`ClusterPlan`] once (through a
+/// shared [`PlanCache`]) and call [`ClusterPlan::time`] per engine — the
+/// pricing work is identical across backends.
+pub fn simulate_cluster(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    method: Method,
+    engine: EngineKind,
+) -> crate::Result<ClusterResult> {
+    let cache = PlanCache::new();
+    Ok(ClusterPlan::build(model, cluster, method, PlanOptions::default(), &cache)?.time(engine))
+}
+
+// ───────────────────────── cluster sweep ─────────────────────────
+
+/// One point of a cluster sweep: a fully-specified cluster simulation.
+#[derive(Debug, Clone)]
+pub struct ClusterPoint {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub method: Method,
+    pub engine: EngineKind,
+}
+
+/// The cluster cross-product grid: the per-package axes of
+/// [`crate::sim::sweep::SweepGrid`] extended with the cluster knobs
+/// (`--n-packages/--dp/--pp/--inter-bw` in the CLI).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterGrid {
+    pub models: Vec<ModelConfig>,
+    pub meshes: Vec<(usize, usize)>,
+    pub packages: Vec<PackageKind>,
+    pub drams: Vec<DramKind>,
+    pub methods: Vec<Method>,
+    pub engines: Vec<EngineKind>,
+    pub n_packages: Vec<usize>,
+    pub dp: Vec<usize>,
+    pub pp: Vec<usize>,
+    pub inter: Vec<InterPkgLink>,
+}
+
+impl ClusterGrid {
+    /// Expand into a deterministic point list. Cross-product combinations
+    /// whose shape is inconsistent (`dp·pp ≠ packages`) or that the model
+    /// cannot satisfy (`dp ∤ batch`, `pp > layers`) are *skipped* (the
+    /// second return value counts them) — a grid like
+    /// `--n-packages 4 --dp 1,2,4 --pp 1,2,4` naturally contains both. An
+    /// entirely-skipped grid is the caller's error to surface.
+    pub fn points(&self) -> crate::Result<(Vec<ClusterPoint>, usize)> {
+        let per_combo = self.methods.len() * self.engines.len();
+        let mut out = Vec::new();
+        let mut skipped = 0usize;
+        for model in &self.models {
+            for &(rows, cols) in &self.meshes {
+                for &package in &self.packages {
+                    for &dram in &self.drams {
+                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                        for inter in &self.inter {
+                            for &npkg in &self.n_packages {
+                                for &dp in &self.dp {
+                                    for &pp in &self.pp {
+                                        let Ok(cluster) = ClusterConfig::try_new(
+                                            hw.clone(),
+                                            npkg,
+                                            dp,
+                                            pp,
+                                            inter.clone(),
+                                        ) else {
+                                            skipped += per_combo;
+                                            continue;
+                                        };
+                                        if HybridSpec::plan(model, &cluster).is_err() {
+                                            skipped += per_combo;
+                                            continue;
+                                        }
+                                        for &method in &self.methods {
+                                            for &engine in &self.engines {
+                                                out.push(ClusterPoint {
+                                                    model: model.clone(),
+                                                    cluster: cluster.clone(),
+                                                    method,
+                                                    engine,
+                                                });
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok((out, skipped))
+    }
+}
+
+/// Run a cluster point list on the sweep worker pool (results in point
+/// order, bitwise independent of `threads`). Points from
+/// [`ClusterGrid::points`] are pre-validated; a hand-built point with an
+/// unsatisfiable shape surfaces as an `Err`, not a worker panic.
+pub fn run_cluster_points(
+    cache: &PlanCache,
+    points: &[ClusterPoint],
+    threads: usize,
+) -> crate::Result<Vec<ClusterResult>> {
+    parallel_map(points, threads, |p| {
+        ClusterPlan::build(&p.model, &p.cluster, p.method, PlanOptions::default(), cache)
+            .map(|plan| plan.time(p.engine))
+    })
+    .into_iter()
+    .collect()
+}
+
+// ───────────────────────── renderers ─────────────────────────
+
+/// Render cluster sweep results as a table (CLI `--format table`).
+pub fn render_cluster_table(
+    points: &[ClusterPoint],
+    results: &[ClusterResult],
+    pareto: &[bool],
+) -> String {
+    let mut t = Table::new(&[
+        "model", "mesh", "pkgs", "dp", "pp", "inter", "package", "dram", "method", "engine",
+        "latency", "bubble", "p2p", "allreduce", "energy", "feasible", "pareto",
+    ])
+    .with_title("Cluster sweep — * marks the latency × energy Pareto frontier")
+    .label_first();
+    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
+        t.row(crate::table_row![
+            p.model.name.clone(),
+            format!("{}x{}", p.cluster.package_hw.mesh_rows, p.cluster.package_hw.mesh_cols),
+            r.packages,
+            r.dp,
+            r.pp,
+            format!("{:.0}GB/s", p.cluster.inter.gbs()),
+            p.cluster.package_hw.package.name(),
+            p.cluster.package_hw.dram.kind.name(),
+            p.method.name(),
+            r.engine.name(),
+            r.latency,
+            crate::util::fmt::pct(r.bubble.raw(), r.latency.raw(), 1),
+            crate::util::fmt::pct(r.p2p.raw(), r.latency.raw(), 1),
+            crate::util::fmt::pct(r.grad_allreduce.raw(), r.latency.raw(), 1),
+            r.energy_total,
+            if r.feasible() { "yes" } else { "no" },
+            if on { "*" } else { "" }
+        ]);
+    }
+    t.render()
+}
+
+/// Render cluster sweep results as CSV with raw SI values.
+pub fn render_cluster_csv(
+    points: &[ClusterPoint],
+    results: &[ClusterResult],
+    pareto: &[bool],
+) -> String {
+    let mut out = String::from(
+        "model,mesh,packages,dp,pp,inter_gbs,package,dram,method,engine,\
+         latency_s,bubble_s,p2p_s,allreduce_s,energy_j,feasible,pareto\n",
+    );
+    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
+        out.push_str(&format!(
+            "{},{}x{},{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e},{},{}\n",
+            csv_field(&p.model.name),
+            p.cluster.package_hw.mesh_rows,
+            p.cluster.package_hw.mesh_cols,
+            r.packages,
+            r.dp,
+            r.pp,
+            p.cluster.inter.gbs(),
+            p.cluster.package_hw.package.name(),
+            p.cluster.package_hw.dram.kind.name(),
+            p.method.name(),
+            r.engine.name(),
+            r.latency.raw(),
+            r.bubble.raw(),
+            r.p2p.raw(),
+            r.grad_allreduce.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out
+}
+
+/// Render cluster sweep results as a JSON array.
+pub fn render_cluster_json(
+    points: &[ClusterPoint],
+    results: &[ClusterResult],
+    pareto: &[bool],
+) -> String {
+    let mut out = String::from("[\n");
+    for (i, ((p, r), &on)) in points.iter().zip(results).zip(pareto).enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"packages\": {}, \"dp\": {}, \
+             \"pp\": {}, \"inter_gbs\": {}, \"package\": \"{}\", \"dram\": \"{}\", \
+             \"method\": \"{}\", \"engine\": \"{}\", \
+             \"latency_s\": {:e}, \"bubble_s\": {:e}, \"p2p_s\": {:e}, \
+             \"allreduce_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
+            json_escape(&p.model.name),
+            p.cluster.package_hw.mesh_rows,
+            p.cluster.package_hw.mesh_cols,
+            r.packages,
+            r.dp,
+            r.pp,
+            p.cluster.inter.gbs(),
+            p.cluster.package_hw.package.name(),
+            p.cluster.package_hw.dram.kind.name(),
+            p.method.name(),
+            r.engine.name(),
+            r.latency.raw(),
+            r.bubble.raw(),
+            r.p2p.raw(),
+            r.grad_allreduce.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::{cluster_preset, InterKind};
+    use crate::config::presets::model_preset;
+
+    fn tiny_cluster() -> (ModelConfig, ClusterConfig) {
+        cluster_preset("tiny-cluster").unwrap()
+    }
+
+    #[test]
+    fn build_prices_stages_through_the_cache() {
+        let (m, c) = tiny_cluster();
+        let cache = PlanCache::new();
+        let plan =
+            ClusterPlan::build(&m, &c, Method::Hecaton, PlanOptions::default(), &cache).unwrap();
+        assert_eq!(plan.stage_plans.len(), 2);
+        // 22 layers / pp 2: equal stages share one cached plan.
+        assert_eq!(cache.len(), 1, "identical stages share one sub-plan");
+        assert_eq!(plan.stage_plans[0].n_minibatches, plan.stage_plans[1].n_minibatches);
+        assert!(plan.microbatches >= 1 && plan.microbatches <= CLUSTER_MB_CAP);
+        assert!(plan.act_mb_bytes.raw() > 0.0);
+        // Re-timing is idempotent (the plan is immutable).
+        let a = plan.time(EngineKind::Analytic);
+        let b = plan.time(EngineKind::Analytic);
+        assert_eq!(a.latency.raw().to_bits(), b.latency.raw().to_bits());
+        assert_eq!(a.energy_total.raw().to_bits(), b.energy_total.raw().to_bits());
+    }
+
+    #[test]
+    fn pipeline_and_dp_terms_appear_only_when_enabled() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let inter = InterPkgLink::preset(InterKind::Substrate);
+        // pp-only cluster: bubble + p2p, no all-reduce.
+        let pp_only =
+            ClusterConfig::try_new(hw.clone(), 2, 1, 2, inter.clone()).unwrap();
+        let r = simulate_cluster(&m, &pp_only, Method::Hecaton, EngineKind::Analytic).unwrap();
+        assert!(r.bubble.raw() > 0.0, "pp=2 must expose a bubble");
+        assert!(r.p2p.raw() > 0.0);
+        assert_eq!(r.grad_allreduce, Seconds::ZERO);
+        assert_eq!(r.total_dies, 32);
+        // dp-only cluster: all-reduce, no bubble.
+        let dp_only = ClusterConfig::try_new(hw, 2, 2, 1, inter).unwrap();
+        let r = simulate_cluster(&m, &dp_only, Method::Hecaton, EngineKind::Analytic).unwrap();
+        assert_eq!(r.bubble, Seconds::ZERO);
+        assert_eq!(r.p2p, Seconds::ZERO);
+        assert!(r.grad_allreduce.raw() > 0.0);
+        assert!(r.latency > r.stage.latency, "all-reduce extends the batch");
+        // dp halves the per-replica batch: the stage runs a 512-sequence
+        // sub-batch but the throughput denominator stays global.
+        assert_eq!(r.batch_tokens, m.tokens_per_batch());
+        assert!(r.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn deeper_pipelines_trade_bubble_for_memory() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let inter = InterPkgLink::preset(InterKind::Substrate);
+        let r2 = simulate_cluster(
+            &m,
+            &ClusterConfig::try_new(hw.clone(), 2, 1, 2, inter.clone()).unwrap(),
+            Method::Hecaton,
+            EngineKind::Analytic,
+        )
+        .unwrap();
+        let r11 = simulate_cluster(
+            &m,
+            &ClusterConfig::try_new(hw, 11, 1, 11, inter).unwrap(),
+            Method::Hecaton,
+            EngineKind::Analytic,
+        )
+        .unwrap();
+        // More stages, shallower stages: bigger relative bubble.
+        assert!(
+            r11.bubble.raw() / r11.latency.raw() > r2.bubble.raw() / r2.latency.raw(),
+            "bubble share must grow with pp ({} vs {})",
+            r11.bubble,
+            r2.bubble
+        );
+    }
+
+    #[test]
+    fn grid_skips_inconsistent_combos() {
+        let g = ClusterGrid {
+            models: vec![model_preset("tinyllama-1.1b").unwrap()],
+            meshes: vec![(4, 4)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            methods: vec![Method::Hecaton],
+            engines: vec![EngineKind::Analytic],
+            n_packages: vec![4],
+            dp: vec![1, 2, 4],
+            pp: vec![1, 2, 4],
+            inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        };
+        let (pts, skipped) = g.points().unwrap();
+        // Valid shapes with 4 packages: (1,4), (2,2), (4,1) — 9 combos total.
+        assert_eq!(pts.len(), 3);
+        assert_eq!(skipped, 6);
+        let results = run_cluster_points(&PlanCache::new(), &pts, 2).unwrap();
+        assert_eq!(results.len(), 3);
+        let table = render_cluster_table(&pts, &results, &[false; 3]);
+        assert!(table.contains("tinyllama-1.1b"));
+        let csv = render_cluster_csv(&pts, &results, &[false; 3]);
+        assert_eq!(csv.lines().count(), 4);
+        let json = render_cluster_json(&pts, &results, &[true; 3]);
+        assert_eq!(json.matches("\"model\"").count(), 3);
+    }
+
+    /// A slow fabric congests the event DAG beyond the analytic closed
+    /// form — the cluster-level counterpart of the congestion reports.
+    /// At 100 MB/s the boundary-activation streams alone demand more
+    /// fabric-seconds than the whole analytic batch, so the gap is
+    /// decisive regardless of the planner's microbatch choice.
+    #[test]
+    fn slow_fabric_congests_event_backend() {
+        let (m, mut c) = tiny_cluster();
+        c.inter.bandwidth = 1.0e8; // 100 MB/s fabric
+        let a = simulate_cluster(&m, &c, Method::Hecaton, EngineKind::Analytic).unwrap();
+        let e = simulate_cluster(&m, &c, Method::Hecaton, EngineKind::Event).unwrap();
+        assert!(
+            e.latency.raw() > a.latency.raw() * 1.05,
+            "event {} should clearly exceed analytic {} on a congested fabric",
+            e.latency,
+            a.latency
+        );
+    }
+}

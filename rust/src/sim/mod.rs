@@ -13,14 +13,25 @@
 //! and **time** (a backend turns the stage chain into wall-clock). The
 //! first two are captured in an immutable [`system::SimPlan`]; the
 //! [`sweep`] module runs grids of points in parallel with memoized plans.
+//!
+//! [`cluster`] lifts the same split to a cluster of packages: per-stage
+//! sub-plans (priced once via the plan cache) compose with the 1F1B
+//! pipeline schedule and DP gradient all-reduce over the shared
+//! inter-package fabric.
 
+pub mod cluster;
 pub mod engine;
 pub mod sweep;
 pub mod system;
 pub mod weak_scaling;
 
+pub use cluster::{
+    run_cluster_points, simulate_cluster, ClusterGrid, ClusterPlan, ClusterPoint, ClusterResult,
+};
 pub use engine::{EventEngine, RunResult, Service, Sharing};
-pub use sweep::{pareto_front, run_points, run_points_threads, PlanCache, SweepGrid, SweepPoint};
+pub use sweep::{
+    parallel_map, pareto_front, run_points, run_points_threads, PlanCache, SweepGrid, SweepPoint,
+};
 pub use system::{
     simulate, simulate_engine, simulate_with, EngineKind, LatencyBreakdown, PlanOptions, SimPlan,
     SimResult,

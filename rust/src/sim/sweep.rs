@@ -347,37 +347,52 @@ pub fn run_points_threads(points: &[SweepPoint], threads: usize) -> Vec<SimResul
 }
 
 /// Run a point list against a caller-owned plan cache.
-///
-/// Workers self-schedule through an atomic cursor (work stealing at
-/// point granularity: a worker that finishes early simply claims the next
-/// unclaimed index), stream `(index, result)` pairs over a channel, and
-/// the collector re-assembles them in point order — output is identical
-/// regardless of `threads`.
 pub fn run_points_on(cache: &PlanCache, points: &[SweepPoint], threads: usize) -> Vec<SimResult> {
+    parallel_map(points, threads, |p| cache.simulate(p))
+}
+
+/// The generic core of the sweep runner: apply `f` to every item on a
+/// self-scheduling worker pool and return the results **in item order**.
+///
+/// Workers self-schedule through an atomic cursor (work stealing at item
+/// granularity: a worker that finishes early simply claims the next
+/// unclaimed index), stream `(index, result)` pairs over a channel, and
+/// the collector re-assembles them in order — output is identical
+/// regardless of `threads` (`0` = one worker per core). Both the
+/// [`SimResult`] sweep above and the cluster sweep
+/// ([`crate::sim::cluster`]) run on this.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let threads = if threads == 0 {
         default_threads()
     } else {
         threads
     }
-    .min(points.len().max(1));
+    .min(items.len().max(1));
 
-    if threads <= 1 || points.len() <= 1 {
-        return points.iter().map(|p| cache.simulate(p)).collect();
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
     }
 
     let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel::<(usize, SimResult)>();
-    let mut slots: Vec<Option<SimResult>> = vec![None; points.len()];
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let f = &f;
     std::thread::scope(|s| {
         for _ in 0..threads {
             let tx = tx.clone();
             let next = &next;
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
+                if i >= items.len() {
                     break;
                 }
-                let r = cache.simulate(&points[i]);
+                let r = f(&items[i]);
                 if tx.send((i, r)).is_err() {
                     break;
                 }
@@ -390,7 +405,7 @@ pub fn run_points_on(cache: &PlanCache, points: &[SweepPoint], threads: usize) -
     });
     slots
         .into_iter()
-        .map(|r| r.expect("every point produced a result"))
+        .map(|r| r.expect("every item produced a result"))
         .collect()
 }
 
@@ -441,7 +456,8 @@ pub fn render_table(points: &[SweepPoint], results: &[SimResult], pareto: &[bool
 
 /// CSV field quoting for the one free-form column (model names are
 /// usually preset identifiers, but `SweepGrid.models` is public API).
-fn csv_field(s: &str) -> String {
+/// Shared with the cluster renderers ([`crate::sim::cluster`]).
+pub(crate) fn csv_field(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
@@ -450,7 +466,8 @@ fn csv_field(s: &str) -> String {
 }
 
 /// Minimal JSON string escaping for the free-form model-name column.
-fn json_escape(s: &str) -> String {
+/// Shared with the cluster renderers ([`crate::sim::cluster`]).
+pub(crate) fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
@@ -602,6 +619,20 @@ mod tests {
             },
         );
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn parallel_map_preserves_item_order() {
+        let items: Vec<usize> = (0..97).collect();
+        let serial = parallel_map(&items, 1, |&x| x * x);
+        for threads in [0usize, 2, 3, 8] {
+            let par = parallel_map(&items, threads, |&x| x * x);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // Non-Clone results are fine (results are moved, not duplicated).
+        let strings = parallel_map(&items, 4, |&x| format!("#{x}"));
+        assert_eq!(strings[96], "#96");
+        assert!(parallel_map(&[] as &[usize], 4, |&x| x).is_empty());
     }
 
     #[test]

@@ -176,7 +176,7 @@ impl Default for PlanOptions {
 }
 
 /// Ablation switches plus timing backend for [`simulate_with`]
-/// (DESIGN.md design choices).
+/// (the ARCHITECTURE.md design choices).
 #[derive(Debug, Clone, Copy)]
 pub struct SimOptions {
     /// Layer fusion (§III-B(b)).
@@ -362,6 +362,32 @@ impl SimPlan {
             dram: DramModel::new(hw),
             emodel,
         }
+    }
+
+    /// Closed-form split of the analytic batch latency into its forward
+    /// and backward shares.
+    ///
+    /// The priced chain alternates passes per fusion group — `build`
+    /// pushes `[g₀·fwd, g₀·bwd, g₁·fwd, …]` — so even indices are forward
+    /// stages (asserted in `plan_exposes_schedule_shape`). The cluster
+    /// layer uses the resulting ratio to apportion any backend's stage
+    /// latency between the 1F1B forward and backward microbatch slots.
+    pub fn analytic_pass_latency(&self) -> (Seconds, Seconds) {
+        let mut fwd = Seconds::ZERO;
+        let mut bwd = Seconds::ZERO;
+        for (i, st) in self.stages.iter().enumerate() {
+            let ov = overlap(StageTimes {
+                on_package: st.on_package,
+                dram: self.dram.stream_time(st.dram_bytes),
+                n_minibatches: st.n_minibatches,
+            });
+            if i % 2 == 0 {
+                fwd += ov.latency;
+            } else {
+                bwd += ov.latency;
+            }
+        }
+        (fwd, bwd)
     }
 
     /// Phase 3: run a timing backend over the priced stage chain.
@@ -659,6 +685,16 @@ mod tests {
         let plan = SimPlan::build(&m, &hw, Method::Hecaton, PlanOptions::default());
         assert_eq!(plan.stages.len(), 2 * plan.groups.len());
         assert!(plan.min_utilization.is_some(), "real workloads record utilization");
+        // The pass split covers the analytic latency (same per-stage
+        // closed forms, partitioned by the fwd/bwd alternation) and the
+        // backward share dominates (bwd ≈ 2× fwd work).
+        let (f, b) = plan.analytic_pass_latency();
+        let timed = plan.time(EngineKind::Analytic);
+        assert!(
+            ((f + b).raw() - timed.latency.raw()).abs() / timed.latency.raw() < 1e-9,
+            "pass split must cover the analytic latency"
+        );
+        assert!(b > f, "backward share should dominate");
         let r = plan.time(EngineKind::Analytic);
         assert_eq!(r.fusion_groups, plan.groups.len());
         assert_eq!(r.minibatch_tokens, plan.minibatch_tokens);

@@ -102,6 +102,27 @@ impl Matches {
     }
 }
 
+/// Split a comma-separated list into trimmed, non-empty items.
+pub fn split_list(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|x| !x.is_empty()).collect()
+}
+
+/// Parse a comma-separated list with a per-item parser — the one place
+/// every list-valued flag (sweep axes, cluster knobs) goes through, so
+/// whitespace/empty-item handling stays uniform. An empty list is an
+/// error labelled with `what`.
+pub fn parse_list<T>(
+    s: &str,
+    what: &str,
+    parse: impl FnMut(&str) -> Result<T, CliError>,
+) -> Result<Vec<T>, CliError> {
+    let items = split_list(s);
+    if items.is_empty() {
+        return Err(CliError(format!("empty {what} list")));
+    }
+    items.into_iter().map(parse).collect()
+}
+
 /// CLI error (unknown option, missing value, …).
 #[derive(Debug, PartialEq)]
 pub struct CliError(pub String);
@@ -338,6 +359,24 @@ mod tests {
             .unwrap();
         let e = m.parse_value::<usize>("dies").unwrap_err();
         assert!(e.0.contains("--dies"));
+    }
+
+    #[test]
+    fn list_helpers() {
+        assert_eq!(split_list("a, b ,,c"), vec!["a", "b", "c"]);
+        assert!(split_list(" , ").is_empty());
+        let ok = parse_list("1, 2,3", "num", |x| {
+            x.parse::<usize>().map_err(|e| CliError(format!("bad num '{x}': {e}")))
+        })
+        .unwrap();
+        assert_eq!(ok, vec![1, 2, 3]);
+        let empty = parse_list("", "num", |_| Ok(0usize)).unwrap_err();
+        assert!(empty.0.contains("empty num list"));
+        let bad = parse_list("1,x", "num", |x| {
+            x.parse::<usize>().map_err(|e| CliError(format!("bad num '{x}': {e}")))
+        })
+        .unwrap_err();
+        assert!(bad.0.contains("bad num 'x'"));
     }
 
     #[test]

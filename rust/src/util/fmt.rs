@@ -57,6 +57,18 @@ pub fn joules(v: f64) -> String {
     }
 }
 
+/// Percentage cell for breakdown rows: `part / total` rendered with
+/// `decimals` digits, or an em-dash when the total is zero or non-finite
+/// (a zero-latency degenerate run must not print NaN%). The one shared
+/// implementation behind every breakdown table (CLI, sweep, cluster).
+pub fn pct(part: f64, total: f64, decimals: usize) -> String {
+    if total > 0.0 && total.is_finite() && part.is_finite() {
+        format!("{:.*}%", decimals, 100.0 * part / total)
+    } else {
+        "—".to_string()
+    }
+}
+
 /// Format a count with thousands separators (`1234567 -> "1,234,567"`).
 pub fn count(v: u64) -> String {
     let s = v.to_string();

@@ -2,7 +2,7 @@
 //! property testing, a TOML-subset parser and a CLI parser.
 //!
 //! These replace crates that are unavailable in the offline vendor set
-//! (`serde`, `clap`, `proptest`, `criterion` — see DESIGN.md).
+//! (`serde`, `clap`, `proptest`, `criterion` — see ARCHITECTURE.md).
 
 pub mod units;
 pub mod fmt;

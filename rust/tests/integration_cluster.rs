@@ -1,0 +1,172 @@
+//! Cluster-layer integration tests:
+//!
+//! * **Degenerate-cluster regression** — 1 package, dp = pp = 1 reproduces
+//!   the single-package simulator bitwise for all four TP methods and all
+//!   three engine backends (the refactor's core invariant).
+//! * **Engine parity** — event vs analytic cluster timing agree ≤1% on
+//!   uncongested inter-package fabrics (property-tested over dp/pp/method
+//!   shapes).
+//! * **Sweep determinism** — the cluster sweep returns bitwise-identical
+//!   results regardless of worker-thread count.
+
+use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, PackageKind};
+use hecaton::nop::analytic::Method;
+use hecaton::sim::cluster::{run_cluster_points, simulate_cluster, ClusterGrid, ClusterPlan};
+use hecaton::sim::sweep::PlanCache;
+use hecaton::sim::system::{simulate_engine, EngineKind, PlanOptions};
+use hecaton::util::{prop, Seconds};
+
+fn parity_hw() -> HardwareConfig {
+    HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400)
+}
+
+#[test]
+fn degenerate_cluster_is_bitwise_identical() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = parity_hw();
+    for method in Method::all() {
+        for engine in EngineKind::all() {
+            let direct = simulate_engine(&m, &hw, method, engine);
+            let c = simulate_cluster(&m, &ClusterConfig::single(hw.clone()), method, engine)
+                .unwrap();
+            let tag = format!("{method:?}/{engine:?}");
+            assert_eq!(
+                c.latency.raw().to_bits(),
+                direct.latency.raw().to_bits(),
+                "{tag}: latency"
+            );
+            assert_eq!(
+                c.energy_total.raw().to_bits(),
+                direct.energy_total.raw().to_bits(),
+                "{tag}: energy"
+            );
+            // The embedded stage result IS the single-package result.
+            assert_eq!(c.stage.breakdown, direct.breakdown, "{tag}: breakdown");
+            assert_eq!(c.stage.energy, direct.energy, "{tag}: energy breakdown");
+            assert_eq!(
+                c.stage.latency.raw().to_bits(),
+                direct.latency.raw().to_bits(),
+                "{tag}: stage latency"
+            );
+            assert_eq!(c.stage.min_utilization, direct.min_utilization, "{tag}");
+            assert_eq!(c.stage.n_minibatches, direct.n_minibatches, "{tag}");
+            assert_eq!(c.stage.model, direct.model, "{tag}: model name");
+            assert_eq!(c.stage.sram.feasible(), direct.sram.feasible(), "{tag}");
+            // No cluster terms appear on the degenerate shape.
+            assert_eq!(c.bubble, Seconds::ZERO, "{tag}");
+            assert_eq!(c.p2p, Seconds::ZERO, "{tag}");
+            assert_eq!(c.grad_allreduce, Seconds::ZERO, "{tag}");
+            assert_eq!((c.packages, c.dp, c.pp), (1, 1, 1));
+        }
+    }
+}
+
+/// Event vs analytic cluster timing on a fast (uncongested) fabric: the
+/// ≤1% acceptance bar, across dp/pp shapes and all TP methods. Prefetch
+/// never loses to the plain event backend.
+#[test]
+fn cluster_engines_agree_on_uncongested_fabric() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = parity_hw();
+    let fast = InterPkgLink {
+        bandwidth: 1.0e15,
+        latency: Seconds::ns(1.0),
+        pj_per_bit: 1.0,
+    };
+    prop::check("cluster event == analytic <= 1% (uncongested)", 24, |g| {
+        let dp = *g.pick(&[1usize, 2, 4]);
+        let pp = *g.pick(&[1usize, 2, 11]);
+        let method = *g.pick(&Method::all());
+        let cluster =
+            ClusterConfig::try_new(hw.clone(), dp * pp, dp, pp, fast.clone()).unwrap();
+        // One plan priced once, timed under every backend (the intended
+        // multi-engine usage of the cluster plan).
+        let cache = PlanCache::new();
+        let plan =
+            ClusterPlan::build(&m, &cluster, method, PlanOptions::default(), &cache).unwrap();
+        let a = plan.time(EngineKind::Analytic);
+        let e = plan.time(EngineKind::Event);
+        prop::assert_close(
+            e.latency.raw(),
+            a.latency.raw(),
+            1e-2,
+            format!("dp={dp} pp={pp} {method:?}"),
+        )?;
+        let pre = plan.time(EngineKind::EventPrefetch);
+        prop::assert_prop(
+            pre.latency.raw() <= e.latency.raw() * (1.0 + 1e-9),
+            format!("prefetch no slower (dp={dp} pp={pp} {method:?})"),
+        )?;
+        // Both backends report the same schedule shape and sane energy.
+        prop::assert_prop(e.microbatches == a.microbatches, "microbatch depth")?;
+        prop::assert_prop(
+            e.energy_total.raw().is_finite() && e.energy_total.raw() > 0.0,
+            "energy finite",
+        )
+    });
+}
+
+#[test]
+fn cluster_sweep_parallel_matches_serial_bitwise() {
+    let grid = ClusterGrid {
+        models: vec![model_preset("tinyllama-1.1b").unwrap()],
+        meshes: vec![(4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic, EngineKind::Event],
+        n_packages: vec![4],
+        dp: vec![1, 2, 4],
+        pp: vec![1, 2, 4],
+        inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+    };
+    let (pts, skipped) = grid.points().unwrap();
+    assert_eq!(pts.len(), 3 * Method::all().len() * 2, "3 valid shapes");
+    assert!(skipped > 0, "the cross product contains inconsistent shapes");
+    let serial = run_cluster_points(&PlanCache::new(), &pts, 1).unwrap();
+    for threads in [2usize, 8] {
+        let par = run_cluster_points(&PlanCache::new(), &pts, threads).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(
+                s.latency.raw().to_bits(),
+                p.latency.raw().to_bits(),
+                "threads={threads}: latency order/bits"
+            );
+            assert_eq!(
+                s.energy_total.raw().to_bits(),
+                p.energy_total.raw().to_bits(),
+                "threads={threads}: energy bits"
+            );
+            assert_eq!((s.dp, s.pp, s.engine), (p.dp, p.pp, p.engine));
+        }
+    }
+}
+
+/// The plan cache is shared across cluster points: identical stage
+/// sub-models (same mesh, method, shape) are priced once.
+#[test]
+fn cluster_points_share_stage_plans_through_the_cache() {
+    let grid = ClusterGrid {
+        models: vec![model_preset("tinyllama-1.1b").unwrap()],
+        meshes: vec![(4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: vec![Method::Hecaton],
+        engines: EngineKind::all().to_vec(),
+        n_packages: vec![2],
+        dp: vec![1, 2],
+        pp: vec![1, 2],
+        inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+    };
+    let (pts, _) = grid.points().unwrap();
+    // Valid shapes for 2 packages: (dp=1,pp=2) and (dp=2,pp=1) → 3 engines each.
+    assert_eq!(pts.len(), 6);
+    let cache = PlanCache::new();
+    run_cluster_points(&cache, &pts, 1).unwrap();
+    // Distinct stage sub-models: 11-layer/b1024 (pp=2) + 22-layer/b512 (dp=2).
+    assert_eq!(cache.len(), 2, "stage plans are shared across engines and points");
+    assert!(cache.hits() > cache.misses(), "repeated points hit the cache");
+}
