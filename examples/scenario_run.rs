@@ -1,0 +1,56 @@
+//! Scenario-API quickstart: the whole library through the prelude, in a
+//! handful of lines — one package, one hybrid cluster, one grid.
+//!
+//! ```bash
+//! cargo run --release --example scenario_run
+//! ```
+
+use hecaton::prelude::*;
+
+fn main() -> hecaton::Result<()> {
+    // One package: Llama2-70B on the paper's 256-die testbed.
+    let single = Scenario::builder(model_preset("llama2-70b").expect("preset"))
+        .dies(256)
+        .method(Method::Hecaton)
+        .build()?;
+    let eval = evaluate(&single)?;
+    println!(
+        "llama2-70b @ 256 dies: {} per batch, {:.0} tokens/s, feasible: {}",
+        eval.latency(),
+        eval.tokens_per_sec(),
+        eval.feasible()
+    );
+
+    // A hybrid cluster: same API, one extra builder call.
+    let cluster = Scenario::builder(model_preset("tinyllama-1.1b").expect("preset"))
+        .dies(16)
+        .cluster(4, 2, 2)
+        .engine(EngineKind::Event)
+        .build()?;
+    let eval = evaluate(&cluster)?;
+    let detail = eval.cluster().expect("cluster scenarios carry cluster detail");
+    println!(
+        "tinyllama @ 4 packages (dp=2 x pp=2): {} per batch ({} bubble, {} all-reduce)",
+        eval.latency(),
+        detail.bubble,
+        detail.grad_allreduce
+    );
+
+    // Grids are scenarios too: all four TP methods through one plan cache.
+    let grid = ScenarioGrid {
+        models: vec![model_preset("tinyllama-1.1b").expect("preset")],
+        meshes: vec![(4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic],
+        ..Default::default()
+    };
+    let (points, _skipped) = grid.points()?;
+    let evals = run_all(&points)?;
+    println!("method sweep (4x4 mesh):");
+    for (s, e) in points.iter().zip(&evals) {
+        println!("  {:<11} {}", s.method.name(), e.latency());
+    }
+    Ok(())
+}

@@ -9,7 +9,8 @@ use hecaton::config::cluster::{cluster_preset, InterKind, InterPkgLink};
 use hecaton::config::presets::model_preset;
 use hecaton::config::{DramKind, PackageKind};
 use hecaton::nop::analytic::Method;
-use hecaton::sim::cluster::{run_cluster_points, ClusterGrid, ClusterPlan};
+use hecaton::scenario::{self, ScenarioGrid};
+use hecaton::sim::cluster::ClusterPlan;
 use hecaton::sim::sweep::PlanCache;
 use hecaton::sim::system::{EngineKind, PlanOptions};
 
@@ -50,7 +51,7 @@ fn main() {
     });
 
     // ── sweep: the tiny-cluster shape grid, serial vs parallel ──
-    let grid = ClusterGrid {
+    let grid = ScenarioGrid {
         models: vec![model_preset("tinyllama-1.1b").expect("preset")],
         meshes: vec![(4, 4)],
         packages: vec![PackageKind::Standard],
@@ -64,11 +65,11 @@ fn main() {
     };
     let (points, _) = grid.points().expect("grid expands");
     b.bench("cluster/shape_grid_serial", || {
-        let r = run_cluster_points(&PlanCache::new(), &points, 1);
+        let r = scenario::run_on(&PlanCache::new(), &points, 1);
         common::black_box(r.expect("grid points are valid"));
     });
     b.bench("cluster/shape_grid_parallel", || {
-        let r = run_cluster_points(&PlanCache::new(), &points, 0);
+        let r = scenario::run_on(&PlanCache::new(), &points, 0);
         common::black_box(r.expect("grid points are valid"));
     });
 

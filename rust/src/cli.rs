@@ -1,23 +1,34 @@
 //! `hecaton` command-line interface.
 //!
 //! Subcommands:
-//! * `simulate`  — run the system simulator on one (model, hardware, method)
+//! * `simulate`  — run one scenario built from flags (or a config file)
 //! * `sweep`     — run a scenario grid in parallel (memoized planning,
 //!   Pareto-annotated table/CSV/JSON output)
+//! * `run`       — execute a scenario TOML file (single scenario or a
+//!   `[sweep]` grid) — see `examples/scenarios/`
 //! * `reproduce` — regenerate a paper table/figure (fig8, fig9, …)
 //! * `train`     — functional distributed training with a loss curve
 //! * `info`      — show presets and the resolved configuration
+//!   (`--format json` for machine-readable presets)
+//!
+//! Every evaluation path funnels into [`crate::scenario`]: the flags are
+//! parsed once by [`ScenarioArgs`] into a [`Scenario`] or a
+//! [`ScenarioGrid`], and `scenario::evaluate`/`scenario::run_on` do the
+//! rest — `simulate`, `sweep` and `run` share one flag→scenario pipeline
+//! instead of three copies of it.
 
 use anyhow::anyhow;
 
-use crate::config::cluster::{cluster_preset, cluster_presets, ClusterConfig, InterPkgLink};
-use crate::config::presets::{eval_models, model_preset};
+use crate::config::cluster::{cluster_preset, cluster_presets, ClusterConfig};
+use crate::config::file::LoadedScenario;
+use crate::config::presets::{all_model_presets, eval_models, model_preset};
 use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::cluster::{run_cluster_points, simulate_cluster, ClusterGrid};
-use crate::sim::sweep::{self, PlanCache, SweepGrid};
-use crate::sim::system::{simulate_with, EngineKind, SimOptions};
-use crate::util::cli::{parse_list, App, CliError, CommandSpec, Matches};
+use crate::scenario::{self, axis, EvalDetail, Scenario, ScenarioGrid};
+use crate::sim::cluster::ClusterResult;
+use crate::sim::sweep::PlanCache;
+use crate::sim::system::{EngineKind, SimResult};
+use crate::util::cli::{split_list, unknown_value, App, CommandSpec, Matches};
 use crate::util::fmt::pct;
 use crate::util::table::Table;
 
@@ -55,6 +66,12 @@ pub fn app() -> App {
                 .opt("format", "table", "output format: table | csv | json"),
         )
         .command(
+            CommandSpec::new("run", "execute a scenario TOML file (single scenario or [sweep] grid)")
+                .pos("scenario", "path to a scenario file (see examples/scenarios/)")
+                .opt("threads", "", "override the file's [options] threads")
+                .opt("format", "", "override the file's [options] format: table | csv | json"),
+        )
+        .command(
             CommandSpec::new("reproduce", "regenerate a paper table/figure")
                 .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | all"),
         )
@@ -67,7 +84,10 @@ pub fn app() -> App {
                 .opt("seed", "1234", "seed")
                 .opt("task", "next-token", "next-token | induction"),
         )
-        .command(CommandSpec::new("info", "list presets and hardware defaults"))
+        .command(
+            CommandSpec::new("info", "list presets and hardware defaults")
+                .opt("format", "table", "output format: table | json"),
+        )
 }
 
 /// Entry point used by `main.rs`.
@@ -79,84 +99,134 @@ pub fn run(args: &[String]) -> crate::Result<i32> {
     match m.command.as_str() {
         "simulate" => cmd_simulate(&m),
         "sweep" => cmd_sweep(&m),
+        "run" => cmd_run(&m),
         "reproduce" => cmd_reproduce(&m),
         "train" => cmd_train(&m),
-        "info" => cmd_info(),
+        "info" => cmd_info(&m),
         other => Err(anyhow!("unhandled command {other}")),
     }?;
     Ok(0)
 }
 
-fn parse_mesh(s: &str) -> crate::Result<(usize, usize)> {
-    let (r, c) = s
-        .split_once('x')
-        .ok_or_else(|| anyhow!("mesh must be RxC, e.g. 4x4"))?;
-    let (r, c): (usize, usize) = (r.trim().parse()?, c.trim().parse()?);
-    if r == 0 || c == 0 {
-        return Err(anyhow!(
-            "degenerate mesh {r}x{c}: need at least 1 row and 1 column of dies"
-        ));
+// ───────────────────────── shared flag → scenario parsing ─────────────────────────
+
+/// The one shared flag→scenario parser: `simulate` reads each axis as a
+/// single value, `sweep` as a comma list — both through
+/// [`crate::scenario::axis`], so spellings, case-insensitivity and
+/// "did you mean" suggestions are identical across subcommands (and match
+/// the TOML loader, which uses the same parsers).
+struct ScenarioArgs;
+
+impl ScenarioArgs {
+    /// `sweep` flags (comma lists) → a scenario grid.
+    fn sweep_grid(m: &Matches) -> crate::Result<ScenarioGrid> {
+        Ok(ScenarioGrid {
+            models: axis::models(&split_list(m.value("models")))?,
+            meshes: axis::meshes(&split_list(m.value("meshes")))?,
+            packages: axis::package_kinds(&split_list(m.value("packages")))?,
+            drams: axis::drams(&split_list(m.value("drams")))?,
+            methods: axis::methods(&split_list(m.value("methods")))?,
+            engines: axis::engines(&split_list(m.value("engines")))?,
+            n_packages: axis::counts(&split_list(m.value("n-packages")), "n-packages")?,
+            dp: axis::counts(&split_list(m.value("dp")), "dp")?,
+            pp: axis::counts(&split_list(m.value("pp")), "pp")?,
+            inter: axis::inters(&split_list(m.value("inter-bw")))?,
+        })
     }
-    Ok((r, c))
+
+    /// `simulate` flags (single values, plus `--config`) → one scenario.
+    ///
+    /// The cluster knobs (`--n-packages`, matching the sweep axis;
+    /// `--package` remains the packaging *kind*) route anything beyond
+    /// the degenerate 1×1×1 shape through the cluster simulator; the
+    /// defaults keep the established single-package path (and its output)
+    /// untouched. The fabric spec is validated even when unused, so a
+    /// typo never passes silently.
+    fn simulate_scenario(m: &Matches) -> crate::Result<Scenario> {
+        let builder = if !m.value("config").is_empty() {
+            let setup = crate::config::file::load(m.value("config"))?;
+            Scenario::builder(setup.model).hardware(setup.hardware)
+        } else {
+            let model = model_preset(m.value("model")).ok_or_else(|| {
+                anyhow!("{}", unknown_value("model", m.value("model"), all_model_presets()))
+            })?;
+            let package = PackageKind::parse(m.value("package")).ok_or_else(|| {
+                anyhow!(
+                    "{}",
+                    unknown_value("package", m.value("package"), &["standard", "advanced"])
+                )
+            })?;
+            let dram = DramKind::parse(m.value("dram")).ok_or_else(|| {
+                anyhow!(
+                    "{}",
+                    unknown_value(
+                        "dram",
+                        m.value("dram"),
+                        &["ddr4-3200", "ddr5-6400", "hbm2"]
+                    )
+                )
+            })?;
+            let b = Scenario::builder(model).package(package).dram(dram);
+            if !m.value("mesh").is_empty() {
+                let (rows, cols) = axis::mesh(m.value("mesh"))?;
+                b.mesh(rows, cols)
+            } else {
+                b.dies(m.parse_value("dies")?)
+            }
+        };
+        let method_names: Vec<&str> = Method::all().iter().map(|x| x.name()).collect();
+        let method = Method::parse(m.value("method")).ok_or_else(|| {
+            anyhow!("{}", unknown_value("method", m.value("method"), &method_names))
+        })?;
+        let engine_names: Vec<&str> = EngineKind::all().iter().map(|x| x.name()).collect();
+        let engine = EngineKind::parse(m.value("engine")).ok_or_else(|| {
+            anyhow!("{}", unknown_value("engine", m.value("engine"), &engine_names))
+        })?;
+        let inter = axis::inters(&[m.value("inter-bw")])?.remove(0);
+        builder
+            .method(method)
+            .engine(engine)
+            .cluster(m.parse_value("n-packages")?, m.parse_value("dp")?, m.parse_value("pp")?)
+            .inter(inter)
+            .build()
+    }
 }
 
+// ───────────────────────── simulate / run ─────────────────────────
+
 fn cmd_simulate(m: &Matches) -> crate::Result<()> {
-    let (model, hw) = if !m.value("config").is_empty() {
-        let setup = crate::config::file::load(m.value("config"))?;
-        (setup.model, setup.hardware)
-    } else {
-        let model = model_preset(m.value("model"))
-            .ok_or_else(|| anyhow!("unknown model '{}'", m.value("model")))?;
-        let package = PackageKind::parse(m.value("package"))
-            .ok_or_else(|| anyhow!("bad package"))?;
-        let dram = DramKind::parse(m.value("dram")).ok_or_else(|| anyhow!("bad dram"))?;
-        let hw = if !m.value("mesh").is_empty() {
-            let (r, c) = parse_mesh(m.value("mesh"))?;
-            HardwareConfig::try_mesh(r, c, package, dram)?
-        } else {
-            HardwareConfig::try_square(m.parse_value("dies")?, package, dram)?
-        };
-        (model, hw)
-    };
-    let method = Method::parse(m.value("method")).ok_or_else(|| anyhow!("bad method"))?;
-    let engine = EngineKind::parse(m.value("engine"))
-        .ok_or_else(|| anyhow!("bad engine '{}'", m.value("engine")))?;
+    let scenario = ScenarioArgs::simulate_scenario(m)?;
+    print_scenario_evaluation(&scenario)
+}
 
-    // Cluster knobs (`--n-packages`, matching the sweep axis; `--package`
-    // remains the packaging *kind*): anything beyond the degenerate 1×1×1
-    // shape routes through the cluster simulator; the defaults keep the
-    // established single-package path (and its output) untouched. The
-    // fabric spec is validated even when unused, so a typo never passes
-    // silently.
-    let packages: usize = m.parse_value("n-packages")?;
-    let dp: usize = m.parse_value("dp")?;
-    let pp: usize = m.parse_value("pp")?;
-    let inter = InterPkgLink::parse(m.value("inter-bw")).ok_or_else(|| {
-        anyhow!("bad inter-bw '{}' (substrate | optical | <GB/s>)", m.value("inter-bw"))
-    })?;
-    if packages != 1 || dp != 1 || pp != 1 {
-        let cluster = ClusterConfig::try_new(hw, packages, dp, pp, inter)?;
-        return print_cluster_simulation(&model, &cluster, method, engine);
+/// Evaluate one scenario and print the matching table (package breakdown
+/// or cluster breakdown) — shared by `simulate` and `run`.
+fn print_scenario_evaluation(scenario: &Scenario) -> crate::Result<()> {
+    let eval = scenario.evaluate()?;
+    match &eval.detail {
+        EvalDetail::Package(r) => print_package_simulation(&scenario.model, scenario.hw(), r),
+        EvalDetail::Cluster(r) => print_cluster_simulation(
+            &scenario.model,
+            scenario.cluster_config().expect("cluster evaluations come from cluster targets"),
+            r,
+        ),
     }
+}
 
-    let r = simulate_with(
-        &model,
-        &hw,
-        method,
-        SimOptions {
-            engine,
-            ..SimOptions::default()
-        },
-    );
-
+/// Single-package result table (the classic `simulate` output).
+fn print_package_simulation(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    r: &SimResult,
+) -> crate::Result<()> {
     let mut t = Table::new(&["metric", "value"]).label_first();
     let lat = r.latency.raw();
-    t.row(crate::table_row!["model", model.name]);
+    t.row(crate::table_row!["model", model.name.clone()]);
     t.row(crate::table_row![
         "mesh",
         format!("{}x{} ({} dies, {})", hw.mesh_rows, hw.mesh_cols, r.dies, hw.package.name())
     ]);
-    t.row(crate::table_row!["method", method.name()]);
+    t.row(crate::table_row!["method", r.method.name()]);
     t.row(crate::table_row!["engine", r.engine.name()]);
     t.row(crate::table_row!["batch latency", r.latency]);
     t.row(crate::table_row![
@@ -182,7 +252,7 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     t.row(crate::table_row!["energy / batch", r.energy_total]);
     t.row(crate::table_row![
         "throughput",
-        format!("{:.0} tokens/s", r.tokens_per_sec(&model))
+        format!("{:.0} tokens/s", r.tokens_per_sec(model))
     ]);
     t.row(crate::table_row![
         "achieved compute",
@@ -215,15 +285,13 @@ fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     Ok(())
 }
 
-/// `hecaton simulate` with cluster knobs: one cluster batch, rendered with
-/// the hybrid-parallelism breakdown.
+/// Cluster result table: one cluster batch with the hybrid-parallelism
+/// breakdown.
 fn print_cluster_simulation(
     model: &ModelConfig,
     cluster: &ClusterConfig,
-    method: Method,
-    engine: EngineKind,
+    r: &ClusterResult,
 ) -> crate::Result<()> {
-    let r = simulate_cluster(model, cluster, method, engine)?;
     let lat = r.latency.raw();
     let hw = &cluster.package_hw;
     let mut t = Table::new(&["metric", "value"]).label_first();
@@ -243,7 +311,7 @@ fn print_cluster_simulation(
         "fabric",
         format!("{:.0} GB/s, {}", cluster.inter.gbs(), cluster.inter.latency)
     ]);
-    t.row(crate::table_row!["method (in-package TP)", method.name()]);
+    t.row(crate::table_row!["method (in-package TP)", r.method.name()]);
     t.row(crate::table_row!["engine", r.engine.name()]);
     t.row(crate::table_row!["batch latency", r.latency]);
     t.row(crate::table_row![
@@ -273,98 +341,48 @@ fn print_cluster_simulation(
     Ok(())
 }
 
-fn parse_model_list(s: &str) -> crate::Result<Vec<ModelConfig>> {
-    if s.eq_ignore_ascii_case("all") {
-        return eval_models()
-            .iter()
-            .map(|n| model_preset(n).ok_or_else(|| anyhow!("unknown model '{n}'")))
-            .collect();
-    }
-    parse_list(s, "model", |n| {
-        model_preset(n).ok_or_else(|| CliError(format!("unknown model '{n}'")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-/// Meshes come as `RxC` layouts and/or bare square die counts; both are
-/// validated (no zero rows/cols, square counts must be perfect squares).
-fn parse_mesh_list(s: &str) -> crate::Result<Vec<(usize, usize)>> {
-    parse_list(s, "mesh", |item| {
-        if item.contains('x') {
-            parse_mesh(item).map_err(|e| CliError(format!("{e:#}")))
-        } else {
-            let n: usize = item
-                .parse()
-                .map_err(|e| CliError(format!("bad mesh '{item}': {e}")))?;
-            let hw = HardwareConfig::try_square(n, PackageKind::Standard, DramKind::Ddr5_6400)
-                .map_err(|e| CliError(format!("{e:#}")))?;
-            Ok((hw.mesh_rows, hw.mesh_cols))
+fn cmd_run(m: &Matches) -> crate::Result<()> {
+    let path = m
+        .pos(0)
+        .ok_or_else(|| anyhow!("which scenario file? (see examples/scenarios/)"))?;
+    match crate::config::file::load_scenario(path)? {
+        LoadedScenario::One(scenario) => {
+            // The grid-only overrides must not be silently ignored.
+            for flag in ["threads", "format"] {
+                if !m.value(flag).is_empty() {
+                    return Err(anyhow!(
+                        "--{flag} only applies to [sweep] grid files; \
+                         {path} holds a single scenario"
+                    ));
+                }
+            }
+            print_scenario_evaluation(&scenario)
         }
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-fn parse_package_list(s: &str) -> crate::Result<Vec<PackageKind>> {
-    if s.eq_ignore_ascii_case("all") {
-        return Ok(vec![PackageKind::Standard, PackageKind::Advanced]);
-    }
-    parse_list(s, "package", |x| {
-        PackageKind::parse(x).ok_or_else(|| CliError(format!("bad package '{x}'")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-fn parse_dram_list(s: &str) -> crate::Result<Vec<DramKind>> {
-    if s.eq_ignore_ascii_case("all") {
-        return Ok(vec![DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2]);
-    }
-    parse_list(s, "dram", |x| {
-        DramKind::parse(x).ok_or_else(|| CliError(format!("bad dram '{x}'")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-fn parse_method_list(s: &str) -> crate::Result<Vec<Method>> {
-    if s.eq_ignore_ascii_case("all") {
-        return Ok(Method::all().to_vec());
-    }
-    parse_list(s, "method", |x| {
-        Method::parse(x).ok_or_else(|| CliError(format!("bad method '{x}'")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-fn parse_engine_list(s: &str) -> crate::Result<Vec<EngineKind>> {
-    if s.eq_ignore_ascii_case("all") {
-        return Ok(EngineKind::all().to_vec());
-    }
-    parse_list(s, "engine", |x| {
-        EngineKind::parse(x).ok_or_else(|| CliError(format!("bad engine '{x}'")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
-
-/// Positive-integer comma lists (the `--n-packages/--dp/--pp` axes).
-fn parse_usize_list(s: &str, what: &str) -> crate::Result<Vec<usize>> {
-    parse_list(s, what, |x| {
-        let v: usize = x
-            .parse()
-            .map_err(|e| CliError(format!("bad {what} '{x}': {e}")))?;
-        if v == 0 {
-            return Err(CliError(format!("{what} must be >= 1")));
+        LoadedScenario::Grid {
+            grid,
+            threads,
+            format,
+        } => {
+            let threads = if m.value("threads").is_empty() {
+                threads
+            } else {
+                m.parse_value("threads")?
+            };
+            let format = if m.value("format").is_empty() {
+                format
+            } else {
+                let f = m.value("format");
+                if !matches!(f, "table" | "csv" | "json") {
+                    return Err(anyhow!("bad format '{f}' (table | csv | json)"));
+                }
+                f.to_string()
+            };
+            run_grid(&grid, threads, &format)
         }
-        Ok(v)
-    })
-    .map_err(|e| anyhow!("{e}"))
+    }
 }
 
-fn parse_inter_list(s: &str) -> crate::Result<Vec<InterPkgLink>> {
-    parse_list(s, "inter-bw", |x| {
-        InterPkgLink::parse(x)
-            .ok_or_else(|| CliError(format!("bad inter-bw '{x}' (substrate | optical | <GB/s>)")))
-    })
-    .map_err(|e| anyhow!("{e}"))
-}
+// ───────────────────────── sweep ─────────────────────────
 
 fn cmd_sweep(m: &Matches) -> crate::Result<()> {
     // Validate the output format *before* burning cores on the grid.
@@ -373,67 +391,35 @@ fn cmd_sweep(m: &Matches) -> crate::Result<()> {
         return Err(anyhow!("bad format '{format}' (table | csv | json)"));
     }
     let threads: usize = m.parse_value("threads")?;
-    let models = parse_model_list(m.value("models"))?;
-    let meshes = parse_mesh_list(m.value("meshes"))?;
-    let pkg_kinds = parse_package_list(m.value("packages"))?;
-    let drams = parse_dram_list(m.value("drams"))?;
-    let methods = parse_method_list(m.value("methods"))?;
-    let engines = parse_engine_list(m.value("engines"))?;
+    let grid = ScenarioArgs::sweep_grid(m)?;
+    run_grid(&grid, threads, format)
+}
 
-    // Cluster axes: the degenerate defaults (1×1×1, one fabric) keep the
-    // established single-package sweep (and its exact output) untouched.
-    // The fabric list is validated even when unused, so a typo never
-    // passes silently — and a *multi-valued* fabric list is itself a
-    // cluster axis, never dropped.
-    let n_packages = parse_usize_list(m.value("n-packages"), "n-packages")?;
-    let dp = parse_usize_list(m.value("dp"), "dp")?;
-    let pp = parse_usize_list(m.value("pp"), "pp")?;
-    let inter = parse_inter_list(m.value("inter-bw"))?;
-    if n_packages != [1] || dp != [1] || pp != [1] || inter.len() > 1 {
-        let grid = ClusterGrid {
-            models,
-            meshes,
-            packages: pkg_kinds,
-            drams,
-            methods,
-            engines,
-            n_packages,
-            dp,
-            pp,
-            inter,
-        };
-        let (points, skipped) = grid.points()?;
-        if points.is_empty() {
-            return Err(anyhow!(
-                "cluster sweep grid is empty ({skipped} combinations skipped: \
-                 dp x pp must equal n-packages, dp must divide the batch, pp <= layers)"
-            ));
-        }
-        let t0 = std::time::Instant::now();
-        let cache = PlanCache::new();
-        let results = run_cluster_points(&cache, &points, threads)?;
-        let wall = t0.elapsed();
-        let front = sweep::pareto_front(
-            &results
-                .iter()
-                .map(|r| (r.latency.raw(), r.energy_total.raw()))
-                .collect::<Vec<_>>(),
-        );
-        match format {
-            "table" => println!(
-                "{}",
-                crate::sim::cluster::render_cluster_table(&points, &results, &front)
-            ),
-            "csv" => print!(
-                "{}",
-                crate::sim::cluster::render_cluster_csv(&points, &results, &front)
-            ),
-            "json" => print!(
-                "{}",
-                crate::sim::cluster::render_cluster_json(&points, &results, &front)
-            ),
-            _ => unreachable!("format validated above"),
-        }
+/// Execute a scenario grid and render it — shared by `sweep` and `run`.
+fn run_grid(grid: &ScenarioGrid, threads: usize, format: &str) -> crate::Result<()> {
+    if grid.is_empty() {
+        return Err(anyhow!("empty sweep grid"));
+    }
+    let (points, skipped) = grid.points()?;
+    if points.is_empty() {
+        return Err(anyhow!(
+            "cluster sweep grid is empty ({skipped} combinations skipped: \
+             dp x pp must equal n-packages, dp must divide the batch, pp <= layers)"
+        ));
+    }
+    let t0 = std::time::Instant::now();
+    let cache = PlanCache::new();
+    let results = scenario::run_on(&cache, &points, threads)?;
+    let wall = t0.elapsed();
+    let front = scenario::pareto(&results);
+    match format {
+        "table" => println!("{}", scenario::render_table(&points, &results, &front)),
+        "csv" => print!("{}", scenario::render_csv(&points, &results, &front)),
+        "json" => print!("{}", scenario::render_json(&points, &results, &front)),
+        _ => unreachable!("format validated above"),
+    }
+    // Run stats go to stderr so stdout stays machine-parseable.
+    if grid.is_cluster() {
         eprintln!(
             "cluster sweep: {} points ({} combinations skipped), {} plans built, {} cache hits, {:?} wall",
             points.len(),
@@ -442,47 +428,19 @@ fn cmd_sweep(m: &Matches) -> crate::Result<()> {
             cache.hits(),
             wall
         );
-        return Ok(());
+    } else {
+        eprintln!(
+            "sweep: {} points, {} plans built, {} cache hits, {:?} wall",
+            points.len(),
+            cache.misses(),
+            cache.hits(),
+            wall
+        );
     }
-
-    let grid = SweepGrid {
-        models,
-        meshes,
-        packages: pkg_kinds,
-        drams,
-        methods,
-        engines,
-    };
-    if grid.is_empty() {
-        return Err(anyhow!("empty sweep grid"));
-    }
-    let points = grid.points()?;
-    let t0 = std::time::Instant::now();
-    let cache = PlanCache::new();
-    let results = sweep::run_points_on(&cache, &points, threads);
-    let wall = t0.elapsed();
-    let front = sweep::pareto_front(
-        &results
-            .iter()
-            .map(|r| (r.latency.raw(), r.energy_total.raw()))
-            .collect::<Vec<_>>(),
-    );
-    match format {
-        "table" => println!("{}", sweep::render_table(&points, &results, &front)),
-        "csv" => print!("{}", sweep::render_csv(&points, &results, &front)),
-        "json" => print!("{}", sweep::render_json(&points, &results, &front)),
-        _ => unreachable!("format validated above"),
-    }
-    // Run stats go to stderr so stdout stays machine-parseable.
-    eprintln!(
-        "sweep: {} points, {} plans built, {} cache hits, {:?} wall",
-        points.len(),
-        cache.misses(),
-        cache.hits(),
-        wall
-    );
     Ok(())
 }
+
+// ───────────────────────── reproduce / train / info ─────────────────────────
 
 fn cmd_reproduce(m: &Matches) -> crate::Result<()> {
     let exp = m.pos(0).ok_or_else(|| anyhow!("which experiment? (fig8|...|all)"))?;
@@ -502,7 +460,7 @@ fn cmd_train(m: &Matches) -> crate::Result<()> {
 
     let model = coord_model(m.value("model"))
         .ok_or_else(|| anyhow!("model '{}' has no functional preset", m.value("model")))?;
-    let (rows, cols) = parse_mesh(m.value("mesh"))?;
+    let (rows, cols) = axis::mesh(m.value("mesh"))?;
     let tokens = match model.name.as_str() {
         "tiny" => 64,
         _ => model.seq_len,
@@ -536,7 +494,18 @@ fn cmd_train(m: &Matches) -> crate::Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> crate::Result<()> {
+fn cmd_info(m: &Matches) -> crate::Result<()> {
+    match m.value("format") {
+        "table" => print_info_table(),
+        "json" => {
+            println!("{}", info_json());
+            Ok(())
+        }
+        other => Err(anyhow!("bad format '{other}' (table | json)")),
+    }
+}
+
+fn print_info_table() -> crate::Result<()> {
     let mut t = Table::new(&["model", "hidden", "layers", "heads", "seq", "params"])
         .with_title("Model presets")
         .label_first();
@@ -589,8 +558,78 @@ fn cmd_info() -> crate::Result<()> {
             c.inter.gbs()
         );
     }
+    println!(
+        "Scenario files: `hecaton run <file.toml>` executes a single scenario \
+         ([model]/[hardware]/[cluster]/[options]) or a [sweep] grid — checked-in \
+         examples live in examples/scenarios/; `hecaton info --format json` emits \
+         these presets machine-readably"
+    );
     println!("Functional (train) presets: tiny, e2e-100m — see aot.py DEPLOYMENTS");
     Ok(())
+}
+
+/// Machine-readable presets (`info --format json`): models, methods,
+/// engines, packages, DRAM kinds and cluster presets.
+fn info_json() -> String {
+    let mut out = String::from("{\n  \"models\": [\n");
+    for (i, name) in all_model_presets().iter().enumerate() {
+        let m = model_preset(name).expect("preset resolves");
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"hidden\": {}, \"intermediate\": {}, \"layers\": {}, \
+             \"heads\": {}, \"kv_heads\": {}, \"seq_len\": {}, \"batch\": {}, \
+             \"vocab\": {}, \"params\": {}}}",
+            m.name,
+            m.hidden,
+            m.intermediate,
+            m.layers,
+            m.heads,
+            m.kv_heads,
+            m.seq_len,
+            m.batch,
+            m.vocab,
+            m.total_params()
+        ));
+    }
+    out.push_str("\n  ],\n");
+    let quoted = |names: &[&str]| {
+        names
+            .iter()
+            .map(|n| format!("\"{n}\""))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let methods: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+    let engines: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
+    out.push_str(&format!("  \"methods\": [{}],\n", quoted(&methods)));
+    out.push_str(&format!("  \"engines\": [{}],\n", quoted(&engines)));
+    out.push_str(&format!("  \"packages\": [{}],\n", quoted(&["standard", "advanced"])));
+    out.push_str(&format!(
+        "  \"drams\": [{}],\n",
+        quoted(&["ddr4-3200", "ddr5-6400", "hbm2"])
+    ));
+    out.push_str("  \"cluster_presets\": [\n");
+    for (i, name) in cluster_presets().iter().enumerate() {
+        let (m, c) = cluster_preset(name).expect("preset resolves");
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"model\": \"{}\", \"packages\": {}, \"dp\": {}, \
+             \"pp\": {}, \"mesh\": \"{}x{}\", \"inter_gbs\": {}}}",
+            m.name,
+            c.packages,
+            c.dp,
+            c.pp,
+            c.package_hw.mesh_rows,
+            c.package_hw.mesh_cols,
+            c.inter.gbs()
+        ));
+    }
+    out.push_str("\n  ]\n}");
+    out
 }
 
 #[cfg(test)]
@@ -606,21 +645,11 @@ mod tests {
         let a = app();
         assert!(a.parse(&argv(&["simulate", "--model", "tiny"])).unwrap().is_some());
         assert!(a.parse(&argv(&["sweep", "--models", "tiny"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["run", "scenario.toml"])).unwrap().is_some());
         assert!(a.parse(&argv(&["reproduce", "fig8"])).unwrap().is_some());
         assert!(a.parse(&argv(&["train", "--steps", "3"])).unwrap().is_some());
         assert!(a.parse(&argv(&["info"])).unwrap().is_some());
         assert!(a.parse(&argv(&["bogus"])).is_err());
-    }
-
-    #[test]
-    fn parse_mesh_forms() {
-        assert_eq!(parse_mesh("4x4").unwrap(), (4, 4));
-        assert_eq!(parse_mesh("2x8").unwrap(), (2, 8));
-        assert!(parse_mesh("44").is_err());
-        // Regression: degenerate meshes are parse errors, not downstream
-        // panics / division by zero.
-        assert!(parse_mesh("0x4").is_err());
-        assert!(parse_mesh("4x0").is_err());
     }
 
     /// Regression: `simulate` rejects degenerate hardware with a clean
@@ -651,22 +680,32 @@ mod tests {
         assert_eq!(pct(0.25, 1.0, 2), "25.00%");
     }
 
+    /// Typos on name-valued flags come back with a suggestion — the
+    /// shared `scenario::axis`/`util::cli` path serves every subcommand.
     #[test]
-    fn sweep_list_parsers() {
-        assert_eq!(parse_model_list("all").unwrap().len(), eval_models().len());
-        assert_eq!(
-            parse_model_list("tinyllama-1.1b, llama2-7b").unwrap().len(),
-            2
-        );
-        assert!(parse_model_list("nope").is_err());
-        assert_eq!(parse_mesh_list("4x4,16,2x8").unwrap(), vec![(4, 4), (4, 4), (2, 8)]);
-        assert!(parse_mesh_list("0x4").is_err());
-        assert!(parse_mesh_list("12").is_err());
-        assert_eq!(parse_package_list("all").unwrap().len(), 2);
-        assert_eq!(parse_dram_list("all").unwrap().len(), 3);
-        assert_eq!(parse_method_list("all").unwrap().len(), 4);
-        assert_eq!(parse_engine_list("event,analytic").unwrap().len(), 2);
-        assert!(parse_engine_list("warp-drive").is_err());
+    fn flag_typos_get_suggestions() {
+        let a = app();
+        let m = a
+            .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--method", "hecatn"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("did you mean 'hecaton'"), "{e}");
+        let m = a
+            .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--engine", "evnt"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("did you mean 'event'"), "{e}");
+        // Case-insensitive values keep working.
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "TinyLlama-1.1B", "--dies", "16", "--method", "HECATON",
+                "--engine", "Analytic",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
     }
 
     #[test]
@@ -734,20 +773,19 @@ mod tests {
     }
 
     #[test]
-    fn info_runs() {
-        cmd_info().unwrap();
-    }
-
-    #[test]
-    fn cluster_list_parsers() {
-        assert_eq!(parse_usize_list("1,2, 4", "dp").unwrap(), vec![1, 2, 4]);
-        assert!(parse_usize_list("0", "dp").is_err());
-        assert!(parse_usize_list("x", "dp").is_err());
-        assert!(parse_usize_list("", "dp").is_err());
-        let inter = parse_inter_list("substrate,optical,128").unwrap();
-        assert_eq!(inter.len(), 3);
-        assert!((inter[2].bandwidth - 128.0e9).abs() < 1.0);
-        assert!(parse_inter_list("warp").is_err());
+    fn info_runs_table_and_json() {
+        let a = app();
+        let m = a.parse(&argv(&["info"])).unwrap().unwrap();
+        cmd_info(&m).unwrap();
+        let m = a.parse(&argv(&["info", "--format", "json"])).unwrap().unwrap();
+        cmd_info(&m).unwrap();
+        let json = info_json();
+        assert!(json.contains("\"models\""));
+        assert!(json.contains("\"tinyllama-1.1b\""));
+        assert!(json.contains("\"cluster_presets\""));
+        assert!(json.contains("\"405b-cluster\""));
+        let bad = a.parse(&argv(&["info", "--format", "yaml"])).unwrap().unwrap();
+        assert!(cmd_info(&bad).is_err());
     }
 
     /// `simulate` with cluster knobs routes through the cluster simulator;
@@ -836,5 +874,62 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(cmd_sweep(&bad).is_err());
+    }
+
+    /// `run` executes both single-scenario and grid files, with CLI
+    /// overrides for threads/format.
+    #[test]
+    fn run_command_executes_scenario_files() {
+        let dir = std::env::temp_dir();
+        let single = dir.join("hecaton_cli_run_single.toml");
+        std::fs::write(
+            &single,
+            "[model]\npreset = \"tinyllama-1.1b\"\n[hardware]\ndies = 16\n\
+             [cluster]\npackages = 2\ndp = 2\npp = 1\n",
+        )
+        .unwrap();
+        let a = app();
+        let m = a
+            .parse(&argv(&["run", single.to_str().unwrap()]))
+            .unwrap()
+            .unwrap();
+        cmd_run(&m).unwrap();
+
+        let grid = dir.join("hecaton_cli_run_grid.toml");
+        std::fs::write(
+            &grid,
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\nmeshes = [\"4x4\"]\n\
+             methods = [\"hecaton\", \"flat-ring\"]\n\n[options]\nthreads = 2\nformat = \"csv\"\n",
+        )
+        .unwrap();
+        let m = a.parse(&argv(&["run", grid.to_str().unwrap()])).unwrap().unwrap();
+        cmd_run(&m).unwrap();
+        // CLI override of the file's format.
+        let m = a
+            .parse(&argv(&["run", grid.to_str().unwrap(), "--format", "json"]))
+            .unwrap()
+            .unwrap();
+        cmd_run(&m).unwrap();
+        let m = a
+            .parse(&argv(&["run", grid.to_str().unwrap(), "--format", "yaml"]))
+            .unwrap()
+            .unwrap();
+        assert!(cmd_run(&m).is_err());
+
+        // Grid-only overrides on a single-scenario file are rejected, not
+        // silently ignored.
+        let m = a
+            .parse(&argv(&["run", single.to_str().unwrap(), "--format", "json"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_run(&m).unwrap_err());
+        assert!(e.contains("only applies to [sweep] grid files"), "{e}");
+
+        // Missing files and missing positionals error cleanly.
+        let m = a
+            .parse(&argv(&["run", "/nonexistent/nope.toml"]))
+            .unwrap()
+            .unwrap();
+        assert!(cmd_run(&m).is_err());
     }
 }

@@ -1,6 +1,6 @@
-//! Load simulation configs from TOML files (see `configs/*.toml`).
+//! Scenario files: load anything the CLI can express from TOML.
 //!
-//! A config file can override any preset field:
+//! A scenario file describes either **one** evaluation:
 //!
 //! ```toml
 //! [model]
@@ -16,57 +16,312 @@
 //! weight_buf_mib = 8
 //! act_buf_mib = 8
 //! freq_mhz = 800
+//!
+//! [cluster]              # optional: TP×DP×PP over many packages
+//! packages = 16
+//! dp = 8
+//! pp = 2
+//! inter = "substrate"    # or "optical", or a bare GB/s number
+//!
+//! [options]
+//! method = "hecaton"
+//! engine = "analytic"
 //! ```
+//!
+//! or a **sweep grid** over the same axes:
+//!
+//! ```toml
+//! [sweep]
+//! models = ["tinyllama-1.1b"]
+//! meshes = ["4x4", "2x8"]
+//! methods = ["all"]
+//! engines = ["analytic"]
+//!
+//! [options]
+//! threads = 0
+//! format = "table"
+//! ```
+//!
+//! [`load_scenario`] returns a [`LoadedScenario`] (one scenario or a
+//! grid); `hecaton run <file>` executes either. Unknown sections and
+//! keys are **errors** with a "did you mean" suggestion — a typo'd
+//! `[hardwre]` can never be silently ignored. The legacy [`SimSetup`]
+//! loader (`simulate --config`) remains for model + hardware files and
+//! points to `hecaton run` when it meets scenario-only sections.
 
 use anyhow::{anyhow, bail, Context};
 
+use crate::config::cluster::{InterKind, InterPkgLink};
 use crate::config::hardware::{DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
 use crate::config::model::ModelConfig;
-use crate::config::presets::model_preset;
-use crate::util::toml::{self, Document};
+use crate::config::presets::{all_model_presets, model_preset};
+use crate::nop::analytic::Method;
+use crate::scenario::{axis, Scenario, ScenarioGrid};
+use crate::sim::system::{EngineKind, PlanOptions};
+use crate::util::cli::suggest;
+use crate::util::toml::{self, Document, Value};
 use crate::util::{Bytes, Seconds};
 
-/// A fully-resolved simulation configuration.
+/// A fully-resolved simulation configuration (the legacy
+/// `simulate --config` surface: model + per-package hardware only).
 #[derive(Debug, Clone)]
 pub struct SimSetup {
     pub model: ModelConfig,
     pub hardware: HardwareConfig,
 }
 
-/// Parse a config document into a `SimSetup`.
+/// What a scenario file resolves to.
+#[derive(Debug, Clone)]
+pub enum LoadedScenario {
+    /// A single fully-specified scenario.
+    One(Scenario),
+    /// A sweep grid plus its run options.
+    Grid {
+        grid: ScenarioGrid,
+        threads: usize,
+        format: String,
+    },
+}
+
+// ───────────────────────── schema ─────────────────────────
+
+/// Every section and key the loader understands. Anything outside this
+/// table is an error with the offending name (satellite: no silently
+/// ignored TOML).
+const SCHEMA: &[(&str, &[&str])] = &[
+    (
+        "model",
+        &[
+            "preset",
+            "name",
+            "hidden",
+            "intermediate",
+            "layers",
+            "heads",
+            "kv_heads",
+            "seq_len",
+            "batch",
+            "vocab",
+        ],
+    ),
+    ("hardware", &["mesh", "dies", "package", "dram"]),
+    (
+        "hardware.die",
+        &["freq_mhz", "pe_rows", "pe_cols", "lanes", "weight_buf_mib", "act_buf_mib"],
+    ),
+    ("hardware.link", &["bandwidth_gbs", "latency_ns", "pj_per_bit"]),
+    ("hardware.dram", &["channel_bandwidth_gbs", "pj_per_bit"]),
+    ("cluster", &["packages", "dp", "pp", "inter"]),
+    (
+        "options",
+        &["method", "engine", "fusion", "bypass_router", "threads", "format"],
+    ),
+    (
+        "sweep",
+        &[
+            "models",
+            "meshes",
+            "packages",
+            "drams",
+            "methods",
+            "engines",
+            "n_packages",
+            "dp",
+            "pp",
+            "inter",
+        ],
+    ),
+];
+
+/// Reject unknown sections and keys with the offending name and a
+/// suggestion when something known is close.
+fn validate_keys(doc: &Document) -> crate::Result<()> {
+    let section_names: Vec<&str> = SCHEMA.iter().map(|(s, _)| *s).collect();
+    for (section, keys) in &doc.sections {
+        if section.is_empty() {
+            if let Some(key) = keys.keys().next() {
+                bail!(
+                    "top-level key '{key}' must live in a section ([model], [hardware], \
+                     [cluster], [sweep], [options])"
+                );
+            }
+            continue;
+        }
+        let Some((_, known)) = SCHEMA.iter().find(|(s, _)| s == section) else {
+            match suggest(section, section_names.iter().copied()) {
+                Some(s) => bail!("unknown section [{section}] (did you mean [{s}]?)"),
+                None => bail!(
+                    "unknown section [{section}] (known sections: {})",
+                    section_names
+                        .iter()
+                        .map(|s| format!("[{s}]"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ),
+            }
+        };
+        for key in keys.keys() {
+            if !known.contains(&key.as_str()) {
+                match suggest(key, known.iter().copied()) {
+                    Some(s) => bail!(
+                        "unknown key '{key}' in [{section}] (did you mean '{s}'?)"
+                    ),
+                    None => bail!(
+                        "unknown key '{key}' in [{section}] (known keys: {})",
+                        known.join(", ")
+                    ),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ───────────────────────── legacy SimSetup ─────────────────────────
+
+/// Parse a model + hardware config document into a `SimSetup`.
 pub fn from_str(input: &str) -> crate::Result<SimSetup> {
     let doc = toml::parse(input).map_err(|e| anyhow!("{e}"))?;
+    validate_keys(&doc)?;
+    for section in ["cluster", "sweep", "options"] {
+        if doc.sections.contains_key(section) {
+            bail!(
+                "[{section}] is a scenario-file section; run this file with \
+                 `hecaton run` (simulate --config takes [model] + [hardware] only)"
+            );
+        }
+    }
     let model = parse_model(&doc)?;
     let hardware = parse_hardware(&doc)?;
     Ok(SimSetup { model, hardware })
 }
 
-/// Load from a file path.
+/// Load a `SimSetup` from a file path.
 pub fn load(path: &str) -> crate::Result<SimSetup> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     from_str(&text).with_context(|| format!("parsing {path}"))
 }
 
+// ───────────────────────── scenario loader ─────────────────────────
+
+/// Parse a scenario document: a single scenario, or a `[sweep]` grid.
+pub fn scenario_from_str(input: &str) -> crate::Result<LoadedScenario> {
+    let doc = toml::parse(input).map_err(|e| anyhow!("{e}"))?;
+    validate_keys(&doc)?;
+
+    if doc.sections.contains_key("sweep") {
+        for section in ["model", "hardware", "hardware.die", "hardware.link", "hardware.dram", "cluster"]
+        {
+            if doc.sections.contains_key(section) {
+                bail!(
+                    "[{section}] cannot be combined with [sweep]; \
+                     express it as a [sweep] axis instead"
+                );
+            }
+        }
+        for key in ["method", "engine", "fusion", "bypass_router"] {
+            if doc.get("options", key).is_some() {
+                bail!(
+                    "[options] {key} does not apply to a [sweep] grid; \
+                     use the methods/engines axes ([options] carries threads/format only)"
+                );
+            }
+        }
+        let (threads, format) = parse_run_options(&doc)?;
+        let grid = parse_sweep(&doc)?;
+        return Ok(LoadedScenario::Grid {
+            grid,
+            threads,
+            format,
+        });
+    }
+
+    // The grid-only run options make no sense on a single scenario —
+    // reject rather than silently ignore them.
+    for key in ["threads", "format"] {
+        if doc.get("options", key).is_some() {
+            bail!(
+                "[options] {key} only applies to [sweep] grid files \
+                 (this file holds a single scenario)"
+            );
+        }
+    }
+    let model = parse_model(&doc)?;
+    let hardware = parse_hardware(&doc)?;
+    let (packages, dp, pp, inter) = parse_cluster(&doc)?;
+    let (method, engine, opts) = parse_eval_options(&doc)?;
+    let scenario = Scenario::builder(model)
+        .hardware(hardware)
+        .cluster(packages, dp, pp)
+        .inter(inter)
+        .method(method)
+        .engine(engine)
+        .plan_options(opts)
+        .build()?;
+    Ok(LoadedScenario::One(scenario))
+}
+
+/// Load a scenario file from a path.
+pub fn load_scenario(path: &str) -> crate::Result<LoadedScenario> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    scenario_from_str(&text).with_context(|| format!("parsing {path}"))
+}
+
+// ───────────────────────── section parsers ─────────────────────────
+
 fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
-    let preset = doc
-        .get_str("model", "preset")
-        .ok_or_else(|| anyhow!("[model] preset is required"))?;
-    let mut m =
-        model_preset(preset).ok_or_else(|| anyhow!("unknown model preset '{preset}'"))?;
-    let over_usize = |key: &str, target: &mut usize| {
-        if let Some(v) = doc.get_int("model", key) {
-            *target = v as usize;
+    let mut m = match doc.get_str("model", "preset") {
+        Some(preset) => model_preset(preset).ok_or_else(|| {
+            anyhow!(
+                "{}",
+                crate::util::cli::unknown_value("model preset", preset, all_model_presets())
+            )
+        })?,
+        None => {
+            // Fully explicit model: a name plus every dimension.
+            let name = doc.get_str("model", "name").ok_or_else(|| {
+                anyhow!("[model] needs a preset (or a name plus explicit dimensions)")
+            })?;
+            let req = |key: &str| -> crate::Result<usize> {
+                let v = doc.get_int("model", key).ok_or_else(|| {
+                    anyhow!("[model] {key} is required when no preset is given")
+                })?;
+                if v < 1 {
+                    bail!("[model] {key} must be >= 1 (got {v})");
+                }
+                Ok(v as usize)
+            };
+            ModelConfig {
+                name: name.to_string(),
+                hidden: req("hidden")?,
+                intermediate: req("intermediate")?,
+                layers: req("layers")?,
+                heads: req("heads")?,
+                kv_heads: req("kv_heads")?,
+                seq_len: req("seq_len")?,
+                batch: req("batch")?,
+                vocab: req("vocab")?,
+            }
         }
     };
-    over_usize("hidden", &mut m.hidden);
-    over_usize("intermediate", &mut m.intermediate);
-    over_usize("layers", &mut m.layers);
-    over_usize("heads", &mut m.heads);
-    over_usize("kv_heads", &mut m.kv_heads);
-    over_usize("seq_len", &mut m.seq_len);
-    over_usize("batch", &mut m.batch);
-    over_usize("vocab", &mut m.vocab);
-    if m.hidden % m.heads != 0 {
+    let over_usize = |key: &str, target: &mut usize| -> crate::Result<()> {
+        if let Some(v) = doc.get_int("model", key) {
+            if v < 1 {
+                bail!("[model] {key} must be >= 1 (got {v})");
+            }
+            *target = v as usize;
+        }
+        Ok(())
+    };
+    over_usize("hidden", &mut m.hidden)?;
+    over_usize("intermediate", &mut m.intermediate)?;
+    over_usize("layers", &mut m.layers)?;
+    over_usize("heads", &mut m.heads)?;
+    over_usize("kv_heads", &mut m.kv_heads)?;
+    over_usize("seq_len", &mut m.seq_len)?;
+    over_usize("batch", &mut m.batch)?;
+    over_usize("vocab", &mut m.vocab)?;
+    if m.heads == 0 || m.hidden % m.heads != 0 {
         bail!("hidden ({}) must divide by heads ({})", m.hidden, m.heads);
     }
     Ok(m)
@@ -74,11 +329,21 @@ fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
 
 fn parse_hardware(doc: &Document) -> crate::Result<HardwareConfig> {
     let package = match doc.get_str("hardware", "package") {
-        Some(s) => PackageKind::parse(s).ok_or_else(|| anyhow!("bad package '{s}'"))?,
+        Some(s) => PackageKind::parse(s).ok_or_else(|| {
+            anyhow!(
+                "{}",
+                crate::util::cli::unknown_value("package", s, &["standard", "advanced"])
+            )
+        })?,
         None => PackageKind::Standard,
     };
     let dram_kind = match doc.get_str("hardware", "dram") {
-        Some(s) => DramKind::parse(s).ok_or_else(|| anyhow!("bad dram '{s}'"))?,
+        Some(s) => DramKind::parse(s).ok_or_else(|| {
+            anyhow!(
+                "{}",
+                crate::util::cli::unknown_value("dram", s, &["ddr4-3200", "ddr5-6400", "hbm2"])
+            )
+        })?,
         None => DramKind::Ddr5_6400,
     };
     let (rows, cols) = match doc.get("hardware", "mesh") {
@@ -154,6 +419,151 @@ fn parse_hardware(doc: &Document) -> crate::Result<HardwareConfig> {
     Ok(hw)
 }
 
+/// `[cluster]`: shape knobs with degenerate defaults, plus the fabric.
+fn parse_cluster(doc: &Document) -> crate::Result<(usize, usize, usize, InterPkgLink)> {
+    let pos = |key: &str| -> crate::Result<usize> {
+        match doc.get_int("cluster", key) {
+            None => Ok(1),
+            Some(v) if v >= 1 => Ok(v as usize),
+            Some(v) => bail!("[cluster] {key} must be >= 1 (got {v})"),
+        }
+    };
+    let packages = pos("packages")?;
+    let dp = pos("dp")?;
+    let pp = pos("pp")?;
+    let inter = match doc.get("cluster", "inter") {
+        None => InterPkgLink::preset(InterKind::Substrate),
+        Some(v) => {
+            if let Some(s) = v.as_str() {
+                InterPkgLink::parse(s).ok_or_else(|| {
+                    match suggest(s, ["substrate", "optical"]) {
+                        Some(c) => anyhow!("bad [cluster] inter '{s}' (did you mean '{c}'?)"),
+                        None => anyhow!(
+                            "bad [cluster] inter '{s}' (substrate | optical | <GB/s>)"
+                        ),
+                    }
+                })?
+            } else if let Some(g) = v.as_float() {
+                if !(g.is_finite() && g > 0.0) {
+                    bail!("[cluster] inter must be a positive GB/s value (got {g})");
+                }
+                InterPkgLink {
+                    bandwidth: g * 1.0e9,
+                    ..InterPkgLink::preset(InterKind::Substrate)
+                }
+            } else {
+                bail!("[cluster] inter must be a fabric name or a GB/s number");
+            }
+        }
+    };
+    Ok((packages, dp, pp, inter))
+}
+
+/// `[options]` for one scenario: method, engine, ablation switches.
+fn parse_eval_options(doc: &Document) -> crate::Result<(Method, EngineKind, PlanOptions)> {
+    let method = match doc.get_str("options", "method") {
+        Some(s) => {
+            let names: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+            Method::parse(s)
+                .ok_or_else(|| anyhow!("{}", crate::util::cli::unknown_value("method", s, &names)))?
+        }
+        None => Method::Hecaton,
+    };
+    let engine = match doc.get_str("options", "engine") {
+        Some(s) => {
+            let names: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
+            EngineKind::parse(s)
+                .ok_or_else(|| anyhow!("{}", crate::util::cli::unknown_value("engine", s, &names)))?
+        }
+        None => EngineKind::Analytic,
+    };
+    let opt_bool = |key: &str, default: bool| -> crate::Result<bool> {
+        match doc.get("options", key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("[options] {key} must be true or false")),
+        }
+    };
+    let opts = PlanOptions {
+        fusion: opt_bool("fusion", true)?,
+        bypass_router: opt_bool("bypass_router", true)?,
+    };
+    Ok((method, engine, opts))
+}
+
+/// `[options]` for a grid run: worker threads and output format.
+fn parse_run_options(doc: &Document) -> crate::Result<(usize, String)> {
+    let threads = match doc.get_int("options", "threads") {
+        None => 0,
+        Some(v) if v >= 0 => v as usize,
+        Some(v) => bail!("[options] threads must be >= 0 (got {v})"),
+    };
+    let format = doc.get_str("options", "format").unwrap_or("table").to_string();
+    if !matches!(format.as_str(), "table" | "csv" | "json") {
+        bail!("bad format '{format}' (table | csv | json)");
+    }
+    Ok((threads, format))
+}
+
+/// One `[sweep]` axis as strings: a TOML array of strings/numbers (or a
+/// bare scalar), defaulting like the CLI flag.
+fn axis_strings(doc: &Document, key: &str, default: &str) -> crate::Result<Vec<String>> {
+    let stringify = |v: &Value| -> crate::Result<String> {
+        if let Some(s) = v.as_str() {
+            Ok(s.to_string())
+        } else if let Some(i) = v.as_int() {
+            Ok(i.to_string())
+        } else if let Some(f) = v.as_float() {
+            Ok(f.to_string())
+        } else {
+            bail!("[sweep] {key} entries must be strings or numbers")
+        }
+    };
+    match doc.get("sweep", key) {
+        None => Ok(vec![default.to_string()]),
+        Some(Value::Array(items)) => {
+            if items.is_empty() {
+                bail!("[sweep] {key} must not be an empty list");
+            }
+            items.iter().map(stringify).collect()
+        }
+        Some(v) => Ok(vec![stringify(v)?]),
+    }
+}
+
+fn refs(v: &[String]) -> Vec<&str> {
+    v.iter().map(|s| s.as_str()).collect()
+}
+
+fn parse_sweep(doc: &Document) -> crate::Result<ScenarioGrid> {
+    let strings = |key: &str, default: &str| axis_strings(doc, key, default);
+
+    let models = strings("models", "tinyllama-1.1b")?;
+    let meshes = strings("meshes", "4x4")?;
+    let packages = strings("packages", "standard")?;
+    let drams = strings("drams", "ddr5-6400")?;
+    let methods = strings("methods", "all")?;
+    let engines = strings("engines", "analytic")?;
+    let n_packages = strings("n_packages", "1")?;
+    let dp = strings("dp", "1")?;
+    let pp = strings("pp", "1")?;
+    let inter = strings("inter", "substrate")?;
+
+    Ok(ScenarioGrid {
+        models: axis::models(&refs(&models))?,
+        meshes: axis::meshes(&refs(&meshes))?,
+        packages: axis::package_kinds(&refs(&packages))?,
+        drams: axis::drams(&refs(&drams))?,
+        methods: axis::methods(&refs(&methods))?,
+        engines: axis::engines(&refs(&engines))?,
+        n_packages: axis::counts(&refs(&n_packages), "n-packages")?,
+        dp: axis::counts(&refs(&dp), "dp")?,
+        pp: axis::counts(&refs(&pp), "pp")?,
+        inter: axis::inters(&refs(&inter))?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,11 +615,235 @@ mod tests {
     #[test]
     fn rejects_bad_inputs() {
         assert!(from_str("[model]\npreset = \"nope\"").is_err());
-        assert!(from_str("x = 1").is_err()); // missing model preset
+        assert!(from_str("x = 1").is_err()); // top-level keys have no section
         assert!(from_str(
             "[model]\npreset = \"tiny\"\nheads = 7\n" // 64 % 7 != 0
         )
         .is_err());
         assert!(from_str("[model]\npreset = \"tiny\"\n[hardware]\npackage = \"exotic\"").is_err());
+        // Negative overrides error instead of wrapping to huge usize.
+        let e = format!(
+            "{:#}",
+            from_str("[model]\npreset = \"tiny\"\nbatch = -1\n").unwrap_err()
+        );
+        assert!(e.contains("[model] batch must be >= 1"), "{e}");
+        // Grid-only run options are rejected on single-scenario files.
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\npreset = \"tiny\"\n[options]\nthreads = 2\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("only applies to [sweep] grid files"), "{e}");
+    }
+
+    /// Regression (satellite): a typo'd section or key errors with the
+    /// offending name and a suggestion — nothing is silently ignored.
+    #[test]
+    fn unknown_sections_and_keys_error_with_suggestions() {
+        let e = format!(
+            "{:#}",
+            from_str("[model]\npreset = \"tiny\"\n[hardwre]\ndies = 16\n").unwrap_err()
+        );
+        assert!(e.contains("unknown section [hardwre]"), "{e}");
+        assert!(e.contains("did you mean [hardware]"), "{e}");
+
+        let e = format!(
+            "{:#}",
+            from_str("[model]\npreset = \"tiny\"\n[hardware]\ndiess = 16\n").unwrap_err()
+        );
+        assert!(e.contains("unknown key 'diess' in [hardware]"), "{e}");
+        assert!(e.contains("did you mean 'dies'"), "{e}");
+
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\npreset = \"tiny\"\n[clustre]\npackages = 2\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("unknown section [clustre]"), "{e}");
+        assert!(e.contains("did you mean [cluster]"), "{e}");
+
+        // Top-level keys are rejected with guidance.
+        let e = format!("{:#}", from_str("preset = \"tiny\"").unwrap_err());
+        assert!(e.contains("top-level key 'preset'"), "{e}");
+    }
+
+    /// The legacy loader points at `hecaton run` for scenario sections.
+    #[test]
+    fn simsetup_rejects_scenario_sections() {
+        for section in ["cluster", "sweep", "options"] {
+            let input = format!("[model]\npreset = \"tiny\"\n[{section}]\n");
+            let e = format!("{:#}", from_str(&input).unwrap_err());
+            assert!(e.contains("hecaton run"), "[{section}]: {e}");
+        }
+    }
+
+    #[test]
+    fn scenario_single_with_cluster_and_options() {
+        let loaded = scenario_from_str(
+            r#"
+            [model]
+            preset = "tinyllama-1.1b"
+
+            [hardware]
+            mesh = [4, 4]
+
+            [cluster]
+            packages = 4
+            dp = 2
+            pp = 2
+            inter = "substrate"
+
+            [options]
+            method = "hecaton"
+            engine = "event"
+            "#,
+        )
+        .unwrap();
+        let LoadedScenario::One(s) = loaded else {
+            panic!("expected a single scenario");
+        };
+        assert!(s.is_cluster());
+        let c = s.cluster_config().unwrap();
+        assert_eq!((c.packages, c.dp, c.pp), (4, 2, 2));
+        assert_eq!(s.engine, EngineKind::Event);
+        assert_eq!(s.method, Method::Hecaton);
+        // A numeric fabric reads as GB/s.
+        let LoadedScenario::One(s) = scenario_from_str(
+            "[model]\npreset = \"tinyllama-1.1b\"\n[hardware]\nmesh = [4, 4]\n\
+             [cluster]\npackages = 2\ndp = 1\npp = 2\ninter = 128\n",
+        )
+        .unwrap() else {
+            panic!("single scenario");
+        };
+        assert!((s.cluster_config().unwrap().inter.bandwidth - 128.0e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn scenario_defaults_to_degenerate_package() {
+        let LoadedScenario::One(s) =
+            scenario_from_str("[model]\npreset = \"tinyllama-1.1b\"\n").unwrap()
+        else {
+            panic!("single scenario");
+        };
+        assert!(!s.is_cluster());
+        assert_eq!(s.method, Method::Hecaton);
+        assert_eq!(s.engine, EngineKind::Analytic);
+        assert!(s.opts.fusion && s.opts.bypass_router);
+    }
+
+    #[test]
+    fn scenario_sweep_grid() {
+        let loaded = scenario_from_str(
+            r#"
+            [sweep]
+            models = ["tinyllama-1.1b"]
+            meshes = ["4x4", "2x8", 16]
+            methods = ["all"]
+            engines = ["analytic", "event"]
+
+            [options]
+            threads = 2
+            format = "csv"
+            "#,
+        )
+        .unwrap();
+        let LoadedScenario::Grid {
+            grid,
+            threads,
+            format,
+        } = loaded
+        else {
+            panic!("expected a grid");
+        };
+        assert_eq!(threads, 2);
+        assert_eq!(format, "csv");
+        assert!(!grid.is_cluster());
+        assert_eq!(grid.meshes, vec![(4, 4), (2, 8), (4, 4)]);
+        assert_eq!(grid.methods.len(), 4);
+        assert_eq!(grid.engines.len(), 2);
+        let (pts, skipped) = grid.points().unwrap();
+        assert_eq!(pts.len(), 3 * 4 * 2);
+        assert_eq!(skipped, 0);
+    }
+
+    #[test]
+    fn sweep_grid_with_cluster_axes() {
+        let LoadedScenario::Grid { grid, .. } = scenario_from_str(
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\nmeshes = [\"4x4\"]\n\
+             methods = [\"hecaton\"]\nn_packages = [4]\ndp = [1, 2, 4]\npp = [1, 2, 4]\n",
+        )
+        .unwrap() else {
+            panic!("expected a grid");
+        };
+        assert!(grid.is_cluster());
+        let (pts, skipped) = grid.points().unwrap();
+        assert_eq!(pts.len(), 3, "3 consistent shapes");
+        assert_eq!(skipped, 6);
+    }
+
+    #[test]
+    fn sweep_rejects_conflicting_sections() {
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\nmodels = [\"tiny\"]\n[hardware]\ndies = 16\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("[hardware] cannot be combined with [sweep]"), "{e}");
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\nmodels = [\"tiny\"]\n[options]\nmethod = \"hecaton\"\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("does not apply to a [sweep] grid"), "{e}");
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\n[options]\nformat = \"yaml\"\n").unwrap_err()
+        );
+        assert!(e.contains("bad format 'yaml'"), "{e}");
+    }
+
+    #[test]
+    fn explicit_model_without_preset() {
+        let LoadedScenario::One(s) = scenario_from_str(
+            r#"
+            [model]
+            name = "custom-2b"
+            hidden = 2048
+            intermediate = 8192
+            layers = 24
+            heads = 16
+            kv_heads = 16
+            seq_len = 2048
+            batch = 512
+            vocab = 32000
+            "#,
+        )
+        .unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s.model.name, "custom-2b");
+        assert_eq!(s.model.batch, 512);
+        // Missing dimensions are an error, not a silent default.
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\nname = \"x\"\nhidden = 64\n").unwrap_err()
+        );
+        assert!(e.contains("required when no preset"), "{e}");
+    }
+
+    /// `Scenario::to_toml` round-trips through the loader.
+    #[test]
+    fn to_toml_round_trips() {
+        let s = Scenario::builder(model_preset("tinyllama-1.1b").unwrap())
+            .dies(16)
+            .cluster(4, 2, 2)
+            .engine(EngineKind::EventPrefetch)
+            .fusion(false)
+            .build()
+            .unwrap();
+        let LoadedScenario::One(back) = scenario_from_str(&s.to_toml()).unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s, back);
     }
 }

@@ -129,6 +129,23 @@ pub fn eval_models() -> &'static [&'static str] {
     ]
 }
 
+/// Every model preset name — the evaluation set plus the functional-path
+/// configs. The candidate list behind "did you mean" suggestions and the
+/// machine-readable `hecaton info --format json` output.
+pub fn all_model_presets() -> &'static [&'static str] {
+    &[
+        "bert-large",
+        "bloom-1.7b",
+        "gpt3-6.7b",
+        "tinyllama-1.1b",
+        "llama2-7b",
+        "llama2-70b",
+        "llama3.1-405b",
+        "tiny",
+        "e2e-100m",
+    ]
+}
+
 /// A paper workload pairing: model + die count (§VI-A: "their training
 /// systems scale proportionally, integrating 16, 64, 256, 1024 dies").
 #[derive(Debug, Clone)]
@@ -171,6 +188,16 @@ mod tests {
             assert!(m.layers > 0 && m.seq_len > 0);
         }
         assert!(model_preset("nonexistent").is_none());
+    }
+
+    #[test]
+    fn all_model_presets_resolve_and_cover_eval_set() {
+        for name in all_model_presets() {
+            assert!(model_preset(name).is_some(), "missing {name}");
+        }
+        for name in eval_models() {
+            assert!(all_model_presets().contains(name), "{name} not listed");
+        }
     }
 
     #[test]

@@ -29,6 +29,26 @@
 //!    dies running on threads, and [`train`] drives end-to-end training of
 //!    a small transformer with a loss curve.
 //!
+//! The public entrypoint over the simulator half is the **Scenario API**
+//! ([`scenario`]): a declarative [`scenario::Scenario`] (model ×
+//! package-or-cluster × method × engine × options, built via a validating
+//! [`scenario::ScenarioBuilder`] or loaded from a TOML scenario file) and
+//! one [`scenario::evaluate`] returning a unified [`scenario::Evaluation`].
+//! Grids over scenario axes ([`scenario::ScenarioGrid`]) power
+//! `hecaton sweep`, `hecaton run` and every report driver. The
+//! [`prelude`] makes the whole surface usable in a handful of lines:
+//!
+//! ```no_run
+//! use hecaton::prelude::*;
+//!
+//! let s = Scenario::builder(model_preset("llama2-70b").unwrap())
+//!     .dies(256)
+//!     .method(Method::Hecaton)
+//!     .build()
+//!     .unwrap();
+//! println!("{}", evaluate(&s).unwrap().latency());
+//! ```
+//!
 //! Experiment drivers reproducing every table and figure of the paper's
 //! evaluation live in [`report`].
 
@@ -43,11 +63,40 @@ pub mod parallel;
 pub mod sched;
 pub mod energy;
 pub mod sim;
+pub mod scenario;
 pub mod runtime;
 pub mod coordinator;
 pub mod train;
 pub mod report;
 pub mod cli;
+
+/// One-import surface for library users: scenario construction,
+/// evaluation, grids, and the config/result types they touch.
+///
+/// ```no_run
+/// use hecaton::prelude::*;
+///
+/// let s = Scenario::builder(model_preset("tinyllama-1.1b").unwrap())
+///     .dies(16)
+///     .cluster(4, 2, 2)
+///     .engine(EngineKind::Event)
+///     .build()
+///     .unwrap();
+/// let eval = evaluate(&s).unwrap();
+/// println!("{} at {:.0} tokens/s", eval.latency(), eval.tokens_per_sec());
+/// ```
+pub mod prelude {
+    pub use crate::config::cluster::{cluster_preset, ClusterConfig, InterKind, InterPkgLink};
+    pub use crate::config::presets::model_preset;
+    pub use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+    pub use crate::nop::analytic::Method;
+    pub use crate::scenario::{
+        evaluate, run_all, run_on, Evaluation, Scenario, ScenarioBuilder, ScenarioGrid, Target,
+    };
+    pub use crate::sim::cluster::ClusterResult;
+    pub use crate::sim::sweep::PlanCache;
+    pub use crate::sim::system::{EngineKind, PlanOptions, SimResult};
+}
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -10,8 +10,8 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
-use crate::sim::system::SimOptions;
+use crate::scenario::{self, Scenario};
+use crate::sim::system::{EngineKind, PlanOptions};
 use crate::util::table::Table;
 
 pub struct Row {
@@ -30,7 +30,7 @@ pub struct Row {
 
 pub fn run() -> Vec<Row> {
     // Four ablation variants per pairing, executed as one parallel sweep.
-    // The variants differ in `SimOptions` (plan-cache keys include the
+    // The variants differ in `PlanOptions` (plan-cache keys include the
     // ablation switches) and, for the fusion pair, in hardware:
     // fusion ablation runs at 4× weight buffers — with the paper's 8 MB a
     // layer's two blocks never co-reside (each alone nearly fills the
@@ -44,38 +44,42 @@ pub fn run() -> Vec<Row> {
         let hw = HardwareConfig::square(w.dies, PackageKind::Standard, DramKind::Ddr5_6400);
         let mut hw_big = hw.clone();
         hw_big.die.weight_buf = hw_big.die.weight_buf * 4.0;
-        points.push(SweepPoint::with_opts(
+        points.push(Scenario::package_with(
             w.model.clone(),
             hw.clone(),
             Method::Hecaton,
-            SimOptions::default(),
+            EngineKind::Analytic,
+            PlanOptions::default(),
         ));
-        points.push(SweepPoint::with_opts(
+        points.push(Scenario::package_with(
             w.model.clone(),
             hw,
             Method::Hecaton,
-            SimOptions {
+            EngineKind::Analytic,
+            PlanOptions {
                 bypass_router: false,
                 ..Default::default()
             },
         ));
-        points.push(SweepPoint::with_opts(
+        points.push(Scenario::package_with(
             w.model.clone(),
             hw_big.clone(),
             Method::Hecaton,
-            SimOptions::default(),
+            EngineKind::Analytic,
+            PlanOptions::default(),
         ));
-        points.push(SweepPoint::with_opts(
+        points.push(Scenario::package_with(
             w.model.clone(),
             hw_big,
             Method::Hecaton,
-            SimOptions {
+            EngineKind::Analytic,
+            PlanOptions {
                 fusion: false,
                 ..Default::default()
             },
         ));
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
     pairings
         .iter()
         .zip(results.chunks(4))

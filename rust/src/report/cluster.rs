@@ -15,19 +15,18 @@
 use crate::config::cluster::{cluster_preset, ClusterConfig};
 use crate::config::ModelConfig;
 use crate::nop::analytic::Method;
-use crate::sim::cluster::{simulate_cluster, ClusterPlan};
+use crate::scenario::Scenario;
 use crate::sim::sweep::PlanCache;
-use crate::sim::system::{simulate_engine, EngineKind, PlanOptions};
+use crate::sim::system::EngineKind;
 use crate::util::fmt::pct;
 use crate::util::table::Table;
 
 /// The tiny-cluster smoke grid: the hybrid under every engine backend —
-/// one [`ClusterPlan`] priced once, timed per backend.
+/// one scenario per engine, all priced through one shared [`PlanCache`]
+/// (the stage sub-plans build once and are reused across backends).
 fn tiny_table() -> String {
     let (model, cluster) = cluster_preset("tiny-cluster").expect("preset");
     let cache = PlanCache::new();
-    let plan = ClusterPlan::build(&model, &cluster, Method::Hecaton, PlanOptions::default(), &cache)
-        .expect("preset shapes are valid");
     let mut t = Table::new(&[
         "engine", "latency", "bubble", "p2p", "allreduce", "energy", "tokens/s",
     ])
@@ -37,7 +36,11 @@ fn tiny_table() -> String {
     ))
     .label_first();
     for engine in EngineKind::all() {
-        let r = plan.time(engine);
+        let r = Scenario::cluster(model.clone(), cluster.clone(), Method::Hecaton, engine)
+            .evaluate_on(&cache)
+            .expect("preset shapes are valid")
+            .into_cluster()
+            .expect("cluster scenarios yield cluster results");
         let lat = r.latency.raw();
         t.row(crate::table_row![
             r.engine.name(),
@@ -67,11 +70,13 @@ fn comparison(model: &ModelConfig, cluster: &ClusterConfig) -> (String, f64) {
     .label_first();
 
     let cache = PlanCache::new();
-    let plan = ClusterPlan::build(model, cluster, Method::Hecaton, PlanOptions::default(), &cache)
-        .expect("preset shapes are valid");
     let mut hybrid_latency = f64::INFINITY;
     for engine in [EngineKind::Analytic, EngineKind::Event] {
-        let r = plan.time(engine);
+        let r = Scenario::cluster(model.clone(), cluster.clone(), Method::Hecaton, engine)
+            .evaluate_on(&cache)
+            .expect("preset shapes are valid")
+            .into_cluster()
+            .expect("cluster scenarios yield cluster results");
         let lat = r.latency.raw();
         if engine == EngineKind::Analytic {
             hybrid_latency = lat;
@@ -92,7 +97,15 @@ fn comparison(model: &ModelConfig, cluster: &ClusterConfig) -> (String, f64) {
     // Megatron-style baseline: flat-ring TP stretched over the whole
     // cluster, every ring crossing paced by its fabric share.
     let across_hw = cluster.tp_across_hw();
-    let across = simulate_engine(model, &across_hw, Method::FlatRing, EngineKind::Analytic);
+    let across = Scenario::package(
+        model.clone(),
+        across_hw,
+        Method::FlatRing,
+        EngineKind::Analytic,
+    )
+    .evaluate()
+    .expect("single-package evaluation is infallible")
+    .into_sim();
     let lat = across.latency.raw();
     t.row(crate::table_row![
         "TP-across flat-ring",
@@ -143,8 +156,11 @@ fn weak_scaling() -> String {
             base_cluster.inter.clone(),
         )
         .expect("k x 1 shapes are valid");
-        let r = simulate_cluster(&model, &cluster, Method::Hecaton, EngineKind::Analytic)
-            .expect("weak-scaling shapes are valid");
+        let r = Scenario::cluster(model.clone(), cluster, Method::Hecaton, EngineKind::Analytic)
+            .evaluate()
+            .expect("weak-scaling shapes are valid")
+            .into_cluster()
+            .expect("cluster scenarios yield cluster results");
         let lat = r.latency.raw();
         if k == 1 {
             t1 = lat;
@@ -178,6 +194,7 @@ pub fn report() -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::cluster::simulate_cluster;
 
     /// The acceptance gap: on the 405B-class preset the hybrid must beat
     /// TP stretched across packages decisively (the paper's single-package

@@ -14,7 +14,7 @@ use crate::config::presets::model_preset;
 use crate::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
 use crate::nop::analytic::Method;
 use crate::nop::collective::{event_time_concurrent, ring_step_schedule, CollectiveKind};
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 use crate::util::Bytes;
@@ -28,16 +28,16 @@ pub fn report() -> String {
     // three engines per method sharing one memoized plan.
     let m = model_preset("tinyllama-1.1b").expect("preset");
     let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
-    let parity_points: Vec<SweepPoint> = Method::all()
+    let parity_points: Vec<Scenario> = Method::all()
         .into_iter()
         .flat_map(|method| {
             EngineKind::all()
                 .into_iter()
-                .map(|e| SweepPoint::new(m.clone(), hw.clone(), method, e))
+                .map(|e| Scenario::package(m.clone(), hw.clone(), method, e))
                 .collect::<Vec<_>>()
         })
         .collect();
-    let parity = run_points(&parity_points);
+    let parity = scenario::run_sim(&parity_points);
     let mut t = Table::new(&["method", "analytic", "event", "rel err", "event-prefetch"])
         .with_title("Engine parity — tinyllama-1.1b @ 4x4, uncongested (event must match ≤1%)")
         .label_first();
@@ -59,17 +59,17 @@ pub fn report() -> String {
 
     // ── 2. overlap slack: prefetch across fusion-group boundaries ──
     let slack_workloads = [("llama2-7b", 64usize), ("llama2-70b", 256)];
-    let slack_points: Vec<SweepPoint> = slack_workloads
+    let slack_points: Vec<Scenario> = slack_workloads
         .iter()
         .flat_map(|&(name, dies)| {
             let m = model_preset(name).expect("preset");
             let hw = HardwareConfig::square(dies, PackageKind::Standard, DramKind::Ddr4_3200);
             EngineKind::all()
                 .into_iter()
-                .map(move |e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+                .map(move |e| Scenario::package(m.clone(), hw.clone(), Method::Hecaton, e))
         })
         .collect();
-    let slack = run_points(&slack_points);
+    let slack = scenario::run_sim(&slack_points);
     let mut t = Table::new(&["workload", "engine", "latency", "exposed DRAM", "vs analytic"])
         .with_title("Overlap slack — cross-group DRAM prefetch (DDR4 to stress the channels)")
         .label_first();
@@ -122,7 +122,7 @@ pub fn report() -> String {
     let m = model_preset("tinyllama-1.1b").expect("preset");
     let skew_layouts = [(4usize, 4usize), (2, 8), (1, 16)];
     let skew_engines = [EngineKind::Analytic, EngineKind::Event];
-    let skew_points: Vec<SweepPoint> = skew_layouts
+    let skew_points: Vec<Scenario> = skew_layouts
         .iter()
         .flat_map(|&(rows, cols)| {
             let hw =
@@ -130,10 +130,10 @@ pub fn report() -> String {
             let m = m.clone();
             skew_engines
                 .into_iter()
-                .map(move |e| SweepPoint::new(m.clone(), hw.clone(), Method::Hecaton, e))
+                .map(move |e| Scenario::package(m.clone(), hw.clone(), Method::Hecaton, e))
         })
         .collect();
-    let skew = run_points(&skew_points);
+    let skew = scenario::run_sim(&skew_points);
     let mut t = Table::new(&["mesh", "engine", "latency", "NoP share"])
         .with_title("Skewed meshes — Hecaton on 16 dies (row/col rings change length)")
         .label_first();

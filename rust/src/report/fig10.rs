@@ -6,7 +6,7 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
@@ -25,7 +25,7 @@ pub fn run() -> Vec<Row> {
         for w in &pairings {
             for k in kinds {
                 let hw = HardwareConfig::square(w.dies, package, k);
-                points.push(SweepPoint::new(
+                points.push(Scenario::package(
                     w.model.clone(),
                     hw,
                     Method::Hecaton,
@@ -34,7 +34,7 @@ pub fn run() -> Vec<Row> {
             }
         }
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
 
     let mut rows = Vec::new();
     let mut chunks = results.chunks(kinds.len());
@@ -79,7 +79,7 @@ pub fn run_knee(package: PackageKind) -> Vec<KneeRow> {
     // channel scale. The scaled channel bandwidth makes each hardware
     // config distinct — the sweep plan cache keys on the full config, so
     // no scaled variant ever reuses a full-provision plan.
-    let mut points = vec![SweepPoint::new(
+    let mut points = vec![Scenario::package(
         w.model.clone(),
         HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400),
         Method::Hecaton,
@@ -89,7 +89,7 @@ pub fn run_knee(package: PackageKind) -> Vec<KneeRow> {
         for k in kinds {
             let mut hw = HardwareConfig::square(w.dies, package, k);
             hw.dram.channel_bandwidth *= scale;
-            points.push(SweepPoint::new(
+            points.push(Scenario::package(
                 w.model.clone(),
                 hw,
                 Method::Hecaton,
@@ -97,7 +97,7 @@ pub fn run_knee(package: PackageKind) -> Vec<KneeRow> {
             ));
         }
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
     let base = results[0].latency.raw();
     scales
         .iter()

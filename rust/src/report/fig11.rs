@@ -12,7 +12,7 @@
 use crate::config::presets::model_preset;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
@@ -28,7 +28,7 @@ pub fn run() -> Vec<Row> {
     let layouts = crate::arch::package::Package::layouts_of(16);
     // Point 0 is the 4×4 normalization baseline, then one point per layout
     // — all executed on the parallel sweep runner.
-    let mut points = vec![SweepPoint::new(
+    let mut points = vec![Scenario::package(
         model.clone(),
         HardwareConfig::mesh(4, 4, PackageKind::Standard, DramKind::Ddr5_6400),
         Method::Hecaton,
@@ -37,14 +37,14 @@ pub fn run() -> Vec<Row> {
     for p in &layouts {
         let hw =
             HardwareConfig::mesh(p.rows, p.cols, PackageKind::Standard, DramKind::Ddr5_6400);
-        points.push(SweepPoint::new(
+        points.push(Scenario::package(
             model.clone(),
             hw,
             Method::Hecaton,
             EngineKind::Analytic,
         ));
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
     let square = &results[0];
     layouts
         .iter()

@@ -6,7 +6,7 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::{EngineKind, SimResult};
 use crate::util::table::Table;
 
@@ -28,19 +28,20 @@ pub fn run() -> Vec<Cell> {
 }
 
 /// Run the full grid with an explicit timing backend (the engine column of
-/// each row records which one produced it). The grid executes on the
-/// parallel sweep runner — same rows, same order, many cores.
+/// each row records which one produced it). The grid is a scenario list
+/// executed on the shared parallel runner — same rows, same order, many
+/// cores.
 pub fn run_with(engine: EngineKind) -> Vec<Cell> {
     let mut points = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         for w in paper_pairings() {
             let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
             for method in Method::all() {
-                points.push(SweepPoint::new(w.model.clone(), hw.clone(), method, engine));
+                points.push(Scenario::package(w.model.clone(), hw.clone(), method, engine));
             }
         }
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
 
     let mut cells = Vec::new();
     let hec_idx = Method::all()
@@ -55,7 +56,7 @@ pub fn run_with(engine: EngineKind) -> Vec<Cell> {
         for (r, p) in chunk.iter().zip(pts) {
             cells.push(Cell {
                 model: p.model.name.clone(),
-                package: p.hw.package,
+                package: p.hw().package,
                 method: p.method,
                 rel_latency: r.latency / hecaton.latency,
                 rel_energy: r.energy_total.raw() / hecaton.energy_total.raw(),

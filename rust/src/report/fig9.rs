@@ -5,7 +5,7 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 
@@ -18,15 +18,15 @@ pub struct Series {
 }
 
 pub fn run() -> Vec<Series> {
-    // Expand the whole study as one sweep (parallel execution; chunked
-    // back into series below — same rows as the old serial loops).
+    // Expand the whole study as one scenario list (parallel execution;
+    // chunked back into series below — same rows as the old serial loops).
     let pairings = paper_pairings();
     let mut sweep_points = Vec::new();
     for package in [PackageKind::Standard, PackageKind::Advanced] {
         for method in Method::all() {
             for w in &pairings {
                 let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400);
-                sweep_points.push(SweepPoint::new(
+                sweep_points.push(Scenario::package(
                     w.model.clone(),
                     hw,
                     method,
@@ -35,7 +35,7 @@ pub fn run() -> Vec<Series> {
             }
         }
     }
-    let results = run_points(&sweep_points);
+    let results = scenario::run_sim(&sweep_points);
 
     let mut out = Vec::new();
     let mut chunks = results.chunks(pairings.len());

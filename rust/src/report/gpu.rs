@@ -3,9 +3,8 @@
 //! published GPU-hours and power; we do the same.
 
 use crate::config::presets::model_preset;
-use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::system::simulate;
+use crate::scenario::Scenario;
 use crate::util::table::Table;
 
 /// Published A100 baseline (Llama 2 paper, Table 2): 1,720,320 GPU-hours
@@ -45,8 +44,16 @@ pub struct Comparison {
 
 pub fn run() -> Comparison {
     let model = model_preset("llama2-70b").expect("preset");
-    let hw = HardwareConfig::square(256, PackageKind::Standard, DramKind::Ddr5_6400);
-    let r = simulate(&model, &hw, Method::Hecaton);
+    // The paper's 256-die standard/DDR5 testbed as a builder-validated
+    // scenario (defaults: standard package, DDR5-6400, analytic timing).
+    let r = Scenario::builder(model.clone())
+        .dies(256)
+        .method(Method::Hecaton)
+        .build()
+        .expect("paper-scale scenario is valid")
+        .evaluate()
+        .expect("single-package evaluation is infallible")
+        .into_sim();
     let baseline = GpuBaseline::llama2_70b();
     let gpu = baseline.flops_per_watt(model.total_params() as f64);
     let hec = r.flops_per_watt();

@@ -6,7 +6,7 @@
 use crate::config::presets::paper_pairings;
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::EngineKind;
 use crate::util::table::Table;
 use crate::util::Seconds;
@@ -25,7 +25,7 @@ pub fn run() -> Vec<Row> {
         for w in paper_pairings() {
             let hw = HardwareConfig::square(w.dies, package, DramKind::Ddr5_6400)
                 .with_link_latency(Seconds::ns(10.0));
-            points.push(SweepPoint::new(
+            points.push(Scenario::package(
                 w.model.clone(),
                 hw,
                 Method::Hecaton,
@@ -33,13 +33,13 @@ pub fn run() -> Vec<Row> {
             ));
         }
     }
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
     points
         .iter()
         .zip(&results)
         .map(|(p, r)| Row {
             model: p.model.name.clone(),
-            package: p.hw.package,
+            package: p.hw().package,
             proportion: r.breakdown.nop_link.raw() / r.latency.raw(),
         })
         .collect()

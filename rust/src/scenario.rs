@@ -1,0 +1,1443 @@
+//! The **Scenario API** — one declarative entrypoint for every evaluation
+//! the crate can run.
+//!
+//! A [`Scenario`] fully specifies one experiment: a model, a target
+//! (single package or a TP×DP×PP cluster), a tensor-parallel method, a
+//! timing backend and the planning-phase ablation switches. It is the one
+//! value every consumer constructs — the CLI (`simulate`, `sweep`,
+//! `run`), the TOML scenario loader ([`crate::config::file`]), every
+//! report driver, and library users via [`crate::prelude`]:
+//!
+//! ```no_run
+//! use hecaton::prelude::*;
+//!
+//! let scenario = Scenario::builder(model_preset("llama2-70b").unwrap())
+//!     .dies(256)
+//!     .method(Method::Hecaton)
+//!     .build()
+//!     .unwrap();
+//! println!("{}", evaluate(&scenario).unwrap().latency());
+//! ```
+//!
+//! [`evaluate`] (or [`Scenario::evaluate_on`] against a shared
+//! [`PlanCache`]) returns an [`Evaluation`] — the unified result type
+//! covering both the single-package [`SimResult`] and the cluster
+//! [`ClusterResult`]; the underlying numbers are produced by exactly the
+//! same plan → price → time machinery as before this API existed, so a
+//! scenario evaluation is bitwise identical to the legacy
+//! `simulate_with` / `simulate_cluster` paths (which survive as thin
+//! wrappers over this module).
+//!
+//! [`ScenarioGrid`] is the cross-product grid over scenario axes — the
+//! successor of the former `SweepGrid`/`ClusterGrid` pair: the six
+//! per-package axes plus the cluster knobs, expanded into a deterministic
+//! scenario list and executed on the shared worker pool
+//! ([`run_on`]/[`run_all`]) with memoized planning. The table/CSV/JSON
+//! renderers ([`render_table`] …) dispatch on the grid kind and keep the
+//! exact output of the pre-Scenario CLI.
+
+use anyhow::{anyhow, bail};
+
+use crate::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use crate::config::presets::{all_model_presets, eval_models, model_preset};
+use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::nop::analytic::Method;
+use crate::parallel::hybrid::HybridSpec;
+use crate::sim::cluster::{ClusterPlan, ClusterResult};
+use crate::sim::sweep::{csv_field, json_escape, parallel_map, pareto_front, PlanCache};
+use crate::sim::system::{EngineKind, PlanOptions, SimResult};
+use crate::util::table::Table;
+use crate::util::{Energy, Seconds};
+
+// ───────────────────────── scenario ─────────────────────────
+
+/// What a scenario runs on: one package, or a cluster of packages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Target {
+    /// A single package (the paper's core testbed).
+    Package(HardwareConfig),
+    /// A TP×DP×PP cluster of identical packages over a shared fabric.
+    Cluster(ClusterConfig),
+}
+
+/// A fully-specified evaluation scenario — the single public input type
+/// of the simulator stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub model: ModelConfig,
+    pub target: Target,
+    /// Intra-package tensor-parallel method.
+    pub method: Method,
+    /// Timing backend.
+    pub engine: EngineKind,
+    /// Planning-phase ablation switches.
+    pub opts: PlanOptions,
+}
+
+impl Scenario {
+    /// Start a validated builder for `model`.
+    pub fn builder(model: ModelConfig) -> ScenarioBuilder {
+        ScenarioBuilder::new(model)
+    }
+
+    /// A single-package scenario with default ablation switches.
+    pub fn package(
+        model: ModelConfig,
+        hw: HardwareConfig,
+        method: Method,
+        engine: EngineKind,
+    ) -> Scenario {
+        Scenario::package_with(model, hw, method, engine, PlanOptions::default())
+    }
+
+    /// A single-package scenario with explicit ablation switches (the
+    /// ablation report driver's constructor).
+    pub fn package_with(
+        model: ModelConfig,
+        hw: HardwareConfig,
+        method: Method,
+        engine: EngineKind,
+        opts: PlanOptions,
+    ) -> Scenario {
+        Scenario {
+            model,
+            target: Target::Package(hw),
+            method,
+            engine,
+            opts,
+        }
+    }
+
+    /// A cluster scenario with default ablation switches. A degenerate
+    /// `cluster` (1 package, dp = pp = 1) is kept as a cluster target —
+    /// its evaluation is bitwise identical to the package path (the
+    /// regression-tested invariant), but it renders with the cluster
+    /// columns, exactly as cluster grids always have.
+    pub fn cluster(
+        model: ModelConfig,
+        cluster: ClusterConfig,
+        method: Method,
+        engine: EngineKind,
+    ) -> Scenario {
+        Scenario {
+            model,
+            target: Target::Cluster(cluster),
+            method,
+            engine,
+            opts: PlanOptions::default(),
+        }
+    }
+
+    /// Whether the target is a (possibly degenerate) cluster.
+    pub fn is_cluster(&self) -> bool {
+        matches!(self.target, Target::Cluster(_))
+    }
+
+    /// The per-package hardware (the package itself, or the cluster's
+    /// per-package config).
+    pub fn hw(&self) -> &HardwareConfig {
+        match &self.target {
+            Target::Package(hw) => hw,
+            Target::Cluster(c) => &c.package_hw,
+        }
+    }
+
+    /// The cluster config, when the target is a cluster.
+    pub fn cluster_config(&self) -> Option<&ClusterConfig> {
+        match &self.target {
+            Target::Package(_) => None,
+            Target::Cluster(c) => Some(c),
+        }
+    }
+
+    /// Evaluate with a private plan cache (one-shot convenience).
+    pub fn evaluate(&self) -> crate::Result<Evaluation> {
+        evaluate(self)
+    }
+
+    /// Evaluate against a shared [`PlanCache`] — identical stage plans
+    /// (across engines, grid points or cluster stages) are priced once.
+    pub fn evaluate_on(&self, cache: &PlanCache) -> crate::Result<Evaluation> {
+        let detail = match &self.target {
+            Target::Package(hw) => EvalDetail::Package(
+                cache.plan(&self.model, hw, self.method, self.opts).time(self.engine),
+            ),
+            Target::Cluster(c) => EvalDetail::Cluster(
+                ClusterPlan::build(&self.model, c, self.method, self.opts, cache)?
+                    .time(self.engine),
+            ),
+        };
+        Ok(Evaluation {
+            batch_tokens: self.model.tokens_per_batch(),
+            detail,
+        })
+    }
+
+    /// Serialize to a scenario TOML file body (the format
+    /// [`crate::config::file::scenario_from_str`] loads). Preset-derived
+    /// models, hardware and fabrics round-trip exactly; hand-tweaked
+    /// float overrides round-trip through shortest-representation
+    /// printing (exact for every preset-derived value).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        out.push_str("[model]\n");
+        match model_preset(&self.model.name) {
+            Some(p) if p == self.model => {
+                out.push_str(&format!("preset = \"{}\"\n", self.model.name));
+            }
+            base => {
+                // Preset with overrides, or a fully explicit model.
+                match base {
+                    Some(_) => out.push_str(&format!("preset = \"{}\"\n", self.model.name)),
+                    None => out.push_str(&format!("name = \"{}\"\n", self.model.name)),
+                }
+                let defaults = base.unwrap_or(ModelConfig {
+                    name: String::new(),
+                    hidden: 0,
+                    intermediate: 0,
+                    layers: 0,
+                    heads: 0,
+                    kv_heads: 0,
+                    seq_len: 0,
+                    batch: 0,
+                    vocab: 0,
+                });
+                let mut field = |key: &str, v: usize, d: usize| {
+                    if v != d {
+                        out.push_str(&format!("{key} = {v}\n"));
+                    }
+                };
+                field("hidden", self.model.hidden, defaults.hidden);
+                field("intermediate", self.model.intermediate, defaults.intermediate);
+                field("layers", self.model.layers, defaults.layers);
+                field("heads", self.model.heads, defaults.heads);
+                field("kv_heads", self.model.kv_heads, defaults.kv_heads);
+                field("seq_len", self.model.seq_len, defaults.seq_len);
+                field("batch", self.model.batch, defaults.batch);
+                field("vocab", self.model.vocab, defaults.vocab);
+            }
+        }
+
+        let hw = self.hw();
+        out.push_str("\n[hardware]\n");
+        out.push_str(&format!("mesh = [{}, {}]\n", hw.mesh_rows, hw.mesh_cols));
+        out.push_str(&format!("package = \"{}\"\n", hw.package.name()));
+        out.push_str(&format!("dram = \"{}\"\n", hw.dram.kind.name()));
+        let die0 = HardwareConfig::paper_die();
+        if hw.die != die0 {
+            out.push_str("\n[hardware.die]\n");
+            if hw.die.freq_hz != die0.freq_hz {
+                out.push_str(&format!("freq_mhz = {}\n", hw.die.freq_hz / 1e6));
+            }
+            if hw.die.pe_rows != die0.pe_rows {
+                out.push_str(&format!("pe_rows = {}\n", hw.die.pe_rows));
+            }
+            if hw.die.pe_cols != die0.pe_cols {
+                out.push_str(&format!("pe_cols = {}\n", hw.die.pe_cols));
+            }
+            if hw.die.lanes != die0.lanes {
+                out.push_str(&format!("lanes = {}\n", hw.die.lanes));
+            }
+            if hw.die.weight_buf != die0.weight_buf {
+                out.push_str(&format!(
+                    "weight_buf_mib = {}\n",
+                    hw.die.weight_buf.raw() / (1024.0 * 1024.0)
+                ));
+            }
+            if hw.die.act_buf != die0.act_buf {
+                out.push_str(&format!(
+                    "act_buf_mib = {}\n",
+                    hw.die.act_buf.raw() / (1024.0 * 1024.0)
+                ));
+            }
+        }
+        let link0 = crate::config::LinkConfig::for_package(hw.package);
+        if hw.link != link0 {
+            out.push_str("\n[hardware.link]\n");
+            if hw.link.bandwidth != link0.bandwidth {
+                out.push_str(&format!("bandwidth_gbs = {}\n", hw.link.bandwidth / 1e9));
+            }
+            if hw.link.latency != link0.latency {
+                out.push_str(&format!("latency_ns = {}\n", hw.link.latency.raw() * 1e9));
+            }
+            if hw.link.pj_per_bit != link0.pj_per_bit {
+                out.push_str(&format!("pj_per_bit = {}\n", hw.link.pj_per_bit));
+            }
+        }
+        let dram0 = crate::config::DramConfig::preset(hw.dram.kind);
+        if hw.dram != dram0 {
+            out.push_str("\n[hardware.dram]\n");
+            if hw.dram.channel_bandwidth != dram0.channel_bandwidth {
+                out.push_str(&format!(
+                    "channel_bandwidth_gbs = {}\n",
+                    hw.dram.channel_bandwidth / 1e9
+                ));
+            }
+            if hw.dram.pj_per_bit != dram0.pj_per_bit {
+                out.push_str(&format!("pj_per_bit = {}\n", hw.dram.pj_per_bit));
+            }
+        }
+
+        if let Some(c) = self.cluster_config() {
+            out.push_str("\n[cluster]\n");
+            out.push_str(&format!("packages = {}\n", c.packages));
+            out.push_str(&format!("dp = {}\n", c.dp));
+            out.push_str(&format!("pp = {}\n", c.pp));
+            if c.inter == InterPkgLink::preset(InterKind::Substrate) {
+                out.push_str("inter = \"substrate\"\n");
+            } else if c.inter == InterPkgLink::preset(InterKind::Optical) {
+                out.push_str("inter = \"optical\"\n");
+            } else {
+                out.push_str(&format!("inter = {}\n", c.inter.gbs()));
+            }
+        }
+
+        out.push_str("\n[options]\n");
+        out.push_str(&format!("method = \"{}\"\n", self.method.name()));
+        out.push_str(&format!("engine = \"{}\"\n", self.engine.name()));
+        out.push_str(&format!("fusion = {}\n", self.opts.fusion));
+        out.push_str(&format!("bypass_router = {}\n", self.opts.bypass_router));
+        out
+    }
+}
+
+// ───────────────────────── builder ─────────────────────────
+
+/// Validated scenario construction: subsumes the divisibility and mesh
+/// checks that used to be scattered over the CLI, the sweep grids and the
+/// cluster layer. `build()` fails with the same error messages those
+/// paths produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    model: ModelConfig,
+    mesh: Option<(usize, usize)>,
+    dies: Option<usize>,
+    hardware: Option<HardwareConfig>,
+    package: PackageKind,
+    dram: DramKind,
+    method: Method,
+    engine: EngineKind,
+    opts: PlanOptions,
+    packages: usize,
+    dp: usize,
+    pp: usize,
+    inter: InterPkgLink,
+}
+
+impl ScenarioBuilder {
+    /// Defaults: a 4×4 standard/DDR5 package, Hecaton TP, analytic
+    /// timing, every architecture feature enabled.
+    pub fn new(model: ModelConfig) -> ScenarioBuilder {
+        ScenarioBuilder {
+            model,
+            mesh: None,
+            dies: None,
+            hardware: None,
+            package: PackageKind::Standard,
+            dram: DramKind::Ddr5_6400,
+            method: Method::Hecaton,
+            engine: EngineKind::Analytic,
+            opts: PlanOptions::default(),
+            packages: 1,
+            dp: 1,
+            pp: 1,
+            inter: InterPkgLink::preset(InterKind::Substrate),
+        }
+    }
+
+    /// Start from a model preset name (case-insensitive, with a
+    /// "did you mean" suggestion on failure).
+    pub fn preset(name: &str) -> crate::Result<ScenarioBuilder> {
+        let model = model_preset(name).ok_or_else(|| {
+            anyhow!("{}", crate::util::cli::unknown_value("model", name, all_model_presets()))
+        })?;
+        Ok(ScenarioBuilder::new(model))
+    }
+
+    /// Explicit `rows × cols` die mesh.
+    pub fn mesh(mut self, rows: usize, cols: usize) -> Self {
+        self.mesh = Some((rows, cols));
+        self
+    }
+
+    /// Square package of `n` dies (must be a perfect square).
+    pub fn dies(mut self, n: usize) -> Self {
+        self.dies = Some(n);
+        self
+    }
+
+    /// Fully explicit per-package hardware (overrides mesh/dies/package/
+    /// dram knobs).
+    pub fn hardware(mut self, hw: HardwareConfig) -> Self {
+        self.hardware = Some(hw);
+        self
+    }
+
+    pub fn package(mut self, package: PackageKind) -> Self {
+        self.package = package;
+        self
+    }
+
+    pub fn dram(mut self, dram: DramKind) -> Self {
+        self.dram = dram;
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Layer fusion ablation switch (§III-B(b)).
+    pub fn fusion(mut self, on: bool) -> Self {
+        self.opts.fusion = on;
+        self
+    }
+
+    /// Bypass NoP router ablation switch (§III-A(b)).
+    pub fn bypass_router(mut self, on: bool) -> Self {
+        self.opts.bypass_router = on;
+        self
+    }
+
+    pub fn plan_options(mut self, opts: PlanOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Cluster shape: `packages` copies of the package, `dp × pp` of them.
+    pub fn cluster(mut self, packages: usize, dp: usize, pp: usize) -> Self {
+        self.packages = packages;
+        self.dp = dp;
+        self.pp = pp;
+        self
+    }
+
+    /// Inter-package fabric (only meaningful with a non-degenerate
+    /// cluster shape; validated regardless so typos never pass silently).
+    pub fn inter(mut self, inter: InterPkgLink) -> Self {
+        self.inter = inter;
+        self
+    }
+
+    /// Validate and build. The degenerate cluster shape (1 package,
+    /// dp = pp = 1) collapses to a package target, matching the CLI's
+    /// long-standing routing.
+    pub fn build(self) -> crate::Result<Scenario> {
+        if self.model.heads == 0 || self.model.hidden % self.model.heads != 0 {
+            bail!(
+                "hidden ({}) must divide by heads ({})",
+                self.model.hidden,
+                self.model.heads
+            );
+        }
+        let hw = match (self.hardware, self.mesh, self.dies) {
+            (Some(hw), _, _) => {
+                HardwareConfig::try_mesh(hw.mesh_rows, hw.mesh_cols, hw.package, hw.dram.kind)?;
+                hw
+            }
+            (None, Some((rows, cols)), _) => {
+                HardwareConfig::try_mesh(rows, cols, self.package, self.dram)?
+            }
+            (None, None, Some(n)) => HardwareConfig::try_square(n, self.package, self.dram)?,
+            (None, None, None) => HardwareConfig::try_mesh(4, 4, self.package, self.dram)?,
+        };
+        let target = if self.packages == 1 && self.dp == 1 && self.pp == 1 {
+            Target::Package(hw)
+        } else {
+            let cluster =
+                ClusterConfig::try_new(hw, self.packages, self.dp, self.pp, self.inter)?;
+            // Model-level divisibility (dp | batch, pp ≤ layers).
+            HybridSpec::plan(&self.model, &cluster)?;
+            Target::Cluster(cluster)
+        };
+        Ok(Scenario {
+            model: self.model,
+            target,
+            method: self.method,
+            engine: self.engine,
+            opts: self.opts,
+        })
+    }
+}
+
+// ───────────────────────── evaluation ─────────────────────────
+
+/// Result payload of one scenario evaluation.
+#[derive(Debug, Clone)]
+pub enum EvalDetail {
+    /// Single-package result (identical to the legacy `simulate_with`).
+    Package(SimResult),
+    /// Cluster result with per-stage detail (identical to the legacy
+    /// `simulate_cluster`).
+    Cluster(ClusterResult),
+}
+
+/// The unified result of [`evaluate`]: latency, energy and feasibility
+/// uniformly, with the full per-package breakdown always reachable via
+/// [`Evaluation::sim`] and the cluster detail (bubble, p2p, all-reduce,
+/// per-stage result) via [`Evaluation::cluster`] when packages > 1.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Global tokens per batch — the throughput denominator.
+    pub batch_tokens: u64,
+    pub detail: EvalDetail,
+}
+
+impl Evaluation {
+    /// Wall-clock for one full training batch.
+    pub fn latency(&self) -> Seconds {
+        match &self.detail {
+            EvalDetail::Package(r) => r.latency,
+            EvalDetail::Cluster(r) => r.latency,
+        }
+    }
+
+    /// Total energy for one training batch.
+    pub fn energy_total(&self) -> Energy {
+        match &self.detail {
+            EvalDetail::Package(r) => r.energy_total,
+            EvalDetail::Cluster(r) => r.energy_total,
+        }
+    }
+
+    /// Layout + SRAM feasibility of the (critical-stage) package plan.
+    pub fn feasible(&self) -> bool {
+        match &self.detail {
+            EvalDetail::Package(r) => r.feasible(),
+            EvalDetail::Cluster(r) => r.feasible(),
+        }
+    }
+
+    /// Training throughput, tokens/s.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.batch_tokens as f64 / self.latency().raw()
+    }
+
+    /// The per-package result: the whole result for a package scenario,
+    /// the critical stage's for a cluster.
+    pub fn sim(&self) -> &SimResult {
+        match &self.detail {
+            EvalDetail::Package(r) => r,
+            EvalDetail::Cluster(r) => &r.stage,
+        }
+    }
+
+    /// Cluster detail, when the scenario targeted a cluster.
+    pub fn cluster(&self) -> Option<&ClusterResult> {
+        match &self.detail {
+            EvalDetail::Package(_) => None,
+            EvalDetail::Cluster(r) => Some(r),
+        }
+    }
+
+    /// Consume into the per-package result (critical stage for clusters).
+    pub fn into_sim(self) -> SimResult {
+        match self.detail {
+            EvalDetail::Package(r) => r,
+            EvalDetail::Cluster(r) => r.stage,
+        }
+    }
+
+    /// Consume into the cluster result, when there is one.
+    pub fn into_cluster(self) -> Option<ClusterResult> {
+        match self.detail {
+            EvalDetail::Package(_) => None,
+            EvalDetail::Cluster(r) => Some(r),
+        }
+    }
+}
+
+/// Evaluate one scenario with a private plan cache — the module's
+/// headline entrypoint.
+pub fn evaluate(s: &Scenario) -> crate::Result<Evaluation> {
+    s.evaluate_on(&PlanCache::new())
+}
+
+// ───────────────────────── grid + runner ─────────────────────────
+
+/// A cross-product grid over every scenario axis: the six per-package
+/// axes (models × meshes × packages × DRAM × methods × engines) plus the
+/// cluster knobs (package counts × dp × pp × fabrics). The successor of
+/// the former `SweepGrid`/`ClusterGrid` pair: with the cluster axes at
+/// their degenerate defaults it expands exactly like the old
+/// single-package sweep (same nested order, same output); with any
+/// cluster axis set it expands like the old cluster sweep, *skipping*
+/// inconsistent shape combinations (`dp·pp ≠ packages`, `dp ∤ batch`,
+/// `pp > layers`) and counting them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioGrid {
+    pub models: Vec<ModelConfig>,
+    /// Mesh layouts as (rows, cols).
+    pub meshes: Vec<(usize, usize)>,
+    pub packages: Vec<PackageKind>,
+    pub drams: Vec<DramKind>,
+    pub methods: Vec<Method>,
+    pub engines: Vec<EngineKind>,
+    pub n_packages: Vec<usize>,
+    pub dp: Vec<usize>,
+    pub pp: Vec<usize>,
+    pub inter: Vec<InterPkgLink>,
+}
+
+impl Default for ScenarioGrid {
+    /// Empty per-package axes with *degenerate* cluster axes, so
+    /// `ScenarioGrid { models, .., ..Default::default() }` reads like the
+    /// old single-package grid literal.
+    fn default() -> ScenarioGrid {
+        ScenarioGrid {
+            models: Vec::new(),
+            meshes: Vec::new(),
+            packages: Vec::new(),
+            drams: Vec::new(),
+            methods: Vec::new(),
+            engines: Vec::new(),
+            n_packages: vec![1],
+            dp: vec![1],
+            pp: vec![1],
+            inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        }
+    }
+}
+
+impl ScenarioGrid {
+    /// Whether any cluster axis departs from the degenerate defaults —
+    /// the same routing rule the CLI has always used (a *multi-valued*
+    /// fabric list is itself a cluster axis).
+    pub fn is_cluster(&self) -> bool {
+        self.n_packages != [1] || self.dp != [1] || self.pp != [1] || self.inter.len() > 1
+    }
+
+    /// Number of raw cross-product combinations (before cluster-shape
+    /// skipping).
+    pub fn len(&self) -> usize {
+        self.models.len()
+            * self.meshes.len()
+            * self.packages.len()
+            * self.drams.len()
+            * self.methods.len()
+            * self.engines.len()
+            * self.n_packages.len()
+            * self.dp.len()
+            * self.pp.len()
+            * self.inter.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into a deterministic scenario list plus the count of
+    /// skipped (shape-inconsistent) combinations. Single-package grids
+    /// skip nothing and keep the historical nested order
+    /// (models → meshes → packages → drams → methods → engines); cluster
+    /// grids nest the fabric and shape axes between drams and methods,
+    /// exactly as the old cluster sweep did.
+    pub fn points(&self) -> crate::Result<(Vec<Scenario>, usize)> {
+        let mut out = Vec::new();
+        if !self.is_cluster() {
+            for model in &self.models {
+                for &(rows, cols) in &self.meshes {
+                    for &package in &self.packages {
+                        for &dram in &self.drams {
+                            let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                            for &method in &self.methods {
+                                for &engine in &self.engines {
+                                    out.push(Scenario::package(
+                                        model.clone(),
+                                        hw.clone(),
+                                        method,
+                                        engine,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            return Ok((out, 0));
+        }
+
+        let per_combo = self.methods.len() * self.engines.len();
+        let mut skipped = 0usize;
+        for model in &self.models {
+            for &(rows, cols) in &self.meshes {
+                for &package in &self.packages {
+                    for &dram in &self.drams {
+                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                        for inter in &self.inter {
+                            for &npkg in &self.n_packages {
+                                for &dp in &self.dp {
+                                    for &pp in &self.pp {
+                                        let Ok(cluster) = ClusterConfig::try_new(
+                                            hw.clone(),
+                                            npkg,
+                                            dp,
+                                            pp,
+                                            inter.clone(),
+                                        ) else {
+                                            skipped += per_combo;
+                                            continue;
+                                        };
+                                        if HybridSpec::plan(model, &cluster).is_err() {
+                                            skipped += per_combo;
+                                            continue;
+                                        }
+                                        for &method in &self.methods {
+                                            for &engine in &self.engines {
+                                                out.push(Scenario::cluster(
+                                                    model.clone(),
+                                                    cluster.clone(),
+                                                    method,
+                                                    engine,
+                                                ));
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok((out, skipped))
+    }
+}
+
+/// Run scenarios on the shared self-scheduling worker pool against a
+/// caller-owned plan cache. Results come back **in scenario order**,
+/// bitwise independent of `threads` (`0` = one worker per core).
+pub fn run_on(
+    cache: &PlanCache,
+    scenarios: &[Scenario],
+    threads: usize,
+) -> crate::Result<Vec<Evaluation>> {
+    parallel_map(scenarios, threads, |s| s.evaluate_on(cache))
+        .into_iter()
+        .collect()
+}
+
+/// [`run_on`] with a private cache and one worker per core.
+pub fn run_all(scenarios: &[Scenario]) -> crate::Result<Vec<Evaluation>> {
+    run_on(&PlanCache::new(), scenarios, 0)
+}
+
+/// Run *single-package* scenarios and unwrap to [`SimResult`]s — the
+/// report drivers' workhorse (their grids are package grids by
+/// construction, so evaluation cannot fail).
+pub fn run_sim(scenarios: &[Scenario]) -> Vec<SimResult> {
+    run_all(scenarios)
+        .expect("single-package scenarios are infallible")
+        .into_iter()
+        .map(Evaluation::into_sim)
+        .collect()
+}
+
+/// Latency × energy Pareto annotation of an evaluation list.
+pub fn pareto(evals: &[Evaluation]) -> Vec<bool> {
+    pareto_front(
+        &evals
+            .iter()
+            .map(|e| (e.latency().raw(), e.energy_total().raw()))
+            .collect::<Vec<_>>(),
+    )
+}
+
+// ───────────────────────── axis parsers ─────────────────────────
+
+/// Shared parsers for the scenario axes: the one place every consumer's
+/// item lists go through — CLI comma lists (`--models a,b`), TOML arrays
+/// (`models = ["a", "b"]`) — so names parse case-insensitively and fail
+/// with the same "did you mean" suggestions everywhere.
+pub mod axis {
+    use super::*;
+
+    fn unknown(what: &str, input: &str, candidates: &[&str]) -> anyhow::Error {
+        anyhow!("{}", crate::util::cli::unknown_value(what, input, candidates))
+    }
+
+    /// Model presets; a lone `all` expands to the paper's evaluation set.
+    pub fn models(items: &[&str]) -> crate::Result<Vec<ModelConfig>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return eval_models()
+                .iter()
+                .map(|n| model_preset(n).ok_or_else(|| anyhow!("unknown model '{n}'")))
+                .collect();
+        }
+        if items.is_empty() {
+            bail!("empty model list");
+        }
+        items
+            .iter()
+            .map(|n| model_preset(n).ok_or_else(|| unknown("model", n, all_model_presets())))
+            .collect()
+    }
+
+    /// One mesh item: an explicit `RxC` layout or a bare square die count.
+    pub fn mesh(item: &str) -> crate::Result<(usize, usize)> {
+        if item.contains('x') {
+            let (r, c) = item
+                .split_once('x')
+                .ok_or_else(|| anyhow!("mesh must be RxC, e.g. 4x4"))?;
+            let (r, c): (usize, usize) = (
+                r.trim()
+                    .parse()
+                    .map_err(|e| anyhow!("bad mesh '{item}': {e}"))?,
+                c.trim()
+                    .parse()
+                    .map_err(|e| anyhow!("bad mesh '{item}': {e}"))?,
+            );
+            if r == 0 || c == 0 {
+                bail!("degenerate mesh {r}x{c}: need at least 1 row and 1 column of dies");
+            }
+            Ok((r, c))
+        } else {
+            let n: usize = item.parse().map_err(|e| anyhow!("bad mesh '{item}': {e}"))?;
+            let hw = HardwareConfig::try_square(n, PackageKind::Standard, DramKind::Ddr5_6400)?;
+            Ok((hw.mesh_rows, hw.mesh_cols))
+        }
+    }
+
+    /// Meshes: `RxC` layouts and/or bare square die counts, all validated.
+    pub fn meshes(items: &[&str]) -> crate::Result<Vec<(usize, usize)>> {
+        if items.is_empty() {
+            bail!("empty mesh list");
+        }
+        items.iter().map(|i| mesh(i)).collect()
+    }
+
+    /// Packaging kinds; a lone `all` expands to both.
+    pub fn package_kinds(items: &[&str]) -> crate::Result<Vec<PackageKind>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return Ok(vec![PackageKind::Standard, PackageKind::Advanced]);
+        }
+        if items.is_empty() {
+            bail!("empty package list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                PackageKind::parse(x)
+                    .ok_or_else(|| unknown("package", x, &["standard", "advanced"]))
+            })
+            .collect()
+    }
+
+    /// DRAM generations; a lone `all` expands to all three.
+    pub fn drams(items: &[&str]) -> crate::Result<Vec<DramKind>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return Ok(vec![DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2]);
+        }
+        if items.is_empty() {
+            bail!("empty dram list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                DramKind::parse(x)
+                    .ok_or_else(|| unknown("dram", x, &["ddr4-3200", "ddr5-6400", "hbm2"]))
+            })
+            .collect()
+    }
+
+    /// TP methods; a lone `all` expands to all four.
+    pub fn methods(items: &[&str]) -> crate::Result<Vec<Method>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return Ok(Method::all().to_vec());
+        }
+        if items.is_empty() {
+            bail!("empty method list");
+        }
+        let names: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
+        items
+            .iter()
+            .map(|x| Method::parse(x).ok_or_else(|| unknown("method", x, &names)))
+            .collect()
+    }
+
+    /// Timing backends; a lone `all` expands to all three.
+    pub fn engines(items: &[&str]) -> crate::Result<Vec<EngineKind>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return Ok(EngineKind::all().to_vec());
+        }
+        if items.is_empty() {
+            bail!("empty engine list");
+        }
+        let names: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
+        items
+            .iter()
+            .map(|x| EngineKind::parse(x).ok_or_else(|| unknown("engine", x, &names)))
+            .collect()
+    }
+
+    /// Positive-integer axes (`n-packages`, `dp`, `pp`).
+    pub fn counts(items: &[&str], what: &str) -> crate::Result<Vec<usize>> {
+        if items.is_empty() {
+            bail!("empty {what} list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                let v: usize = x.parse().map_err(|e| anyhow!("bad {what} '{x}': {e}"))?;
+                if v == 0 {
+                    bail!("{what} must be >= 1");
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Inter-package fabrics: preset names or bare GB/s numbers.
+    pub fn inters(items: &[&str]) -> crate::Result<Vec<InterPkgLink>> {
+        if items.is_empty() {
+            bail!("empty inter-bw list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                InterPkgLink::parse(x).ok_or_else(|| {
+                    match crate::util::cli::suggest(x, ["substrate", "optical"]) {
+                        Some(s) => anyhow!("bad inter-bw '{x}' (did you mean '{s}'?)"),
+                        None => anyhow!("bad inter-bw '{x}' (substrate | optical | <GB/s>)"),
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+// ───────────────────────── renderers ─────────────────────────
+
+/// Whether a scenario list renders with the cluster columns: every entry
+/// is a cluster scenario (what a cluster grid produces). A mixed or
+/// all-package list gets the package columns — [`Evaluation::sim`] makes
+/// every row renderable there, so hand-built mixed lists never panic.
+fn cluster_layout(scenarios: &[Scenario]) -> bool {
+    !scenarios.is_empty() && scenarios.iter().all(Scenario::is_cluster)
+}
+
+/// Render a grid run as a table (CLI `--format table`). Dispatches on the
+/// grid kind: cluster grids get the cluster columns (bubble/p2p/
+/// all-reduce shares), package grids the classic sweep columns — both
+/// byte-identical to the pre-Scenario CLI output.
+pub fn render_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    if cluster_layout(scenarios) {
+        render_cluster_table(scenarios, evals, pareto)
+    } else {
+        render_package_table(scenarios, evals, pareto)
+    }
+}
+
+/// Render a grid run as CSV with raw SI values (CLI `--format csv`).
+pub fn render_csv(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    if cluster_layout(scenarios) {
+        render_cluster_csv(scenarios, evals, pareto)
+    } else {
+        render_package_csv(scenarios, evals, pareto)
+    }
+}
+
+/// Render a grid run as a JSON array (CLI `--format json`).
+pub fn render_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    if cluster_layout(scenarios) {
+        render_cluster_json(scenarios, evals, pareto)
+    } else {
+        render_package_json(scenarios, evals, pareto)
+    }
+}
+
+fn package_row_strings(s: &Scenario, r: &SimResult, pareto: bool) -> [String; 10] {
+    [
+        s.model.name.clone(),
+        format!("{}x{}", s.hw().mesh_rows, s.hw().mesh_cols),
+        s.hw().package.name().to_string(),
+        s.hw().dram.kind.name().to_string(),
+        s.method.name().to_string(),
+        s.engine.name().to_string(),
+        format!("{}", r.latency),
+        format!("{}", r.energy_total),
+        if r.feasible() { "yes" } else { "no" }.to_string(),
+        if pareto { "*" } else { "" }.to_string(),
+    ]
+}
+
+fn render_package_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut t = Table::new(&[
+        "model", "mesh", "package", "dram", "method", "engine", "latency", "energy", "feasible",
+        "pareto",
+    ])
+    .with_title("Sweep — * marks the latency × energy Pareto frontier")
+    .label_first();
+    for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
+        t.row(package_row_strings(s, e.sim(), on).to_vec());
+    }
+    t.render()
+}
+
+fn render_package_csv(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut out = String::from(
+        "model,mesh,package,dram,method,engine,latency_s,energy_j,feasible,pareto\n",
+    );
+    for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
+        let r = e.sim();
+        out.push_str(&format!(
+            "{},{}x{},{},{},{},{},{:e},{:e},{},{}\n",
+            csv_field(&s.model.name),
+            s.hw().mesh_rows,
+            s.hw().mesh_cols,
+            s.hw().package.name(),
+            s.hw().dram.kind.name(),
+            s.method.name(),
+            s.engine.name(),
+            r.latency.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out
+}
+
+fn render_package_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut out = String::from("[\n");
+    for (i, ((s, e), &on)) in scenarios.iter().zip(evals).zip(pareto).enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let r = e.sim();
+        out.push_str(&format!(
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"package\": \"{}\", \
+             \"dram\": \"{}\", \"method\": \"{}\", \"engine\": \"{}\", \
+             \"latency_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
+            json_escape(&s.model.name),
+            s.hw().mesh_rows,
+            s.hw().mesh_cols,
+            s.hw().package.name(),
+            s.hw().dram.kind.name(),
+            s.method.name(),
+            s.engine.name(),
+            r.latency.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+fn cluster_parts<'a>(s: &'a Scenario, e: &'a Evaluation) -> (&'a ClusterConfig, &'a ClusterResult) {
+    (
+        s.cluster_config().expect("cluster grids produce cluster scenarios"),
+        e.cluster().expect("cluster scenarios produce cluster evaluations"),
+    )
+}
+
+fn render_cluster_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut t = Table::new(&[
+        "model", "mesh", "pkgs", "dp", "pp", "inter", "package", "dram", "method", "engine",
+        "latency", "bubble", "p2p", "allreduce", "energy", "feasible", "pareto",
+    ])
+    .with_title("Cluster sweep — * marks the latency × energy Pareto frontier")
+    .label_first();
+    for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
+        let (c, r) = cluster_parts(s, e);
+        t.row(crate::table_row![
+            s.model.name.clone(),
+            format!("{}x{}", c.package_hw.mesh_rows, c.package_hw.mesh_cols),
+            r.packages,
+            r.dp,
+            r.pp,
+            format!("{:.0}GB/s", c.inter.gbs()),
+            c.package_hw.package.name(),
+            c.package_hw.dram.kind.name(),
+            s.method.name(),
+            r.engine.name(),
+            r.latency,
+            crate::util::fmt::pct(r.bubble.raw(), r.latency.raw(), 1),
+            crate::util::fmt::pct(r.p2p.raw(), r.latency.raw(), 1),
+            crate::util::fmt::pct(r.grad_allreduce.raw(), r.latency.raw(), 1),
+            r.energy_total,
+            if r.feasible() { "yes" } else { "no" },
+            if on { "*" } else { "" }
+        ]);
+    }
+    t.render()
+}
+
+fn render_cluster_csv(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut out = String::from(
+        "model,mesh,packages,dp,pp,inter_gbs,package,dram,method,engine,\
+         latency_s,bubble_s,p2p_s,allreduce_s,energy_j,feasible,pareto\n",
+    );
+    for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
+        let (c, r) = cluster_parts(s, e);
+        out.push_str(&format!(
+            "{},{}x{},{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e},{},{}\n",
+            csv_field(&s.model.name),
+            c.package_hw.mesh_rows,
+            c.package_hw.mesh_cols,
+            r.packages,
+            r.dp,
+            r.pp,
+            c.inter.gbs(),
+            c.package_hw.package.name(),
+            c.package_hw.dram.kind.name(),
+            s.method.name(),
+            r.engine.name(),
+            r.latency.raw(),
+            r.bubble.raw(),
+            r.p2p.raw(),
+            r.grad_allreduce.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out
+}
+
+fn render_cluster_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
+    let mut out = String::from("[\n");
+    for (i, ((s, e), &on)) in scenarios.iter().zip(evals).zip(pareto).enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let (c, r) = cluster_parts(s, e);
+        out.push_str(&format!(
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"packages\": {}, \"dp\": {}, \
+             \"pp\": {}, \"inter_gbs\": {}, \"package\": \"{}\", \"dram\": \"{}\", \
+             \"method\": \"{}\", \"engine\": \"{}\", \
+             \"latency_s\": {:e}, \"bubble_s\": {:e}, \"p2p_s\": {:e}, \
+             \"allreduce_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
+            json_escape(&s.model.name),
+            c.package_hw.mesh_rows,
+            c.package_hw.mesh_cols,
+            r.packages,
+            r.dp,
+            r.pp,
+            c.inter.gbs(),
+            c.package_hw.package.name(),
+            c.package_hw.dram.kind.name(),
+            s.method.name(),
+            r.engine.name(),
+            r.latency.raw(),
+            r.bubble.raw(),
+            r.p2p.raw(),
+            r.grad_allreduce.raw(),
+            r.energy_total.raw(),
+            r.feasible(),
+            on,
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::simulate_cluster;
+    use crate::sim::system::simulate_engine;
+
+    fn tiny() -> ModelConfig {
+        model_preset("tinyllama-1.1b").unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_and_knobs() {
+        let s = Scenario::builder(tiny()).build().unwrap();
+        assert!(!s.is_cluster());
+        assert_eq!((s.hw().mesh_rows, s.hw().mesh_cols), (4, 4));
+        assert_eq!(s.method, Method::Hecaton);
+        assert_eq!(s.engine, EngineKind::Analytic);
+        assert!(s.opts.fusion && s.opts.bypass_router);
+
+        let s = Scenario::builder(tiny())
+            .dies(16)
+            .package(PackageKind::Advanced)
+            .dram(DramKind::Hbm2)
+            .method(Method::FlatRing)
+            .engine(EngineKind::Event)
+            .fusion(false)
+            .build()
+            .unwrap();
+        assert_eq!(s.hw().package, PackageKind::Advanced);
+        assert_eq!(s.hw().dram.kind, DramKind::Hbm2);
+        assert_eq!(s.method, Method::FlatRing);
+        assert_eq!(s.engine, EngineKind::Event);
+        assert!(!s.opts.fusion);
+    }
+
+    /// The builder subsumes the scattered validation checks, with the
+    /// established error messages (golden-tested here).
+    #[test]
+    fn builder_validation_golden_messages() {
+        let err = |b: ScenarioBuilder| format!("{:#}", b.build().unwrap_err());
+        assert_eq!(
+            err(Scenario::builder(tiny()).dies(12)),
+            "die count 12 is not a perfect square; use an explicit RxC mesh for rectangles"
+        );
+        assert_eq!(
+            err(Scenario::builder(tiny()).mesh(0, 4)),
+            "degenerate mesh 0x4: need at least 1 row and 1 column of dies"
+        );
+        assert_eq!(
+            err(Scenario::builder(tiny()).dies(16).cluster(4, 2, 1)),
+            "cluster shape mismatch: dp 2 x pp 1 != 4 packages"
+        );
+        assert_eq!(
+            err(Scenario::builder(tiny()).dies(16).cluster(23, 1, 23)),
+            "pp 23 exceeds the 22-layer stack (tinyllama-1.1b)"
+        );
+        assert_eq!(
+            err(Scenario::builder(tiny()).dies(16).cluster(3, 3, 1)),
+            "dp 3 does not divide the global batch 1024 (tinyllama-1.1b)"
+        );
+        let mut bad = tiny();
+        bad.heads = 7;
+        assert_eq!(
+            err(Scenario::builder(bad)),
+            "hidden (2048) must divide by heads (7)"
+        );
+        // Preset typos come back with a suggestion.
+        let e = format!("{:#}", ScenarioBuilder::preset("tinyllama").unwrap_err());
+        assert!(e.contains("did you mean 'tinyllama-1.1b'"), "{e}");
+    }
+
+    #[test]
+    fn degenerate_cluster_shape_collapses_to_package() {
+        let s = Scenario::builder(tiny()).dies(16).cluster(1, 1, 1).build().unwrap();
+        assert!(!s.is_cluster());
+        let s = Scenario::builder(tiny()).dies(16).cluster(4, 2, 2).build().unwrap();
+        assert!(s.is_cluster());
+        assert_eq!(s.cluster_config().unwrap().packages, 4);
+    }
+
+    /// Scenario evaluation is bitwise identical to the legacy entrypoints
+    /// — the refactor's anchor invariant.
+    #[test]
+    fn evaluate_matches_legacy_paths_bitwise() {
+        let m = tiny();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        for method in Method::all() {
+            for engine in EngineKind::all() {
+                let s = Scenario::package(m.clone(), hw.clone(), method, engine);
+                let e = evaluate(&s).unwrap();
+                let direct = simulate_engine(&m, &hw, method, engine);
+                assert_eq!(
+                    e.latency().raw().to_bits(),
+                    direct.latency.raw().to_bits(),
+                    "{method:?}/{engine:?}"
+                );
+                assert_eq!(
+                    e.energy_total().raw().to_bits(),
+                    direct.energy_total.raw().to_bits()
+                );
+                assert_eq!(e.sim().breakdown, direct.breakdown);
+                assert!(e.cluster().is_none());
+                assert_eq!(e.tokens_per_sec(), direct.tokens_per_sec(&m));
+            }
+        }
+
+        let cluster = ClusterConfig::try_new(
+            hw.clone(),
+            4,
+            2,
+            2,
+            InterPkgLink::preset(InterKind::Substrate),
+        )
+        .unwrap();
+        let s = Scenario::cluster(m.clone(), cluster.clone(), Method::Hecaton, EngineKind::Event);
+        let e = evaluate(&s).unwrap();
+        let direct = simulate_cluster(&m, &cluster, Method::Hecaton, EngineKind::Event).unwrap();
+        assert_eq!(e.latency().raw().to_bits(), direct.latency.raw().to_bits());
+        assert_eq!(
+            e.energy_total().raw().to_bits(),
+            direct.energy_total.raw().to_bits()
+        );
+        let detail = e.cluster().expect("cluster detail");
+        assert_eq!((detail.packages, detail.dp, detail.pp), (4, 2, 2));
+    }
+
+    #[test]
+    fn grid_expands_in_deterministic_order() {
+        let g = ScenarioGrid {
+            models: vec![tiny()],
+            meshes: vec![(4, 4), (2, 8)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            methods: Method::all().to_vec(),
+            engines: vec![EngineKind::Analytic],
+            ..Default::default()
+        };
+        assert!(!g.is_cluster());
+        let (pts, skipped) = g.points().unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(pts.len(), g.len());
+        assert_eq!(pts.len(), 2 * 4);
+        // meshes outer, methods inner.
+        assert_eq!((pts[0].hw().mesh_rows, pts[0].hw().mesh_cols), (4, 4));
+        assert_eq!(pts[0].method, Method::all()[0]);
+        assert_eq!(pts[3].method, Method::all()[3]);
+        assert_eq!((pts[4].hw().mesh_rows, pts[4].hw().mesh_cols), (2, 8));
+        // Expansion is reproducible.
+        let (again, _) = g.points().unwrap();
+        assert_eq!(pts, again);
+        // Degenerate meshes are rejected at expansion time.
+        let mut bad = g.clone();
+        bad.meshes.push((0, 4));
+        assert!(bad.points().is_err());
+    }
+
+    #[test]
+    fn cluster_grid_skips_inconsistent_combos() {
+        let g = ScenarioGrid {
+            models: vec![tiny()],
+            meshes: vec![(4, 4)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            methods: vec![Method::Hecaton],
+            engines: vec![EngineKind::Analytic],
+            n_packages: vec![4],
+            dp: vec![1, 2, 4],
+            pp: vec![1, 2, 4],
+            inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        };
+        assert!(g.is_cluster());
+        let (pts, skipped) = g.points().unwrap();
+        // Valid shapes with 4 packages: (1,4), (2,2), (4,1) — 9 combos total.
+        assert_eq!(pts.len(), 3);
+        assert_eq!(skipped, 6);
+        assert!(pts.iter().all(Scenario::is_cluster));
+        let evals = run_all(&pts).unwrap();
+        assert_eq!(evals.len(), 3);
+        let table = render_table(&pts, &evals, &[false; 3]);
+        assert!(table.contains("tinyllama-1.1b"));
+        assert!(table.contains("bubble"));
+        let csv = render_csv(&pts, &evals, &[false; 3]);
+        assert_eq!(csv.lines().count(), 4);
+        let json = render_json(&pts, &evals, &[true; 3]);
+        assert_eq!(json.matches("\"model\"").count(), 3);
+    }
+
+    #[test]
+    fn package_renderers_cover_all_rows() {
+        let g = ScenarioGrid {
+            models: vec![tiny()],
+            meshes: vec![(4, 4), (2, 8)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            methods: Method::all().to_vec(),
+            engines: vec![EngineKind::Analytic],
+            ..Default::default()
+        };
+        let (pts, _) = g.points().unwrap();
+        let evals = run_all(&pts).unwrap();
+        let front = pareto(&evals);
+        let table = render_table(&pts, &evals, &front);
+        assert!(table.contains("Pareto"));
+        assert!(table.contains("tinyllama-1.1b"));
+        let csv = render_csv(&pts, &evals, &front);
+        assert_eq!(csv.lines().count(), pts.len() + 1, "header + one line per point");
+        assert!(csv.starts_with("model,mesh,"));
+        let json = render_json(&pts, &evals, &front);
+        assert!(json.trim_start().starts_with('['));
+        assert_eq!(json.matches("\"model\"").count(), pts.len());
+        assert!(front.iter().any(|&b| b));
+    }
+
+    #[test]
+    fn run_on_shares_the_plan_cache_across_engines() {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let pts: Vec<Scenario> = EngineKind::all()
+            .into_iter()
+            .map(|e| Scenario::package(tiny(), hw.clone(), Method::Hecaton, e))
+            .collect();
+        let cache = PlanCache::new();
+        let evals = run_on(&cache, &pts, 1).unwrap();
+        assert_eq!(evals.len(), 3);
+        assert_eq!(cache.len(), 1, "three engines share one plan");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn axis_parsers_match_legacy_semantics() {
+        assert_eq!(axis::models(&["all"]).unwrap().len(), eval_models().len());
+        assert_eq!(axis::models(&["tinyllama-1.1b", "llama2-7b"]).unwrap().len(), 2);
+        assert!(axis::models(&["nope"]).is_err());
+        assert!(axis::models(&[]).is_err());
+        assert_eq!(
+            axis::meshes(&["4x4", "16", "2x8"]).unwrap(),
+            vec![(4, 4), (4, 4), (2, 8)]
+        );
+        assert!(axis::meshes(&["0x4"]).is_err());
+        assert!(axis::meshes(&["12"]).is_err());
+        assert_eq!(axis::package_kinds(&["all"]).unwrap().len(), 2);
+        assert_eq!(axis::drams(&["all"]).unwrap().len(), 3);
+        assert_eq!(axis::methods(&["all"]).unwrap().len(), 4);
+        assert_eq!(axis::engines(&["event", "analytic"]).unwrap().len(), 2);
+        assert!(axis::engines(&["warp-drive"]).is_err());
+        assert_eq!(axis::counts(&["1", "2", "4"], "dp").unwrap(), vec![1, 2, 4]);
+        assert!(axis::counts(&["0"], "dp").is_err());
+        assert!(axis::counts(&["x"], "dp").is_err());
+        assert!(axis::counts(&[], "dp").is_err());
+        let inter = axis::inters(&["substrate", "optical", "128"]).unwrap();
+        assert_eq!(inter.len(), 3);
+        assert!((inter[2].bandwidth - 128.0e9).abs() < 1.0);
+        assert!(axis::inters(&["warp"]).is_err());
+    }
+
+    /// Case-insensitivity plus "did you mean" on every name axis.
+    #[test]
+    fn axis_parsers_suggest_on_typos() {
+        let e = format!("{:#}", axis::methods(&["hecatn"]).unwrap_err());
+        assert!(e.contains("did you mean 'hecaton'"), "{e}");
+        let e = format!("{:#}", axis::engines(&["evnt"]).unwrap_err());
+        assert!(e.contains("did you mean 'event'"), "{e}");
+        let e = format!("{:#}", axis::drams(&["ddr5-640"]).unwrap_err());
+        assert!(e.contains("did you mean 'ddr5-6400'"), "{e}");
+        let e = format!("{:#}", axis::drams(&["sram"]).unwrap_err());
+        assert!(e.contains("expected one of"), "{e}");
+        // Case-insensitive successes.
+        assert_eq!(axis::methods(&["HECATON"]).unwrap(), vec![Method::Hecaton]);
+        assert_eq!(
+            axis::engines(&["Event-Prefetch"]).unwrap(),
+            vec![EngineKind::EventPrefetch]
+        );
+        assert_eq!(
+            axis::package_kinds(&["ADVANCED"]).unwrap(),
+            vec![PackageKind::Advanced]
+        );
+    }
+
+    #[test]
+    fn to_toml_emits_expected_sections() {
+        let s = Scenario::builder(tiny())
+            .dies(16)
+            .cluster(4, 2, 2)
+            .engine(EngineKind::Event)
+            .build()
+            .unwrap();
+        let toml = s.to_toml();
+        assert!(toml.contains("[model]"));
+        assert!(toml.contains("preset = \"tinyllama-1.1b\""));
+        assert!(toml.contains("[hardware]"));
+        assert!(toml.contains("mesh = [4, 4]"));
+        assert!(toml.contains("[cluster]"));
+        assert!(toml.contains("packages = 4"));
+        assert!(toml.contains("inter = \"substrate\""));
+        assert!(toml.contains("[options]"));
+        assert!(toml.contains("engine = \"event\""));
+        // Package scenarios carry no [cluster] section.
+        let p = Scenario::builder(tiny()).dies(16).build().unwrap();
+        assert!(!p.to_toml().contains("[cluster]"));
+    }
+}

@@ -24,15 +24,14 @@
 
 use std::sync::Arc;
 
-use crate::config::cluster::{ClusterConfig, InterPkgLink};
-use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::config::cluster::ClusterConfig;
+use crate::config::ModelConfig;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::nop::analytic::Method;
 use crate::parallel::hybrid::HybridSpec;
 use crate::sched::onef1b::{onef1b_analytic, onef1b_event, Fabric, PipelineStage};
-use crate::sim::sweep::{csv_field, json_escape, parallel_map, PlanCache};
+use crate::sim::sweep::PlanCache;
 use crate::sim::system::{EngineKind, PlanOptions, SimPlan, SimResult};
-use crate::util::table::Table;
 use crate::util::{Bytes, Energy, Seconds};
 
 /// Cap on 1F1B microbatches simulated per cluster batch. Deeper plans are
@@ -319,227 +318,12 @@ pub fn simulate_cluster(
     Ok(ClusterPlan::build(model, cluster, method, PlanOptions::default(), &cache)?.time(engine))
 }
 
-// ───────────────────────── cluster sweep ─────────────────────────
-
-/// One point of a cluster sweep: a fully-specified cluster simulation.
-#[derive(Debug, Clone)]
-pub struct ClusterPoint {
-    pub model: ModelConfig,
-    pub cluster: ClusterConfig,
-    pub method: Method,
-    pub engine: EngineKind,
-}
-
-/// The cluster cross-product grid: the per-package axes of
-/// [`crate::sim::sweep::SweepGrid`] extended with the cluster knobs
-/// (`--n-packages/--dp/--pp/--inter-bw` in the CLI).
-#[derive(Debug, Clone, Default)]
-pub struct ClusterGrid {
-    pub models: Vec<ModelConfig>,
-    pub meshes: Vec<(usize, usize)>,
-    pub packages: Vec<PackageKind>,
-    pub drams: Vec<DramKind>,
-    pub methods: Vec<Method>,
-    pub engines: Vec<EngineKind>,
-    pub n_packages: Vec<usize>,
-    pub dp: Vec<usize>,
-    pub pp: Vec<usize>,
-    pub inter: Vec<InterPkgLink>,
-}
-
-impl ClusterGrid {
-    /// Expand into a deterministic point list. Cross-product combinations
-    /// whose shape is inconsistent (`dp·pp ≠ packages`) or that the model
-    /// cannot satisfy (`dp ∤ batch`, `pp > layers`) are *skipped* (the
-    /// second return value counts them) — a grid like
-    /// `--n-packages 4 --dp 1,2,4 --pp 1,2,4` naturally contains both. An
-    /// entirely-skipped grid is the caller's error to surface.
-    pub fn points(&self) -> crate::Result<(Vec<ClusterPoint>, usize)> {
-        let per_combo = self.methods.len() * self.engines.len();
-        let mut out = Vec::new();
-        let mut skipped = 0usize;
-        for model in &self.models {
-            for &(rows, cols) in &self.meshes {
-                for &package in &self.packages {
-                    for &dram in &self.drams {
-                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
-                        for inter in &self.inter {
-                            for &npkg in &self.n_packages {
-                                for &dp in &self.dp {
-                                    for &pp in &self.pp {
-                                        let Ok(cluster) = ClusterConfig::try_new(
-                                            hw.clone(),
-                                            npkg,
-                                            dp,
-                                            pp,
-                                            inter.clone(),
-                                        ) else {
-                                            skipped += per_combo;
-                                            continue;
-                                        };
-                                        if HybridSpec::plan(model, &cluster).is_err() {
-                                            skipped += per_combo;
-                                            continue;
-                                        }
-                                        for &method in &self.methods {
-                                            for &engine in &self.engines {
-                                                out.push(ClusterPoint {
-                                                    model: model.clone(),
-                                                    cluster: cluster.clone(),
-                                                    method,
-                                                    engine,
-                                                });
-                                            }
-                                        }
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        Ok((out, skipped))
-    }
-}
-
-/// Run a cluster point list on the sweep worker pool (results in point
-/// order, bitwise independent of `threads`). Points from
-/// [`ClusterGrid::points`] are pre-validated; a hand-built point with an
-/// unsatisfiable shape surfaces as an `Err`, not a worker panic.
-pub fn run_cluster_points(
-    cache: &PlanCache,
-    points: &[ClusterPoint],
-    threads: usize,
-) -> crate::Result<Vec<ClusterResult>> {
-    parallel_map(points, threads, |p| {
-        ClusterPlan::build(&p.model, &p.cluster, p.method, PlanOptions::default(), cache)
-            .map(|plan| plan.time(p.engine))
-    })
-    .into_iter()
-    .collect()
-}
-
-// ───────────────────────── renderers ─────────────────────────
-
-/// Render cluster sweep results as a table (CLI `--format table`).
-pub fn render_cluster_table(
-    points: &[ClusterPoint],
-    results: &[ClusterResult],
-    pareto: &[bool],
-) -> String {
-    let mut t = Table::new(&[
-        "model", "mesh", "pkgs", "dp", "pp", "inter", "package", "dram", "method", "engine",
-        "latency", "bubble", "p2p", "allreduce", "energy", "feasible", "pareto",
-    ])
-    .with_title("Cluster sweep — * marks the latency × energy Pareto frontier")
-    .label_first();
-    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
-        t.row(crate::table_row![
-            p.model.name.clone(),
-            format!("{}x{}", p.cluster.package_hw.mesh_rows, p.cluster.package_hw.mesh_cols),
-            r.packages,
-            r.dp,
-            r.pp,
-            format!("{:.0}GB/s", p.cluster.inter.gbs()),
-            p.cluster.package_hw.package.name(),
-            p.cluster.package_hw.dram.kind.name(),
-            p.method.name(),
-            r.engine.name(),
-            r.latency,
-            crate::util::fmt::pct(r.bubble.raw(), r.latency.raw(), 1),
-            crate::util::fmt::pct(r.p2p.raw(), r.latency.raw(), 1),
-            crate::util::fmt::pct(r.grad_allreduce.raw(), r.latency.raw(), 1),
-            r.energy_total,
-            if r.feasible() { "yes" } else { "no" },
-            if on { "*" } else { "" }
-        ]);
-    }
-    t.render()
-}
-
-/// Render cluster sweep results as CSV with raw SI values.
-pub fn render_cluster_csv(
-    points: &[ClusterPoint],
-    results: &[ClusterResult],
-    pareto: &[bool],
-) -> String {
-    let mut out = String::from(
-        "model,mesh,packages,dp,pp,inter_gbs,package,dram,method,engine,\
-         latency_s,bubble_s,p2p_s,allreduce_s,energy_j,feasible,pareto\n",
-    );
-    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
-        out.push_str(&format!(
-            "{},{}x{},{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e},{},{}\n",
-            csv_field(&p.model.name),
-            p.cluster.package_hw.mesh_rows,
-            p.cluster.package_hw.mesh_cols,
-            r.packages,
-            r.dp,
-            r.pp,
-            p.cluster.inter.gbs(),
-            p.cluster.package_hw.package.name(),
-            p.cluster.package_hw.dram.kind.name(),
-            p.method.name(),
-            r.engine.name(),
-            r.latency.raw(),
-            r.bubble.raw(),
-            r.p2p.raw(),
-            r.grad_allreduce.raw(),
-            r.energy_total.raw(),
-            r.feasible(),
-            on,
-        ));
-    }
-    out
-}
-
-/// Render cluster sweep results as a JSON array.
-pub fn render_cluster_json(
-    points: &[ClusterPoint],
-    results: &[ClusterResult],
-    pareto: &[bool],
-) -> String {
-    let mut out = String::from("[\n");
-    for (i, ((p, r), &on)) in points.iter().zip(results).zip(pareto).enumerate() {
-        if i > 0 {
-            out.push_str(",\n");
-        }
-        out.push_str(&format!(
-            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"packages\": {}, \"dp\": {}, \
-             \"pp\": {}, \"inter_gbs\": {}, \"package\": \"{}\", \"dram\": \"{}\", \
-             \"method\": \"{}\", \"engine\": \"{}\", \
-             \"latency_s\": {:e}, \"bubble_s\": {:e}, \"p2p_s\": {:e}, \
-             \"allreduce_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
-            json_escape(&p.model.name),
-            p.cluster.package_hw.mesh_rows,
-            p.cluster.package_hw.mesh_cols,
-            r.packages,
-            r.dp,
-            r.pp,
-            p.cluster.inter.gbs(),
-            p.cluster.package_hw.package.name(),
-            p.cluster.package_hw.dram.kind.name(),
-            p.method.name(),
-            r.engine.name(),
-            r.latency.raw(),
-            r.bubble.raw(),
-            r.p2p.raw(),
-            r.grad_allreduce.raw(),
-            r.energy_total.raw(),
-            r.feasible(),
-            on,
-        ));
-    }
-    out.push_str("\n]\n");
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::cluster::{cluster_preset, InterKind};
+    use crate::config::cluster::{cluster_preset, InterKind, InterPkgLink};
     use crate::config::presets::model_preset;
+    use crate::config::{DramKind, HardwareConfig, PackageKind};
 
     fn tiny_cluster() -> (ModelConfig, ClusterConfig) {
         cluster_preset("tiny-cluster").unwrap()
@@ -616,34 +400,6 @@ mod tests {
             r11.bubble,
             r2.bubble
         );
-    }
-
-    #[test]
-    fn grid_skips_inconsistent_combos() {
-        let g = ClusterGrid {
-            models: vec![model_preset("tinyllama-1.1b").unwrap()],
-            meshes: vec![(4, 4)],
-            packages: vec![PackageKind::Standard],
-            drams: vec![DramKind::Ddr5_6400],
-            methods: vec![Method::Hecaton],
-            engines: vec![EngineKind::Analytic],
-            n_packages: vec![4],
-            dp: vec![1, 2, 4],
-            pp: vec![1, 2, 4],
-            inter: vec![InterPkgLink::preset(InterKind::Substrate)],
-        };
-        let (pts, skipped) = g.points().unwrap();
-        // Valid shapes with 4 packages: (1,4), (2,2), (4,1) — 9 combos total.
-        assert_eq!(pts.len(), 3);
-        assert_eq!(skipped, 6);
-        let results = run_cluster_points(&PlanCache::new(), &pts, 2).unwrap();
-        assert_eq!(results.len(), 3);
-        let table = render_cluster_table(&pts, &results, &[false; 3]);
-        assert!(table.contains("tinyllama-1.1b"));
-        let csv = render_cluster_csv(&pts, &results, &[false; 3]);
-        assert_eq!(csv.lines().count(), 4);
-        let json = render_cluster_json(&pts, &results, &[true; 3]);
-        assert_eq!(json.matches("\"model\"").count(), 3);
     }
 
     /// A slow fabric congests the event DAG beyond the analytic closed

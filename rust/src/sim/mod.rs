@@ -18,6 +18,12 @@
 //! sub-plans (priced once via the plan cache) compose with the 1F1B
 //! pipeline schedule and DP gradient all-reduce over the shared
 //! inter-package fabric.
+//!
+//! The public entrypoint over all of this is the **Scenario API**
+//! ([`crate::scenario`]): one declarative [`crate::scenario::Scenario`]
+//! value covering single-package and cluster targets, a unified
+//! [`crate::scenario::evaluate`], and a [`crate::scenario::ScenarioGrid`]
+//! replacing the former `SweepGrid`/`ClusterGrid` pair.
 
 pub mod cluster;
 pub mod engine;
@@ -25,12 +31,10 @@ pub mod sweep;
 pub mod system;
 pub mod weak_scaling;
 
-pub use cluster::{
-    run_cluster_points, simulate_cluster, ClusterGrid, ClusterPlan, ClusterPoint, ClusterResult,
-};
+pub use cluster::{simulate_cluster, ClusterPlan, ClusterResult};
 pub use engine::{EventEngine, RunResult, Service, Sharing};
 pub use sweep::{
-    parallel_map, pareto_front, run_points, run_points_threads, PlanCache, SweepGrid, SweepPoint,
+    parallel_map, pareto_front, run_points, run_points_threads, PlanCache, SweepPoint,
 };
 pub use system::{
     simulate, simulate_engine, simulate_with, EngineKind, LatencyBreakdown, PlanOptions, SimPlan,

@@ -1,23 +1,24 @@
-//! Parallel design-space sweeps with memoized planning.
+//! The sweep engine room: memoized planning plus the parallel runner.
 //!
-//! Every report driver (`fig8`…`congestion`) and the `hecaton sweep` CLI
-//! runs a grid of simulations; this module makes that grid a first-class
-//! workload:
+//! The public grid API lives in [`crate::scenario`] ([`ScenarioGrid`] and
+//! its renderers); this module provides the machinery underneath it:
 //!
-//! * [`SweepGrid`] — a cross-product descriptor
-//!   (models × meshes × packages × DRAM × methods × engines) expanded into
-//!   a deterministically-ordered point list;
-//! * [`run_points`] — a chunked self-scheduling thread pool
-//!   (std::thread + channels, no external deps) that executes any point
-//!   list in parallel. Results are returned **in point order**, so
-//!   parallel output is byte-identical to serial execution and independent
-//!   of the thread count;
 //! * [`PlanCache`] — a memoized [`SimPlan`] store keyed by
 //!   (model, hw, method, plan options): the plan + price phases run once
 //!   per distinct point and are shared across all [`EngineKind`] backends
-//!   and worker threads;
-//! * [`pareto_front`] — latency × energy Pareto annotation for sweep
-//!   output, plus table/CSV/JSON renderers used by the CLI.
+//!   and worker threads (and across cluster stage sub-plans);
+//! * [`parallel_map`] — a chunked self-scheduling thread pool
+//!   (std::thread + channels, no external deps) that executes any item
+//!   list in parallel. Results are returned **in item order**, so
+//!   parallel output is byte-identical to serial execution and independent
+//!   of the thread count;
+//! * [`SweepPoint`] / [`run_points`] — the typed single-package execution
+//!   unit kept for benches and low-level callers; the scenario layer's
+//!   package path is exactly `cache.plan(..).time(engine)` too, so the
+//!   two stay bitwise interchangeable;
+//! * [`pareto_front`] — latency × energy Pareto annotation.
+//!
+//! [`ScenarioGrid`]: crate::scenario::ScenarioGrid
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -26,7 +27,6 @@ use std::sync::{mpsc, Arc, Mutex};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::nop::analytic::Method;
 use crate::sim::system::{EngineKind, PlanOptions, SimOptions, SimPlan, SimResult};
-use crate::util::table::Table;
 
 /// One point of a sweep: a fully-specified simulation.
 #[derive(Debug, Clone)]
@@ -70,64 +70,6 @@ impl SweepPoint {
             method,
             opts,
         }
-    }
-}
-
-/// A cross-product scenario grid. `points()` expands it in a fixed nested
-/// order (models → meshes → packages → drams → methods → engines), which
-/// both defines the output ordering and keeps consecutive points sharing
-/// a plan-cache key next to each other.
-#[derive(Debug, Clone, Default)]
-pub struct SweepGrid {
-    pub models: Vec<ModelConfig>,
-    /// Mesh layouts as (rows, cols).
-    pub meshes: Vec<(usize, usize)>,
-    pub packages: Vec<crate::config::PackageKind>,
-    pub drams: Vec<crate::config::DramKind>,
-    pub methods: Vec<Method>,
-    pub engines: Vec<EngineKind>,
-}
-
-impl SweepGrid {
-    /// Expand the cross product into a deterministic point list.
-    /// Degenerate meshes (zero rows or columns) are rejected here, so a
-    /// grid built programmatically gets the same validation as the CLI.
-    pub fn points(&self) -> crate::Result<Vec<SweepPoint>> {
-        let mut out = Vec::new();
-        for model in &self.models {
-            for &(rows, cols) in &self.meshes {
-                for &package in &self.packages {
-                    for &dram in &self.drams {
-                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
-                        for &method in &self.methods {
-                            for &engine in &self.engines {
-                                out.push(SweepPoint::new(
-                                    model.clone(),
-                                    hw.clone(),
-                                    method,
-                                    engine,
-                                ));
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Number of points the grid expands to.
-    pub fn len(&self) -> usize {
-        self.models.len()
-            * self.meshes.len()
-            * self.packages.len()
-            * self.drams.len()
-            * self.methods.len()
-            * self.engines.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 
@@ -409,7 +351,7 @@ where
         .collect()
 }
 
-// ───────────────────────── pareto + renderers ─────────────────────────
+// ───────────────────────── pareto + shared escaping ─────────────────────────
 
 /// Mark the Pareto frontier of a (latency, energy) point set: `true` for
 /// every point not dominated by another (dominated = some other point is
@@ -425,38 +367,9 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
         .collect()
 }
 
-fn row_strings(p: &SweepPoint, r: &SimResult, pareto: bool) -> [String; 10] {
-    [
-        p.model.name.clone(),
-        format!("{}x{}", p.hw.mesh_rows, p.hw.mesh_cols),
-        p.hw.package.name().to_string(),
-        p.hw.dram.kind.name().to_string(),
-        p.method.name().to_string(),
-        p.opts.engine.name().to_string(),
-        format!("{}", r.latency),
-        format!("{}", r.energy_total),
-        if r.feasible() { "yes" } else { "no" }.to_string(),
-        if pareto { "*" } else { "" }.to_string(),
-    ]
-}
-
-/// Render sweep results as a paper-style table (CLI `--format table`).
-pub fn render_table(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
-    let mut t = Table::new(&[
-        "model", "mesh", "package", "dram", "method", "engine", "latency", "energy", "feasible",
-        "pareto",
-    ])
-    .with_title("Sweep — * marks the latency × energy Pareto frontier")
-    .label_first();
-    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
-        t.row(row_strings(p, r, on).to_vec());
-    }
-    t.render()
-}
-
 /// CSV field quoting for the one free-form column (model names are
-/// usually preset identifiers, but `SweepGrid.models` is public API).
-/// Shared with the cluster renderers ([`crate::sim::cluster`]).
+/// usually preset identifiers, but grid model lists are public API).
+/// Shared with the scenario renderers ([`crate::scenario`]).
 pub(crate) fn csv_field(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
@@ -466,61 +379,9 @@ pub(crate) fn csv_field(s: &str) -> String {
 }
 
 /// Minimal JSON string escaping for the free-form model-name column.
-/// Shared with the cluster renderers ([`crate::sim::cluster`]).
+/// Shared with the scenario renderers ([`crate::scenario`]).
 pub(crate) fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
-/// Render sweep results as CSV with raw SI values (CLI `--format csv`).
-pub fn render_csv(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
-    let mut out = String::from(
-        "model,mesh,package,dram,method,engine,latency_s,energy_j,feasible,pareto\n",
-    );
-    for ((p, r), &on) in points.iter().zip(results).zip(pareto) {
-        out.push_str(&format!(
-            "{},{}x{},{},{},{},{},{:e},{:e},{},{}\n",
-            csv_field(&p.model.name),
-            p.hw.mesh_rows,
-            p.hw.mesh_cols,
-            p.hw.package.name(),
-            p.hw.dram.kind.name(),
-            p.method.name(),
-            p.opts.engine.name(),
-            r.latency.raw(),
-            r.energy_total.raw(),
-            r.feasible(),
-            on,
-        ));
-    }
-    out
-}
-
-/// Render sweep results as a JSON array (CLI `--format json`).
-pub fn render_json(points: &[SweepPoint], results: &[SimResult], pareto: &[bool]) -> String {
-    let mut out = String::from("[\n");
-    for (i, ((p, r), &on)) in points.iter().zip(results).zip(pareto).enumerate() {
-        if i > 0 {
-            out.push_str(",\n");
-        }
-        out.push_str(&format!(
-            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"package\": \"{}\", \
-             \"dram\": \"{}\", \"method\": \"{}\", \"engine\": \"{}\", \
-             \"latency_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
-            json_escape(&p.model.name),
-            p.hw.mesh_rows,
-            p.hw.mesh_cols,
-            p.hw.package.name(),
-            p.hw.dram.kind.name(),
-            p.method.name(),
-            p.opts.engine.name(),
-            r.latency.raw(),
-            r.energy_total.raw(),
-            r.feasible(),
-            on,
-        ));
-    }
-    out.push_str("\n]\n");
-    out
 }
 
 #[cfg(test)]
@@ -530,44 +391,24 @@ mod tests {
     use crate::config::{DramKind, PackageKind};
     use crate::sim::system::simulate_engine;
 
-    fn small_grid() -> SweepGrid {
-        SweepGrid {
-            models: vec![model_preset("tinyllama-1.1b").unwrap()],
-            meshes: vec![(4, 4), (2, 8)],
-            packages: vec![PackageKind::Standard],
-            drams: vec![DramKind::Ddr5_6400],
-            methods: Method::all().to_vec(),
-            engines: vec![EngineKind::Analytic],
+    /// The old small test grid, expanded by hand (the grid API now lives
+    /// in [`crate::scenario::ScenarioGrid`]): 2 meshes × 4 methods.
+    fn small_points() -> Vec<SweepPoint> {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let mut pts = Vec::new();
+        for (rows, cols) in [(4usize, 4usize), (2, 8)] {
+            let hw =
+                HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
+            for method in Method::all() {
+                pts.push(SweepPoint::new(m.clone(), hw.clone(), method, EngineKind::Analytic));
+            }
         }
-    }
-
-    #[test]
-    fn grid_expands_in_deterministic_order() {
-        let g = small_grid();
-        let pts = g.points().unwrap();
-        assert_eq!(pts.len(), g.len());
-        assert_eq!(pts.len(), 2 * 4);
-        // meshes outer, methods inner.
-        assert_eq!((pts[0].hw.mesh_rows, pts[0].hw.mesh_cols), (4, 4));
-        assert_eq!(pts[0].method, Method::all()[0]);
-        assert_eq!(pts[3].method, Method::all()[3]);
-        assert_eq!((pts[4].hw.mesh_rows, pts[4].hw.mesh_cols), (2, 8));
-        // Expansion is reproducible.
-        let again = g.points().unwrap();
-        for (a, b) in pts.iter().zip(&again) {
-            assert_eq!(a.model.name, b.model.name);
-            assert_eq!(a.method, b.method);
-            assert_eq!(a.hw, b.hw);
-        }
-        // Degenerate meshes are rejected at expansion time.
-        let mut bad = small_grid();
-        bad.meshes.push((0, 4));
-        assert!(bad.points().is_err());
+        pts
     }
 
     #[test]
     fn runner_matches_direct_simulation() {
-        let pts = small_grid().points().unwrap();
+        let pts = small_points();
         let results = run_points_threads(&pts, 2);
         assert_eq!(results.len(), pts.len());
         for (p, r) in pts.iter().zip(&results) {
@@ -646,25 +487,10 @@ mod tests {
     }
 
     #[test]
-    fn renderers_cover_all_rows() {
-        let pts = small_grid().points().unwrap();
-        let results = run_points_threads(&pts, 2);
-        let front = pareto_front(
-            &results
-                .iter()
-                .map(|r| (r.latency.raw(), r.energy_total.raw()))
-                .collect::<Vec<_>>(),
-        );
-        let table = render_table(&pts, &results, &front);
-        assert!(table.contains("Pareto"));
-        assert!(table.contains("tinyllama-1.1b"));
-        let csv = render_csv(&pts, &results, &front);
-        assert_eq!(csv.lines().count(), pts.len() + 1, "header + one line per point");
-        assert!(csv.starts_with("model,mesh,"));
-        let json = render_json(&pts, &results, &front);
-        assert!(json.trim_start().starts_with('['));
-        assert_eq!(json.matches("\"model\"").count(), pts.len());
-        // At least one sweep row sits on the frontier.
-        assert!(front.iter().any(|&b| b));
+    fn escaping_helpers_quote_free_form_fields() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }
 }

@@ -470,13 +470,27 @@ pub fn simulate_engine(
 }
 
 /// [`simulate`] with ablation switches: plan + price once, then time.
+///
+/// Since the Scenario refactor this (like every `simulate*` free
+/// function) is a thin wrapper over [`crate::scenario::evaluate`] — the
+/// one entrypoint all consumers share — and stays bitwise identical to
+/// the direct `SimPlan::build(..).time(engine)` composition.
 pub fn simulate_with(
     model: &ModelConfig,
     hw: &HardwareConfig,
     method: Method,
     opts: SimOptions,
 ) -> SimResult {
-    SimPlan::build(model, hw, method, opts.plan_opts()).time(opts.engine)
+    crate::scenario::Scenario::package_with(
+        model.clone(),
+        hw.clone(),
+        method,
+        opts.engine,
+        opts.plan_opts(),
+    )
+    .evaluate()
+    .expect("single-package evaluation is infallible")
+    .into_sim()
 }
 
 #[cfg(test)]

@@ -7,7 +7,7 @@
 use crate::config::hardware::{DramKind, PackageKind};
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::nop::analytic::Method;
-use crate::sim::sweep::{run_points, SweepPoint};
+use crate::scenario::{self, Scenario};
 use crate::sim::system::{EngineKind, SimResult};
 use crate::util::Bytes;
 
@@ -33,22 +33,22 @@ pub fn weak_scaling_sweep(
 ) -> Vec<WeakScalingPoint> {
     // All k-points run in parallel on the sweep runner (each scaled model
     // is a distinct plan-cache key).
-    let points: Vec<SweepPoint> = ks
+    let points: Vec<Scenario> = ks
         .iter()
         .map(|&k| {
             let model = if k == 1 { base.clone() } else { base.scaled(k) };
             let dies = base_dies * k * k;
             let hw = HardwareConfig::square(dies, package, DramKind::Ddr5_6400);
-            SweepPoint::new(model, hw, method, EngineKind::Analytic)
+            Scenario::package(model, hw, method, EngineKind::Analytic)
         })
         .collect();
-    let results = run_points(&points);
+    let results = scenario::run_sim(&points);
     ks.iter()
         .zip(points)
         .zip(results)
         .map(|((&k, p), result)| WeakScalingPoint {
             k,
-            dies: p.hw.n_dies(),
+            dies: p.hw().n_dies(),
             hidden: p.model.hidden,
             u_weight: result.sram.weight_peak,
             u_act: result.sram.act_peak,

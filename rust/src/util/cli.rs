@@ -123,6 +123,61 @@ pub fn parse_list<T>(
     items.into_iter().map(parse).collect()
 }
 
+/// Levenshtein edit distance between two short strings (O(a·b) dynamic
+/// program — inputs here are flag values and preset names, never long).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur[j + 1] = (prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate to `input` (case-insensitive): within edit
+/// distance 2, or related by a prefix (so `"sub"` suggests `"substrate"`).
+/// Powers the "did you mean" hints on every name-valued flag and TOML key.
+pub fn suggest<'a>(input: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let needle = input.to_ascii_lowercase();
+    let mut best: Option<(usize, &'a str)> = None;
+    for cand in candidates {
+        let lower = cand.to_ascii_lowercase();
+        let d = edit_distance(&needle, &lower);
+        let close = d <= 2
+            || (needle.len() >= 3 && (lower.starts_with(&needle) || needle.starts_with(&lower)));
+        let better = match best {
+            Some((bd, _)) => d < bd,
+            None => true,
+        };
+        if close && better {
+            best = Some((d, cand));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// The one shared "unknown name" error: case-insensitive match already
+/// failed, so attach a "did you mean" suggestion when a candidate is
+/// close, or enumerate the candidates when nothing is. Every name-valued
+/// parse site (methods, engines, presets, packages, DRAM kinds, fabrics,
+/// TOML sections/keys) routes its failure through here.
+pub fn unknown_value(what: &str, input: &str, candidates: &[&str]) -> CliError {
+    match suggest(input, candidates.iter().copied()) {
+        Some(s) => CliError(format!("unknown {what} '{input}' (did you mean '{s}'?)")),
+        None => CliError(format!(
+            "unknown {what} '{input}' (expected one of: {})",
+            candidates.join(" | ")
+        )),
+    }
+}
+
 /// CLI error (unknown option, missing value, …).
 #[derive(Debug, PartialEq)]
 pub struct CliError(pub String);
@@ -377,6 +432,34 @@ mod tests {
         })
         .unwrap_err();
         assert!(bad.0.contains("bad num 'x'"));
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("hecatn", "hecaton"), 1);
+        assert_eq!(edit_distance("evnet", "event"), 2);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn suggest_finds_close_names() {
+        let cands = ["analytic", "event", "event-prefetch"];
+        assert_eq!(suggest("evnt", cands), Some("event"));
+        assert_eq!(suggest("ANALYTIC", cands), Some("analytic"));
+        // Prefix relation beyond distance 2.
+        assert_eq!(suggest("substr", ["substrate", "optical"]), Some("substrate"));
+        assert_eq!(suggest("warp-drive", cands), None);
+    }
+
+    #[test]
+    fn unknown_value_messages() {
+        let e = unknown_value("engine", "evnt", &["analytic", "event"]);
+        assert!(e.0.contains("did you mean 'event'"), "{}", e.0);
+        let e = unknown_value("engine", "zzz", &["analytic", "event"]);
+        assert!(e.0.contains("expected one of: analytic | event"), "{}", e.0);
     }
 
     #[test]

@@ -13,7 +13,8 @@ use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
 use hecaton::config::presets::model_preset;
 use hecaton::config::{DramKind, HardwareConfig, PackageKind};
 use hecaton::nop::analytic::Method;
-use hecaton::sim::cluster::{run_cluster_points, simulate_cluster, ClusterGrid, ClusterPlan};
+use hecaton::scenario::{self, ScenarioGrid};
+use hecaton::sim::cluster::{simulate_cluster, ClusterPlan};
 use hecaton::sim::sweep::PlanCache;
 use hecaton::sim::system::{simulate_engine, EngineKind, PlanOptions};
 use hecaton::util::{prop, Seconds};
@@ -110,7 +111,7 @@ fn cluster_engines_agree_on_uncongested_fabric() {
 
 #[test]
 fn cluster_sweep_parallel_matches_serial_bitwise() {
-    let grid = ClusterGrid {
+    let grid = ScenarioGrid {
         models: vec![model_preset("tinyllama-1.1b").unwrap()],
         meshes: vec![(4, 4)],
         packages: vec![PackageKind::Standard],
@@ -125,31 +126,32 @@ fn cluster_sweep_parallel_matches_serial_bitwise() {
     let (pts, skipped) = grid.points().unwrap();
     assert_eq!(pts.len(), 3 * Method::all().len() * 2, "3 valid shapes");
     assert!(skipped > 0, "the cross product contains inconsistent shapes");
-    let serial = run_cluster_points(&PlanCache::new(), &pts, 1).unwrap();
+    let serial = scenario::run_on(&PlanCache::new(), &pts, 1).unwrap();
     for threads in [2usize, 8] {
-        let par = run_cluster_points(&PlanCache::new(), &pts, threads).unwrap();
+        let par = scenario::run_on(&PlanCache::new(), &pts, threads).unwrap();
         assert_eq!(par.len(), serial.len());
         for (s, p) in serial.iter().zip(&par) {
             assert_eq!(
-                s.latency.raw().to_bits(),
-                p.latency.raw().to_bits(),
+                s.latency().raw().to_bits(),
+                p.latency().raw().to_bits(),
                 "threads={threads}: latency order/bits"
             );
             assert_eq!(
-                s.energy_total.raw().to_bits(),
-                p.energy_total.raw().to_bits(),
+                s.energy_total().raw().to_bits(),
+                p.energy_total().raw().to_bits(),
                 "threads={threads}: energy bits"
             );
-            assert_eq!((s.dp, s.pp, s.engine), (p.dp, p.pp, p.engine));
+            let (sc, pc) = (s.cluster().unwrap(), p.cluster().unwrap());
+            assert_eq!((sc.dp, sc.pp, sc.engine), (pc.dp, pc.pp, pc.engine));
         }
     }
 }
 
-/// The plan cache is shared across cluster points: identical stage
+/// The plan cache is shared across cluster scenarios: identical stage
 /// sub-models (same mesh, method, shape) are priced once.
 #[test]
 fn cluster_points_share_stage_plans_through_the_cache() {
-    let grid = ClusterGrid {
+    let grid = ScenarioGrid {
         models: vec![model_preset("tinyllama-1.1b").unwrap()],
         meshes: vec![(4, 4)],
         packages: vec![PackageKind::Standard],
@@ -165,7 +167,7 @@ fn cluster_points_share_stage_plans_through_the_cache() {
     // Valid shapes for 2 packages: (dp=1,pp=2) and (dp=2,pp=1) → 3 engines each.
     assert_eq!(pts.len(), 6);
     let cache = PlanCache::new();
-    run_cluster_points(&cache, &pts, 1).unwrap();
+    scenario::run_on(&cache, &pts, 1).unwrap();
     // Distinct stage sub-models: 11-layer/b1024 (pp=2) + 22-layer/b512 (dp=2).
     assert_eq!(cache.len(), 2, "stage plans are shared across engines and points");
     assert!(cache.hits() > cache.misses(), "repeated points hit the cache");

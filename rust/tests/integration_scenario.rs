@@ -1,0 +1,202 @@
+//! Scenario-API integration tests:
+//!
+//! * **TOML round-trip** — builder → `to_toml` → loader → `evaluate` is
+//!   bitwise identical to the CLI-flag path for every method × engine,
+//!   on degenerate and cluster shapes (the api_redesign acceptance bar).
+//! * **File-vs-flags parity** — `hecaton run examples/scenarios/
+//!   405b_cluster.toml` produces exactly the scenario the equivalent
+//!   `simulate --mesh 16x16 --n-packages 16 --dp 8 --pp 2` flags build.
+//! * **Golden summaries** — every checked-in scenario file runs through
+//!   the real `hecaton run` binary and must match its stored golden
+//!   output; a missing golden is bootstrapped on first run so drift is
+//!   caught from then on (delete the golden to regenerate intentionally).
+
+use std::path::{Path, PathBuf};
+
+use hecaton::config::file::{load_scenario, scenario_from_str, LoadedScenario};
+use hecaton::prelude::*;
+use hecaton::sim::cluster::simulate_cluster;
+use hecaton::sim::system::simulate_engine;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// Builder → serialize → load → evaluate: bitwise-equal to the direct
+/// (CLI-flag) evaluation path for every method × engine, degenerate and
+/// cluster shapes.
+#[test]
+fn toml_round_trip_is_bitwise_identical() {
+    let model = model_preset("tinyllama-1.1b").unwrap();
+    for method in Method::all() {
+        for engine in EngineKind::all() {
+            for cluster_shape in [None, Some((4usize, 2usize, 2usize))] {
+                let mut b = Scenario::builder(model.clone())
+                    .dies(16)
+                    .method(method)
+                    .engine(engine);
+                if let Some((packages, dp, pp)) = cluster_shape {
+                    b = b.cluster(packages, dp, pp);
+                }
+                let built = b.build().unwrap();
+                let tag = format!("{method:?}/{engine:?}/{cluster_shape:?}");
+
+                let toml = built.to_toml();
+                let LoadedScenario::One(loaded) = scenario_from_str(&toml).unwrap() else {
+                    panic!("{tag}: round-trip must yield a single scenario");
+                };
+                assert_eq!(built, loaded, "{tag}: scenario round-trip");
+
+                let a = evaluate(&built).unwrap();
+                let b2 = evaluate(&loaded).unwrap();
+                assert_eq!(
+                    a.latency().raw().to_bits(),
+                    b2.latency().raw().to_bits(),
+                    "{tag}: latency"
+                );
+                assert_eq!(
+                    a.energy_total().raw().to_bits(),
+                    b2.energy_total().raw().to_bits(),
+                    "{tag}: energy"
+                );
+
+                // The legacy direct paths see the same bits.
+                match built.cluster_config() {
+                    None => {
+                        let direct = simulate_engine(&model, built.hw(), method, engine);
+                        assert_eq!(
+                            a.latency().raw().to_bits(),
+                            direct.latency.raw().to_bits(),
+                            "{tag}: vs simulate_engine"
+                        );
+                        assert_eq!(
+                            a.energy_total().raw().to_bits(),
+                            direct.energy_total.raw().to_bits(),
+                            "{tag}: vs simulate_engine energy"
+                        );
+                    }
+                    Some(c) => {
+                        let direct = simulate_cluster(&model, c, method, engine).unwrap();
+                        assert_eq!(
+                            a.latency().raw().to_bits(),
+                            direct.latency.raw().to_bits(),
+                            "{tag}: vs simulate_cluster"
+                        );
+                        assert_eq!(
+                            a.energy_total().raw().to_bits(),
+                            direct.energy_total.raw().to_bits(),
+                            "{tag}: vs simulate_cluster energy"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: `hecaton run examples/scenarios/405b_cluster.toml` is the
+/// same evaluation as the equivalent `simulate --n-packages/--dp/--pp`
+/// invocation — asserted at the scenario level (equality) and at the
+/// result level (bitwise).
+#[test]
+fn run_405b_file_matches_simulate_flags() {
+    let path = scenarios_dir().join("405b_cluster.toml");
+    let LoadedScenario::One(from_file) = load_scenario(path.to_str().unwrap()).unwrap() else {
+        panic!("405b_cluster.toml must hold a single scenario");
+    };
+    // What `simulate --model llama3.1-405b --mesh 16x16 --n-packages 16
+    // --dp 8 --pp 2 --inter-bw substrate` builds.
+    let from_flags = Scenario::builder(model_preset("llama3.1-405b").unwrap())
+        .mesh(16, 16)
+        .cluster(16, 8, 2)
+        .method(Method::Hecaton)
+        .engine(EngineKind::Analytic)
+        .build()
+        .unwrap();
+    assert_eq!(from_file, from_flags, "file and flag scenarios must be identical");
+
+    let a = evaluate(&from_file).unwrap();
+    let b = evaluate(&from_flags).unwrap();
+    assert_eq!(a.latency().raw().to_bits(), b.latency().raw().to_bits());
+    assert_eq!(
+        a.energy_total().raw().to_bits(),
+        b.energy_total().raw().to_bits()
+    );
+
+    // The file mirrors the `405b-cluster` preset exactly.
+    let (preset_model, preset_cluster) = cluster_preset("405b-cluster").unwrap();
+    assert_eq!(preset_model, from_file.model);
+    assert_eq!(&preset_cluster, from_file.cluster_config().unwrap());
+}
+
+/// Every checked-in scenario file loads, and single files collapse
+/// degenerate cluster shapes exactly like the CLI.
+#[test]
+fn all_example_scenarios_load() {
+    let dir = scenarios_dir();
+    let mut tomls: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("examples/scenarios exists")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    tomls.sort();
+    assert!(tomls.len() >= 4, "ship at least four example scenarios, found {tomls:?}");
+    let mut saw_grid = false;
+    let mut saw_cluster = false;
+    for path in &tomls {
+        match load_scenario(path.to_str().unwrap()).unwrap_or_else(|e| panic!("{path:?}: {e:#}"))
+        {
+            LoadedScenario::One(s) => saw_cluster |= s.is_cluster(),
+            LoadedScenario::Grid { grid, .. } => {
+                saw_grid = true;
+                let (points, _) = grid.points().unwrap();
+                assert!(!points.is_empty(), "{path:?}: grid expands to nothing");
+            }
+        }
+    }
+    assert!(saw_grid, "the example set includes a sweep grid");
+    assert!(saw_cluster, "the example set includes a cluster scenario");
+}
+
+/// Golden-summary drift check over `examples/scenarios/` through the real
+/// binary — the CI `scenarios` job runs this. Missing goldens are
+/// bootstrapped (and must then be committed); existing goldens fail on
+/// any byte of drift.
+#[test]
+fn example_scenarios_match_golden_summaries() {
+    let dir = scenarios_dir();
+    let golden_dir = dir.join("golden");
+    std::fs::create_dir_all(&golden_dir).unwrap();
+    let mut tomls: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    tomls.sort();
+    for path in &tomls {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_hecaton"))
+            .args(["run", path.to_str().unwrap()])
+            .output()
+            .unwrap_or_else(|e| panic!("spawning hecaton run {path:?}: {e}"));
+        assert!(
+            out.status.success(),
+            "hecaton run {path:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8(out.stdout).expect("utf-8 table output");
+        assert!(!stdout.is_empty(), "{path:?}: empty output");
+        let stem = path.file_stem().unwrap().to_str().unwrap();
+        let golden = golden_dir.join(format!("{stem}.golden"));
+        if golden.exists() {
+            let want = std::fs::read_to_string(&golden).unwrap();
+            assert_eq!(
+                stdout, want,
+                "{path:?} drifted from {golden:?} — if the change is intentional, \
+                 delete the golden file and re-run the tests to regenerate it"
+            );
+        } else {
+            std::fs::write(&golden, &stdout).unwrap();
+            eprintln!("bootstrapped golden {golden:?} — commit it to lock the summary");
+        }
+    }
+}

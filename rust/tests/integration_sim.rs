@@ -5,7 +5,7 @@ use hecaton::config::presets::{eval_models, model_preset, paper_pairings};
 use hecaton::config::{DramKind, HardwareConfig, PackageKind};
 use hecaton::nop::analytic::Method;
 use hecaton::sim::sweep::{
-    pareto_front, run_points_on, run_points_threads, PlanCache, SweepGrid, SweepPoint,
+    pareto_front, run_points_on, run_points_threads, PlanCache, SweepPoint,
 };
 use hecaton::sim::system::{simulate, simulate_engine, EngineKind, SimResult};
 
@@ -136,20 +136,26 @@ fn assert_bitwise_eq(a: &SimResult, b: &SimResult, ctx: &str) {
     assert_eq!(a.total_macs.to_bits(), b.total_macs.to_bits(), "{ctx}: macs");
 }
 
+/// The old SweepGrid test grid, expanded by hand (grid expansion itself
+/// is covered by `scenario::ScenarioGrid`'s tests): 2 models × 2 meshes ×
+/// 4 methods × 2 engines.
 fn test_grid() -> Vec<SweepPoint> {
-    SweepGrid {
-        models: vec![
-            model_preset("tinyllama-1.1b").unwrap(),
-            model_preset("llama2-7b").unwrap(),
-        ],
-        meshes: vec![(4, 4), (2, 8)],
-        packages: vec![PackageKind::Standard],
-        drams: vec![DramKind::Ddr5_6400],
-        methods: Method::all().to_vec(),
-        engines: vec![EngineKind::Analytic, EngineKind::Event],
+    let models = [
+        model_preset("tinyllama-1.1b").unwrap(),
+        model_preset("llama2-7b").unwrap(),
+    ];
+    let mut pts = Vec::new();
+    for model in &models {
+        for (rows, cols) in [(4usize, 4usize), (2, 8)] {
+            let hw = HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
+            for method in Method::all() {
+                for engine in [EngineKind::Analytic, EngineKind::Event] {
+                    pts.push(SweepPoint::new(model.clone(), hw.clone(), method, engine));
+                }
+            }
+        }
     }
-    .points()
-    .expect("valid grid")
+    pts
 }
 
 /// Parallel sweep output is byte-identical to serial execution and
@@ -199,16 +205,12 @@ fn plan_cache_hit_matches_cold_run() {
 /// and at least one point is always on it.
 #[test]
 fn sweep_pareto_annotation_is_consistent() {
-    let points = SweepGrid {
-        models: vec![model_preset("tinyllama-1.1b").unwrap()],
-        meshes: vec![(4, 4)],
-        packages: vec![PackageKind::Standard],
-        drams: vec![DramKind::Ddr5_6400],
-        methods: Method::all().to_vec(),
-        engines: vec![EngineKind::Analytic],
-    }
-    .points()
-    .expect("valid grid");
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let points: Vec<SweepPoint> = Method::all()
+        .into_iter()
+        .map(|method| SweepPoint::new(m.clone(), hw.clone(), method, EngineKind::Analytic))
+        .collect();
     let results = run_points_threads(&points, 2);
     let metrics: Vec<(f64, f64)> = results
         .iter()
