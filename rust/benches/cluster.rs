@@ -62,6 +62,7 @@ fn main() {
         dp: vec![1, 2, 4],
         pp: vec![1, 2, 4],
         inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        ..Default::default()
     };
     let (points, _) = grid.points().expect("grid expands");
     b.bench("cluster/shape_grid_serial", || {

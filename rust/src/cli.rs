@@ -23,6 +23,7 @@ use crate::config::cluster::{cluster_preset, cluster_presets, ClusterConfig};
 use crate::config::file::LoadedScenario;
 use crate::config::presets::{all_model_presets, eval_models, model_preset};
 use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::memory::sram::OccupancyReport;
 use crate::nop::analytic::Method;
 use crate::scenario::{self, axis, EvalDetail, Scenario, ScenarioGrid};
 use crate::sim::cluster::ClusterResult;
@@ -44,6 +45,8 @@ pub fn app() -> App {
                 .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
                 .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
+                .opt("checkpoint", "none", "activation checkpointing: none | auto | every-<k>")
+                .opt("sram-mib", "none", "enforced per-die SRAM capacity in MiB (none = report only)")
                 .opt("n-packages", "1", "packages in the cluster (must equal dp x pp)")
                 .opt("dp", "1", "data-parallel replicas across packages")
                 .opt("pp", "1", "pipeline stages across packages (1F1B)")
@@ -58,6 +61,8 @@ pub fn app() -> App {
                 .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
                 .opt("methods", "all", "comma list of TP methods, or 'all'")
                 .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("checkpoint", "none", "comma list of checkpoint policies: none | auto | every-<k>")
+                .opt("sram-mib", "none", "comma list of enforced per-die SRAM capacities (MiB or 'none')")
                 .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
                 .opt("dp", "1", "comma list of data-parallel widths")
                 .opt("pp", "1", "comma list of pipeline depths")
@@ -73,7 +78,7 @@ pub fn app() -> App {
         )
         .command(
             CommandSpec::new("reproduce", "regenerate a paper table/figure")
-                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | all"),
+                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | sram | all"),
         )
         .command(
             CommandSpec::new("train", "functional distributed training (real numerics)")
@@ -125,8 +130,10 @@ impl ScenarioArgs {
             meshes: axis::meshes(&split_list(m.value("meshes")))?,
             packages: axis::package_kinds(&split_list(m.value("packages")))?,
             drams: axis::drams(&split_list(m.value("drams")))?,
+            sram: axis::sram_limits(&split_list(m.value("sram-mib")))?,
             methods: axis::methods(&split_list(m.value("methods")))?,
             engines: axis::engines(&split_list(m.value("engines")))?,
+            checkpoints: axis::checkpoints(&split_list(m.value("checkpoint")))?,
             n_packages: axis::counts(&split_list(m.value("n-packages")), "n-packages")?,
             dp: axis::counts(&split_list(m.value("dp")), "dp")?,
             pp: axis::counts(&split_list(m.value("pp")), "pp")?,
@@ -183,9 +190,13 @@ impl ScenarioArgs {
             anyhow!("{}", unknown_value("engine", m.value("engine"), &engine_names))
         })?;
         let inter = axis::inters(&[m.value("inter-bw")])?.remove(0);
+        let checkpoint = axis::checkpoints(&[m.value("checkpoint")])?.remove(0);
+        let sram = axis::sram_limits(&[m.value("sram-mib")])?.remove(0);
+        let mut builder = builder.method(method).engine(engine).checkpoint(checkpoint);
+        if let Some(cap) = sram {
+            builder = builder.sram_limit(cap);
+        }
         builder
-            .method(method)
-            .engine(engine)
             .cluster(m.parse_value("n-packages")?, m.parse_value("dp")?, m.parse_value("pp")?)
             .inter(inter)
             .build()
@@ -277,12 +288,28 @@ fn print_package_simulation(
         "SRAM act/weight peak",
         format!("{} / {}", r.sram.act_peak, r.sram.weight_peak)
     ]);
+    t.row(crate::table_row!["checkpoint", r.checkpoint.label()]);
+    t.row(crate::table_row![
+        "SRAM occupancy peak",
+        occupancy_cell(&r.occupancy)
+    ]);
     t.row(crate::table_row![
         "feasible",
         if r.feasible() { "yes" } else { "NO (SRAM overflow or layout)" }
     ]);
     println!("{}", t.render());
     Ok(())
+}
+
+/// Render an occupancy summary cell: peak vs per-die capacity, flagging
+/// overflow (enforced overflows error before reaching a table).
+fn occupancy_cell(o: &OccupancyReport) -> String {
+    format!(
+        "{} / {} per die{}",
+        o.peak,
+        o.capacity,
+        if o.fits() { "" } else { " (OVERFLOW)" }
+    )
 }
 
 /// Cluster result table: one cluster batch with the hybrid-parallelism
@@ -328,6 +355,11 @@ fn print_cluster_simulation(
     ]);
     t.row(crate::table_row!["stage latency", r.stage.latency]);
     t.row(crate::table_row!["1F1B microbatches", r.microbatches]);
+    t.row(crate::table_row!["checkpoint", r.stage.checkpoint.label()]);
+    t.row(crate::table_row![
+        "SRAM occupancy peak",
+        occupancy_cell(&r.occupancy)
+    ]);
     t.row(crate::table_row!["energy / batch", r.energy_total]);
     t.row(crate::table_row![
         "throughput",
@@ -543,6 +575,12 @@ fn print_info_table() -> crate::Result<()> {
         "Cluster knobs (simulate + sweep): --n-packages/--dp/--pp \
          (dp x pp must equal the package count; TP stays in-package), \
          --inter-bw substrate|optical|<GB/s>"
+    );
+    println!(
+        "Memory knobs (simulate + sweep): --checkpoint none|auto|every-<k> \
+         (activation recomputation at fusion-group boundaries), \
+         --sram-mib <MiB>|none (enforced per-die SRAM capacity; infeasible \
+         schedules error instead of being priced) — see `hecaton reproduce sram`"
     );
     println!("Cluster presets (see `hecaton reproduce cluster`):");
     for name in cluster_presets() {
@@ -826,6 +864,72 @@ mod tests {
             let m = a.parse(&argv(&args)).unwrap().unwrap();
             assert!(cmd_simulate(&m).is_err(), "{args:?} should error cleanly");
         }
+    }
+
+    /// The acceptance flow through the real CLI: an enforced SRAM limit
+    /// with checkpointing off errors cleanly (pointing at the fix), the
+    /// same scenario with `--checkpoint auto` runs, and bad values on the
+    /// new flags are rejected.
+    #[test]
+    fn simulate_sram_and_checkpoint_flags() {
+        let a = app();
+        let base = [
+            "simulate", "--model", "tinyllama-1.1b", "--dies", "64", "--sram-mib", "12",
+        ];
+        let m = a.parse(&argv(&base)).unwrap().unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("SRAM-infeasible"), "{e}");
+        assert!(e.contains("--checkpoint auto"), "{e}");
+
+        let mut ok_args = base.to_vec();
+        ok_args.extend(["--checkpoint", "auto"]);
+        let m = a.parse(&argv(&ok_args)).unwrap().unwrap();
+        cmd_simulate(&m).unwrap();
+
+        // Explicit every-k also runs (no enforcement without --sram-mib).
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--checkpoint",
+                "every-2",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
+
+        for args in [
+            vec!["simulate", "--dies", "16", "--checkpoint", "sometimes"],
+            vec!["simulate", "--dies", "16", "--sram-mib", "-3"],
+            vec!["simulate", "--dies", "16", "--sram-mib", "lots"],
+        ] {
+            let m = a.parse(&argv(&args)).unwrap().unwrap();
+            assert!(cmd_simulate(&m).is_err(), "{args:?} should error cleanly");
+        }
+    }
+
+    #[test]
+    fn sweep_checkpoint_and_sram_axes_run() {
+        let a = app();
+        let m = a
+            .parse(&argv(&[
+                "sweep",
+                "--models",
+                "tinyllama-1.1b",
+                "--meshes",
+                "4x4",
+                "--methods",
+                "hecaton",
+                "--checkpoint",
+                "none,every-2",
+                "--sram-mib",
+                "none,64",
+                "--threads",
+                "2",
+                "--format",
+                "csv",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_sweep(&m).unwrap();
     }
 
     #[test]

@@ -57,6 +57,7 @@ use crate::config::model::ModelConfig;
 use crate::config::presets::{all_model_presets, model_preset};
 use crate::nop::analytic::Method;
 use crate::scenario::{axis, Scenario, ScenarioGrid};
+use crate::sched::checkpoint::Checkpoint;
 use crate::sim::system::{EngineKind, PlanOptions};
 use crate::util::cli::suggest;
 use crate::util::toml::{self, Document, Value};
@@ -104,17 +105,25 @@ const SCHEMA: &[(&str, &[&str])] = &[
             "vocab",
         ],
     ),
-    ("hardware", &["mesh", "dies", "package", "dram"]),
+    ("hardware", &["mesh", "dies", "package", "dram", "sram_mib"]),
     (
         "hardware.die",
         &["freq_mhz", "pe_rows", "pe_cols", "lanes", "weight_buf_mib", "act_buf_mib"],
     ),
     ("hardware.link", &["bandwidth_gbs", "latency_ns", "pj_per_bit"]),
-    ("hardware.dram", &["channel_bandwidth_gbs", "pj_per_bit"]),
+    ("hardware.dram", &["channel_bandwidth_gbs", "pj_per_bit", "efficiency"]),
     ("cluster", &["packages", "dp", "pp", "inter"]),
     (
         "options",
-        &["method", "engine", "fusion", "bypass_router", "threads", "format"],
+        &[
+            "method",
+            "engine",
+            "fusion",
+            "bypass_router",
+            "checkpoint",
+            "threads",
+            "format",
+        ],
     ),
     (
         "sweep",
@@ -123,8 +132,10 @@ const SCHEMA: &[(&str, &[&str])] = &[
             "meshes",
             "packages",
             "drams",
+            "sram_mib",
             "methods",
             "engines",
+            "checkpoint",
             "n_packages",
             "dp",
             "pp",
@@ -219,7 +230,7 @@ pub fn scenario_from_str(input: &str) -> crate::Result<LoadedScenario> {
                 );
             }
         }
-        for key in ["method", "engine", "fusion", "bypass_router"] {
+        for key in ["method", "engine", "fusion", "bypass_router", "checkpoint"] {
             if doc.get("options", key).is_some() {
                 bail!(
                     "[options] {key} does not apply to a [sweep] grid; \
@@ -283,13 +294,16 @@ fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
                 anyhow!("[model] needs a preset (or a name plus explicit dimensions)")
             })?;
             let req = |key: &str| -> crate::Result<usize> {
-                let v = doc.get_int("model", key).ok_or_else(|| {
+                let v = doc.get("model", key).ok_or_else(|| {
                     anyhow!("[model] {key} is required when no preset is given")
                 })?;
-                if v < 1 {
-                    bail!("[model] {key} must be >= 1 (got {v})");
+                let Some(i) = v.as_int() else {
+                    bail!("[model] {key} must be an integer (got {v})");
+                };
+                if i < 1 {
+                    bail!("[model] {key} must be >= 1 (got {i})");
                 }
-                Ok(v as usize)
+                Ok(i as usize)
             };
             ModelConfig {
                 name: name.to_string(),
@@ -304,14 +318,23 @@ fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
             }
         }
     };
+    // Overrides: present-but-malformed values (floats, strings, zeros)
+    // are hard errors, never silently ignored (satellite: a degenerate
+    // `[model]` cannot sneak past the loader).
     let over_usize = |key: &str, target: &mut usize| -> crate::Result<()> {
-        if let Some(v) = doc.get_int("model", key) {
-            if v < 1 {
-                bail!("[model] {key} must be >= 1 (got {v})");
+        match doc.get("model", key) {
+            None => Ok(()),
+            Some(v) => {
+                let Some(i) = v.as_int() else {
+                    bail!("[model] {key} must be an integer (got {v})");
+                };
+                if i < 1 {
+                    bail!("[model] {key} must be >= 1 (got {i})");
+                }
+                *target = i as usize;
+                Ok(())
             }
-            *target = v as usize;
         }
-        Ok(())
     };
     over_usize("hidden", &mut m.hidden)?;
     over_usize("intermediate", &mut m.intermediate)?;
@@ -321,9 +344,8 @@ fn parse_model(doc: &Document) -> crate::Result<ModelConfig> {
     over_usize("seq_len", &mut m.seq_len)?;
     over_usize("batch", &mut m.batch)?;
     over_usize("vocab", &mut m.vocab)?;
-    if m.heads == 0 || m.hidden % m.heads != 0 {
-        bail!("hidden ({}) must divide by heads ({})", m.hidden, m.heads);
-    }
+    // Backstop over every construction path (zero dims, divisibility).
+    m.validate()?;
     Ok(m)
 }
 
@@ -414,7 +436,22 @@ fn parse_hardware(doc: &Document) -> crate::Result<HardwareConfig> {
     if let Some(v) = doc.get_float("hardware.dram", "pj_per_bit") {
         dram.pj_per_bit = v;
     }
+    if let Some(v) = doc.get_float("hardware.dram", "efficiency") {
+        dram = dram
+            .with_efficiency(v)
+            .map_err(|e| anyhow!("[hardware.dram] {e}"))?;
+    }
     hw.dram = dram;
+
+    // Enforced per-die SRAM capacity (MiB); absent = report-only default.
+    if let Some(v) = doc.get("hardware", "sram_mib") {
+        let Some(mib) = v.as_float() else {
+            bail!("[hardware] sram_mib must be a number (MiB per die)");
+        };
+        hw = hw
+            .with_sram_limit(Bytes::mib(mib))
+            .map_err(|e| anyhow!("[hardware] sram_mib: {e}"))?;
+    }
 
     Ok(hw)
 }
@@ -485,9 +522,17 @@ fn parse_eval_options(doc: &Document) -> crate::Result<(Method, EngineKind, Plan
                 .ok_or_else(|| anyhow!("[options] {key} must be true or false")),
         }
     };
+    let checkpoint = match doc.get_str("options", "checkpoint") {
+        Some(s) => Checkpoint::parse(s).ok_or_else(|| match suggest(s, ["none", "auto"]) {
+            Some(c) => anyhow!("bad [options] checkpoint '{s}' (did you mean '{c}'?)"),
+            None => anyhow!("bad [options] checkpoint '{s}' (none | auto | every-<k>)"),
+        })?,
+        None => Checkpoint::None,
+    };
     let opts = PlanOptions {
         fusion: opt_bool("fusion", true)?,
         bypass_router: opt_bool("bypass_router", true)?,
+        checkpoint,
     };
     Ok((method, engine, opts))
 }
@@ -543,8 +588,10 @@ fn parse_sweep(doc: &Document) -> crate::Result<ScenarioGrid> {
     let meshes = strings("meshes", "4x4")?;
     let packages = strings("packages", "standard")?;
     let drams = strings("drams", "ddr5-6400")?;
+    let sram_mib = strings("sram_mib", "none")?;
     let methods = strings("methods", "all")?;
     let engines = strings("engines", "analytic")?;
+    let checkpoint = strings("checkpoint", "none")?;
     let n_packages = strings("n_packages", "1")?;
     let dp = strings("dp", "1")?;
     let pp = strings("pp", "1")?;
@@ -555,8 +602,10 @@ fn parse_sweep(doc: &Document) -> crate::Result<ScenarioGrid> {
         meshes: axis::meshes(&refs(&meshes))?,
         packages: axis::package_kinds(&refs(&packages))?,
         drams: axis::drams(&refs(&drams))?,
+        sram: axis::sram_limits(&refs(&sram_mib))?,
         methods: axis::methods(&refs(&methods))?,
         engines: axis::engines(&refs(&engines))?,
+        checkpoints: axis::checkpoints(&refs(&checkpoint))?,
         n_packages: axis::counts(&refs(&n_packages), "n-packages")?,
         dp: axis::counts(&refs(&dp), "dp")?,
         pp: axis::counts(&refs(&pp), "pp")?,
@@ -829,6 +878,102 @@ mod tests {
             scenario_from_str("[model]\nname = \"x\"\nhidden = 64\n").unwrap_err()
         );
         assert!(e.contains("required when no preset"), "{e}");
+    }
+
+    /// Regression (satellite: zero-dim validation): zero-valued model
+    /// dimensions — and present-but-non-integer overrides, which the old
+    /// loader silently ignored — are hard errors with the shared
+    /// diagnostic style, on both the preset-override and explicit paths.
+    #[test]
+    fn zero_and_malformed_model_dimensions_error() {
+        for key in ["layers", "heads", "hidden", "batch"] {
+            let e = format!(
+                "{:#}",
+                scenario_from_str(&format!("[model]\npreset = \"tiny\"\n{key} = 0\n"))
+                    .unwrap_err()
+            );
+            assert!(e.contains(key), "{key}: {e}");
+            assert!(e.contains(">= 1"), "{key}: {e}");
+        }
+        // Float-typed overrides used to be silently dropped; now they are
+        // named errors.
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\npreset = \"tiny\"\nlayers = 2.5\n").unwrap_err()
+        );
+        assert!(e.contains("layers must be an integer"), "{e}");
+        // Explicit-model path: same guard.
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\nname = \"x\"\nhidden = 64\nintermediate = 256\nlayers = 0\n\
+                 heads = 4\nkv_heads = 4\nseq_len = 32\nbatch = 8\nvocab = 64\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("layers must be >= 1"), "{e}");
+    }
+
+    /// The new memory keys load, validate, and reject bad values.
+    #[test]
+    fn sram_and_checkpoint_keys_load_and_validate() {
+        let LoadedScenario::One(s) = scenario_from_str(
+            "[model]\npreset = \"tinyllama-1.1b\"\n[hardware]\nmesh = [4, 4]\n\
+             sram_mib = 12\n[hardware.dram]\nefficiency = 0.8\n\
+             [options]\ncheckpoint = \"every-2\"\n",
+        )
+        .unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s.hw().sram_limit, Some(Bytes::mib(12.0)));
+        assert_eq!(s.hw().dram.efficiency, 0.8);
+        assert_eq!(s.opts.checkpoint, Checkpoint::EveryK(2));
+
+        // Bad values error with named diagnostics.
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\npreset = \"tiny\"\n[hardware]\nsram_mib = -4\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("sram_mib"), "{e}");
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\npreset = \"tiny\"\n[hardware.dram]\nefficiency = 1.5\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("efficiency"), "{e}");
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\npreset = \"tiny\"\n[options]\ncheckpoint = \"atuo\"\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("did you mean 'auto'"), "{e}");
+        // [sweep] grids take checkpoint/sram_mib as axes, not [options].
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\n[options]\ncheckpoint = \"auto\"\n").unwrap_err()
+        );
+        assert!(e.contains("does not apply to a [sweep] grid"), "{e}");
+        let LoadedScenario::Grid { grid, .. } = scenario_from_str(
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\nmeshes = [\"4x4\"]\n\
+             methods = [\"hecaton\"]\nsram_mib = [\"none\", 64]\ncheckpoint = [\"none\", \"every-2\"]\n",
+        )
+        .unwrap() else {
+            panic!("expected a grid");
+        };
+        assert_eq!(grid.sram, vec![None, Some(Bytes::mib(64.0))]);
+        assert_eq!(
+            grid.checkpoints,
+            vec![Checkpoint::None, Checkpoint::EveryK(2)]
+        );
+        let (pts, _) = grid.points().unwrap();
+        assert_eq!(pts.len(), 2 * 2, "sram axis × checkpoint axis");
     }
 
     /// `Scenario::to_toml` round-trips through the loader.

@@ -15,6 +15,8 @@
 //! | DDR5-6400 channel | 51.2 GB/s, 19 pJ/bit | §VI-A, Ramulator2 |
 //! | HBM2 stack | 307.2 GB/s, 3.9 pJ/bit | O'Connor et al. |
 //! | DRAM channels | 2·(rows + cols), one per perimeter die edge | §III-A(c) |
+//! | DRAM stream efficiency | 0.90 of peak (validated: 0 < e ≤ 1) | Ramulator2 sequential-stream traces |
+//! | per-die SRAM capacity | weight + act buffers (16 MB) by default; `sram_limit` enforces an explicit cap | §IV capacity-relief check |
 //!
 //! How these layers compose is described in ARCHITECTURE.md.
 
@@ -150,7 +152,16 @@ pub struct DramConfig {
     pub channel_bandwidth: f64,
     /// Access energy, pJ/bit (DDR5: 19, paper §VI-A; HBM2: 3.9 [O'Connor]).
     pub pj_per_bit: f64,
+    /// Effective-bandwidth derating for non-ideal access patterns (bank
+    /// conflicts, refresh): Ramulator2 stream traces sustain ~90% of peak
+    /// for sequential streams. Derates *timing* only — every byte is
+    /// still transferred exactly once, so access energy is unaffected.
+    /// Must satisfy `0 < efficiency ≤ 1` ([`DramConfig::with_efficiency`]).
+    pub efficiency: f64,
 }
+
+/// Default DRAM stream-bandwidth derating (Ramulator2, §VI-A).
+pub const DEFAULT_DRAM_EFFICIENCY: f64 = 0.9;
 
 impl DramConfig {
     pub fn preset(kind: DramKind) -> DramConfig {
@@ -159,18 +170,34 @@ impl DramConfig {
                 kind,
                 channel_bandwidth: 25.6e9,
                 pj_per_bit: 22.0,
+                efficiency: DEFAULT_DRAM_EFFICIENCY,
             },
             DramKind::Ddr5_6400 => DramConfig {
                 kind,
                 channel_bandwidth: 51.2e9,
                 pj_per_bit: 19.0,
+                efficiency: DEFAULT_DRAM_EFFICIENCY,
             },
             DramKind::Hbm2 => DramConfig {
                 kind,
                 channel_bandwidth: 307.2e9, // one HBM2 stack per channel site
                 pj_per_bit: 3.9,
+                efficiency: DEFAULT_DRAM_EFFICIENCY,
             },
         }
+    }
+
+    /// Set the stream-efficiency derating, rejecting non-physical values
+    /// (`e ≤ 0` would stall every stream; `e > 1` would beat peak).
+    pub fn with_efficiency(mut self, efficiency: f64) -> crate::Result<DramConfig> {
+        if !(efficiency.is_finite() && efficiency > 0.0 && efficiency <= 1.0) {
+            anyhow::bail!(
+                "dram efficiency must be in (0, 1], got {efficiency} \
+                 (1.0 = ideal streams, 0.9 = the Ramulator2-calibrated default)"
+            );
+        }
+        self.efficiency = efficiency;
+        Ok(self)
     }
 }
 
@@ -184,6 +211,13 @@ pub struct HardwareConfig {
     pub die: DieConfig,
     pub link: LinkConfig,
     pub dram: DramConfig,
+    /// Optional enforced per-die SRAM capacity for the time-resolved
+    /// occupancy check ([`crate::memory::sram`]). `None` (default) keeps
+    /// the legacy behavior: occupancy is *reported* against the combined
+    /// weight+activation buffers but never rejects a scenario. `Some(cap)`
+    /// makes any schedule whose occupancy peak exceeds `cap` a hard
+    /// scenario error — the paper's SRAM-capacity-relief claim, enforced.
+    pub sram_limit: Option<Bytes>,
 }
 
 impl HardwareConfig {
@@ -241,7 +275,25 @@ impl HardwareConfig {
             die: Self::paper_die(),
             link: LinkConfig::for_package(package),
             dram: DramConfig::preset(dram),
+            sram_limit: None,
         }
+    }
+
+    /// The per-die SRAM capacity occupancy peaks are judged against: the
+    /// enforced [`sram_limit`](HardwareConfig::sram_limit) when set,
+    /// otherwise the die's combined weight + activation buffers.
+    pub fn sram_capacity(&self) -> Bytes {
+        self.sram_limit
+            .unwrap_or(self.die.weight_buf + self.die.act_buf)
+    }
+
+    /// Set an enforced per-die SRAM capacity (must be positive).
+    pub fn with_sram_limit(mut self, cap: Bytes) -> crate::Result<HardwareConfig> {
+        if !(cap.raw().is_finite() && cap.raw() > 0.0) {
+            anyhow::bail!("sram limit must be a positive byte count, got {}", cap.raw());
+        }
+        self.sram_limit = Some(cap);
+        Ok(self)
     }
 
     /// Square package of `n` dies (`n` must be a perfect square).
@@ -375,6 +427,37 @@ mod tests {
         assert_eq!(PackageKind::parse("ADV"), Some(PackageKind::Advanced));
         assert_eq!(DramKind::parse("hbm"), Some(DramKind::Hbm2));
         assert_eq!(PackageKind::parse("x"), None);
+    }
+
+    /// Satellite (dram-efficiency): the derating is a validated config
+    /// field — presets carry 0.9, out-of-range values error.
+    #[test]
+    fn dram_efficiency_is_validated_config() {
+        for kind in [DramKind::Ddr4_3200, DramKind::Ddr5_6400, DramKind::Hbm2] {
+            assert_eq!(DramConfig::preset(kind).efficiency, DEFAULT_DRAM_EFFICIENCY);
+        }
+        let d = DramConfig::preset(DramKind::Ddr5_6400);
+        assert_eq!(d.clone().with_efficiency(1.0).unwrap().efficiency, 1.0);
+        assert_eq!(d.clone().with_efficiency(0.5).unwrap().efficiency, 0.5);
+        for bad in [0.0, -0.1, 1.01, f64::NAN, f64::INFINITY] {
+            assert!(
+                d.clone().with_efficiency(bad).is_err(),
+                "efficiency {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn sram_capacity_defaults_to_buffers_and_limit_overrides() {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert_eq!(hw.sram_limit, None);
+        assert_eq!(hw.sram_capacity(), Bytes::mib(16.0));
+        let capped = hw.clone().with_sram_limit(Bytes::mib(4.0)).unwrap();
+        assert_eq!(capped.sram_capacity(), Bytes::mib(4.0));
+        assert_eq!(capped.sram_limit, Some(Bytes::mib(4.0)));
+        assert!(hw.clone().with_sram_limit(Bytes(0.0)).is_err());
+        assert!(hw.clone().with_sram_limit(Bytes(-1.0)).is_err());
+        assert!(hw.with_sram_limit(Bytes(f64::NAN)).is_err());
     }
 
     #[test]

@@ -28,6 +28,41 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
+    /// Validate the dimensions every consumer divides or iterates by:
+    /// zero-valued dimensions (which silently produce NaN latencies,
+    /// division-by-zero panics or empty workloads downstream) and a
+    /// hidden size the head count does not divide are hard errors. Called
+    /// by the scenario builder and the TOML loader, so no evaluation path
+    /// accepts a degenerate model.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (dim, v) in [
+            ("hidden", self.hidden),
+            ("intermediate", self.intermediate),
+            ("layers", self.layers),
+            ("heads", self.heads),
+            ("kv_heads", self.kv_heads),
+            ("seq_len", self.seq_len),
+            ("batch", self.batch),
+            ("vocab", self.vocab),
+        ] {
+            if v == 0 {
+                anyhow::bail!(
+                    "model '{}': {dim} must be >= 1 (zero-sized dimensions cannot be \
+                     simulated; did you mean to drop the override?)",
+                    self.name
+                );
+            }
+        }
+        if self.hidden % self.heads != 0 {
+            anyhow::bail!(
+                "hidden ({}) must divide by heads ({})",
+                self.hidden,
+                self.heads
+            );
+        }
+        Ok(())
+    }
+
     /// Per-head dimension.
     pub fn head_dim(&self) -> usize {
         self.hidden / self.heads
@@ -157,6 +192,33 @@ mod tests {
         assert_eq!(s.intermediate, 2 * m.intermediate);
         assert_eq!(s.head_dim(), m.head_dim());
         assert_eq!(s.seq_len, m.seq_len);
+    }
+
+    /// Satellite (zero-dim validation): every zero-valued dimension is a
+    /// hard error with a diagnostic naming the dimension.
+    #[test]
+    fn validate_rejects_zero_dimensions() {
+        let good = model_preset("tinyllama-1.1b").unwrap();
+        good.validate().unwrap();
+        let cases: [(&str, fn(&mut ModelConfig)); 5] = [
+            ("layers", |m| m.layers = 0),
+            ("heads", |m| m.heads = 0),
+            ("hidden", |m| m.hidden = 0),
+            ("seq_len", |m| m.seq_len = 0),
+            ("batch", |m| m.batch = 0),
+        ];
+        for (dim, zero) in cases {
+            let mut m = good.clone();
+            zero(&mut m);
+            let e = format!("{:#}", m.validate().unwrap_err());
+            assert!(e.contains(dim), "{dim}: {e}");
+            assert!(e.contains(">= 1"), "{dim}: {e}");
+        }
+        // The divisibility diagnostic keeps its established wording.
+        let mut m = good.clone();
+        m.heads = 7;
+        let e = format!("{:#}", m.validate().unwrap_err());
+        assert_eq!(e, "hidden (2048) must divide by heads (7)");
     }
 
     #[test]

@@ -89,7 +89,9 @@ pub mod prelude {
     pub use crate::config::cluster::{cluster_preset, ClusterConfig, InterKind, InterPkgLink};
     pub use crate::config::presets::model_preset;
     pub use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+    pub use crate::memory::sram::OccupancyReport;
     pub use crate::nop::analytic::Method;
+    pub use crate::sched::checkpoint::Checkpoint;
     pub use crate::scenario::{
         evaluate, run_all, run_on, Evaluation, Scenario, ScenarioBuilder, ScenarioGrid, Target,
     };

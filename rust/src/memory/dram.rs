@@ -29,8 +29,10 @@ pub struct DramModel {
     /// Access energy, pJ/bit.
     pub pj_per_bit: f64,
     /// Effective bandwidth derating for non-ideal access patterns
-    /// (bank conflicts, refresh) — Ramulator2 stream traces sustain ~90%
-    /// of peak for sequential streams.
+    /// (bank conflicts, refresh). Sourced from the validated
+    /// [`crate::config::DramConfig::efficiency`] field (default 0.9,
+    /// Ramulator2 sequential-stream calibration) — never hard-coded here,
+    /// so the timing derate and the config can't drift apart.
     pub efficiency: f64,
     /// Number of perimeter DRAM channels backing the aggregate bandwidth.
     pub channels: usize,
@@ -41,7 +43,7 @@ impl DramModel {
         DramModel {
             bandwidth: hw.dram_bandwidth(),
             pj_per_bit: hw.dram.pj_per_bit,
-            efficiency: 0.9,
+            efficiency: hw.dram.efficiency,
             channels: hw.dram_channels(),
         }
     }
@@ -69,7 +71,10 @@ impl DramModel {
         eng.fair("dram", self.effective_bandwidth())
     }
 
-    /// Access energy for `bytes`.
+    /// Access energy for `bytes` — the one DRAM energy path the system
+    /// simulator charges, living next to the derated-bandwidth timing
+    /// path so the two always read the same config. Derating slows the
+    /// stream but moves the same bytes, so energy is per-byte, underated.
     pub fn energy(&self, bytes: Bytes) -> Energy {
         Energy::pj(bytes.bits() * self.pj_per_bit)
     }
@@ -93,6 +98,26 @@ mod tests {
         assert!((e.raw() - 8.0 * 19.0e-12).abs() < 1e-20);
         assert_eq!(d.channels, 16);
         assert!((d.channel_bandwidth() - bw / 16.0).abs() < 1.0);
+    }
+
+    /// Satellite (dram-efficiency): the model reads the config's derating
+    /// — overriding it rescales stream *time* while energy (per byte, not
+    /// per second) is untouched, so the two paths cannot drift.
+    #[test]
+    fn efficiency_derates_timing_but_not_energy() {
+        let mut hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let base = DramModel::new(&hw);
+        hw.dram = hw.dram.clone().with_efficiency(0.45).unwrap();
+        let derated = DramModel::new(&hw);
+        assert_eq!(derated.efficiency, 0.45);
+        let b = Bytes::gib(1.0);
+        let ratio = derated.stream_time(b).raw() / base.stream_time(b).raw();
+        assert!((ratio - 0.9 / 0.45).abs() < 1e-12, "time scales as 1/efficiency");
+        assert_eq!(
+            derated.energy(b).raw().to_bits(),
+            base.energy(b).raw().to_bits(),
+            "energy is per byte moved, independent of the derate"
+        );
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Off-package memory model: DRAM stream timing and per-schedule traffic
-//! accounting (paper §III-A(c) and §III-B).
+//! Memory model: DRAM stream timing, per-schedule traffic accounting
+//! (paper §III-A(c) and §III-B), and the time-resolved per-die SRAM
+//! occupancy replay that checks whether a schedule actually fits.
 
 pub mod dram;
+pub mod sram;
 pub mod traffic;
 
 pub use dram::DramModel;
+pub use sram::{OccupancyReport, ScheduleShape, SramSample, SramTimeline};
 pub use traffic::{BatchTraffic, TrafficModel};

@@ -1,0 +1,493 @@
+//! Time-resolved per-die SRAM occupancy (paper §IV: "relieves the
+//! constraints on SRAM capacity and layout" — made checkable).
+//!
+//! The plan-time [`crate::parallel::plan::SramReport`] answers "does one
+//! mini-batch's working set fit the activation/weight buffers?". This
+//! module answers the question that actually decides whether a schedule
+//! can run: **how many bytes does each die hold at every point of the
+//! batch**, summed over the three occupancy classes:
+//!
+//! * **weights** — the fusion group currently resident in the weight
+//!   buffers (times the method's staging factor: Optimus broadcasts park
+//!   a second copy of each tile);
+//! * **acts** — saved activations: with [`Checkpoint::None`] the
+//!   fused-away interior activations of every executed group are retained
+//!   on-die until that group's backward; with [`Checkpoint::EveryK`] they
+//!   are recomputed instead, and only one segment's per-mini-batch
+//!   rematerialization live set is charged;
+//! * **staging** — the method's collective working set plus the
+//!   double-buffered DRAM stream chunk of the current stage.
+//!
+//! [`replay`] walks the schedule in real execution order — every group's
+//! forward (layer-major), then the backwards in reverse — stamping each
+//! instance with a wall-clock span taken from whichever timing backend
+//! produced it (analytic per-stage overlap, or the event chain's group
+//! spans), so the same replay serves the analytic chain, the event
+//! pipeline, and (via [`OccupancyReport::with_extra_acts`] for in-flight
+//! 1F1B microbatch boundaries) the cluster schedule. [`closed_form_peak`]
+//! derives the peak directly from the group list without replaying;
+//! the two agree within 1% (property-tested, all four TP methods).
+//!
+//! The per-die capacity the peak is judged against is
+//! [`crate::config::HardwareConfig::sram_capacity`]: the combined
+//! weight+activation buffer by default, or the enforced `sram_limit`
+//! override — in which case an over-peak schedule is a hard scenario
+//! error instead of a silently priced impossibility.
+
+use crate::sched::checkpoint::{max_segment_blocks, Checkpoint};
+use crate::sched::fusion::FusionGroup;
+use crate::sched::pipeline::GroupStage;
+use crate::util::{Bytes, Seconds};
+
+/// Schedule-wide constants of one plan's occupancy replay (everything
+/// except the per-stage group/span data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleShape {
+    /// Repetitions of the fusion-group chain (the model's layer count).
+    pub layers: usize,
+    pub n_dies: usize,
+    /// Resolved policy (never [`Checkpoint::Auto`]).
+    pub checkpoint: Checkpoint,
+    /// Per-die collective working set of the method (the all-gathered
+    /// input slice + partial output of the widest linear).
+    pub working: Bytes,
+    /// Multiplier on resident group weights for schedule-time staging
+    /// (1.0 for ring methods; 2.0 for Optimus broadcast segments).
+    pub weight_factor: f64,
+    /// Whole-package boundary activation of the full batch.
+    pub boundary_batch: Bytes,
+    /// Whole-package boundary activation of one mini-batch.
+    pub boundary_mb: Bytes,
+    pub n_minibatches: usize,
+    /// Per-die capacity the peak is judged against.
+    pub capacity: Bytes,
+    /// Whether exceeding `capacity` is a hard error (an explicit
+    /// `sram_limit` was configured) or merely reported.
+    pub enforced: bool,
+}
+
+impl ScheduleShape {
+    fn bb_per_die(&self) -> Bytes {
+        self.boundary_batch / self.n_dies as f64
+    }
+    fn mb_per_die(&self) -> Bytes {
+        self.boundary_mb / self.n_dies as f64
+    }
+    /// Interior activations group `g` retains per executed instance under
+    /// [`Checkpoint::None`] (fused-away boundaries × full-batch bytes).
+    fn retain_add(&self, g: &FusionGroup) -> Bytes {
+        self.bb_per_die() * (g.len().saturating_sub(1)) as f64
+    }
+    /// Double-buffered per-die DRAM stream chunk of one stage.
+    fn staging(&self, st: &GroupStage) -> Bytes {
+        let chunks = (self.layers * self.n_minibatches.max(1) * self.n_dies) as f64;
+        st.dram_bytes / chunks * 2.0
+    }
+}
+
+/// One sampled interval of the occupancy timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramSample {
+    /// Start of the interval.
+    pub t: Seconds,
+    pub weights: Bytes,
+    pub acts: Bytes,
+    pub staging: Bytes,
+}
+
+impl SramSample {
+    pub fn total(&self) -> Bytes {
+        self.weights + self.acts + self.staging
+    }
+}
+
+/// The replayed per-die occupancy timeline of one schedule.
+#[derive(Debug, Clone)]
+pub struct SramTimeline {
+    /// Samples in execution order; one per (layer × group × pass).
+    pub samples: Vec<SramSample>,
+    pub capacity: Bytes,
+}
+
+impl SramTimeline {
+    /// The peak-occupancy sample (first of equals).
+    pub fn peak(&self) -> SramSample {
+        let mut best = self.samples[0];
+        for s in &self.samples[1..] {
+            if s.total().raw() > best.total().raw() {
+                best = *s;
+            }
+        }
+        best
+    }
+    pub fn peak_bytes(&self) -> Bytes {
+        self.peak().total()
+    }
+    pub fn peak_time(&self) -> Seconds {
+        self.peak().t
+    }
+}
+
+/// Summary of a replayed timeline — the field carried by
+/// [`crate::sim::system::SimResult`] and
+/// [`crate::sim::cluster::ClusterResult`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OccupancyReport {
+    /// Per-die peak occupancy.
+    pub peak: Bytes,
+    /// When the peak occurs (under the spans the replay was fed).
+    pub peak_time: Seconds,
+    pub weights_at_peak: Bytes,
+    pub acts_at_peak: Bytes,
+    pub staging_at_peak: Bytes,
+    /// Capacity the peak is judged against.
+    pub capacity: Bytes,
+    /// Whether over-capacity is a hard error.
+    pub enforced: bool,
+    /// Resolved checkpoint policy of the schedule.
+    pub checkpoint: Checkpoint,
+}
+
+impl OccupancyReport {
+    /// Whether the schedule fits the per-die capacity (tiny relative
+    /// tolerance so an exact fill is not rejected by rounding).
+    pub fn fits(&self) -> bool {
+        self.peak.raw() <= self.capacity.raw() * (1.0 + 1e-9)
+    }
+
+    /// Capacity minus peak — negative when the schedule overflows.
+    pub fn headroom(&self) -> Bytes {
+        self.capacity - self.peak
+    }
+
+    /// The report with extra always-resident activation bytes folded in
+    /// (the cluster layer's in-flight 1F1B microbatch boundaries).
+    pub fn with_extra_acts(mut self, extra: Bytes) -> OccupancyReport {
+        self.peak += extra;
+        self.acts_at_peak += extra;
+        self
+    }
+
+    /// The hard error an enforced over-capacity schedule surfaces —
+    /// shared by the package and cluster evaluation paths so the
+    /// diagnostic cannot drift. Suggests enabling recomputation only
+    /// when the *requested* policy wasn't already `auto` and the
+    /// resolved schedule isn't recomputing — a user who asked for `auto`
+    /// (even if it resolved to the min-peak `none`) or whose schedule
+    /// already recomputes can only be helped by more SRAM.
+    pub fn infeasible_error(&self, context: &str, requested: Checkpoint) -> anyhow::Error {
+        let fix = if self.checkpoint.recomputes() || matches!(requested, Checkpoint::Auto) {
+            "recomputation cannot shrink the peak further; \
+             raise --sram-mib (TOML: [hardware] sram_mib)"
+        } else {
+            "enable recomputation with --checkpoint auto \
+             (TOML: [options] checkpoint = \"auto\") or raise --sram-mib"
+        };
+        anyhow::anyhow!(
+            "SRAM-infeasible {context}: peak per-die occupancy {} at t={} exceeds the \
+             enforced {}/die capacity (checkpoint {}); {fix}",
+            self.peak,
+            self.peak_time,
+            self.capacity,
+            self.checkpoint,
+        )
+    }
+}
+
+/// Replay a priced stage chain into the occupancy timeline.
+///
+/// `stages` is the chain in priced order (`[g₀·fwd, g₀·bwd, g₁·fwd, …]`,
+/// two per group — the [`crate::sim::system::SimPlan`] invariant) and
+/// `spans` the matching wall-clock spans from the chosen timing backend.
+/// The replay executes groups in real order: forwards layer-major, then
+/// backwards in reverse.
+pub fn replay(
+    shape: &ScheduleShape,
+    groups: &[FusionGroup],
+    stages: &[GroupStage],
+    spans: &[Seconds],
+) -> SramTimeline {
+    assert_eq!(stages.len(), 2 * groups.len(), "two stages per group");
+    assert_eq!(spans.len(), stages.len(), "one span per stage");
+    let gpl = groups.len();
+    let layers = shape.layers.max(1);
+    let mb = shape.mb_per_die();
+    let mut samples = Vec::with_capacity(2 * gpl * layers);
+    let mut t = Seconds::ZERO;
+    let mut retained = Bytes::ZERO;
+
+    // ── forward sweep: layer-major group order ──
+    for _layer in 0..layers {
+        for (p, g) in groups.iter().enumerate() {
+            let span = spans[2 * p] / layers as f64;
+            if let Checkpoint::None = shape.checkpoint {
+                retained += shape.retain_add(g);
+            }
+            samples.push(SramSample {
+                t,
+                weights: g.weight_per_die * shape.weight_factor,
+                acts: retained,
+                staging: shape.working + shape.staging(&stages[2 * p]),
+            });
+            t += span;
+        }
+    }
+
+    // ── backward sweep: reverse order ──
+    // Under every-k, the backward of a segment holds one mini-batch of
+    // every block input in the segment (the rematerialization live set);
+    // the per-position maximum is conservative and constant, matching
+    // the closed form.
+    let live = mb * max_segment_blocks(groups, layers, shape.checkpoint) as f64;
+    for _layer in 0..layers {
+        for (p, g) in groups.iter().enumerate().rev() {
+            let span = spans[2 * p + 1] / layers as f64;
+            let acts = match shape.checkpoint {
+                Checkpoint::None => retained,
+                _ => live,
+            };
+            samples.push(SramSample {
+                t,
+                weights: g.weight_per_die * shape.weight_factor,
+                acts,
+                staging: shape.working + shape.staging(&stages[2 * p + 1]),
+            });
+            if let Checkpoint::None = shape.checkpoint {
+                retained = retained.saturating_sub(shape.retain_add(g));
+            }
+            t += span;
+        }
+    }
+
+    SramTimeline {
+        samples,
+        capacity: shape.capacity,
+    }
+}
+
+/// The schedule's peak occupancy derived directly from the group list —
+/// no replay, no per-instance walk. The independent cross-check of
+/// [`replay`] (property-tested to agree within 1%).
+pub fn closed_form_peak(
+    shape: &ScheduleShape,
+    groups: &[FusionGroup],
+    stages: &[GroupStage],
+) -> Bytes {
+    let layers = shape.layers.max(1) as f64;
+    let adds: Vec<Bytes> = groups.iter().map(|g| shape.retain_add(g)).collect();
+    let add_sum: Bytes = adds.iter().copied().sum();
+    let total_add = add_sum * layers;
+    let live =
+        shape.mb_per_die() * max_segment_blocks(groups, shape.layers, shape.checkpoint) as f64;
+
+    let mut peak = Bytes::ZERO;
+    let mut prefix = Bytes::ZERO; // Σ_{p' ≤ p} add(p')
+    for (p, g) in groups.iter().enumerate() {
+        prefix += adds[p];
+        let weights = g.weight_per_die * shape.weight_factor;
+        // Forward candidate: the last layer's visit of position p holds
+        // (layers − 1) full chains of retained interiors plus the prefix.
+        let fwd_retained = match shape.checkpoint {
+            Checkpoint::None => add_sum * (layers - 1.0) + prefix,
+            _ => Bytes::ZERO,
+        };
+        let fwd = weights + fwd_retained + shape.working + shape.staging(&stages[2 * p]);
+        peak = peak.max(fwd);
+        // Backward candidate: the first (deepest-layer) backward visit of
+        // position p still holds everything except the later positions'
+        // final-layer interiors (already released).
+        let bwd_retained = match shape.checkpoint {
+            Checkpoint::None => total_add - (add_sum - prefix),
+            _ => live,
+        };
+        let bwd = weights + bwd_retained + shape.working + shape.staging(&stages[2 * p + 1]);
+        peak = peak.max(bwd);
+    }
+    peak
+}
+
+/// Replay a chain and package the result as an [`OccupancyReport`].
+pub fn report(
+    shape: &ScheduleShape,
+    groups: &[FusionGroup],
+    stages: &[GroupStage],
+    spans: &[Seconds],
+) -> OccupancyReport {
+    let timeline = replay(shape, groups, stages, spans);
+    let peak = timeline.peak();
+    OccupancyReport {
+        peak: peak.total(),
+        peak_time: peak.t,
+        weights_at_peak: peak.weights,
+        acts_at_peak: peak.acts,
+        staging_at_peak: peak.staging,
+        capacity: shape.capacity,
+        enforced: shape.enforced,
+        checkpoint: shape.checkpoint,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn group(len: usize, weight_mib: f64) -> FusionGroup {
+        FusionGroup {
+            block_indices: (0..len).collect(),
+            weight_per_die: Bytes::mib(weight_mib),
+        }
+    }
+
+    fn shape(checkpoint: Checkpoint, layers: usize) -> ScheduleShape {
+        ScheduleShape {
+            layers,
+            n_dies: 16,
+            checkpoint,
+            working: Bytes::mib(2.0),
+            weight_factor: 1.0,
+            boundary_batch: Bytes::mib(64.0),
+            boundary_mb: Bytes::mib(4.0),
+            n_minibatches: 16,
+            capacity: Bytes::mib(16.0),
+            enforced: false,
+        }
+    }
+
+    fn stages_for(groups: &[FusionGroup]) -> Vec<GroupStage> {
+        groups
+            .iter()
+            .flat_map(|_| {
+                [
+                    GroupStage {
+                        on_package: Seconds::ms(10.0),
+                        dram_bytes: Bytes::mib(8.0),
+                        n_minibatches: 16,
+                    },
+                    GroupStage {
+                        on_package: Seconds::ms(20.0),
+                        dram_bytes: Bytes::mib(12.0),
+                        n_minibatches: 16,
+                    },
+                ]
+            })
+            .collect()
+    }
+
+    fn spans_for(stages: &[GroupStage]) -> Vec<Seconds> {
+        stages.iter().map(|s| s.on_package).collect()
+    }
+
+    #[test]
+    fn replay_covers_every_instance_and_times_are_monotone() {
+        let groups = vec![group(2, 3.0), group(1, 1.0)];
+        let stages = stages_for(&groups);
+        let spans = spans_for(&stages);
+        for ck in [Checkpoint::None, Checkpoint::EveryK(2)] {
+            let s = shape(ck, 4);
+            let tl = replay(&s, &groups, &stages, &spans);
+            assert_eq!(tl.samples.len(), 2 * 2 * 4);
+            for w in tl.samples.windows(2) {
+                assert!(w[1].t.raw() >= w[0].t.raw(), "{ck}: time must not regress");
+            }
+            assert!(tl.peak_bytes().raw() > 0.0);
+        }
+    }
+
+    #[test]
+    fn none_retains_interiors_whole_batch() {
+        // One 2-block group over 4 layers: 4 retained interior boundaries
+        // of 64 MiB / 16 dies = 4 MiB each at the turnaround.
+        let groups = vec![group(2, 3.0)];
+        let stages = stages_for(&groups);
+        let spans = spans_for(&stages);
+        let s = shape(Checkpoint::None, 4);
+        let tl = replay(&s, &groups, &stages, &spans);
+        let peak = tl.peak();
+        assert!(
+            (peak.acts.raw() - Bytes::mib(16.0).raw()).abs() < 1.0,
+            "4 layers × 1 interior × 4 MiB, got {}",
+            peak.acts
+        );
+        // Checkpointing drops the retention to the per-mini-batch live set
+        // (1 segment × 2 blocks × 4 MiB/16 dies = 0.5 MiB).
+        let s_ck = shape(Checkpoint::EveryK(1), 4);
+        let tl_ck = replay(&s_ck, &groups, &stages, &spans);
+        assert!(
+            tl_ck.peak_bytes() < tl.peak_bytes(),
+            "checkpointing must shrink the peak: {} vs {}",
+            tl_ck.peak_bytes(),
+            tl.peak_bytes()
+        );
+        assert!((tl_ck.peak().acts.raw() - Bytes::kib(512.0).raw()).abs() < 1.0);
+    }
+
+    #[test]
+    fn closed_form_matches_replay() {
+        let group_sets = [
+            vec![group(2, 3.0), group(1, 1.0)],
+            vec![group(1, 0.5), group(1, 0.5)],
+            vec![group(3, 5.0)],
+        ];
+        for groups in &group_sets {
+            let stages = stages_for(groups);
+            let spans = spans_for(&stages);
+            for ck in [
+                Checkpoint::None,
+                Checkpoint::EveryK(1),
+                Checkpoint::EveryK(3),
+                Checkpoint::EveryK(64),
+            ] {
+                let s = shape(ck, 8);
+                let replayed = replay(&s, groups, &stages, &spans).peak_bytes();
+                let closed = closed_form_peak(&s, groups, &stages);
+                let rel = (replayed.raw() - closed.raw()).abs() / closed.raw();
+                assert!(
+                    rel < 0.01,
+                    "{ck}/{} groups: replay {} vs closed form {}",
+                    groups.len(),
+                    replayed,
+                    closed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn report_flags_capacity() {
+        let groups = vec![group(2, 3.0)];
+        let stages = stages_for(&groups);
+        let spans = spans_for(&stages);
+        let mut s = shape(Checkpoint::None, 4);
+        s.enforced = true;
+        let r = report(&s, &groups, &stages, &spans);
+        assert!(!r.fits(), "16 MiB of retained acts alone fills capacity");
+        assert!(r.headroom().raw() < 0.0);
+        assert!(r.enforced);
+        // The same schedule with recomputation fits.
+        let mut s_ck = shape(Checkpoint::EveryK(1), 4);
+        s_ck.enforced = true;
+        let r_ck = report(&s_ck, &groups, &stages, &spans);
+        assert!(r_ck.fits(), "peak {} vs {}", r_ck.peak, r_ck.capacity);
+        assert!(r_ck.headroom().raw() > 0.0);
+        assert_eq!(r_ck.checkpoint, Checkpoint::EveryK(1));
+        // Extra in-flight activations shift the peak up.
+        let bumped = r_ck.with_extra_acts(Bytes::mib(100.0));
+        assert!(!bumped.fits());
+        assert!(
+            (bumped.peak.raw() - r_ck.peak.raw() - Bytes::mib(100.0).raw()).abs() < 1.0
+        );
+    }
+
+    #[test]
+    fn exact_fill_is_feasible() {
+        let groups = vec![group(1, 1.0)];
+        let stages = stages_for(&groups);
+        let spans = spans_for(&stages);
+        let mut s = shape(Checkpoint::EveryK(1), 1);
+        let r0 = report(&s, &groups, &stages, &spans);
+        s.capacity = r0.peak;
+        s.enforced = true;
+        let r = report(&s, &groups, &stages, &spans);
+        assert!(r.fits(), "a peak exactly at capacity must pass");
+    }
+}

@@ -122,6 +122,12 @@ impl TpPlanner for OptimusPlanner {
         // §V-A(c): "Optimus requires a square number of dies".
         hw.mesh_rows == hw.mesh_cols
     }
+
+    fn weight_staging_factor(&self) -> f64 {
+        // The occupancy replay charges the parked broadcast segments
+        // (same §V-A(b) burden `sram_report` models on the weight peak).
+        2.0
+    }
 }
 
 #[cfg(test)]

@@ -109,6 +109,14 @@ pub trait TpPlanner {
         let total: Bytes = blocks.iter().map(|b| b.weight_bytes()).sum();
         total / hw.n_dies() as f64
     }
+
+    /// Multiplier on resident group weights for schedule-time staging in
+    /// the occupancy replay ([`crate::memory::sram`]): ring methods
+    /// stream tiles in place (1.0); Optimus overrides with 2.0 — its
+    /// broadcasts park a second copy of each weight segment (§V-A(b)).
+    fn weight_staging_factor(&self) -> f64 {
+        1.0
+    }
 }
 
 /// Factory.

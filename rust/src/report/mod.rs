@@ -13,12 +13,13 @@ pub mod weak;
 pub mod ablation;
 pub mod congestion;
 pub mod cluster;
+pub mod sram;
 
 /// All experiment ids.
 pub fn experiments() -> &'static [&'static str] {
     &[
         "fig8", "fig9", "fig10", "fig11", "table3", "table4", "gpu", "weak", "ablation",
-        "congestion", "cluster",
+        "congestion", "cluster", "sram",
     ]
 }
 
@@ -36,6 +37,7 @@ pub fn run(id: &str) -> crate::Result<String> {
         "ablation" => Ok(ablation::report()),
         "congestion" => Ok(congestion::report()),
         "cluster" => Ok(cluster::report()),
+        "sram" => Ok(sram::report()),
         other => anyhow::bail!("unknown experiment '{other}'; try one of {:?}", experiments()),
     }
 }

@@ -43,11 +43,12 @@ use crate::config::presets::{all_model_presets, eval_models, model_preset};
 use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
 use crate::nop::analytic::Method;
 use crate::parallel::hybrid::HybridSpec;
+use crate::sched::checkpoint::Checkpoint;
 use crate::sim::cluster::{ClusterPlan, ClusterResult};
 use crate::sim::sweep::{csv_field, json_escape, parallel_map, pareto_front, PlanCache};
 use crate::sim::system::{EngineKind, PlanOptions, SimResult};
 use crate::util::table::Table;
-use crate::util::{Energy, Seconds};
+use crate::util::{Bytes, Energy, Seconds};
 
 // ───────────────────────── scenario ─────────────────────────
 
@@ -157,11 +158,29 @@ impl Scenario {
 
     /// Evaluate against a shared [`PlanCache`] — identical stage plans
     /// (across engines, grid points or cluster stages) are priced once.
+    ///
+    /// When the hardware carries an enforced
+    /// [`sram_limit`](HardwareConfig::sram_limit) and the schedule's
+    /// time-resolved occupancy peak exceeds it, evaluation is an error —
+    /// infeasible scenarios are flagged, never silently priced.
     pub fn evaluate_on(&self, cache: &PlanCache) -> crate::Result<Evaluation> {
         let detail = match &self.target {
-            Target::Package(hw) => EvalDetail::Package(
-                cache.plan(&self.model, hw, self.method, self.opts).time(self.engine),
-            ),
+            Target::Package(hw) => {
+                let plan = cache.plan(&self.model, hw, self.method, self.opts);
+                if plan.occupancy.enforced && !plan.occupancy.fits() {
+                    return Err(plan.occupancy.infeasible_error(
+                        &format!(
+                            "scenario ({} on a {}x{} mesh, method {})",
+                            self.model.name,
+                            hw.mesh_rows,
+                            hw.mesh_cols,
+                            self.method.name()
+                        ),
+                        self.opts.checkpoint,
+                    ));
+                }
+                EvalDetail::Package(plan.time(self.engine))
+            }
             Target::Cluster(c) => EvalDetail::Cluster(
                 ClusterPlan::build(&self.model, c, self.method, self.opts, cache)?
                     .time(self.engine),
@@ -223,6 +242,9 @@ impl Scenario {
         out.push_str(&format!("mesh = [{}, {}]\n", hw.mesh_rows, hw.mesh_cols));
         out.push_str(&format!("package = \"{}\"\n", hw.package.name()));
         out.push_str(&format!("dram = \"{}\"\n", hw.dram.kind.name()));
+        if let Some(cap) = hw.sram_limit {
+            out.push_str(&format!("sram_mib = {}\n", cap.raw() / (1024.0 * 1024.0)));
+        }
         let die0 = HardwareConfig::paper_die();
         if hw.die != die0 {
             out.push_str("\n[hardware.die]\n");
@@ -276,6 +298,9 @@ impl Scenario {
             if hw.dram.pj_per_bit != dram0.pj_per_bit {
                 out.push_str(&format!("pj_per_bit = {}\n", hw.dram.pj_per_bit));
             }
+            if hw.dram.efficiency != dram0.efficiency {
+                out.push_str(&format!("efficiency = {}\n", hw.dram.efficiency));
+            }
         }
 
         if let Some(c) = self.cluster_config() {
@@ -297,6 +322,7 @@ impl Scenario {
         out.push_str(&format!("engine = \"{}\"\n", self.engine.name()));
         out.push_str(&format!("fusion = {}\n", self.opts.fusion));
         out.push_str(&format!("bypass_router = {}\n", self.opts.bypass_router));
+        out.push_str(&format!("checkpoint = \"{}\"\n", self.opts.checkpoint.label()));
         out
     }
 }
@@ -315,6 +341,7 @@ pub struct ScenarioBuilder {
     hardware: Option<HardwareConfig>,
     package: PackageKind,
     dram: DramKind,
+    sram_limit: Option<Bytes>,
     method: Method,
     engine: EngineKind,
     opts: PlanOptions,
@@ -335,6 +362,7 @@ impl ScenarioBuilder {
             hardware: None,
             package: PackageKind::Standard,
             dram: DramKind::Ddr5_6400,
+            sram_limit: None,
             method: Method::Hecaton,
             engine: EngineKind::Analytic,
             opts: PlanOptions::default(),
@@ -380,6 +408,20 @@ impl ScenarioBuilder {
 
     pub fn dram(mut self, dram: DramKind) -> Self {
         self.dram = dram;
+        self
+    }
+
+    /// Enforce a per-die SRAM capacity: schedules whose time-resolved
+    /// occupancy peak exceeds it become evaluation errors.
+    pub fn sram_limit(mut self, cap: Bytes) -> Self {
+        self.sram_limit = Some(cap);
+        self
+    }
+
+    /// Activation-checkpointing policy (default [`Checkpoint::None`]).
+    /// Set after [`plan_options`](Self::plan_options) if both are used.
+    pub fn checkpoint(mut self, ck: Checkpoint) -> Self {
+        self.opts.checkpoint = ck;
         self
     }
 
@@ -429,13 +471,10 @@ impl ScenarioBuilder {
     /// dp = pp = 1) collapses to a package target, matching the CLI's
     /// long-standing routing.
     pub fn build(self) -> crate::Result<Scenario> {
-        if self.model.heads == 0 || self.model.hidden % self.model.heads != 0 {
-            bail!(
-                "hidden ({}) must divide by heads ({})",
-                self.model.hidden,
-                self.model.heads
-            );
-        }
+        // Zero-valued dimensions and head-divisibility are hard errors
+        // for every construction path (satellite: degenerate models are
+        // never silently simulated).
+        self.model.validate()?;
         let hw = match (self.hardware, self.mesh, self.dies) {
             (Some(hw), _, _) => {
                 HardwareConfig::try_mesh(hw.mesh_rows, hw.mesh_cols, hw.package, hw.dram.kind)?;
@@ -446,6 +485,10 @@ impl ScenarioBuilder {
             }
             (None, None, Some(n)) => HardwareConfig::try_square(n, self.package, self.dram)?,
             (None, None, None) => HardwareConfig::try_mesh(4, 4, self.package, self.dram)?,
+        };
+        let hw = match self.sram_limit {
+            Some(cap) => hw.with_sram_limit(cap)?,
+            None => hw,
         };
         let target = if self.packages == 1 && self.dp == 1 && self.pp == 1 {
             Target::Package(hw)
@@ -577,8 +620,12 @@ pub struct ScenarioGrid {
     pub meshes: Vec<(usize, usize)>,
     pub packages: Vec<PackageKind>,
     pub drams: Vec<DramKind>,
+    /// Enforced per-die SRAM capacities; `None` = report-only default.
+    pub sram: Vec<Option<Bytes>>,
     pub methods: Vec<Method>,
     pub engines: Vec<EngineKind>,
+    /// Activation-checkpointing policies.
+    pub checkpoints: Vec<Checkpoint>,
     pub n_packages: Vec<usize>,
     pub dp: Vec<usize>,
     pub pp: Vec<usize>,
@@ -595,8 +642,10 @@ impl Default for ScenarioGrid {
             meshes: Vec::new(),
             packages: Vec::new(),
             drams: Vec::new(),
+            sram: vec![None],
             methods: Vec::new(),
             engines: Vec::new(),
+            checkpoints: vec![Checkpoint::None],
             n_packages: vec![1],
             dp: vec![1],
             pp: vec![1],
@@ -620,8 +669,10 @@ impl ScenarioGrid {
             * self.meshes.len()
             * self.packages.len()
             * self.drams.len()
+            * self.sram.len()
             * self.methods.len()
             * self.engines.len()
+            * self.checkpoints.len()
             * self.n_packages.len()
             * self.dp.len()
             * self.pp.len()
@@ -645,15 +696,27 @@ impl ScenarioGrid {
                 for &(rows, cols) in &self.meshes {
                     for &package in &self.packages {
                         for &dram in &self.drams {
-                            let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
-                            for &method in &self.methods {
-                                for &engine in &self.engines {
-                                    out.push(Scenario::package(
-                                        model.clone(),
-                                        hw.clone(),
-                                        method,
-                                        engine,
-                                    ));
+                            let base = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                            for &sram in &self.sram {
+                                let hw = match sram {
+                                    Some(cap) => base.clone().with_sram_limit(cap)?,
+                                    None => base.clone(),
+                                };
+                                for &method in &self.methods {
+                                    for &engine in &self.engines {
+                                        for &ck in &self.checkpoints {
+                                            out.push(Scenario::package_with(
+                                                model.clone(),
+                                                hw.clone(),
+                                                method,
+                                                engine,
+                                                PlanOptions {
+                                                    checkpoint: ck,
+                                                    ..PlanOptions::default()
+                                                },
+                                            ));
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -663,39 +726,49 @@ impl ScenarioGrid {
             return Ok((out, 0));
         }
 
-        let per_combo = self.methods.len() * self.engines.len();
+        let per_combo = self.methods.len() * self.engines.len() * self.checkpoints.len();
         let mut skipped = 0usize;
         for model in &self.models {
             for &(rows, cols) in &self.meshes {
                 for &package in &self.packages {
                     for &dram in &self.drams {
-                        let hw = HardwareConfig::try_mesh(rows, cols, package, dram)?;
-                        for inter in &self.inter {
-                            for &npkg in &self.n_packages {
-                                for &dp in &self.dp {
-                                    for &pp in &self.pp {
-                                        let Ok(cluster) = ClusterConfig::try_new(
-                                            hw.clone(),
-                                            npkg,
-                                            dp,
-                                            pp,
-                                            inter.clone(),
-                                        ) else {
-                                            skipped += per_combo;
-                                            continue;
-                                        };
-                                        if HybridSpec::plan(model, &cluster).is_err() {
-                                            skipped += per_combo;
-                                            continue;
-                                        }
-                                        for &method in &self.methods {
-                                            for &engine in &self.engines {
-                                                out.push(Scenario::cluster(
-                                                    model.clone(),
-                                                    cluster.clone(),
-                                                    method,
-                                                    engine,
-                                                ));
+                        let base = HardwareConfig::try_mesh(rows, cols, package, dram)?;
+                        for &sram in &self.sram {
+                            let hw = match sram {
+                                Some(cap) => base.clone().with_sram_limit(cap)?,
+                                None => base.clone(),
+                            };
+                            for inter in &self.inter {
+                                for &npkg in &self.n_packages {
+                                    for &dp in &self.dp {
+                                        for &pp in &self.pp {
+                                            let Ok(cluster) = ClusterConfig::try_new(
+                                                hw.clone(),
+                                                npkg,
+                                                dp,
+                                                pp,
+                                                inter.clone(),
+                                            ) else {
+                                                skipped += per_combo;
+                                                continue;
+                                            };
+                                            if HybridSpec::plan(model, &cluster).is_err() {
+                                                skipped += per_combo;
+                                                continue;
+                                            }
+                                            for &method in &self.methods {
+                                                for &engine in &self.engines {
+                                                    for &ck in &self.checkpoints {
+                                                        let mut s = Scenario::cluster(
+                                                            model.clone(),
+                                                            cluster.clone(),
+                                                            method,
+                                                            engine,
+                                                        );
+                                                        s.opts.checkpoint = ck;
+                                                        out.push(s);
+                                                    }
+                                                }
                                             }
                                         }
                                     }
@@ -889,6 +962,47 @@ pub mod axis {
                     bail!("{what} must be >= 1");
                 }
                 Ok(v)
+            })
+            .collect()
+    }
+
+    /// Checkpoint policies: `none` | `auto` | `every-<k>`.
+    pub fn checkpoints(items: &[&str]) -> crate::Result<Vec<Checkpoint>> {
+        if items.is_empty() {
+            bail!("empty checkpoint list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                Checkpoint::parse(x).ok_or_else(|| {
+                    match crate::util::cli::suggest(x, ["none", "auto"]) {
+                        Some(s) => anyhow!("bad checkpoint '{x}' (did you mean '{s}'?)"),
+                        None => anyhow!("bad checkpoint '{x}' (none | auto | every-<k>)"),
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Enforced per-die SRAM capacities in MiB; `none`/`unlimited`
+    /// disables enforcement for that point.
+    pub fn sram_limits(items: &[&str]) -> crate::Result<Vec<Option<Bytes>>> {
+        if items.is_empty() {
+            bail!("empty sram-mib list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                if x.eq_ignore_ascii_case("none") || x.eq_ignore_ascii_case("unlimited") {
+                    return Ok(None);
+                }
+                let v: f64 = x
+                    .parse()
+                    .map_err(|e| anyhow!("bad sram-mib '{x}': {e} (MiB per die, or 'none')"))?;
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("sram-mib must be a positive MiB count or 'none', got '{x}'");
+                }
+                Ok(Some(Bytes::mib(v)))
             })
             .collect()
     }
@@ -1309,6 +1423,7 @@ mod tests {
             dp: vec![1, 2, 4],
             pp: vec![1, 2, 4],
             inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+            ..Default::default()
         };
         assert!(g.is_cluster());
         let (pts, skipped) = g.points().unwrap();
@@ -1416,6 +1531,81 @@ mod tests {
             axis::package_kinds(&["ADVANCED"]).unwrap(),
             vec![PackageKind::Advanced]
         );
+    }
+
+    /// Tentpole: an enforced SRAM limit turns an over-peak schedule into
+    /// a clean evaluation error, and `--checkpoint auto` makes the same
+    /// scenario feasible (the acceptance flow).
+    #[test]
+    fn enforced_sram_limit_errors_and_auto_recovers() {
+        let build = |ck: Checkpoint| {
+            Scenario::builder(tiny())
+                .dies(64)
+                .sram_limit(Bytes::mib(12.0))
+                .checkpoint(ck)
+                .build()
+                .unwrap()
+        };
+        let e = format!("{:#}", evaluate(&build(Checkpoint::None)).unwrap_err());
+        assert!(e.contains("SRAM-infeasible"), "{e}");
+        assert!(e.contains("--checkpoint auto"), "{e}");
+        let ok = evaluate(&build(Checkpoint::Auto)).unwrap();
+        assert!(ok.sim().occupancy.fits());
+        assert!(ok.sim().checkpoint.recomputes());
+        assert!(ok.latency().raw() > 0.0);
+        // Without a limit the same schedule is priced (reported, not
+        // rejected) — the legacy behavior.
+        let unlimited = Scenario::builder(tiny()).dies(64).build().unwrap();
+        let r = evaluate(&unlimited).unwrap();
+        assert!(!r.sim().occupancy.enforced);
+    }
+
+    #[test]
+    fn sram_and_checkpoint_axes_expand_the_grid() {
+        let g = ScenarioGrid {
+            models: vec![tiny()],
+            meshes: vec![(4, 4)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            sram: vec![None, Some(Bytes::mib(64.0))],
+            methods: vec![Method::Hecaton],
+            engines: vec![EngineKind::Analytic],
+            checkpoints: vec![Checkpoint::None, Checkpoint::EveryK(2)],
+            ..Default::default()
+        };
+        assert!(!g.is_cluster());
+        assert_eq!(g.len(), 4);
+        let (pts, skipped) = g.points().unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0].hw().sram_limit, None);
+        assert_eq!(pts[0].opts.checkpoint, Checkpoint::None);
+        assert_eq!(pts[1].opts.checkpoint, Checkpoint::EveryK(2));
+        assert_eq!(pts[2].hw().sram_limit, Some(Bytes::mib(64.0)));
+        // A roomy 64 MiB limit evaluates fine; results flow end to end.
+        let evals = run_all(&pts).unwrap();
+        assert_eq!(evals.len(), 4);
+        assert!(evals.iter().all(|e| e.latency().raw() > 0.0));
+    }
+
+    #[test]
+    fn checkpoint_and_sram_axis_parsers() {
+        assert_eq!(
+            axis::checkpoints(&["none", "auto", "every-4"]).unwrap(),
+            vec![Checkpoint::None, Checkpoint::Auto, Checkpoint::EveryK(4)]
+        );
+        let e = format!("{:#}", axis::checkpoints(&["atuo"]).unwrap_err());
+        assert!(e.contains("did you mean 'auto'"), "{e}");
+        assert!(axis::checkpoints(&["every-0"]).is_err());
+        assert!(axis::checkpoints(&[]).is_err());
+
+        let s = axis::sram_limits(&["none", "8", "0.5"]).unwrap();
+        assert_eq!(s[0], None);
+        assert_eq!(s[1], Some(Bytes::mib(8.0)));
+        assert_eq!(s[2], Some(Bytes::kib(512.0)));
+        assert!(axis::sram_limits(&["-2"]).is_err());
+        assert!(axis::sram_limits(&["lots"]).is_err());
+        assert!(axis::sram_limits(&[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Activation-checkpointing planner (the standard lever when on-chip
+//! memory binds — Duan et al.'s distributed-training survey, §Memory).
+//!
+//! The unit of checkpointing is the **fusion-group boundary**: the
+//! activation crossing between two consecutive fusion groups of the
+//! repeated layer chain. A *checkpointed* boundary is streamed to DRAM on
+//! the forward pass and re-loaded on the backward pass — exactly the
+//! boundary traffic [`crate::memory::traffic::TrafficModel`] has always
+//! priced. A *skipped* boundary (and every fused-away interior activation)
+//! is instead **recomputed**: the backward pass re-executes the forward of
+//! its segment from the nearest checkpoint, one mini-batch at a time, so
+//! only a per-mini-batch working set ever occupies SRAM.
+//!
+//! Three policies:
+//!
+//! * [`Checkpoint::None`] — the legacy schedule: every group boundary goes
+//!   to DRAM (pricing bitwise-identical to the pre-checkpointing
+//!   simulator) and fused-away interior activations are *retained on-die
+//!   for the whole batch* between a group's forward and backward stages.
+//!   The time-resolved occupancy replay ([`crate::memory::sram`]) makes
+//!   the cost of that retention visible — at paper scale it is the
+//!   silently-assumed infinite SRAM this subsystem exists to flag.
+//! * [`Checkpoint::EveryK`]`(k)` — checkpoint every `k`-th group boundary
+//!   of the full `layers × groups-per-layer` chain. Larger `k` trades DRAM
+//!   boundary traffic for recompute FLOPs and a `k`-segment recompute
+//!   working set.
+//! * [`Checkpoint::Auto`] — resolved at plan-build time to the cheapest
+//!   *feasible* policy (lowest analytic latency whose occupancy peak fits
+//!   the per-die SRAM capacity; minimum peak when nothing fits).
+
+use crate::sched::fusion::FusionGroup;
+
+/// Activation-checkpointing policy (a planning-phase option: part of
+/// [`crate::sim::system::PlanOptions`] and the plan-cache key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Checkpoint {
+    /// No recomputation: every group boundary staged via DRAM, interior
+    /// activations retained on-die for the whole batch (legacy pricing).
+    #[default]
+    None,
+    /// Checkpoint every `k`-th fusion-group boundary; recompute the rest.
+    EveryK(usize),
+    /// Pick the cheapest feasible `k` (or no checkpointing) at plan time.
+    Auto,
+}
+
+impl Checkpoint {
+    /// Canonical spelling: `none`, `auto`, `every-<k>`.
+    pub fn label(self) -> String {
+        match self {
+            Checkpoint::None => "none".to_string(),
+            Checkpoint::Auto => "auto".to_string(),
+            Checkpoint::EveryK(k) => format!("every-{k}"),
+        }
+    }
+
+    /// Parse a policy spec: `none` | `off` | `auto` | `every-<k>` | `<k>`.
+    pub fn parse(s: &str) -> Option<Checkpoint> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(Checkpoint::None),
+            "auto" => Some(Checkpoint::Auto),
+            other => {
+                let k_str = other.strip_prefix("every-").unwrap_or(other);
+                let k: usize = k_str.parse().ok()?;
+                if k == 0 {
+                    return None;
+                }
+                Some(Checkpoint::EveryK(k))
+            }
+        }
+    }
+
+    /// Whether this policy recomputes (i.e. is not the legacy schedule).
+    pub fn recomputes(self) -> bool {
+        matches!(self, Checkpoint::EveryK(_))
+    }
+}
+
+impl std::fmt::Display for Checkpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// Per-group-position checkpoint statistics over the full repeated chain
+/// of `layers × groups.len()` group instances.
+///
+/// The priced stage chain holds one (group × pass) stage per *position*
+/// scaled by the layer count, so boundary traffic and recompute must be
+/// aggregated back to positions: entry `p` counts, over all `layers`
+/// instances of position `p`, how many have a checkpointed input
+/// boundary (`n_in`), a checkpointed output boundary (`n_out` — the
+/// terminal chain output always counts), and how many re-execute their
+/// forward during the backward pass (`n_recompute`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointCounts {
+    pub n_in: Vec<f64>,
+    pub n_out: Vec<f64>,
+    pub n_recompute: Vec<f64>,
+}
+
+impl CheckpointCounts {
+    /// Statistics for a policy over the repeated chain. `Auto` must be
+    /// resolved before pricing; calling with it is a logic error.
+    pub fn over_chain(groups: &[FusionGroup], layers: usize, ck: Checkpoint) -> CheckpointCounts {
+        let gpl = groups.len();
+        let lf = layers as f64;
+        match ck {
+            Checkpoint::None => CheckpointCounts {
+                n_in: vec![lf; gpl],
+                n_out: vec![lf; gpl],
+                n_recompute: vec![0.0; gpl],
+            },
+            Checkpoint::Auto => {
+                unreachable!("Checkpoint::Auto must be resolved before pricing")
+            }
+            Checkpoint::EveryK(k) => {
+                let total = gpl * layers;
+                let mut n_in = vec![0.0; gpl];
+                let mut n_out = vec![0.0; gpl];
+                let mut n_recompute = vec![0.0; gpl];
+                for j in 0..total {
+                    let p = j % gpl;
+                    let in_ck = j % k == 0;
+                    let out_ck = (j + 1) % k == 0 || j + 1 == total;
+                    if in_ck {
+                        n_in[p] += 1.0;
+                    }
+                    if out_ck {
+                        n_out[p] += 1.0;
+                    }
+                    // A group instance re-runs its forward during the
+                    // backward of its segment when it must rematerialize
+                    // fused-away interiors, or when its output boundary is
+                    // not checkpointed (a later group in the segment needs
+                    // its output re-derived).
+                    if groups[p].len() > 1 || !out_ck {
+                        n_recompute[p] += 1.0;
+                    }
+                }
+                CheckpointCounts {
+                    n_in,
+                    n_out,
+                    n_recompute,
+                }
+            }
+        }
+    }
+}
+
+/// Largest per-segment recompute live set of the chain, in *blocks*: the
+/// backward of a segment rematerializes one mini-batch of every block
+/// input in the segment, so the occupancy replay charges
+/// `segment_blocks × mb_boundary_bytes` while a segment drains. `None`
+/// retains instead of recomputing (live set zero).
+pub fn max_segment_blocks(groups: &[FusionGroup], layers: usize, ck: Checkpoint) -> usize {
+    let Checkpoint::EveryK(k) = ck else {
+        return 0;
+    };
+    let gpl = groups.len();
+    let total = gpl * layers;
+    let mut max_blocks = 0usize;
+    let mut seg_blocks = 0usize;
+    for j in 0..total {
+        if j % k == 0 {
+            seg_blocks = 0;
+        }
+        seg_blocks += groups[j % gpl].len();
+        max_blocks = max_blocks.max(seg_blocks);
+    }
+    max_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Bytes;
+
+    fn group(len: usize) -> FusionGroup {
+        FusionGroup {
+            block_indices: (0..len).collect(),
+            weight_per_die: Bytes::mib(1.0),
+        }
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        assert_eq!(Checkpoint::parse("none"), Some(Checkpoint::None));
+        assert_eq!(Checkpoint::parse("OFF"), Some(Checkpoint::None));
+        assert_eq!(Checkpoint::parse("auto"), Some(Checkpoint::Auto));
+        assert_eq!(Checkpoint::parse("every-4"), Some(Checkpoint::EveryK(4)));
+        assert_eq!(Checkpoint::parse("2"), Some(Checkpoint::EveryK(2)));
+        assert_eq!(Checkpoint::parse("every-0"), None);
+        assert_eq!(Checkpoint::parse("bogus"), None);
+        for ck in [Checkpoint::None, Checkpoint::Auto, Checkpoint::EveryK(7)] {
+            assert_eq!(Checkpoint::parse(&ck.label()), Some(ck), "{ck}");
+        }
+        assert_eq!(Checkpoint::default(), Checkpoint::None);
+        assert!(Checkpoint::EveryK(1).recomputes());
+        assert!(!Checkpoint::None.recomputes());
+    }
+
+    #[test]
+    fn none_counts_every_boundary() {
+        let groups = vec![group(1), group(2)];
+        let c = CheckpointCounts::over_chain(&groups, 3, Checkpoint::None);
+        assert_eq!(c.n_in, vec![3.0, 3.0]);
+        assert_eq!(c.n_out, vec![3.0, 3.0]);
+        assert_eq!(c.n_recompute, vec![0.0, 0.0]);
+        assert_eq!(max_segment_blocks(&groups, 3, Checkpoint::None), 0);
+    }
+
+    #[test]
+    fn every_one_checkpoints_all_boundaries() {
+        // k = 1: every boundary checkpointed — same DRAM traffic counts as
+        // the legacy schedule; only multi-block groups recompute (their
+        // interiors are no longer whole-batch-retained).
+        let groups = vec![group(1), group(2)];
+        let c = CheckpointCounts::over_chain(&groups, 4, Checkpoint::EveryK(1));
+        assert_eq!(c.n_in, vec![4.0, 4.0]);
+        assert_eq!(c.n_out, vec![4.0, 4.0]);
+        assert_eq!(c.n_recompute, vec![0.0, 4.0], "singletons skip recompute");
+        // Live set: one segment = one group; the deepest is 2 blocks.
+        assert_eq!(max_segment_blocks(&groups, 4, Checkpoint::EveryK(1)), 2);
+    }
+
+    #[test]
+    fn every_k_thins_boundaries_and_recomputes() {
+        // 2 positions × 4 layers = 8 chain groups, k = 4: checkpoints at
+        // chain indices 0 and 4; outputs checkpointed at 3, 7 (terminal).
+        let groups = vec![group(1), group(1)];
+        let c = CheckpointCounts::over_chain(&groups, 4, Checkpoint::EveryK(4));
+        // Inputs: indices 0,4 are position 0 → n_in = [2, 0].
+        assert_eq!(c.n_in, vec![2.0, 0.0]);
+        // Outputs: boundary after indices 3,7 → position 1 → n_out = [0, 2].
+        assert_eq!(c.n_out, vec![0.0, 2.0]);
+        // Everything except the two segment-tail instances recomputes.
+        assert_eq!(c.n_recompute, vec![4.0, 2.0]);
+        assert_eq!(
+            c.n_recompute.iter().sum::<f64>(),
+            8.0 - 2.0,
+            "all but one instance per segment re-run"
+        );
+        // Live set: 4 consecutive singleton groups.
+        assert_eq!(max_segment_blocks(&groups, 4, Checkpoint::EveryK(4)), 4);
+        // A short tail segment does not inflate the max.
+        let c3 = CheckpointCounts::over_chain(&groups, 4, Checkpoint::EveryK(3));
+        assert_eq!(c3.n_in.iter().sum::<f64>(), 3.0, "ceil(8/3) checkpoints");
+        assert_eq!(max_segment_blocks(&groups, 4, Checkpoint::EveryK(3)), 3);
+    }
+
+    #[test]
+    fn total_boundary_counts_are_conserved() {
+        // Across positions, n_in sums to the checkpoint count and n_out to
+        // the same count shifted by the terminal boundary.
+        let groups = vec![group(2), group(1), group(3)];
+        for k in 1..=7 {
+            let layers = 5;
+            let total = groups.len() * layers;
+            let c = CheckpointCounts::over_chain(&groups, layers, Checkpoint::EveryK(k));
+            let want_in = (0..total).filter(|j| j % k == 0).count() as f64;
+            assert_eq!(c.n_in.iter().sum::<f64>(), want_in, "k={k}");
+            let want_out = (0..total)
+                .filter(|j| (j + 1) % k == 0 || j + 1 == total)
+                .count() as f64;
+            assert_eq!(c.n_out.iter().sum::<f64>(), want_out, "k={k}");
+        }
+    }
+}

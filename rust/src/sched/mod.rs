@@ -1,12 +1,15 @@
 //! Hecaton scheduling (paper §III-B, Fig. 6): layer fusion under the
-//! weight-buffer constraint, the on-package-execution /
-//! off-package-memory-access overlap pipeline, and the cluster-level
-//! 1F1B microbatch schedule for pipeline parallelism.
+//! weight-buffer constraint, activation checkpointing at fusion-group
+//! boundaries, the on-package-execution / off-package-memory-access
+//! overlap pipeline, and the cluster-level 1F1B microbatch schedule for
+//! pipeline parallelism.
 
+pub mod checkpoint;
 pub mod fusion;
 pub mod onef1b;
 pub mod pipeline;
 
+pub use checkpoint::Checkpoint;
 pub use fusion::{plan_fusion, singleton_groups, FusionGroup};
 pub use onef1b::{onef1b_analytic, onef1b_event, onef1b_order, Fabric, PipelineStage};
 pub use pipeline::{overlap, overlap_chain_event, overlap_event, ChainResult, GroupStage, StageTimes};

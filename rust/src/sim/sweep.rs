@@ -131,6 +131,7 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
         die,
         link,
         dram,
+        sram_limit,
     } = hw;
     let crate::config::DieConfig {
         freq_hz,
@@ -151,6 +152,7 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
         kind,
         channel_bandwidth,
         pj_per_bit: dram_pj,
+        efficiency,
     } = dram;
     fnv1a([
         *mesh_rows as u64,
@@ -177,6 +179,10 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
         },
         channel_bandwidth.to_bits(),
         dram_pj.to_bits(),
+        efficiency.to_bits(),
+        // Enforced SRAM limits change Auto resolution and feasibility, so
+        // they key the cache; None maps to a value no finite limit hits.
+        sram_limit.map_or(u64::MAX, |b| b.raw().to_bits()),
     ])
 }
 
@@ -460,6 +466,25 @@ mod tests {
             },
         );
         assert_eq!(cache.len(), 3);
+
+        // The new hardware knobs key the cache: an enforced SRAM limit
+        // (changes Auto resolution/feasibility) and the DRAM efficiency.
+        let capped = hw.clone().with_sram_limit(crate::util::Bytes::mib(4.0)).unwrap();
+        assert_ne!(hw_fingerprint(&hw), hw_fingerprint(&capped));
+        let mut derated = hw.clone();
+        derated.dram = derated.dram.with_efficiency(0.8).unwrap();
+        assert_ne!(hw_fingerprint(&hw), hw_fingerprint(&derated));
+        // Checkpoint policy is part of the PlanOptions key.
+        cache.plan(
+            &m,
+            &hw,
+            Method::Hecaton,
+            PlanOptions {
+                checkpoint: crate::sched::checkpoint::Checkpoint::EveryK(2),
+                ..PlanOptions::default()
+            },
+        );
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]

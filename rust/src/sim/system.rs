@@ -30,9 +30,11 @@
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::memory::dram::DramModel;
+use crate::memory::sram::{self, OccupancyReport, ScheduleShape};
 use crate::memory::traffic::TrafficModel;
 use crate::nop::analytic::{Method, Pass};
-use crate::parallel::plan::{planner, BlockPlan, PlanInput, SramReport};
+use crate::parallel::plan::{act_bytes, planner, BlockPlan, PlanInput, SramReport};
+use crate::sched::checkpoint::{Checkpoint, CheckpointCounts};
 use crate::sched::fusion::{plan_fusion, singleton_groups, FusionGroup};
 use crate::sched::pipeline::{overlap, overlap_chain_event, GroupStage, StageTimes};
 use crate::util::{Bytes, Energy, Seconds};
@@ -115,6 +117,12 @@ pub struct SimResult {
     pub energy: EnergyBreakdown,
     pub energy_total: Energy,
     pub sram: SramReport,
+    /// Time-resolved per-die SRAM occupancy of the schedule, replayed
+    /// under this result's timing backend ([`crate::memory::sram`]).
+    pub occupancy: OccupancyReport,
+    /// Resolved activation-checkpointing policy the schedule ran under
+    /// (`Auto` inputs resolve to a concrete policy at plan time).
+    pub checkpoint: Checkpoint,
     /// Whether the mesh layout admits the method at all (§V-A(c)).
     pub layout_ok: bool,
     /// Tokens per mini-batch and pipeline depth.
@@ -164,6 +172,12 @@ pub struct PlanOptions {
     /// the conventional router that serializes ring forwarding with the
     /// die's own injection (halving effective ring bandwidth).
     pub bypass_router: bool,
+    /// Activation checkpointing policy ([`crate::sched::checkpoint`]).
+    /// `None` keeps the legacy (bitwise-identical) schedule; `EveryK`
+    /// trades DRAM boundary traffic and retained activations for
+    /// recompute; `Auto` resolves at plan time to the cheapest policy
+    /// whose occupancy peak fits the per-die SRAM capacity.
+    pub checkpoint: Checkpoint,
 }
 
 impl Default for PlanOptions {
@@ -171,6 +185,7 @@ impl Default for PlanOptions {
         PlanOptions {
             fusion: true,
             bypass_router: true,
+            checkpoint: Checkpoint::None,
         }
     }
 }
@@ -183,6 +198,8 @@ pub struct SimOptions {
     pub fusion: bool,
     /// The high-throughput bypass NoP router (§III-A(b)).
     pub bypass_router: bool,
+    /// Activation checkpointing policy.
+    pub checkpoint: Checkpoint,
     /// Timing backend.
     pub engine: EngineKind,
 }
@@ -193,6 +210,7 @@ impl SimOptions {
         PlanOptions {
             fusion: self.fusion,
             bypass_router: self.bypass_router,
+            checkpoint: self.checkpoint,
         }
     }
 }
@@ -202,6 +220,7 @@ impl Default for SimOptions {
         SimOptions {
             fusion: true,
             bypass_router: true,
+            checkpoint: Checkpoint::None,
             engine: EngineKind::Analytic,
         }
     }
@@ -229,6 +248,10 @@ pub struct SimPlan {
     /// The fusion schedule over one layer's block chain.
     pub groups: Vec<FusionGroup>,
     pub sram: SramReport,
+    /// Occupancy summary under analytic stage spans (the event backends
+    /// re-replay with their own spans in [`SimPlan::time`]; peak *bytes*
+    /// are engine-independent).
+    pub occupancy: OccupancyReport,
     pub layout_ok: bool,
     /// Priced stage chain: one [`GroupStage`] per (group × pass), in
     /// chain order — the timing backends' input.
@@ -244,11 +267,87 @@ pub struct SimPlan {
     pub total_macs: f64,
     dram: DramModel,
     emodel: EnergyModel,
+    /// Schedule-wide occupancy constants, kept for per-engine re-replay.
+    occ_shape: ScheduleShape,
 }
 
 impl SimPlan {
     /// Phases 1–2: decompose the workload and price the stage chain.
+    ///
+    /// [`Checkpoint::Auto`] resolves here: candidate policies are priced
+    /// and the cheapest whose occupancy peak fits the per-die SRAM
+    /// capacity wins (minimum peak when nothing fits); the returned
+    /// plan's `opts.checkpoint` records the resolved policy.
     pub fn build(
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> SimPlan {
+        if matches!(opts.checkpoint, Checkpoint::Auto) {
+            return Self::build_auto(model, hw, method, opts);
+        }
+        Self::build_resolved(model, hw, method, opts)
+    }
+
+    /// Resolve [`Checkpoint::Auto`]: price no-checkpointing plus
+    /// power-of-two strides up to the full chain length, prefer feasible
+    /// occupancy, then lowest analytic latency (lowest peak if nothing
+    /// fits). Deterministic: the first candidate wins ties.
+    fn build_auto(
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> SimPlan {
+        let resolved = |ck: Checkpoint| PlanOptions {
+            checkpoint: ck,
+            ..opts
+        };
+        let base = Self::build_resolved(model, hw, method, resolved(Checkpoint::None));
+        let total = (base.groups.len() * model.layers).max(1);
+        let mut ks = Vec::new();
+        let mut k = 1usize;
+        while k < total {
+            ks.push(k);
+            k *= 2;
+        }
+        ks.push(total);
+
+        // (fits, latency-or-peak) lexicographic ranking.
+        let score = |plan: &SimPlan| -> (bool, f64) {
+            let fits = plan.occupancy.fits();
+            let metric = if fits {
+                plan.time(EngineKind::Analytic).latency.raw()
+            } else {
+                plan.occupancy.peak.raw()
+            };
+            (fits, metric)
+        };
+        let mut best = base;
+        let mut best_score = score(&best);
+        for k in ks {
+            let plan = Self::build_resolved(model, hw, method, resolved(Checkpoint::EveryK(k)));
+            let s = score(&plan);
+            let better = match (s.0, best_score.0) {
+                (true, false) => true,
+                (false, true) => false,
+                // Require a material improvement: a recompute-free
+                // `every-1` candidate prices the same schedule through
+                // differently-associated float arithmetic, and ULP noise
+                // must not displace the simpler policy.
+                _ => s.1 < best_score.1 * (1.0 - 1e-6),
+            };
+            if better {
+                best = plan;
+                best_score = s;
+            }
+        }
+        best
+    }
+
+    /// [`SimPlan::build`] with a concrete (non-`Auto`) checkpoint policy.
+    fn build_resolved(
         model: &ModelConfig,
         hw: &HardwareConfig,
         method: Method,
@@ -287,6 +386,10 @@ impl SimPlan {
         // ── price: per-(group × pass) stage costs, traffic and energy ──
         let traffic_model = TrafficModel::new(model);
         let emodel = EnergyModel::new(hw);
+        let dram_model = DramModel::new(hw);
+        let sram_report = p.sram_report(&inp);
+        // Checkpoint bookkeeping over the full layers × groups chain.
+        let counts = CheckpointCounts::over_chain(&groups, model.layers, opts.checkpoint);
 
         let mut breakdown = LatencyBreakdown::default();
         let mut energy = EnergyBreakdown::default();
@@ -296,29 +399,67 @@ impl SimPlan {
         let n_dies = hw.n_dies() as f64;
         let mut stages: Vec<GroupStage> = Vec::with_capacity(2 * groups.len());
 
-        for group in &groups {
-            // Aggregate the group's per-mini-batch plan for each pass.
-            for pass in [Pass::Fwd, Pass::Bwd] {
+        for (gi, group) in groups.iter().enumerate() {
+            // Aggregate the group's per-mini-batch plan for each pass (the
+            // forward plan first: backward recompute re-prices it).
+            let price_pass = |pass: Pass| -> BlockPlan {
                 let mut plan = BlockPlan::default();
                 for &bi in &group.block_indices {
                     plan.merge(p.block_plan(&blocks[bi], pass, &inp, tokens));
                 }
+                plan
+            };
+            let fwd_plan = price_pass(Pass::Fwd);
+            let bwd_plan = price_pass(Pass::Bwd);
+            for pass in [Pass::Fwd, Pass::Bwd] {
+                let plan = match pass {
+                    Pass::Fwd => &fwd_plan,
+                    Pass::Bwd => &bwd_plan,
+                };
                 min_util = match (min_util, plan.min_utilization) {
                     (Some(a), Some(b)) => Some(a.min(b)),
                     (a, b) => a.or(b),
                 };
 
-                // Per-batch on-package execution: n_mb mini-batches.
-                let on_package =
-                    (plan.compute.time + plan.nop.total()) * n_mb as f64 * model.layers as f64;
+                // Backward recompute of this group's forward (every-k
+                // only): `n_recompute` of its `layers` instances re-run.
+                let rc_scale = match (pass, opts.checkpoint) {
+                    (Pass::Bwd, Checkpoint::EveryK(_)) if counts.n_recompute[gi] > 0.0 => {
+                        Some(n_mb as f64 * counts.n_recompute[gi])
+                    }
+                    _ => None,
+                };
 
-                // DRAM stage of this group & pass (whole batch), per layer.
+                // Per-batch on-package execution: n_mb mini-batches.
+                let mut on_package =
+                    (plan.compute.time + plan.nop.total()) * n_mb as f64 * model.layers as f64;
+                if let Some(s) = rc_scale {
+                    on_package += (fwd_plan.compute.time + fwd_plan.nop.total()) * s;
+                }
+
+                // DRAM stage of this group & pass (whole batch). With
+                // checkpointing, boundary activations are staged through
+                // DRAM only at checkpointed boundaries (`n_in`/`n_out`
+                // instance counts); the legacy expressions are kept
+                // verbatim for `Checkpoint::None` (bitwise-identical).
                 let group_weights = group.weight_per_die * n_dies;
                 let t = traffic_model.group(group_weights);
-                let pass_bytes = match pass {
-                    Pass::Fwd => t.fwd_act + t.weights * (1.0 / 3.0),
-                    Pass::Bwd => t.bwd_act + t.weights * (2.0 / 3.0),
-                } * model.layers as f64;
+                let pass_bytes = if opts.checkpoint.recomputes() {
+                    let b = traffic_model.boundary_act;
+                    match pass {
+                        // load input (if checkpointed) + store output.
+                        Pass::Fwd => b * (counts.n_in[gi] + counts.n_out[gi])
+                            + t.weights * (1.0 / 3.0) * model.layers as f64,
+                        // load saved input + incoming grad + store grad.
+                        Pass::Bwd => b * (2.0 * counts.n_in[gi] + counts.n_out[gi])
+                            + t.weights * (2.0 / 3.0) * model.layers as f64,
+                    }
+                } else {
+                    match pass {
+                        Pass::Fwd => t.fwd_act + t.weights * (1.0 / 3.0),
+                        Pass::Bwd => t.bwd_act + t.weights * (2.0 / 3.0),
+                    } * model.layers as f64
+                };
                 dram_bytes += pass_bytes;
                 stages.push(GroupStage {
                     on_package,
@@ -331,17 +472,59 @@ impl SimPlan {
                 breakdown.nop_transmission += plan.nop.transmission * scale;
                 breakdown.nop_link += plan.nop.link_latency * scale;
 
-                // Energy.
+                // Energy. DRAM goes through the same model that derates
+                // the timing path (satellite: the two can't drift).
                 energy.compute += emodel.compute(plan.compute.macs * n_dies) * scale
                     + emodel.vector(plan.compute.vector_elems * n_dies) * scale;
                 energy.sram += emodel.sram(Bytes(
                     plan.compute.sram_elems * n_dies * crate::config::ELEM_BYTES,
                 )) * scale;
                 energy.nop += emodel.d2d(plan.nop.wire_bytes) * scale;
-                energy.dram += emodel.dram(pass_bytes);
+                energy.dram += dram_model.energy(pass_bytes);
                 total_macs += plan.compute.macs * n_dies * scale;
+
+                // Recompute flows through the same compute/NoP/energy
+                // terms as the forward it re-executes.
+                if let Some(s) = rc_scale {
+                    breakdown.compute += fwd_plan.compute.time * s;
+                    breakdown.nop_transmission += fwd_plan.nop.transmission * s;
+                    breakdown.nop_link += fwd_plan.nop.link_latency * s;
+                    energy.compute += emodel.compute(fwd_plan.compute.macs * n_dies) * s
+                        + emodel.vector(fwd_plan.compute.vector_elems * n_dies) * s;
+                    energy.sram += emodel.sram(Bytes(
+                        fwd_plan.compute.sram_elems * n_dies * crate::config::ELEM_BYTES,
+                    )) * s;
+                    energy.nop += emodel.d2d(fwd_plan.nop.wire_bytes) * s;
+                    total_macs += fwd_plan.compute.macs * n_dies * s;
+                }
             }
         }
+
+        // ── occupancy: replay the schedule under analytic stage spans ──
+        let occ_shape = ScheduleShape {
+            layers: model.layers,
+            n_dies: hw.n_dies(),
+            checkpoint: opts.checkpoint,
+            working: sram_report.act_peak,
+            weight_factor: p.weight_staging_factor(),
+            boundary_batch: traffic_model.boundary_act,
+            boundary_mb: act_bytes(tokens, model.hidden),
+            n_minibatches: n_mb,
+            capacity: hw.sram_capacity(),
+            enforced: hw.sram_limit.is_some(),
+        };
+        let spans: Vec<Seconds> = stages
+            .iter()
+            .map(|st| {
+                overlap(StageTimes {
+                    on_package: st.on_package,
+                    dram: dram_model.stream_time(st.dram_bytes),
+                    n_minibatches: st.n_minibatches,
+                })
+                .latency
+            })
+            .collect();
+        let occupancy = sram::report(&occ_shape, &groups, &stages, &spans);
 
         SimPlan {
             model_name: model.name.clone(),
@@ -350,7 +533,8 @@ impl SimPlan {
             dies: hw.n_dies(),
             minibatch_tokens: tokens,
             n_minibatches: n_mb,
-            sram: p.sram_report(&inp),
+            sram: sram_report,
+            occupancy,
             layout_ok: p.layout_ok(hw),
             groups,
             stages,
@@ -359,9 +543,18 @@ impl SimPlan {
             min_utilization: min_util,
             dram_bytes,
             total_macs,
-            dram: DramModel::new(hw),
+            dram: dram_model,
             emodel,
+            occ_shape,
         }
+    }
+
+    /// The schedule-wide occupancy constants this plan replays with —
+    /// lets external checks (property tests, custom reports) re-run
+    /// [`crate::memory::sram::replay`]/[`crate::memory::sram::closed_form_peak`]
+    /// against the plan's own groups and stages.
+    pub fn occupancy_shape(&self) -> &ScheduleShape {
+        &self.occ_shape
     }
 
     /// Closed-form split of the analytic batch latency into its forward
@@ -399,6 +592,10 @@ impl SimPlan {
         let mut breakdown = self.breakdown;
         let mut energy = self.energy;
         let mut latency = Seconds::ZERO;
+        // Analytic results reuse the build-time occupancy replay; the
+        // event backends re-replay under their own group spans (peak
+        // bytes are engine-independent, the peak *time* shifts).
+        let mut occupancy = self.occupancy;
         match engine {
             EngineKind::Analytic => {
                 for st in &self.stages {
@@ -421,6 +618,8 @@ impl SimPlan {
                 for g in &chain.groups {
                     breakdown.dram_exposed += g.exposed_dram;
                 }
+                let spans: Vec<Seconds> = chain.groups.iter().map(|g| g.latency).collect();
+                occupancy = sram::report(&self.occ_shape, &self.groups, &self.stages, &spans);
             }
         }
 
@@ -435,6 +634,8 @@ impl SimPlan {
             energy,
             energy_total: energy.total(),
             sram: self.sram,
+            occupancy,
+            checkpoint: self.opts.checkpoint,
             layout_ok: self.layout_ok,
             minibatch_tokens: self.minibatch_tokens,
             n_minibatches: self.n_minibatches,
@@ -489,7 +690,10 @@ pub fn simulate_with(
         opts.plan_opts(),
     )
     .evaluate()
-    .expect("single-package evaluation is infallible")
+    .expect(
+        "single-package evaluation without an enforced sram_limit is infallible; \
+         hardware with an enforced SRAM limit must go through scenario::evaluate",
+    )
     .into_sim()
 }
 
@@ -724,5 +928,115 @@ mod tests {
             },
         );
         assert!(nofuse.groups.iter().all(|g| g.len() == 1));
+    }
+
+    /// Activation checkpointing trades DRAM boundary traffic and retained
+    /// occupancy for recompute FLOPs — all three visibly move.
+    #[test]
+    fn checkpointing_trades_dram_and_occupancy_for_recompute() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let none = SimPlan::build(&m, &hw, Method::Hecaton, PlanOptions::default());
+        assert!(
+            none.groups.iter().any(|g| g.len() > 1),
+            "this shape must fuse (interiors are the point of the test)"
+        );
+        let ck = SimPlan::build(
+            &m,
+            &hw,
+            Method::Hecaton,
+            PlanOptions {
+                checkpoint: Checkpoint::EveryK(2),
+                ..PlanOptions::default()
+            },
+        );
+        // Fewer checkpointed boundaries → less DRAM traffic.
+        assert!(
+            ck.dram_bytes < none.dram_bytes,
+            "{} !< {}",
+            ck.dram_bytes,
+            none.dram_bytes
+        );
+        // Recompute adds MACs and wall-clock.
+        assert!(ck.total_macs > none.total_macs);
+        let (ln, lc) = (
+            none.time(EngineKind::Analytic).latency,
+            ck.time(EngineKind::Analytic).latency,
+        );
+        assert!(lc > ln, "recompute must cost time: {lc} vs {ln}");
+        // Retained whole-batch interiors collapse to a per-mini-batch
+        // live set — orders of magnitude of occupancy.
+        assert!(
+            ck.occupancy.peak.raw() < 0.1 * none.occupancy.peak.raw(),
+            "checkpointed peak {} vs retained peak {}",
+            ck.occupancy.peak,
+            none.occupancy.peak
+        );
+        assert_eq!(ck.occupancy.checkpoint, Checkpoint::EveryK(2));
+        // Breakdown still sums to latency with recompute folded in.
+        let r = ck.time(EngineKind::Analytic);
+        let sum = r.breakdown.total().raw();
+        assert!((sum - r.latency.raw()).abs() / r.latency.raw() < 0.02);
+        assert_eq!(r.checkpoint, Checkpoint::EveryK(2));
+    }
+
+    /// `Checkpoint::Auto` picks a feasible policy under a tight enforced
+    /// SRAM limit, and keeps the legacy schedule when everything fits.
+    #[test]
+    fn auto_resolves_against_the_sram_capacity() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+        let capped = hw.clone().with_sram_limit(Bytes::mib(12.0)).unwrap();
+        let auto = SimPlan::build(
+            &m,
+            &capped,
+            Method::Hecaton,
+            PlanOptions {
+                checkpoint: Checkpoint::Auto,
+                ..PlanOptions::default()
+            },
+        );
+        assert!(
+            auto.opts.checkpoint.recomputes(),
+            "12 MiB forces recompute, resolved {}",
+            auto.opts.checkpoint
+        );
+        assert!(auto.occupancy.fits(), "auto must find a feasible policy");
+        assert!(auto.occupancy.enforced);
+        // Without a limit nothing binds on a singleton-group shape, so
+        // auto keeps the legacy (cheapest) schedule.
+        let hw16 = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let roomy = SimPlan::build(
+            &m,
+            &hw16,
+            Method::Hecaton,
+            PlanOptions {
+                checkpoint: Checkpoint::Auto,
+                ..PlanOptions::default()
+            },
+        );
+        if roomy.groups.iter().all(|g| g.len() == 1) {
+            assert_eq!(roomy.opts.checkpoint, Checkpoint::None);
+        }
+        assert!(roomy.occupancy.fits());
+    }
+
+    /// Occupancy peak bytes are engine-independent; the peak time tracks
+    /// each backend's own spans.
+    #[test]
+    fn occupancy_is_replayed_per_engine() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let plan = SimPlan::build(&m, &hw, Method::Hecaton, PlanOptions::default());
+        let an = plan.time(EngineKind::Analytic);
+        let ev = plan.time(EngineKind::Event);
+        assert_eq!(
+            an.occupancy.peak.raw().to_bits(),
+            ev.occupancy.peak.raw().to_bits(),
+            "peak bytes must not depend on the timing backend"
+        );
+        assert!(an.occupancy.peak.raw() > 0.0);
+        assert!(!an.occupancy.enforced, "no limit configured");
+        assert_eq!(an.occupancy.capacity, hw.sram_capacity());
     }
 }

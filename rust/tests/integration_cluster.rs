@@ -122,6 +122,7 @@ fn cluster_sweep_parallel_matches_serial_bitwise() {
         dp: vec![1, 2, 4],
         pp: vec![1, 2, 4],
         inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        ..Default::default()
     };
     let (pts, skipped) = grid.points().unwrap();
     assert_eq!(pts.len(), 3 * Method::all().len() * 2, "3 valid shapes");
@@ -162,6 +163,7 @@ fn cluster_points_share_stage_plans_through_the_cache() {
         dp: vec![1, 2],
         pp: vec![1, 2],
         inter: vec![InterPkgLink::preset(InterKind::Substrate)],
+        ..Default::default()
     };
     let (pts, _) = grid.points().unwrap();
     // Valid shapes for 2 packages: (dp=1,pp=2) and (dp=2,pp=1) → 3 engines each.
