@@ -19,8 +19,10 @@ use hecaton::nop::collective::{
 use hecaton::parallel::plan::planner;
 use hecaton::runtime::Tensor;
 use hecaton::sched::fusion::plan_fusion;
-use hecaton::sched::pipeline::{overlap_chain_event, GroupStage};
-use hecaton::sim::engine::{EventEngine, Service};
+use hecaton::sched::pipeline::{
+    overlap_chain_event, overlap_chain_event_in, GroupStage, EVENT_ITEM_CAP,
+};
+use hecaton::sim::engine::{EngineArena, EventEngine, Service};
 use hecaton::sim::system::{simulate, simulate_engine, EngineKind};
 use hecaton::util::{Bytes, Seconds};
 use hecaton::workload::ops::BlockDesc;
@@ -81,8 +83,18 @@ fn main() {
     b.bench("engine/overlap_chain_8x256", || {
         common::black_box(overlap_chain_event(&chain, &dram, true));
     });
-    b.bench("engine/raw_task_graph_10k", || {
-        let mut eng = EventEngine::new();
+    // Same chain through a reused arena — the sweep service path.
+    let mut chain_arena = EngineArena::new();
+    b.bench("engine/overlap_chain_8x256_arena", || {
+        common::black_box(overlap_chain_event_in(
+            &mut chain_arena,
+            &chain,
+            &dram,
+            true,
+            EVENT_ITEM_CAP,
+        ));
+    });
+    fn raw_graph(eng: &mut EventEngine) {
         let pkg = eng.fifo("pkg");
         let fabric = eng.fair("fabric", 1e11);
         let mut prev = None;
@@ -92,7 +104,20 @@ fn main() {
             let p = eng.task(pkg, Service::Busy(Seconds(1e-5)), &[d]);
             prev = Some(p);
         }
+    }
+    b.bench("engine/raw_task_graph_10k", || {
+        let mut eng = EventEngine::new();
+        raw_graph(&mut eng);
         common::black_box(eng.run().makespan);
+    });
+    // Arena variant: reset + rebuild + execute with zero steady-state
+    // allocation (the time-wheel and slabs keep their capacity).
+    let mut graph_arena = EngineArena::new();
+    b.bench("engine/raw_task_graph_10k_arena", || {
+        graph_arena.engine.reset();
+        raw_graph(&mut graph_arena.engine);
+        graph_arena.kernel.execute(&graph_arena.engine);
+        common::black_box(graph_arena.kernel.makespan());
     });
 
     // ── NoP collective step simulator ──

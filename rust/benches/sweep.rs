@@ -10,6 +10,7 @@ use hecaton::config::presets::{model_preset, paper_pairings};
 use hecaton::config::{DramKind, HardwareConfig, PackageKind};
 use hecaton::nop::analytic::Method;
 use hecaton::parallel::plan::planner;
+use hecaton::scenario::{run_on, Scenario};
 use hecaton::sched::fusion::plan_fusion;
 use hecaton::sim::sweep::{run_points_on, run_points_threads, PlanCache, SweepPoint};
 use hecaton::sim::system::EngineKind;
@@ -44,6 +45,31 @@ fn main() {
     });
     b.bench("sweep/fig8_grid_parallel", || {
         common::black_box(run_points_threads(&points, 0));
+    });
+
+    // ── scenario service path: the same grid through scenario::run_on,
+    // which adds plan-affine execution order + per-worker EvalScratch
+    // (arena + last-plan reuse) on top of the raw point runner ──
+    let scenarios: Vec<Scenario> = {
+        let mut out = Vec::new();
+        for package in [PackageKind::Standard, PackageKind::Advanced] {
+            for w in paper_pairings() {
+                for method in Method::all() {
+                    out.push(
+                        Scenario::builder(w.model.clone())
+                            .dies(w.dies)
+                            .package(package)
+                            .method(method)
+                            .build()
+                            .expect("paper pairing scenarios are valid"),
+                    );
+                }
+            }
+        }
+        out
+    };
+    b.bench("sweep/fig8_scenarios_service", || {
+        common::black_box(run_on(&PlanCache::new(), &scenarios, 0).expect("grid evaluates"));
     });
 
     // ── plan cache: all three engines over the parity mesh; cold vs a

@@ -1,0 +1,465 @@
+//! `hecaton bench` — the in-tree perf harness with a *committed* baseline.
+//!
+//! Two suites guard the evaluate() hot path (see ARCHITECTURE.md
+//! §Performance):
+//!
+//! * `hotpath` — repeated single-scenario evaluation: the cold path
+//!   (fresh plan cache + fresh engine buffers every call) against the
+//!   service path ([`crate::scenario::EvalScratch`]: reused plan + arena),
+//!   plus the overlap-chain and raw-task-graph kernels fresh vs arena.
+//! * `sweep` — the Fig. 8 grid (2 packagings × 4 paper pairings × 4
+//!   methods) serial vs parallel vs warm-cache through
+//!   [`crate::scenario::run_on`].
+//!
+//! Results are compared against `BENCH_hotpath.json` / `BENCH_sweep.json`
+//! at the repo root; `--compare` fails the run when a bench's median
+//! regresses past the threshold, and `--update` rewrites the baselines in
+//! place. The JSON row shape is byte-compatible with the `harness = false`
+//! bench binaries in `benches/` (`finish_with_json`), so either producer
+//! can refresh a baseline.
+//!
+//! Baselines are *machine-local*: numbers measured on one machine are not
+//! comparable to another's, which is why CI runs with a generous
+//! warn-level threshold and uploads its own refreshed JSON as an artifact
+//! instead of trusting absolute numbers.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::config::presets::{model_preset, paper_pairings};
+use crate::config::{DramKind, HardwareConfig, PackageKind};
+use crate::memory::dram::DramModel;
+use crate::nop::analytic::Method;
+use crate::scenario::{run_on, EvalScratch, Scenario};
+use crate::sched::pipeline::{
+    overlap_chain_event, overlap_chain_event_in, GroupStage, EVENT_ITEM_CAP,
+};
+use crate::sim::engine::{EngineArena, EventEngine, Service};
+use crate::sim::sweep::PlanCache;
+use crate::sim::system::EngineKind;
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+use crate::util::{Bytes, Seconds};
+
+/// The suite names `--suite all` expands to, in run order.
+pub const SUITES: [&str; 2] = ["hotpath", "sweep"];
+
+/// Harness knobs. `quick` shrinks the per-bench measurement window (CI
+/// and smoke runs); the *workload* under each bench name never changes,
+/// so rows from quick and standard runs stay comparable in shape (though
+/// quick medians are noisier).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchOpts {
+    pub quick: bool,
+}
+
+impl BenchOpts {
+    fn target_secs(&self) -> f64 {
+        if self.quick {
+            0.25
+        } else {
+            2.0
+        }
+    }
+    fn max_iters(&self) -> usize {
+        if self.quick {
+            25
+        } else {
+            200
+        }
+    }
+}
+
+/// One measured bench: the unit of the committed baseline files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub suite: String,
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Adaptive timer: warm up once, then iterate until the target time or
+/// the iteration cap — the same policy as `benches/common`.
+struct Runner {
+    suite: &'static str,
+    opts: BenchOpts,
+    rows: Vec<BenchRow>,
+}
+
+impl Runner {
+    fn new(suite: &'static str, opts: BenchOpts) -> Runner {
+        eprintln!("== bench suite: {suite} ==");
+        Runner {
+            suite,
+            opts,
+            rows: Vec::new(),
+        }
+    }
+
+    fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        f(); // warmup
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.opts.target_secs()
+            && samples.len() < self.opts.max_iters()
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::from(&samples).expect("at least one sample");
+        println!(
+            "bench {:40} {:>6} iters  mean {:>12}  median {:>12}  p95 {:>12}",
+            name,
+            s.n,
+            crate::util::fmt::seconds(s.mean),
+            crate::util::fmt::seconds(s.median),
+            crate::util::fmt::seconds(s.p95),
+        );
+        self.rows.push(BenchRow {
+            suite: self.suite.to_string(),
+            name: name.to_string(),
+            iters: s.n,
+            mean_s: s.mean,
+            median_s: s.median,
+            p95_s: s.p95,
+            min_s: s.min,
+            max_s: s.max,
+        });
+    }
+}
+
+/// Run one named suite. Unknown names error with the valid set.
+pub fn run_suite(suite: &str, opts: BenchOpts) -> crate::Result<Vec<BenchRow>> {
+    match suite {
+        "hotpath" => Ok(hotpath_suite(opts)),
+        "sweep" => Ok(sweep_suite(opts)),
+        other => Err(anyhow!(
+            "unknown bench suite '{other}' (expected hotpath | sweep | all)"
+        )),
+    }
+}
+
+fn hotpath_suite(opts: BenchOpts) -> Vec<BenchRow> {
+    let mut r = Runner::new("hotpath", opts);
+
+    // Repeated single-scenario evaluation: the service-path acceptance
+    // pair. Event engine on a paper pairing, so both planning and the
+    // event kernel are on the measured path.
+    let scen = Scenario::builder(model_preset("llama2-7b").expect("preset exists"))
+        .dies(64)
+        .method(Method::Hecaton)
+        .engine(EngineKind::Event)
+        .build()
+        .expect("paper pairing scenario is valid");
+    r.bench("hotpath/evaluate_cold", || {
+        std::hint::black_box(scen.evaluate_on(&PlanCache::new()).expect("evaluates"));
+    });
+    let cache = PlanCache::new();
+    let mut scratch = EvalScratch::new();
+    r.bench("hotpath/evaluate_service", || {
+        std::hint::black_box(scen.evaluate_with(&cache, &mut scratch).expect("evaluates"));
+    });
+
+    // Overlap-chain kernel: fresh engine per call vs reused arena.
+    let hw = HardwareConfig::square(64, PackageKind::Standard, DramKind::Ddr5_6400);
+    let dram = DramModel::new(&hw);
+    let chain: Vec<GroupStage> = (0..8)
+        .map(|_| GroupStage {
+            on_package: Seconds::ms(20.0),
+            dram_bytes: Bytes::gib(4.0),
+            n_minibatches: 256,
+        })
+        .collect();
+    r.bench("hotpath/overlap_chain_fresh", || {
+        std::hint::black_box(overlap_chain_event(&chain, &dram, true));
+    });
+    let mut arena = EngineArena::new();
+    r.bench("hotpath/overlap_chain_arena", || {
+        std::hint::black_box(overlap_chain_event_in(
+            &mut arena,
+            &chain,
+            &dram,
+            true,
+            EVENT_ITEM_CAP,
+        ));
+    });
+
+    // Raw task graph: allocation cost isolated from any model content.
+    fn build_graph(eng: &mut EventEngine) {
+        let pkg = eng.fifo("pkg");
+        let fabric = eng.fair("fabric", 1e11);
+        let mut prev = None;
+        for i in 0..2_000u64 {
+            let deps: Vec<_> = prev.into_iter().collect();
+            let d = eng.task(fabric, Service::Transfer(Bytes(1e6 + i as f64)), &deps);
+            let p = eng.task(pkg, Service::Busy(Seconds(1e-5)), &[d]);
+            prev = Some(p);
+        }
+    }
+    r.bench("hotpath/task_graph_4k_fresh", || {
+        let mut eng = EventEngine::new();
+        build_graph(&mut eng);
+        std::hint::black_box(eng.run().makespan);
+    });
+    let mut arena = EngineArena::new();
+    r.bench("hotpath/task_graph_4k_arena", || {
+        arena.engine.reset();
+        build_graph(&mut arena.engine);
+        arena.kernel.execute(&arena.engine);
+        std::hint::black_box(arena.kernel.makespan());
+    });
+
+    r.rows
+}
+
+/// The Fig. 8 grid as scenarios: 2 packagings × 4 pairings × 4 methods.
+fn fig8_scenarios() -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for package in [PackageKind::Standard, PackageKind::Advanced] {
+        for w in paper_pairings() {
+            for method in Method::all() {
+                out.push(
+                    Scenario::builder(w.model.clone())
+                        .dies(w.dies)
+                        .package(package)
+                        .method(method)
+                        .build()
+                        .expect("paper pairing scenarios are valid"),
+                );
+            }
+        }
+    }
+    out
+}
+
+fn sweep_suite(opts: BenchOpts) -> Vec<BenchRow> {
+    let mut r = Runner::new("sweep", opts);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    eprintln!("(running on {cores} cores)");
+
+    let scenarios = fig8_scenarios();
+    r.bench("sweep/fig8_grid_serial", || {
+        std::hint::black_box(run_on(&PlanCache::new(), &scenarios, 1).expect("grid evaluates"));
+    });
+    r.bench("sweep/fig8_grid_parallel", || {
+        std::hint::black_box(run_on(&PlanCache::new(), &scenarios, 0).expect("grid evaluates"));
+    });
+    let warm = PlanCache::new();
+    let _ = run_on(&warm, &scenarios, 0).expect("grid evaluates");
+    r.bench("sweep/fig8_grid_warm_cache", || {
+        std::hint::black_box(run_on(&warm, &scenarios, 0).expect("grid evaluates"));
+    });
+
+    r.rows
+}
+
+// ───────────────────────── baseline files ─────────────────────────
+
+/// `BENCH_<suite>.json` under `dir`.
+pub fn baseline_path(dir: &Path, suite: &str) -> PathBuf {
+    dir.join(format!("BENCH_{suite}.json"))
+}
+
+/// Where the committed baselines live: the repo root. The binary may run
+/// from the root or from `rust/`, so probe both for a repo marker.
+pub fn default_baseline_dir() -> PathBuf {
+    for dir in [".", ".."] {
+        let d = Path::new(dir);
+        if d.join("PAPER.md").exists() || d.join("BENCH_hotpath.json").exists() {
+            return d.to_path_buf();
+        }
+    }
+    PathBuf::from(".")
+}
+
+/// Serialize rows in the exact layout of `benches/common`
+/// `finish_with_json`: a pretty array of one-line objects, `{:e}` floats,
+/// trailing newline. An empty slice serializes as the bootstrap form
+/// `[]` — the committed placeholder before the first `--update`.
+pub fn rows_to_json(rows: &[BenchRow]) -> String {
+    if rows.is_empty() {
+        return "[]\n".to_string();
+    }
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"suite\": \"{}\", \"name\": \"{}\", \"iters\": {}, \
+             \"mean_s\": {:e}, \"median_s\": {:e}, \"p95_s\": {:e}, \
+             \"min_s\": {:e}, \"max_s\": {:e}}}",
+            json_escape(&r.suite),
+            json_escape(&r.name),
+            r.iters,
+            r.mean_s,
+            r.median_s,
+            r.p95_s,
+            r.min_s,
+            r.max_s,
+        ));
+    }
+    s.push_str("\n]\n");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Parse a baseline file's rows (the inverse of [`rows_to_json`], and of
+/// the `benches/` binaries' output).
+pub fn parse_rows(text: &str) -> crate::Result<Vec<BenchRow>> {
+    let doc = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let arr = doc
+        .as_array()
+        .ok_or_else(|| anyhow!("bench baseline must be a JSON array"))?;
+    arr.iter()
+        .map(|row| {
+            let num = |k: &str| {
+                row.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("bench row missing numeric field '{k}'"))
+            };
+            let text = |k: &str| {
+                row.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("bench row missing string field '{k}'"))
+            };
+            Ok(BenchRow {
+                suite: text("suite")?,
+                name: text("name")?,
+                iters: num("iters")? as usize,
+                mean_s: num("mean_s")?,
+                median_s: num("median_s")?,
+                p95_s: num("p95_s")?,
+                min_s: num("min_s")?,
+                max_s: num("max_s")?,
+            })
+        })
+        .collect()
+}
+
+// ───────────────────────── comparison ─────────────────────────
+
+/// One baseline-vs-current pairing, matched by bench name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    pub name: String,
+    pub base_median: f64,
+    pub new_median: f64,
+}
+
+impl Delta {
+    /// `new / base` — above 1.0 is a slowdown.
+    pub fn ratio(&self) -> f64 {
+        self.new_median / self.base_median
+    }
+    /// Whether this pairing regressed past `threshold` (e.g. `0.2` fails
+    /// anything more than 20% slower than its baseline median).
+    pub fn regressed(&self, threshold: f64) -> bool {
+        self.ratio() > 1.0 + threshold
+    }
+}
+
+/// Pair current rows with baseline rows by name, in current-row order.
+/// Benches absent from the baseline (new benches) produce no delta —
+/// they start guarding on the next `--update`.
+pub fn compare(baseline: &[BenchRow], current: &[BenchRow]) -> Vec<Delta> {
+    current
+        .iter()
+        .filter_map(|c| {
+            baseline
+                .iter()
+                .find(|b| b.name == c.name)
+                .map(|b| Delta {
+                    name: c.name.clone(),
+                    base_median: b.median_s,
+                    new_median: c.median_s,
+                })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str, median: f64) -> BenchRow {
+        BenchRow {
+            suite: "hotpath".to_string(),
+            name: name.to_string(),
+            iters: 10,
+            mean_s: median,
+            median_s: median,
+            p95_s: median * 1.2,
+            min_s: median * 0.8,
+            max_s: median * 1.5,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_enough() {
+        let rows = vec![row("a/b", 1.25e-3), row("c \"quoted\"", 2.0)];
+        let text = rows_to_json(&rows);
+        let back = parse_rows(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "a/b");
+        assert_eq!(back[0].median_s, 1.25e-3);
+        assert_eq!(back[1].name, "c \"quoted\"");
+        assert_eq!(back[1].iters, 10);
+    }
+
+    #[test]
+    fn empty_baseline_is_the_bootstrap_form() {
+        assert_eq!(rows_to_json(&[]), "[]\n");
+        assert!(parse_rows("[]\n").unwrap().is_empty());
+        assert!(parse_rows("[]").unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_baseline_errors() {
+        assert!(parse_rows("{\"not\": \"an array\"}").is_err());
+        assert!(parse_rows("[{\"name\": \"x\"}]").is_err());
+        assert!(parse_rows("nonsense").is_err());
+    }
+
+    #[test]
+    fn compare_matches_by_name_and_flags_regressions() {
+        let base = vec![row("a", 1.0), row("b", 1.0)];
+        let cur = vec![row("a", 1.1), row("b", 1.5), row("new", 9.0)];
+        let deltas = compare(&base, &cur);
+        assert_eq!(deltas.len(), 2); // "new" has no baseline yet
+        assert!(!deltas[0].regressed(0.2)); // 1.1x is inside 20%
+        assert!(deltas[1].regressed(0.2)); // 1.5x is not
+        assert!((deltas[1].ratio() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suite_names_resolve() {
+        for s in SUITES {
+            // Only validate dispatch; running the suites is the CLI's job.
+            assert!(["hotpath", "sweep"].contains(&s));
+        }
+        assert!(run_suite("bogus", BenchOpts::default()).is_err());
+    }
+
+    #[test]
+    fn baseline_paths() {
+        assert_eq!(
+            baseline_path(Path::new(".."), "sweep"),
+            PathBuf::from("../BENCH_sweep.json")
+        );
+    }
+}

@@ -93,6 +93,16 @@ pub fn app() -> App {
             CommandSpec::new("info", "list presets and hardware defaults")
                 .opt("format", "table", "output format: table | json"),
         )
+        .command(
+            CommandSpec::new("bench", "run the perf suites against the committed baseline")
+                .opt("suite", "all", "bench suite: hotpath | sweep | all")
+                .opt("baseline-dir", "", "directory holding BENCH_*.json (default: repo root)")
+                .opt("threshold", "0.20", "median regression ratio that fails --compare (0.20 = 20%)")
+                .opt("save", "", "also write the refreshed JSON files into this directory")
+                .flag("compare", "exit non-zero when any bench regresses past --threshold")
+                .flag("update", "rewrite the baseline files in place with this run's results")
+                .flag("quick", "short measurement window (CI/smoke; noisier medians)"),
+        )
 }
 
 /// Entry point used by `main.rs`.
@@ -108,6 +118,7 @@ pub fn run(args: &[String]) -> crate::Result<i32> {
         "reproduce" => cmd_reproduce(&m),
         "train" => cmd_train(&m),
         "info" => cmd_info(&m),
+        "bench" => cmd_bench(&m),
         other => Err(anyhow!("unhandled command {other}")),
     }?;
     Ok(0)
@@ -537,6 +548,97 @@ fn cmd_info(m: &Matches) -> crate::Result<()> {
     }
 }
 
+// ───────────────────────── bench ─────────────────────────
+
+fn cmd_bench(m: &Matches) -> crate::Result<()> {
+    use crate::bench;
+    use std::path::PathBuf;
+
+    let opts = bench::BenchOpts {
+        quick: m.flag("quick"),
+    };
+    let threshold: f64 = m.parse_value("threshold").map_err(|e| anyhow!("{e}"))?;
+    if !(threshold.is_finite() && threshold > 0.0) {
+        return Err(anyhow!("--threshold must be a positive ratio (e.g. 0.20)"));
+    }
+    let suites: Vec<&str> = match m.value("suite") {
+        "all" => bench::SUITES.to_vec(),
+        one => vec![one], // validated by run_suite
+    };
+    let base_dir = match m.value("baseline-dir") {
+        "" => bench::default_baseline_dir(),
+        d => PathBuf::from(d),
+    };
+
+    let mut regressions: Vec<String> = Vec::new();
+    for suite in suites {
+        let rows = bench::run_suite(suite, opts)?;
+        let path = bench::baseline_path(&base_dir, suite);
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                let baseline = bench::parse_rows(&text)
+                    .map_err(|e| anyhow!("bad baseline {}: {e}", path.display()))?;
+                if baseline.is_empty() {
+                    println!(
+                        "(baseline {} is empty — bootstrap it with `hecaton bench --update`)",
+                        path.display()
+                    );
+                } else {
+                    let mut t = Table::new(&["bench", "baseline", "now", "ratio"])
+                        .with_title(&format!("{suite} vs {}", path.display()))
+                        .label_first();
+                    for d in bench::compare(&baseline, &rows) {
+                        t.row(crate::table_row![
+                            d.name,
+                            crate::util::fmt::seconds(d.base_median),
+                            crate::util::fmt::seconds(d.new_median),
+                            format!("{:.2}x", d.ratio())
+                        ]);
+                        if d.regressed(threshold) {
+                            regressions.push(format!(
+                                "{} regressed {:.2}x (median {} -> {}, threshold {:.0}%)",
+                                d.name,
+                                d.ratio(),
+                                crate::util::fmt::seconds(d.base_median),
+                                crate::util::fmt::seconds(d.new_median),
+                                threshold * 100.0
+                            ));
+                        }
+                    }
+                    println!("{}", t.render());
+                }
+            }
+            Err(_) => println!(
+                "(no baseline at {} — create one with `hecaton bench --update`)",
+                path.display()
+            ),
+        }
+        if m.flag("update") {
+            std::fs::write(&path, bench::rows_to_json(&rows))?;
+            println!("updated {}", path.display());
+        }
+        let save = m.value("save");
+        if !save.is_empty() {
+            std::fs::create_dir_all(save)?;
+            let out = bench::baseline_path(std::path::Path::new(save), suite);
+            std::fs::write(&out, bench::rows_to_json(&rows))?;
+            println!("saved {}", out.display());
+        }
+    }
+
+    for r in &regressions {
+        eprintln!("regression: {r}");
+    }
+    if m.flag("compare") && !regressions.is_empty() {
+        return Err(anyhow!(
+            "{} bench(es) regressed past the {:.0}% threshold",
+            regressions.len(),
+            threshold * 100.0
+        ));
+    }
+    Ok(())
+}
+
 fn print_info_table() -> crate::Result<()> {
     let mut t = Table::new(&["model", "hidden", "layers", "heads", "seq", "params"])
         .with_title("Model presets")
@@ -687,6 +789,10 @@ mod tests {
         assert!(a.parse(&argv(&["reproduce", "fig8"])).unwrap().is_some());
         assert!(a.parse(&argv(&["train", "--steps", "3"])).unwrap().is_some());
         assert!(a.parse(&argv(&["info"])).unwrap().is_some());
+        assert!(a
+            .parse(&argv(&["bench", "--suite", "hotpath", "--quick", "--compare"]))
+            .unwrap()
+            .is_some());
         assert!(a.parse(&argv(&["bogus"])).is_err());
     }
 

@@ -68,6 +68,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod train;
 pub mod report;
+pub mod bench;
 pub mod cli;
 
 /// One-import surface for library users: scenario construction,

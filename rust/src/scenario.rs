@@ -45,10 +45,14 @@ use crate::nop::analytic::Method;
 use crate::parallel::hybrid::HybridSpec;
 use crate::sched::checkpoint::Checkpoint;
 use crate::sim::cluster::{ClusterPlan, ClusterResult};
-use crate::sim::sweep::{csv_field, json_escape, parallel_map, pareto_front, PlanCache};
-use crate::sim::system::{EngineKind, PlanOptions, SimResult};
+use crate::sim::engine::EngineArena;
+use crate::sim::sweep::{
+    csv_field, json_escape, parallel_map_with, pareto_front, PlanCache, PlanSig,
+};
+use crate::sim::system::{EngineKind, PlanOptions, SimPlan, SimResult};
 use crate::util::table::Table;
 use crate::util::{Bytes, Energy, Seconds};
+use std::sync::Arc;
 
 // ───────────────────────── scenario ─────────────────────────
 
@@ -164,9 +168,24 @@ impl Scenario {
     /// time-resolved occupancy peak exceeds it, evaluation is an error —
     /// infeasible scenarios are flagged, never silently priced.
     pub fn evaluate_on(&self, cache: &PlanCache) -> crate::Result<Evaluation> {
+        self.evaluate_with(cache, &mut EvalScratch::new())
+    }
+
+    /// [`Scenario::evaluate_on`] with per-worker scratch: bitwise
+    /// identical results, but the event-engine buffers and the most
+    /// recently used plan are reused across calls. Back-to-back
+    /// evaluations whose scenarios differ only in timing-side axes
+    /// (engine; for clusters also the inter-package fabric) skip the
+    /// shared cache entirely — no fingerprint hashing, no mutex. This is
+    /// what [`run_on`] drives; `evaluate_on` remains the stateless form.
+    pub fn evaluate_with(
+        &self,
+        cache: &PlanCache,
+        scratch: &mut EvalScratch,
+    ) -> crate::Result<Evaluation> {
         let detail = match &self.target {
             Target::Package(hw) => {
-                let plan = cache.plan(&self.model, hw, self.method, self.opts);
+                let plan = scratch.package_plan(cache, &self.model, hw, self.method, self.opts);
                 if plan.occupancy.enforced && !plan.occupancy.fits() {
                     return Err(plan.occupancy.infeasible_error(
                         &format!(
@@ -179,12 +198,35 @@ impl Scenario {
                         self.opts.checkpoint,
                     ));
                 }
-                EvalDetail::Package(plan.time(self.engine))
+                EvalDetail::Package(plan.time_in(self.engine, &mut scratch.arena))
             }
-            Target::Cluster(c) => EvalDetail::Cluster(
-                ClusterPlan::build(&self.model, c, self.method, self.opts, cache)?
-                    .time(self.engine),
-            ),
+            Target::Cluster(c) => {
+                let EvalScratch { arena, last_cluster, .. } = scratch;
+                let reusable = matches!(
+                    last_cluster,
+                    Some((m, meth, o, p))
+                        if *meth == self.method
+                            && *o == self.opts
+                            && m == &self.model
+                            && p.cluster.packages == c.packages
+                            && p.cluster.dp == c.dp
+                            && p.cluster.pp == c.pp
+                            && p.cluster.package_hw == c.package_hw
+                );
+                if !reusable {
+                    let plan = ClusterPlan::build(&self.model, c, self.method, self.opts, cache)?;
+                    *last_cluster = Some((self.model.clone(), self.method, self.opts, plan));
+                }
+                let (_, _, _, plan) = last_cluster
+                    .as_mut()
+                    .expect("cluster plan was just ensured");
+                if plan.cluster.inter != c.inter {
+                    // Fabric-only change: planning is fabric-blind, so the
+                    // priced plan is retargeted instead of rebuilt.
+                    plan.retarget_inter(c.inter.clone());
+                }
+                EvalDetail::Cluster(plan.time_in(self.engine, arena))
+            }
         };
         Ok(Evaluation {
             batch_tokens: self.model.tokens_per_batch(),
@@ -783,17 +825,79 @@ impl ScenarioGrid {
     }
 }
 
+/// Per-worker scratch for [`Scenario::evaluate_with`]: the reusable
+/// event-engine arena plus the most recently used plan on each side.
+/// One lives on each sweep worker's stack — never shared, never locked.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    /// Reused event-engine buffers (graph slabs, wheel, kernel state).
+    pub arena: EngineArena,
+    #[allow(clippy::type_complexity)]
+    last_package: Option<(ModelConfig, HardwareConfig, Method, PlanOptions, Arc<SimPlan>)>,
+    #[allow(clippy::type_complexity)]
+    last_cluster: Option<(ModelConfig, Method, PlanOptions, ClusterPlan)>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+
+    /// The priced package plan for this config — last one reused when the
+    /// plan-side axes match, otherwise fetched through the shared cache.
+    fn package_plan(
+        &mut self,
+        cache: &PlanCache,
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> Arc<SimPlan> {
+        if let Some((m, h, meth, o, plan)) = &self.last_package {
+            if *meth == method && *o == opts && m == model && h == hw {
+                return Arc::clone(plan);
+            }
+        }
+        let plan = cache.plan(model, hw, method, opts);
+        self.last_package = Some((model.clone(), hw.clone(), method, opts, Arc::clone(&plan)));
+        plan
+    }
+}
+
+/// An execution order that puts plan-compatible scenarios next to each
+/// other: stable sort by plan signature, so each worker's chunk hits the
+/// [`EvalScratch`] last-plan fast path instead of the shared cache.
+/// Result slots are untouched — this only permutes *who computes when*.
+fn plan_affine_order(scenarios: &[Scenario]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scenarios.len()).collect();
+    order.sort_by_key(|&i| {
+        let s = &scenarios[i];
+        let sig = match &s.target {
+            Target::Package(hw) => PlanSig::of(&s.model, hw, s.method, s.opts),
+            Target::Cluster(c) => PlanSig::of_cluster(&s.model, c, s.method, s.opts),
+        };
+        (sig, i)
+    });
+    order
+}
+
 /// Run scenarios on the shared self-scheduling worker pool against a
 /// caller-owned plan cache. Results come back **in scenario order**,
 /// bitwise independent of `threads` (`0` = one worker per core).
+/// Execution order is permuted so plan-compatible points land on the
+/// same worker back to back (see [`EvalScratch`]); the permutation never
+/// affects results — every evaluation is a pure function of its scenario.
 pub fn run_on(
     cache: &PlanCache,
     scenarios: &[Scenario],
     threads: usize,
 ) -> crate::Result<Vec<Evaluation>> {
-    parallel_map(scenarios, threads, |s| s.evaluate_on(cache))
-        .into_iter()
-        .collect()
+    let order = plan_affine_order(scenarios);
+    parallel_map_with(scenarios, threads, Some(&order), EvalScratch::new, |scr, s| {
+        s.evaluate_with(cache, scr)
+    })
+    .into_iter()
+    .collect()
 }
 
 /// [`run_on`] with a private cache and one worker per core.
@@ -1479,8 +1583,10 @@ mod tests {
         let evals = run_on(&cache, &pts, 1).unwrap();
         assert_eq!(evals.len(), 3);
         assert_eq!(cache.len(), 1, "three engines share one plan");
+        // The worker's EvalScratch keeps the last plan, so the two
+        // engine-only neighbors never even probe the shared cache.
         assert_eq!(cache.misses(), 1);
-        assert_eq!(cache.hits(), 2);
+        assert_eq!(cache.hits(), 0, "engine neighbors reuse the scratch plan");
     }
 
     #[test]

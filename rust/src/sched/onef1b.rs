@@ -25,7 +25,7 @@
 //!   (property-tested below).
 
 use crate::nop::analytic::Pass;
-use crate::sim::engine::{EventEngine, ResourceId, Service, TaskId};
+use crate::sim::engine::{EngineArena, ResourceId, Service, TaskId};
 use crate::util::{Bytes, Seconds};
 
 /// Per-microbatch execution time of one pipeline stage.
@@ -109,12 +109,35 @@ pub fn onef1b_event(
     tail_bytes: &[Bytes],
     fabric: &Fabric,
 ) -> Seconds {
+    onef1b_event_in(
+        &mut EngineArena::new(),
+        stages,
+        microbatches,
+        act_bytes,
+        tail_bytes,
+        fabric,
+    )
+}
+
+/// [`onef1b_event`] against a caller-owned [`EngineArena`]: the 1F1B DAG
+/// is rebuilt into the arena's engine buffers and executed on its kernel,
+/// so the cluster sweep hot path allocates only the O(p·m) bookkeeping
+/// per call. Bitwise identical to [`onef1b_event`].
+pub fn onef1b_event_in(
+    arena: &mut EngineArena,
+    stages: &[PipelineStage],
+    microbatches: usize,
+    act_bytes: Bytes,
+    tail_bytes: &[Bytes],
+    fabric: &Fabric,
+) -> Seconds {
     let p = stages.len();
     assert!(p >= 1, "pipeline needs at least one stage");
     assert_eq!(tail_bytes.len(), p, "one tail stream slot per stage");
     let m = microbatches.max(1);
 
-    let mut eng = EventEngine::new();
+    let eng = &mut arena.engine;
+    eng.reset();
     let fabric_res = eng.fair("inter-package fabric", fabric.bandwidth);
     let stage_res: Vec<ResourceId> = (0..p).map(|s| eng.fifo(&format!("stage{s}"))).collect();
     let wire = Bytes(act_bytes.raw() + fabric.latency.raw() * fabric.bandwidth);
@@ -198,7 +221,8 @@ pub fn onef1b_event(
             eng.task(fabric_res, Service::Transfer(tail), &[last]);
         }
     }
-    eng.run().makespan
+    arena.kernel.execute(&arena.engine);
+    arena.kernel.makespan()
 }
 
 #[cfg(test)]

@@ -9,7 +9,7 @@
 //! "DRAM") is only the excess over the on-package stage.
 
 use crate::memory::dram::DramModel;
-use crate::sim::engine::{EventEngine, Service, TaskId};
+use crate::sim::engine::{EngineArena, EventEngine, Service, TaskId};
 use crate::util::{Bytes, Seconds};
 
 /// Per-group stage times for one batch.
@@ -139,9 +139,25 @@ pub fn overlap_chain_event_capped(
     prefetch: bool,
     cap: usize,
 ) -> ChainResult {
-    let mut eng = EventEngine::new();
+    overlap_chain_event_in(&mut EngineArena::new(), stages, dram, prefetch, cap)
+}
+
+/// [`overlap_chain_event_capped`] against a caller-owned [`EngineArena`]:
+/// the task graph is rebuilt into the arena's engine buffers and executed
+/// on its kernel, so sweeps re-timing many plans allocate nothing per
+/// call. Results are bitwise identical to the throwaway-engine entry
+/// points.
+pub fn overlap_chain_event_in(
+    arena: &mut EngineArena,
+    stages: &[GroupStage],
+    dram: &DramModel,
+    prefetch: bool,
+    cap: usize,
+) -> ChainResult {
+    let eng = &mut arena.engine;
+    eng.reset();
     let pkg = eng.fifo("package");
-    let dram_res = dram.resource(&mut eng);
+    let dram_res = dram.resource(eng);
     let mut prev_d: Option<TaskId> = None;
     let mut prev_p: Option<TaskId> = None;
     let mut group_last: Vec<TaskId> = Vec::with_capacity(stages.len());
@@ -150,39 +166,46 @@ pub fn overlap_chain_event_capped(
         let a = st.on_package / n as f64;
         let chunk = st.dram_bytes / n as f64;
         for i in 0..n {
-            let mut deps_d: Vec<TaskId> = Vec::new();
+            let mut deps_d: [TaskId; 2] = [0; 2];
+            let mut nd = 0;
             if let Some(d) = prev_d {
-                deps_d.push(d);
+                deps_d[nd] = d;
+                nd += 1;
             }
             if i == 0 && !prefetch {
                 if let Some(p) = prev_p {
-                    deps_d.push(p);
+                    deps_d[nd] = p;
+                    nd += 1;
                 }
             }
-            let d = eng.task(dram_res, Service::Transfer(chunk), &deps_d);
-            let mut deps_p = vec![d];
+            let d = eng.task(dram_res, Service::Transfer(chunk), &deps_d[..nd]);
+            let mut deps_p = [d, 0];
+            let mut np = 1;
             if let Some(p) = prev_p {
-                deps_p.push(p);
+                deps_p[np] = p;
+                np += 1;
             }
-            let p = eng.task(pkg, Service::Busy(a), &deps_p);
+            let p = eng.task(pkg, Service::Busy(a), &deps_p[..np]);
             prev_d = Some(d);
             prev_p = Some(p);
         }
         group_last.push(prev_p.expect("each group emits at least one item"));
     }
-    let run = eng.run();
+    arena.kernel.execute(&arena.engine);
+    let kernel = &arena.kernel;
     let mut groups = Vec::with_capacity(stages.len());
     let mut prev_finish = Seconds::ZERO;
     for (st, &p) in stages.iter().zip(&group_last) {
-        let span = run.finish[p] - prev_finish;
+        let fin = kernel.finish(p);
+        let span = fin - prev_finish;
         groups.push(OverlapResult {
             latency: span,
             exposed_dram: span.saturating_sub(st.on_package),
         });
-        prev_finish = run.finish[p];
+        prev_finish = fin;
     }
     ChainResult {
-        latency: run.makespan,
+        latency: kernel.makespan(),
         groups,
     }
 }

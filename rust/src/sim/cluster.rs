@@ -31,7 +31,8 @@ use crate::memory::sram::OccupancyReport;
 use crate::nop::analytic::Method;
 use crate::sched::checkpoint::Checkpoint;
 use crate::parallel::hybrid::HybridSpec;
-use crate::sched::onef1b::{onef1b_analytic, onef1b_event, Fabric, PipelineStage};
+use crate::sched::onef1b::{onef1b_analytic, onef1b_event_in, Fabric, PipelineStage};
+use crate::sim::engine::EngineArena;
 use crate::sim::sweep::PlanCache;
 use crate::sim::system::{EngineKind, PlanOptions, SimPlan, SimResult};
 use crate::util::{Bytes, Energy, Seconds};
@@ -234,6 +235,19 @@ impl ClusterPlan {
         )
     }
 
+    /// Retarget the priced plan to a different inter-package fabric.
+    ///
+    /// Planning is fabric-blind: stage sub-plans, microbatch depth,
+    /// in-flight activations and occupancy are all intra-package, and
+    /// [`HybridSpec::plan`] never reads `inter` — so swapping the fabric
+    /// is exact: [`ClusterPlan::build`] against the new fabric yields an
+    /// identical plan (asserted in `tests/integration_cluster.rs`). Only
+    /// [`ClusterPlan::time`] consumes the fabric. The scenario runner
+    /// uses this to reuse one plan across fabric-only grid neighbors.
+    pub fn retarget_inter(&mut self, inter: crate::config::cluster::InterPkgLink) {
+        self.cluster.inter = inter;
+    }
+
     /// Time the cluster under a backend.
     ///
     /// All pipeline stages are timed at the critical (deepest) stage's
@@ -242,6 +256,14 @@ impl ClusterPlan {
     /// the homogeneous 1F1B DAG in lockstep. Energy, by contrast, counts
     /// every stage's true priced work.
     pub fn time(&self, engine: EngineKind) -> ClusterResult {
+        self.time_in(engine, &mut EngineArena::new())
+    }
+
+    /// [`ClusterPlan::time`] against a caller-owned [`EngineArena`]: the
+    /// critical-stage group chain and the 1F1B DAG are both executed on
+    /// the arena's reusable buffers. Bitwise identical to
+    /// [`ClusterPlan::time`].
+    pub fn time_in(&self, engine: EngineKind, arena: &mut EngineArena) -> ClusterResult {
         let dp = self.cluster.dp;
         let dpf = dp as f64;
         let pp = self.cluster.pp;
@@ -253,7 +275,7 @@ impl ClusterPlan {
 
         // Critical stage under the requested backend (the degenerate
         // cluster's entire result).
-        let stage = self.stage_plans[0].time(engine);
+        let stage = self.stage_plans[0].time_in(engine, arena);
 
         // ── pipeline ──
         // All dp replicas run the same 1F1B schedule in lockstep over the
@@ -282,7 +304,7 @@ impl ClusterPlan {
             let lat = if engine.is_event() {
                 // DP gradient rings ride the same fair-shared fabric.
                 let tails: Vec<Bytes> = (0..pp).map(|s| self.allreduce_wire(s)).collect();
-                onef1b_event(&stages_vec, m, wire_mb, &tails, &fabric)
+                onef1b_event_in(arena, &stages_vec, m, wire_mb, &tails, &fabric)
             } else {
                 onef1b_analytic(&stages_vec, m, wire_mb, &fabric)
             };

@@ -21,6 +21,32 @@
 //! builder is immutable under `run`, so one graph can be re-run (and the
 //! engine can be cloned and extended for scenario sweeps).
 //!
+//! # Hot-path layout
+//!
+//! Sweeps time the same plan shapes millions of times, so the execution
+//! state is split from the graph and made reusable:
+//!
+//! * [`EventEngine`] is a *slab* builder: resource names share one string
+//!   arena, task dependency lists share one `Vec<TaskId>` arena — adding a
+//!   task never allocates a per-task `Vec`. [`reset`](EventEngine::reset)
+//!   clears the graph while keeping every buffer's capacity.
+//! * [`Kernel`] owns all per-run state (indegrees, CSR children, fair
+//!   flows, the event queue) and is reusable across runs and across
+//!   engines: [`Kernel::execute`] re-initializes in place.
+//! * [`EngineArena`] bundles one engine and one kernel — the unit of reuse
+//!   threaded through [`crate::sim::system`], [`crate::sim::cluster`] and
+//!   [`crate::sched::pipeline`].
+//!
+//! The event queue is a calendar (time-wheel) queue: [`WHEEL_SLOTS`]
+//! buckets of width `makespan_hint / 64`, each bucket a small binary heap,
+//! with an overflow heap for events outside the wheel's window. Pops
+//! compare the current bucket's top against the overflow top, so the pop
+//! order is *exactly* the global `(time, seq)` order of a single binary
+//! heap for any bucket width — the width only affects how much ordering
+//! work the heaps do. `Kernel::set_heap_only` routes every event through
+//! the overflow heap, reproducing the legacy single-heap behaviour
+//! bit-for-bit; the parity tests lean on this.
+//!
 //! On congestion-free graphs the engine reproduces the closed-form models
 //! exactly: a single flow on a fair resource finishes at `bytes/bandwidth`,
 //! serialized steps on FIFO links sum, and the two-stage mini-batch
@@ -36,6 +62,13 @@ use crate::util::{Bytes, Seconds};
 pub type TaskId = usize;
 /// Resource handle returned by [`EventEngine::resource`].
 pub type ResourceId = usize;
+
+/// Number of buckets in the calendar queue.
+const WHEEL_SLOTS: usize = 256;
+/// Bucket width is `makespan_hint / WHEEL_SPAN_DIV`, so the wheel's window
+/// covers `WHEEL_SLOTS / WHEEL_SPAN_DIV` = 4× the hinted makespan before
+/// events spill to the overflow heap.
+const WHEEL_SPAN_DIV: f64 = 64.0;
 
 /// What a task asks of its resource.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -57,25 +90,33 @@ pub enum Sharing {
     Fair,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct ResourceSpec {
-    name: String,
+    /// Range of the resource's name in the engine's shared name arena.
+    name_start: usize,
+    name_end: usize,
     bandwidth: f64,
     sharing: Sharing,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct TaskSpec {
     resource: ResourceId,
     service: Service,
-    deps: Vec<TaskId>,
+    /// Range of the task's dependency list in the engine's shared arena.
+    deps_start: usize,
+    deps_end: usize,
 }
 
-/// Task-graph builder and runner.
+/// Task-graph builder. Per-run execution state lives in [`Kernel`].
 #[derive(Debug, Clone, Default)]
 pub struct EventEngine {
     resources: Vec<ResourceSpec>,
     tasks: Vec<TaskSpec>,
+    /// Name arena: every resource name, concatenated.
+    names: String,
+    /// Dependency arena: every task's dependency list, concatenated.
+    deps: Vec<TaskId>,
 }
 
 /// Result of one simulation run.
@@ -100,6 +141,15 @@ impl EventEngine {
         EventEngine::default()
     }
 
+    /// Clear the task graph, keeping every buffer's capacity — the reuse
+    /// hook for sweeps that rebuild similar graphs per grid point.
+    pub fn reset(&mut self) {
+        self.resources.clear();
+        self.tasks.clear();
+        self.names.clear();
+        self.deps.clear();
+    }
+
     /// Register a resource. `bandwidth` is in bytes/s and must be positive
     /// and finite; FIFO resources that only ever serve [`Service::Busy`]
     /// tasks can use [`fifo`](EventEngine::fifo) (bandwidth 1.0).
@@ -108,8 +158,11 @@ impl EventEngine {
             bandwidth.is_finite() && bandwidth > 0.0,
             "resource '{name}': bandwidth must be positive and finite"
         );
+        let name_start = self.names.len();
+        self.names.push_str(name);
         self.resources.push(ResourceSpec {
-            name: name.to_string(),
+            name_start,
+            name_end: self.names.len(),
             bandwidth,
             sharing,
         });
@@ -140,10 +193,13 @@ impl EventEngine {
         for &d in deps {
             assert!(d < id, "task dependency {d} does not exist yet");
         }
+        let deps_start = self.deps.len();
+        self.deps.extend_from_slice(deps);
         self.tasks.push(TaskSpec {
             resource,
             service,
-            deps: deps.to_vec(),
+            deps_start,
+            deps_end: self.deps.len(),
         });
         id
     }
@@ -157,12 +213,19 @@ impl EventEngine {
     }
 
     pub fn resource_name(&self, r: ResourceId) -> &str {
-        &self.resources[r].name
+        let spec = &self.resources[r];
+        &self.names[spec.name_start..spec.name_end]
     }
 
-    /// Execute the task graph.
+    fn deps_of(&self, spec: &TaskSpec) -> &[TaskId] {
+        &self.deps[spec.deps_start..spec.deps_end]
+    }
+
+    /// Execute the task graph with a throwaway kernel.
     pub fn run(&self) -> RunResult {
-        Sim::new(self).run()
+        let mut kernel = Kernel::new();
+        kernel.execute(self);
+        kernel.result()
     }
 }
 
@@ -208,6 +271,119 @@ impl PartialOrd for Ev {
     }
 }
 
+/// Calendar (time-wheel) event queue with exact `(time, seq)` pop order.
+///
+/// Events within the wheel's window land in one of [`WHEEL_SLOTS`] buckets
+/// of `width` seconds each; everything else (and everything, before the
+/// width is calibrated) goes to the `overflow` binary heap. Each bucket is
+/// itself a binary heap, and [`pop`](TimeWheel::pop) takes the earlier of
+/// the current bucket's top and the overflow top, so the order is exactly
+/// what one global heap would produce — the bucket width is purely a
+/// performance knob. `base` is the start time of the bucket at `cursor`,
+/// and the two advance together, keeping the affine slot map
+/// `slot(t) = floor((t − base) / width)` consistent for pushes.
+#[derive(Debug, Clone, Default)]
+struct TimeWheel {
+    slots: Vec<BinaryHeap<Ev>>,
+    overflow: BinaryHeap<Ev>,
+    /// Bucket width in seconds; 0 = uncalibrated (all pushes overflow
+    /// until a positive event time fixes the scale).
+    width: f64,
+    /// Start time of the bucket at `cursor`.
+    base: f64,
+    cursor: usize,
+    /// Events currently stored in `slots` (not in `overflow`).
+    in_slots: usize,
+    /// Route every push to the overflow heap: exactly the legacy
+    /// single-`BinaryHeap` queue. The parity tests' reference mode.
+    heap_only: bool,
+}
+
+impl TimeWheel {
+    /// Re-arm for a new run, keeping heap capacities.
+    fn prepare(&mut self, width_hint: f64, heap_only: bool) {
+        if self.slots.is_empty() {
+            self.slots = (0..WHEEL_SLOTS).map(|_| BinaryHeap::new()).collect();
+        }
+        // A completed run drains the queue, but a panicked one may not:
+        // clear defensively so a reused kernel cannot replay stale events.
+        for s in &mut self.slots {
+            s.clear();
+        }
+        self.overflow.clear();
+        self.in_slots = 0;
+        self.base = 0.0;
+        self.cursor = 0;
+        self.heap_only = heap_only;
+        self.width = if width_hint.is_finite() && width_hint > 0.0 {
+            width_hint
+        } else {
+            0.0
+        };
+    }
+
+    fn push(&mut self, ev: Ev) {
+        if self.heap_only {
+            self.overflow.push(ev);
+            return;
+        }
+        if self.width <= 0.0 {
+            // Calibrate from the first positive event time: bucket width
+            // such that this event lands well inside the window.
+            if ev.time.is_finite() && ev.time > 0.0 {
+                self.width = ev.time / 16.0;
+            } else {
+                self.overflow.push(ev);
+                return;
+            }
+        }
+        let rel = (ev.time - self.base) / self.width;
+        // The negated comparison also catches NaN event times — those stay
+        // on the overflow heap where `total_cmp` gives them a fixed order.
+        if rel >= 0.0 && rel < WHEEL_SLOTS as f64 {
+            let slot = (self.cursor + rel as usize) % WHEEL_SLOTS;
+            self.slots[slot].push(ev);
+            self.in_slots += 1;
+        } else {
+            self.overflow.push(ev);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        if self.heap_only {
+            return self.overflow.pop();
+        }
+        loop {
+            if self.in_slots == 0 {
+                let ev = self.overflow.pop()?;
+                // The wheel is empty: rebase its window at the popped time
+                // so subsequent pushes land back in the buckets.
+                if self.width > 0.0 {
+                    self.base = ev.time;
+                }
+                return Some(ev);
+            }
+            if self.slots[self.cursor].is_empty() {
+                self.cursor = (self.cursor + 1) % WHEEL_SLOTS;
+                self.base += self.width;
+                continue;
+            }
+            // Earliest `(time, seq)` wins between the current bucket and
+            // the overflow heap; the reversed `Ord` makes greater=earlier.
+            let take_overflow = match (self.overflow.peek(), self.slots[self.cursor].peek()) {
+                (Some(o), Some(s)) => o > s,
+                _ => false,
+            };
+            return if take_overflow {
+                self.overflow.pop()
+            } else {
+                self.in_slots -= 1;
+                self.slots[self.cursor].pop()
+            };
+        }
+    }
+}
+
 // ───────────────────────── run state ─────────────────────────
 
 #[derive(Debug, Clone)]
@@ -224,65 +400,172 @@ struct FairState {
     version: u64,
 }
 
-struct Sim<'a> {
-    eng: &'a EventEngine,
-    children: Vec<Vec<TaskId>>,
+/// A flow is complete when its remaining service is zero up to
+/// floating-point drift accumulated over rate changes.
+fn flow_done(fl: &Flow) -> bool {
+    fl.remaining <= fl.total * 1e-12 + 1e-9
+}
+
+/// Reusable execution state for [`EventEngine`] graphs.
+///
+/// All per-run vectors (indegrees, CSR children, fair-flow lists, the
+/// event queue) live here and keep their capacity across
+/// [`execute`](Kernel::execute) calls, so timing many graphs through one
+/// kernel allocates only on high-water-mark growth. Results are read
+/// through the accessors ([`makespan`](Kernel::makespan),
+/// [`finish`](Kernel::finish), …) or copied out with
+/// [`result`](Kernel::result).
+#[derive(Debug, Clone, Default)]
+pub struct Kernel {
+    // Children in CSR form: task `t`'s dependents are
+    // `children[child_start[t]..child_start[t + 1]]`.
+    children: Vec<TaskId>,
+    child_start: Vec<usize>,
+    /// CSR fill cursors (scratch for graph loading).
+    fill: Vec<usize>,
     indeg: Vec<usize>,
     start: Vec<f64>,
     finish: Vec<f64>,
     busy: Vec<f64>,
     fifo_until: Vec<f64>,
     fair: Vec<FairState>,
-    heap: BinaryHeap<Ev>,
+    queue: TimeWheel,
+    /// Tasks drained by the current fair-check (scratch).
+    finished: Vec<TaskId>,
     seq: u64,
     events: usize,
     done: usize,
+    makespan: f64,
+    /// Last run's makespan, carried across runs to size the wheel buckets.
+    width_hint: f64,
+    heap_only: bool,
 }
 
-impl<'a> Sim<'a> {
-    fn new(eng: &'a EventEngine) -> Sim<'a> {
+impl Kernel {
+    pub fn new() -> Kernel {
+        Kernel::default()
+    }
+
+    /// Route all events through a single binary heap (the legacy queue)
+    /// instead of the calendar wheel. Pop order — and therefore every
+    /// result — is identical either way; this exists so tests can assert
+    /// exactly that.
+    pub fn set_heap_only(&mut self, on: bool) {
+        self.heap_only = on;
+    }
+
+    /// Completion time of the last task in the most recent run.
+    pub fn makespan(&self) -> Seconds {
+        Seconds(self.makespan)
+    }
+
+    /// Per-task service start time from the most recent run.
+    pub fn start(&self, t: TaskId) -> Seconds {
+        Seconds(self.start[t])
+    }
+
+    /// Per-task completion time from the most recent run.
+    pub fn finish(&self, t: TaskId) -> Seconds {
+        Seconds(self.finish[t])
+    }
+
+    /// Per-resource busy time from the most recent run.
+    pub fn busy(&self, r: ResourceId) -> Seconds {
+        Seconds(self.busy[r])
+    }
+
+    /// Events processed by the most recent run.
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    /// The most recent run's results as an owned [`RunResult`]. Hot paths
+    /// that only need a few numbers should prefer the accessors — this
+    /// copies three vectors.
+    pub fn result(&self) -> RunResult {
+        RunResult {
+            makespan: Seconds(self.makespan),
+            start: self.start.iter().copied().map(Seconds).collect(),
+            finish: self.finish.iter().copied().map(Seconds).collect(),
+            busy: self.busy.iter().copied().map(Seconds).collect(),
+            events: self.events,
+        }
+    }
+
+    /// Re-initialize all per-run state for `eng`'s graph, keeping buffer
+    /// capacity, and load the dependency structure in CSR form.
+    fn load(&mut self, eng: &EventEngine) {
         let nt = eng.tasks.len();
         let nr = eng.resources.len();
-        let mut children: Vec<Vec<TaskId>> = vec![Vec::new(); nt];
-        let mut indeg = vec![0usize; nt];
-        for (id, t) in eng.tasks.iter().enumerate() {
-            indeg[id] = t.deps.len();
-            for &d in &t.deps {
-                children[d].push(id);
+        self.start.clear();
+        self.start.resize(nt, 0.0);
+        self.finish.clear();
+        self.finish.resize(nt, 0.0);
+        self.busy.clear();
+        self.busy.resize(nr, 0.0);
+        self.fifo_until.clear();
+        self.fifo_until.resize(nr, 0.0);
+        self.indeg.clear();
+        self.indeg.resize(nt, 0);
+        // Fair states are reset in place so their flow Vecs keep capacity.
+        self.fair.truncate(nr);
+        for st in &mut self.fair {
+            st.flows.clear();
+            st.last = 0.0;
+            st.version = 0;
+        }
+        if self.fair.len() < nr {
+            self.fair.resize_with(nr, FairState::default);
+        }
+        // Children CSR: count per parent, prefix-sum, fill. Filling in
+        // task-id order reproduces the per-parent child order the old
+        // Vec<Vec> construction had, which tie-breaks nothing but keeps
+        // arrival order byte-identical anyway.
+        self.child_start.clear();
+        self.child_start.resize(nt + 1, 0);
+        for spec in &eng.tasks {
+            for &d in eng.deps_of(spec) {
+                self.child_start[d + 1] += 1;
             }
         }
-        Sim {
-            eng,
-            children,
-            indeg,
-            start: vec![0.0; nt],
-            finish: vec![0.0; nt],
-            busy: vec![0.0; nr],
-            fifo_until: vec![0.0; nr],
-            fair: vec![FairState::default(); nr],
-            heap: BinaryHeap::new(),
-            seq: 0,
-            events: 0,
-            done: 0,
+        for i in 0..nt {
+            self.child_start[i + 1] += self.child_start[i];
         }
+        self.children.clear();
+        self.children.resize(eng.deps.len(), 0);
+        self.fill.clear();
+        self.fill.extend_from_slice(&self.child_start[..nt]);
+        for (id, spec) in eng.tasks.iter().enumerate() {
+            self.indeg[id] = spec.deps_end - spec.deps_start;
+            for &d in eng.deps_of(spec) {
+                let at = self.fill[d];
+                self.children[at] = id;
+                self.fill[d] = at + 1;
+            }
+        }
+        self.queue.prepare(self.width_hint / WHEEL_SPAN_DIV, self.heap_only);
+        self.finished.clear();
+        self.seq = 0;
+        self.events = 0;
+        self.done = 0;
+        self.makespan = 0.0;
     }
 
     fn push(&mut self, time: f64, kind: EvKind) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Ev { time, seq, kind });
+        self.queue.push(Ev { time, seq, kind });
     }
 
     /// A task's dependencies are all satisfied: hand it to its resource.
-    fn arrive(&mut self, task: TaskId, now: f64) {
-        let spec = &self.eng.tasks[task];
+    fn arrive(&mut self, eng: &EventEngine, task: TaskId, now: f64) {
+        let spec = eng.tasks[task];
         let resource = spec.resource;
-        let service = spec.service;
-        let rspec = &self.eng.resources[resource];
+        let rspec = eng.resources[resource];
         let bw = rspec.bandwidth;
         match rspec.sharing {
             Sharing::Fifo => {
-                let dur = match service {
+                let dur = match spec.service {
                     Service::Busy(d) => d.raw(),
                     Service::Transfer(b) => b.raw() / bw,
                 };
@@ -294,25 +577,25 @@ impl<'a> Sim<'a> {
                 self.push(end, EvKind::FifoDone(task));
             }
             Sharing::Fair => {
-                let bytes = match service {
+                let bytes = match spec.service {
                     Service::Transfer(b) => b.raw(),
                     Service::Busy(d) => d.raw() * bw,
                 };
                 self.start[task] = now;
-                self.advance_fair(resource, now);
+                self.advance_fair(eng, resource, now);
                 self.fair[resource].flows.push(Flow {
                     task,
                     remaining: bytes,
                     total: bytes,
                 });
-                self.reschedule_fair(resource, now);
+                self.reschedule_fair(eng, resource, now);
             }
         }
     }
 
     /// Advance a fair resource's fluid state to time `to`.
-    fn advance_fair(&mut self, r: ResourceId, to: f64) {
-        let bw = self.eng.resources[r].bandwidth;
+    fn advance_fair(&mut self, eng: &EventEngine, r: ResourceId, to: f64) {
+        let bw = eng.resources[r].bandwidth;
         let st = &mut self.fair[r];
         let dt = to - st.last;
         st.last = to;
@@ -328,8 +611,8 @@ impl<'a> Sim<'a> {
     }
 
     /// Invalidate outstanding checks for `r` and schedule the next one.
-    fn reschedule_fair(&mut self, r: ResourceId, now: f64) {
-        let bw = self.eng.resources[r].bandwidth;
+    fn reschedule_fair(&mut self, eng: &EventEngine, r: ResourceId, now: f64) {
+        let bw = eng.resources[r].bandwidth;
         let st = &mut self.fair[r];
         st.version += 1;
         let version = st.version;
@@ -346,72 +629,100 @@ impl<'a> Sim<'a> {
         self.push(now + min_rem / rate, EvKind::FairCheck(r, version));
     }
 
-    /// A flow is complete when its remaining service is zero up to
-    /// floating-point drift accumulated over rate changes.
-    fn flow_done(fl: &Flow) -> bool {
-        fl.remaining <= fl.total * 1e-12 + 1e-9
-    }
-
-    fn complete(&mut self, task: TaskId, now: f64) {
+    fn complete(&mut self, eng: &EventEngine, task: TaskId, now: f64) {
         self.finish[task] = now;
         self.done += 1;
-        for i in 0..self.children[task].len() {
-            let child = self.children[task][i];
+        for i in self.child_start[task]..self.child_start[task + 1] {
+            let child = self.children[i];
             self.indeg[child] -= 1;
             if self.indeg[child] == 0 {
-                self.arrive(child, now);
+                self.arrive(eng, child, now);
             }
         }
     }
 
-    fn run(mut self) -> RunResult {
+    /// Execute `eng`'s task graph, replacing this kernel's previous run
+    /// state. Results stay readable through the accessors until the next
+    /// `execute`.
+    pub fn execute(&mut self, eng: &EventEngine) {
+        self.load(eng);
         // Roots arrive at t = 0 in creation order.
-        for id in 0..self.eng.tasks.len() {
+        for id in 0..eng.tasks.len() {
             if self.indeg[id] == 0 {
-                self.arrive(id, 0.0);
+                self.arrive(eng, id, 0.0);
             }
         }
         let mut now = 0.0f64;
-        while let Some(ev) = self.heap.pop() {
+        while let Some(ev) = self.queue.pop() {
             debug_assert!(ev.time >= now, "event queue must be monotonic");
             now = ev.time;
             self.events += 1;
             match ev.kind {
-                EvKind::FifoDone(task) => self.complete(task, now),
+                EvKind::FifoDone(task) => self.complete(eng, task, now),
                 EvKind::FairCheck(r, version) => {
                     if self.fair[r].version != version {
                         continue; // superseded by a later arrival/completion
                     }
-                    self.advance_fair(r, now);
-                    let mut finished: Vec<TaskId> = Vec::new();
-                    self.fair[r].flows.retain(|fl| {
-                        if Self::flow_done(fl) {
-                            finished.push(fl.task);
-                            false
-                        } else {
-                            true
-                        }
-                    });
-                    for t in finished {
-                        self.complete(t, now);
+                    self.advance_fair(eng, r, now);
+                    self.finished.clear();
+                    {
+                        // Split borrows: drain the resource's finished
+                        // flows (in flow order) into the scratch list.
+                        let Kernel { fair, finished, .. } = self;
+                        fair[r].flows.retain(|fl| {
+                            if flow_done(fl) {
+                                finished.push(fl.task);
+                                false
+                            } else {
+                                true
+                            }
+                        });
                     }
-                    self.reschedule_fair(r, now);
+                    let mut i = 0;
+                    while i < self.finished.len() {
+                        let t = self.finished[i];
+                        self.complete(eng, t, now);
+                        i += 1;
+                    }
+                    self.reschedule_fair(eng, r, now);
                 }
             }
         }
         assert_eq!(
             self.done,
-            self.eng.tasks.len(),
+            eng.tasks.len(),
             "all tasks must complete (the DAG is acyclic by construction)"
         );
-        let makespan = self.finish.iter().copied().fold(0.0, f64::max);
-        RunResult {
-            makespan: Seconds(makespan),
-            start: self.start.into_iter().map(Seconds).collect(),
-            finish: self.finish.into_iter().map(Seconds).collect(),
-            busy: self.busy.into_iter().map(Seconds).collect(),
-            events: self.events,
+        self.makespan = self.finish.iter().copied().fold(0.0, f64::max);
+        if self.makespan > 0.0 {
+            self.width_hint = self.makespan;
         }
+    }
+}
+
+/// One engine + one kernel: the unit of buffer reuse for hot paths that
+/// rebuild and time a task graph per call ([`crate::sim::system::SimPlan::time_in`],
+/// [`crate::sched::pipeline::overlap_chain_event_in`],
+/// [`crate::sched::onef1b::onef1b_event_in`]). A fresh arena behaves
+/// exactly like fresh engines — reuse only recycles allocations, never
+/// results.
+#[derive(Debug, Clone, Default)]
+pub struct EngineArena {
+    pub engine: EventEngine,
+    pub kernel: Kernel,
+}
+
+impl EngineArena {
+    pub fn new() -> EngineArena {
+        EngineArena::default()
+    }
+
+    /// An arena whose kernel uses the legacy single-heap event queue (see
+    /// [`Kernel::set_heap_only`]) — the reference for parity tests.
+    pub fn heap_only() -> EngineArena {
+        let mut arena = EngineArena::default();
+        arena.kernel.set_heap_only(true);
+        arena
     }
 }
 
@@ -603,5 +914,114 @@ mod tests {
         assert_eq!(eng.resource_name(r), "dram");
         assert_eq!(eng.n_resources(), 1);
         assert_eq!(eng.n_tasks(), 0);
+    }
+
+    /// Build a randomized DAG mixing FIFO and fair resources, gated
+    /// dependencies and zero-service tasks.
+    fn random_graph(g: &mut prop::Gen) -> EventEngine {
+        let mut eng = EventEngine::new();
+        let n_fifo = g.usize_range(1, 3);
+        let n_fair = g.usize_range(1, 3);
+        let mut res = Vec::new();
+        for i in 0..n_fifo {
+            res.push(eng.fifo_bw(&format!("f{i}"), g.f64_range(0.5, 8.0)));
+        }
+        for i in 0..n_fair {
+            res.push(eng.fair(&format!("d{i}"), g.f64_range(0.5, 8.0)));
+        }
+        let n = g.usize_range(2, 60);
+        for t in 0..n {
+            let r = *g.pick(&res);
+            let svc = if g.bool() {
+                Service::Busy(Seconds(g.f64_range(0.0, 5.0)))
+            } else {
+                Service::Transfer(Bytes(g.f64_range(0.0, 40.0)))
+            };
+            let mut deps = Vec::new();
+            if t > 0 {
+                for _ in 0..g.usize_range(0, t.min(3)) {
+                    let d = g.usize_range(0, t - 1);
+                    if !deps.contains(&d) {
+                        deps.push(d);
+                    }
+                }
+            }
+            eng.task(r, svc, &deps);
+        }
+        eng
+    }
+
+    /// The calendar wheel's pop order is exactly the legacy heap's: every
+    /// start/finish/busy value and the event count are bitwise identical.
+    #[test]
+    fn wheel_matches_heap_only_order() {
+        prop::check("time wheel == single heap", 64, |g| {
+            let eng = random_graph(g);
+            let mut wheel = Kernel::new();
+            let mut heap = Kernel::new();
+            heap.set_heap_only(true);
+            wheel.execute(&eng);
+            heap.execute(&eng);
+            let same = wheel.result().finish.iter().zip(heap.result().finish.iter())
+                .all(|(a, b)| a.raw().to_bits() == b.raw().to_bits());
+            prop::assert_prop(
+                same && wheel.events() == heap.events()
+                    && wheel.makespan().raw().to_bits() == heap.makespan().raw().to_bits(),
+                format!(
+                    "wheel {}/{} events vs heap {}",
+                    wheel.makespan().raw(),
+                    wheel.events(),
+                    heap.events()
+                ),
+            )
+        });
+    }
+
+    /// A kernel reused across different graphs gives bitwise the same
+    /// answers as a fresh kernel, and `reset` fully clears the builder.
+    #[test]
+    fn kernel_and_engine_reuse_are_bitwise_identical() {
+        prop::check("kernel reuse == fresh kernel", 32, |g| {
+            let mut arena = EngineArena::new();
+            // Pollute the arena with an unrelated graph first.
+            let warm = random_graph(g);
+            arena.kernel.execute(&warm);
+            let eng = random_graph(g);
+            let fresh = eng.run();
+            arena.engine = eng.clone();
+            arena.kernel.execute(&arena.engine);
+            let reused = arena.kernel.result();
+            let same_finish = fresh
+                .finish
+                .iter()
+                .zip(reused.finish.iter())
+                .all(|(a, b)| a.raw().to_bits() == b.raw().to_bits());
+            let same_busy = fresh
+                .busy
+                .iter()
+                .zip(reused.busy.iter())
+                .all(|(a, b)| a.raw().to_bits() == b.raw().to_bits());
+            prop::assert_prop(
+                same_finish && same_busy && fresh.events == reused.events,
+                format!("{} vs {} events", fresh.events, reused.events),
+            )
+        });
+    }
+
+    #[test]
+    fn reset_clears_the_graph() {
+        let mut eng = EventEngine::new();
+        let r = eng.fifo("r");
+        eng.task(r, Service::Busy(Seconds(1.0)), &[]);
+        eng.reset();
+        assert_eq!(eng.n_tasks(), 0);
+        assert_eq!(eng.n_resources(), 0);
+        let out = eng.run();
+        assert_eq!(out.makespan, Seconds::ZERO);
+        // The builder is fully usable after a reset.
+        let r2 = eng.fair("dram", 2.0);
+        assert_eq!(eng.resource_name(r2), "dram");
+        let t = eng.task(r2, Service::Transfer(Bytes(4.0)), &[]);
+        assert_eq!(eng.run().finish[t], Seconds(2.0));
     }
 }

@@ -32,9 +32,10 @@ pub mod system;
 pub mod weak_scaling;
 
 pub use cluster::{simulate_cluster, ClusterPlan, ClusterResult};
-pub use engine::{EventEngine, RunResult, Service, Sharing};
+pub use engine::{EngineArena, EventEngine, Kernel, RunResult, Service, Sharing};
 pub use sweep::{
-    parallel_map, pareto_front, run_points, run_points_threads, PlanCache, SweepPoint,
+    parallel_map, parallel_map_with, pareto_front, run_points, run_points_threads, PlanCache,
+    PlanSig, SweepPoint,
 };
 pub use system::{
     simulate, simulate_engine, simulate_with, EngineKind, LatencyBreakdown, PlanOptions, SimPlan,

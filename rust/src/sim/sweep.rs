@@ -21,11 +21,14 @@
 //! [`ScenarioGrid`]: crate::scenario::ScenarioGrid
 
 use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
+use crate::config::cluster::ClusterConfig;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::nop::analytic::Method;
+use crate::sched::checkpoint::Checkpoint;
 use crate::sim::system::{EngineKind, PlanOptions, SimOptions, SimPlan, SimResult};
 
 /// One point of a sweep: a fully-specified simulation.
@@ -76,7 +79,7 @@ impl SweepPoint {
 // ───────────────────────── plan cache ─────────────────────────
 
 /// FNV-1a over a stream of 64-bit words — deterministic, dependency-free.
-fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
+pub(crate) fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for w in words {
         for byte in w.to_le_bytes() {
@@ -186,27 +189,135 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
     ])
 }
 
-/// Cache key of one plan: model + hardware fingerprints, method, and the
-/// planning-phase ablation switches (the timing backend is *not* part of
-/// the key — that is the whole point of the plan/price/time split).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct PlanKey {
-    model_name: String,
-    model_fp: u64,
-    hw_fp: u64,
-    method: Method,
-    opts: PlanOptions,
+/// Fingerprint of the planning-phase ablation switches. Exhaustive
+/// destructuring: a new `PlanOptions` field is a compile error here.
+fn opts_fingerprint(opts: PlanOptions) -> u64 {
+    let PlanOptions {
+        fusion,
+        bypass_router,
+        checkpoint,
+    } = opts;
+    let ck = match checkpoint {
+        Checkpoint::None => 0u64,
+        Checkpoint::Auto => 1,
+        Checkpoint::EveryK(k) => 2 + k as u64,
+    };
+    fusion as u64 | (bypass_router as u64) << 1 | ck << 2
 }
 
-impl PlanKey {
-    fn of(model: &ModelConfig, hw: &HardwareConfig, method: Method, opts: PlanOptions) -> PlanKey {
-        PlanKey {
-            model_name: model.name.clone(),
-            model_fp: model_fingerprint(model),
-            hw_fp: hw_fingerprint(hw),
-            method,
-            opts,
+fn method_fingerprint(method: Method) -> u64 {
+    match method {
+        Method::FlatRing => 0,
+        Method::TorusRing => 1,
+        Method::Optimus => 2,
+        Method::Hecaton => 3,
+    }
+}
+
+/// Precomputed plan-cache signature: one 64-bit hash over the full
+/// (model, hw, method, plan-options) key. The timing backend is *not*
+/// part of it — that is the whole point of the plan/price/time split.
+///
+/// Computing the signature hashes the configs once; every subsequent
+/// probe ([`PlanCache::plan_with_sig`]) is a single integer map lookup
+/// plus a `PartialEq` confirm, with no re-hashing and no cloning. The
+/// scenario runner also sorts grid points by signature to make
+/// plan-compatible points adjacent per worker
+/// ([`crate::scenario::run_on`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlanSig(u64);
+
+impl PlanSig {
+    /// Signature of a single-package plan key.
+    pub fn of(
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> PlanSig {
+        PlanSig(fnv1a([
+            model_fingerprint(model),
+            hw_fingerprint(hw),
+            method_fingerprint(method),
+            opts_fingerprint(opts),
+        ]))
+    }
+
+    /// Signature of a cluster plan key: the package key plus the cluster
+    /// shape. The inter-package fabric is deliberately excluded — cluster
+    /// planning is fabric-blind ([`crate::sim::cluster::ClusterPlan::retarget_inter`]),
+    /// so fabric-only neighbors share a plan.
+    pub fn of_cluster(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> PlanSig {
+        let base = PlanSig::of(model, &cluster.package_hw, method, opts);
+        PlanSig(fnv1a([
+            base.0,
+            cluster.packages as u64,
+            cluster.dp as u64,
+            cluster.pp as u64,
+        ]))
+    }
+
+    /// The raw 64-bit signature.
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Identity hasher for the already-FNV-mixed [`PlanSig`] keys: the map
+/// must not re-hash what the signature precomputed.
+#[derive(Debug, Clone, Copy, Default)]
+struct SigHashState;
+
+#[derive(Debug, Default)]
+struct SigHasher(u64);
+
+impl Hasher for SigHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        // Only u64 signatures are ever hashed; fold arbitrary bytes anyway
+        // so the hasher stays total.
+        for &b in bytes {
+            self.0 = self.0.rotate_left(8) ^ b as u64;
         }
+    }
+    fn write_u64(&mut self, n: u64) {
+        self.0 = n;
+    }
+}
+
+impl BuildHasher for SigHashState {
+    type Hasher = SigHasher;
+    fn build_hasher(&self) -> SigHasher {
+        SigHasher::default()
+    }
+}
+
+/// One resident plan: the full key (for collision confirms) + the plan.
+#[derive(Debug)]
+struct PlanEntry {
+    model: ModelConfig,
+    hw: HardwareConfig,
+    method: Method,
+    opts: PlanOptions,
+    plan: Arc<SimPlan>,
+}
+
+impl PlanEntry {
+    fn matches(
+        &self,
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> bool {
+        self.method == method && self.opts == opts && self.model == *model && self.hw == *hw
     }
 }
 
@@ -215,9 +326,15 @@ impl PlanKey {
 /// `SimPlan::build` is a pure function, so a cache hit returns a plan
 /// whose timed results are byte-identical to a cold build (asserted in
 /// `tests/integration_sim.rs`).
+///
+/// Storage is a signature-bucketed map ([`PlanSig`] → entries): probes
+/// hash the configs once (or reuse a caller-precomputed signature), hit
+/// without cloning anything, and confirm bucket collisions with a full
+/// `PartialEq` compare — configs are cloned only when a new plan is
+/// inserted.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Arc<SimPlan>>>,
+    plans: Mutex<HashMap<u64, Vec<PlanEntry>, SigHashState>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -235,17 +352,44 @@ impl PlanCache {
         method: Method,
         opts: PlanOptions,
     ) -> Arc<SimPlan> {
-        let key = PlanKey::of(model, hw, method, opts);
-        if let Some(p) = self.plans.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
+        self.plan_with_sig(PlanSig::of(model, hw, method, opts), model, hw, method, opts)
+    }
+
+    /// [`PlanCache::plan`] with a caller-precomputed signature — probe
+    /// sites that can compute (or batch) the signature once skip the
+    /// config re-hashing entirely. `sig` must be
+    /// `PlanSig::of(model, hw, method, opts)`.
+    pub fn plan_with_sig(
+        &self,
+        sig: PlanSig,
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+        method: Method,
+        opts: PlanOptions,
+    ) -> Arc<SimPlan> {
+        if let Some(entries) = self.plans.lock().unwrap().get(&sig.0) {
+            if let Some(e) = entries.iter().find(|e| e.matches(model, hw, method, opts)) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&e.plan);
+            }
         }
         // Build outside the lock (plans are pure; a racing duplicate build
         // produces an identical plan and the first insert wins).
         let built = Arc::new(SimPlan::build(model, hw, method, opts));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.plans.lock().unwrap();
-        Arc::clone(map.entry(key).or_insert(built))
+        let entries = map.entry(sig.0).or_default();
+        if let Some(e) = entries.iter().find(|e| e.matches(model, hw, method, opts)) {
+            return Arc::clone(&e.plan);
+        }
+        entries.push(PlanEntry {
+            model: model.clone(),
+            hw: hw.clone(),
+            method,
+            opts,
+            plan: Arc::clone(&built),
+        });
+        built
     }
 
     /// Simulate one sweep point through the cache.
@@ -266,7 +410,7 @@ impl PlanCache {
 
     /// Number of distinct plans resident.
     pub fn len(&self) -> usize {
-        self.plans.lock().unwrap().len()
+        self.plans.lock().unwrap().values().map(|v| v.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -315,6 +459,37 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_with(items, threads, None, || (), |_: &mut (), t| f(t))
+}
+
+/// [`parallel_map`] with per-worker scratch state and an optional
+/// execution-order permutation.
+///
+/// `init` builds one `S` per worker (one total on the serial path) —
+/// reusable buffers like [`crate::sim::engine::EngineArena`] live exactly
+/// one `init` per thread. `order`, when given, must be a permutation of
+/// `0..items.len()` and controls the order in which workers *claim*
+/// items; results still come back **in item order**, so the output is
+/// bitwise independent of both the permutation and the thread count. The
+/// scenario runner uses the permutation to hand plan-compatible grid
+/// points to the same worker back-to-back ([`crate::scenario::run_on`]).
+pub fn parallel_map_with<T, R, S, I, F>(
+    items: &[T],
+    threads: usize,
+    order: Option<&[usize]>,
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
+    if let Some(ord) = order {
+        assert_eq!(ord.len(), items.len(), "order must be a permutation");
+    }
+    let pick = |k: usize| order.map_or(k, |ord| ord[k]);
     let threads = if threads == 0 {
         default_threads()
     } else {
@@ -323,7 +498,17 @@ where
     .min(items.len().max(1));
 
     if threads <= 1 || items.len() <= 1 {
-        return items.iter().map(f).collect();
+        let mut state = init();
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+        slots.resize_with(items.len(), || None);
+        for k in 0..items.len() {
+            let i = pick(k);
+            slots[i] = Some(f(&mut state, &items[i]));
+        }
+        return slots
+            .into_iter()
+            .map(|r| r.expect("order covers every item"))
+            .collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -331,18 +516,24 @@ where
     let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
     slots.resize_with(items.len(), || None);
     let f = &f;
+    let init = &init;
+    let pick = &pick;
     std::thread::scope(|s| {
         for _ in 0..threads {
             let tx = tx.clone();
             let next = &next;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                if tx.send((i, r)).is_err() {
-                    break;
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= items.len() {
+                        break;
+                    }
+                    let i = pick(k);
+                    let r = f(&mut state, &items[i]);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -499,6 +690,67 @@ mod tests {
         let strings = parallel_map(&items, 4, |&x| format!("#{x}"));
         assert_eq!(strings[96], "#96");
         assert!(parallel_map(&[] as &[usize], 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn precomputed_signature_probes_match_plain_probes() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let cache = PlanCache::new();
+        let via_plain = cache.plan(&m, &hw, Method::Hecaton, PlanOptions::default());
+        let sig = PlanSig::of(&m, &hw, Method::Hecaton, PlanOptions::default());
+        let via_sig = cache.plan_with_sig(sig, &m, &hw, Method::Hecaton, PlanOptions::default());
+        assert!(Arc::ptr_eq(&via_plain, &via_sig), "same resident plan");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        // The signature is stable and engine-free.
+        assert_eq!(
+            sig,
+            PlanSig::of(&m, &hw, Method::Hecaton, PlanOptions::default())
+        );
+        assert_ne!(
+            sig,
+            PlanSig::of(&m, &hw, Method::Optimus, PlanOptions::default())
+        );
+    }
+
+    #[test]
+    fn parallel_map_with_reorders_execution_not_results() {
+        let items: Vec<usize> = (0..53).collect();
+        let reversed: Vec<usize> = (0..items.len()).rev().collect();
+        let serial = parallel_map(&items, 1, |&x| x * 3);
+        for threads in [1usize, 2, 8] {
+            // Per-worker state observes claims; results stay in item order.
+            let got = parallel_map_with(
+                &items,
+                threads,
+                Some(&reversed),
+                || 0usize,
+                |seen, &x| {
+                    *seen += 1;
+                    x * 3
+                },
+            );
+            assert_eq!(got, serial, "threads={threads}");
+        }
+        // Worker state is reused across a worker's items: with one thread
+        // the single state sees every item.
+        let counts = std::sync::Mutex::new(Vec::new());
+        let _ = parallel_map_with(
+            &items,
+            1,
+            None,
+            || 0usize,
+            |seen, &x| {
+                *seen += 1;
+                if x == 52 {
+                    counts.lock().unwrap().push(*seen);
+                }
+                x
+            },
+        );
+        assert_eq!(*counts.lock().unwrap(), vec![53]);
     }
 
     #[test]

@@ -36,7 +36,10 @@ use crate::nop::analytic::{Method, Pass};
 use crate::parallel::plan::{act_bytes, planner, BlockPlan, PlanInput, SramReport};
 use crate::sched::checkpoint::{Checkpoint, CheckpointCounts};
 use crate::sched::fusion::{plan_fusion, singleton_groups, FusionGroup};
-use crate::sched::pipeline::{overlap, overlap_chain_event, GroupStage, StageTimes};
+use crate::sched::pipeline::{
+    overlap, overlap_chain_event_in, GroupStage, StageTimes, EVENT_ITEM_CAP,
+};
+use crate::sim::engine::EngineArena;
 use crate::util::{Bytes, Energy, Seconds};
 use crate::workload::ops::BlockDesc;
 use crate::workload::transformer::layer_blocks;
@@ -589,6 +592,15 @@ impl SimPlan {
     /// on one plan produces byte-identical results to building a fresh
     /// plan each time — the property the sweep plan cache relies on.
     pub fn time(&self, engine: EngineKind) -> SimResult {
+        self.time_in(engine, &mut EngineArena::new())
+    }
+
+    /// [`SimPlan::time`] against a caller-owned [`EngineArena`] — the
+    /// sweep hot path. Event backends rebuild their task graph into the
+    /// arena's buffers instead of allocating a fresh engine per call; the
+    /// analytic backend never touches the arena. Results are bitwise
+    /// identical to [`SimPlan::time`].
+    pub fn time_in(&self, engine: EngineKind, arena: &mut EngineArena) -> SimResult {
         let mut breakdown = self.breakdown;
         let mut energy = self.energy;
         let mut latency = Seconds::ZERO;
@@ -609,10 +621,12 @@ impl SimPlan {
                 }
             }
             EngineKind::Event | EngineKind::EventPrefetch => {
-                let chain = overlap_chain_event(
+                let chain = overlap_chain_event_in(
+                    arena,
                     &self.stages,
                     &self.dram,
                     engine == EngineKind::EventPrefetch,
+                    EVENT_ITEM_CAP,
                 );
                 latency = chain.latency;
                 for g in &chain.groups {

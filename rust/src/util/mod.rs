@@ -1,5 +1,5 @@
 //! Shared substrates: units, formatting, statistics, tables, PRNG,
-//! property testing, a TOML-subset parser and a CLI parser.
+//! property testing, TOML-subset and JSON parsers, and a CLI parser.
 //!
 //! These replace crates that are unavailable in the offline vendor set
 //! (`serde`, `clap`, `proptest`, `criterion` — see ARCHITECTURE.md).
@@ -11,6 +11,7 @@ pub mod table;
 pub mod rng;
 pub mod prop;
 pub mod toml;
+pub mod json;
 pub mod cli;
 pub mod log;
 

@@ -172,5 +172,53 @@ fn cluster_points_share_stage_plans_through_the_cache() {
     scenario::run_on(&cache, &pts, 1).unwrap();
     // Distinct stage sub-models: 11-layer/b1024 (pp=2) + 22-layer/b512 (dp=2).
     assert_eq!(cache.len(), 2, "stage plans are shared across engines and points");
-    assert!(cache.hits() > cache.misses(), "repeated points hit the cache");
+    // The service path builds each cluster plan once per shape (engine-only
+    // neighbors reuse the worker's EvalScratch without touching the cache):
+    // two builds — pp=2 pricing its twin stage twice (1 miss + 1 hit) and
+    // dp=2 pricing its single stage (1 miss).
+    assert_eq!((cache.misses(), cache.hits()), (2, 1), "one build per shape");
+}
+
+/// Fabric-blind planning, asserted end-to-end: retargeting a priced plan
+/// onto a different inter-package fabric is bitwise identical to building
+/// a fresh plan against that fabric — across shapes, engines, and both a
+/// healthy and a congested fabric. This is the invariant that lets the
+/// sweep's service path reuse one cluster plan across the whole
+/// `--inter-bw` axis.
+#[test]
+fn retarget_inter_matches_fresh_build_bitwise() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = parity_hw();
+    let cache = PlanCache::new();
+    let mut congested = InterPkgLink::preset(InterKind::Substrate);
+    congested.bandwidth = 2.0e9;
+    congested.latency = Seconds::us(5.0);
+    let fabrics = [
+        InterPkgLink::preset(InterKind::Substrate),
+        InterPkgLink::preset(InterKind::Optical),
+        congested,
+    ];
+    for (dp, pp) in [(2usize, 2usize), (1, 4)] {
+        let base = ClusterConfig::try_new(hw.clone(), dp * pp, dp, pp, fabrics[0].clone()).unwrap();
+        let mut retargeted =
+            ClusterPlan::build(&m, &base, Method::Hecaton, PlanOptions::default(), &cache).unwrap();
+        for inter in &fabrics {
+            retargeted.retarget_inter(inter.clone());
+            let mut cfg = base.clone();
+            cfg.inter = inter.clone();
+            let fresh =
+                ClusterPlan::build(&m, &cfg, Method::Hecaton, PlanOptions::default(), &cache)
+                    .unwrap();
+            for engine in EngineKind::all() {
+                let r = retargeted.time(engine);
+                let f = fresh.time(engine);
+                assert_eq!(
+                    format!("{r:?}"),
+                    format!("{f:?}"),
+                    "dp{dp}xpp{pp}/{engine:?} @ {:.0e} B/s",
+                    inter.bandwidth
+                );
+            }
+        }
+    }
 }

@@ -10,7 +10,11 @@ use hecaton::nop::collective::{
     event_time_concurrent, flat_ring_all_reduce_schedule, flat_ring_phase_schedule,
     ring_step_schedule, torus_all_reduce_schedule, CollectiveKind, CollectiveSchedule,
 };
-use hecaton::sim::system::{simulate_engine, EngineKind};
+use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use hecaton::sim::cluster::ClusterPlan;
+use hecaton::sim::engine::EngineArena;
+use hecaton::sim::sweep::PlanCache;
+use hecaton::sim::system::{simulate_engine, EngineKind, PlanOptions, SimPlan};
 use hecaton::util::prop;
 use hecaton::util::{Bytes, Seconds};
 
@@ -176,6 +180,74 @@ fn schedule_composition_event_times_add() {
         let composed = s1.then(s2).event_time(&l);
         prop::assert_close(composed.raw(), sum.raw(), 1e-9, "composition")
     });
+}
+
+/// Tentpole invariant, package side: the calendar time-wheel pops events
+/// in exactly the legacy single-heap (time, seq) order, so every method ×
+/// engine × mesh produces **bitwise-identical** results on a wheel arena,
+/// a heap-only arena, and a fresh per-call engine — and reusing one arena
+/// across all of these configs never leaks state between runs. (f64 Debug
+/// formatting is shortest-roundtrip, so equal Debug strings ⇔ equal bits.)
+#[test]
+fn time_wheel_matches_heap_order_bitwise_on_packages() {
+    let mut wheel = EngineArena::new();
+    let mut heap = EngineArena::heap_only();
+    for model in ["tinyllama-1.1b", "gpt3-6.7b"] {
+        let m = model_preset(model).unwrap();
+        for (rows, cols) in [(4usize, 4usize), (2, 8)] {
+            let hw = HardwareConfig::mesh(rows, cols, PackageKind::Standard, DramKind::Ddr5_6400);
+            for method in Method::all() {
+                let plan = SimPlan::build(&m, &hw, method, PlanOptions::default());
+                for engine in EngineKind::all() {
+                    let tag = format!("{model}/{rows}x{cols}/{method:?}/{engine:?}");
+                    let w = plan.time_in(engine, &mut wheel);
+                    let h = plan.time_in(engine, &mut heap);
+                    let fresh = plan.time(engine);
+                    assert_eq!(format!("{w:?}"), format!("{h:?}"), "wheel vs heap: {tag}");
+                    assert_eq!(format!("{w:?}"), format!("{fresh:?}"), "arena vs fresh: {tag}");
+                }
+            }
+        }
+    }
+}
+
+/// Tentpole invariant, cluster side: wheel ≡ heap ≡ fresh bitwise through
+/// the full hybrid path (per-stage package plans + the 1F1B event DAG),
+/// including a congested fabric slow enough to reorder the DAG's event
+/// population relative to the healthy presets.
+#[test]
+fn time_wheel_matches_heap_order_bitwise_on_clusters() {
+    let cache = PlanCache::new();
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let mut congested = InterPkgLink::preset(InterKind::Substrate);
+    congested.bandwidth = 2.0e9; // 32× slower than the substrate preset
+    congested.latency = Seconds::us(5.0);
+    let mut wheel = EngineArena::new();
+    let mut heap = EngineArena::heap_only();
+    for (dp, pp) in [(2usize, 2usize), (1, 4), (4, 1)] {
+        for inter in [InterPkgLink::preset(InterKind::Substrate), congested.clone()] {
+            let c = ClusterConfig {
+                packages: 4,
+                dp,
+                pp,
+                inter,
+                package_hw: hw.clone(),
+            };
+            for method in Method::all() {
+                let plan = ClusterPlan::build(&m, &c, method, PlanOptions::default(), &cache)
+                    .expect("shape is valid");
+                for engine in EngineKind::all() {
+                    let tag = format!("dp{dp}xpp{pp}/{method:?}/{engine:?}");
+                    let w = plan.time_in(engine, &mut wheel);
+                    let h = plan.time_in(engine, &mut heap);
+                    let fresh = plan.time(engine);
+                    assert_eq!(format!("{w:?}"), format!("{h:?}"), "wheel vs heap: {tag}");
+                    assert_eq!(format!("{w:?}"), format!("{fresh:?}"), "arena vs fresh: {tag}");
+                }
+            }
+        }
+    }
 }
 
 /// The engine column reaches the report layer: the Fig. 8 grid can be

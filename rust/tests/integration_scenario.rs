@@ -200,3 +200,53 @@ fn example_scenarios_match_golden_summaries() {
         }
     }
 }
+
+/// Sweep determinism with the service path on: `run_on` (plan-affine
+/// execution order + per-worker `EvalScratch` buffer/plan reuse) returns
+/// results bitwise identical to evaluating each scenario in isolation on
+/// a cold cache, at every worker count — on a mixed package + cluster
+/// grid whose cluster points differ only in the inter-package fabric
+/// (the axis the scratch reuses plans across).
+#[test]
+fn run_on_with_scratch_reuse_is_bitwise_deterministic() {
+    let model = model_preset("tinyllama-1.1b").unwrap();
+    let mut congested = InterPkgLink::preset(InterKind::Substrate);
+    congested.bandwidth = 2.0e9;
+    let mut pts: Vec<Scenario> = Vec::new();
+    for engine in EngineKind::all() {
+        for method in [Method::Hecaton, Method::FlatRing] {
+            pts.push(
+                Scenario::builder(model.clone())
+                    .dies(16)
+                    .method(method)
+                    .engine(engine)
+                    .build()
+                    .unwrap(),
+            );
+            for inter in [InterPkgLink::preset(InterKind::Substrate), congested.clone()] {
+                pts.push(
+                    Scenario::builder(model.clone())
+                        .dies(16)
+                        .method(method)
+                        .engine(engine)
+                        .cluster(4, 2, 2)
+                        .inter(inter)
+                        .build()
+                        .unwrap(),
+                );
+            }
+        }
+    }
+    // Reference: each point alone, fresh cache — no reuse of any kind.
+    let isolated: Vec<String> = pts
+        .iter()
+        .map(|s| format!("{:?}", s.evaluate_on(&PlanCache::new()).unwrap()))
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let evals = run_on(&PlanCache::new(), &pts, threads).unwrap();
+        assert_eq!(evals.len(), isolated.len());
+        for (i, (e, want)) in evals.iter().zip(&isolated).enumerate() {
+            assert_eq!(&format!("{e:?}"), want, "threads={threads} point={i}");
+        }
+    }
+}
