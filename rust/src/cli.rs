@@ -22,7 +22,7 @@ use anyhow::anyhow;
 use crate::config::cluster::{cluster_preset, cluster_presets, ClusterConfig};
 use crate::config::file::LoadedScenario;
 use crate::config::presets::{all_model_presets, eval_models, model_preset};
-use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind, TopologyKind};
 use crate::memory::sram::OccupancyReport;
 use crate::nop::analytic::Method;
 use crate::scenario::{self, axis, EvalDetail, Scenario, ScenarioGrid};
@@ -43,6 +43,7 @@ pub fn app() -> App {
                 .opt("mesh", "", "explicit RxC mesh, e.g. 2x8")
                 .opt("package", "standard", "packaging: standard | advanced")
                 .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
+                .opt("topo", "mesh", "intra-package NoP topology: mesh | torus")
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
                 .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
                 .opt("checkpoint", "none", "activation checkpointing: none | auto | every-<k>")
@@ -50,7 +51,7 @@ pub fn app() -> App {
                 .opt("n-packages", "1", "packages in the cluster (must equal dp x pp)")
                 .opt("dp", "1", "data-parallel replicas across packages")
                 .opt("pp", "1", "pipeline stages across packages (1F1B)")
-                .opt("inter-bw", "substrate", "inter-package fabric: substrate | optical | <GB/s>")
+                .opt("inter-bw", "substrate", "inter-package fabric: substrate | optical | fat-tree | <GB/s>")
                 .opt("config", "", "TOML config file (overrides the above)"),
         )
         .command(
@@ -59,6 +60,7 @@ pub fn app() -> App {
                 .opt("meshes", "4x4", "comma list of RxC meshes and/or square die counts, e.g. 4x4,2x8,64")
                 .opt("packages", "standard", "comma list: standard,advanced or 'all'")
                 .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
+                .opt("topos", "mesh", "comma list of NoP topologies: mesh,torus or 'all'")
                 .opt("methods", "all", "comma list of TP methods, or 'all'")
                 .opt("engines", "analytic", "comma list of timing backends, or 'all'")
                 .opt("checkpoint", "none", "comma list of checkpoint policies: none | auto | every-<k>")
@@ -66,7 +68,7 @@ pub fn app() -> App {
                 .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
                 .opt("dp", "1", "comma list of data-parallel widths")
                 .opt("pp", "1", "comma list of pipeline depths")
-                .opt("inter-bw", "substrate", "comma list of fabrics: substrate | optical | <GB/s>")
+                .opt("inter-bw", "substrate", "comma list of fabrics: substrate | optical | fat-tree | <GB/s>")
                 .opt("threads", "0", "worker threads (0 = one per core; 1 = serial)")
                 .opt("format", "table", "output format: table | csv | json"),
         )
@@ -142,6 +144,7 @@ impl ScenarioArgs {
             packages: axis::package_kinds(&split_list(m.value("packages")))?,
             drams: axis::drams(&split_list(m.value("drams")))?,
             sram: axis::sram_limits(&split_list(m.value("sram-mib")))?,
+            topos: axis::topos(&split_list(m.value("topos")))?,
             methods: axis::methods(&split_list(m.value("methods")))?,
             engines: axis::engines(&split_list(m.value("engines")))?,
             checkpoints: axis::checkpoints(&split_list(m.value("checkpoint")))?,
@@ -203,7 +206,12 @@ impl ScenarioArgs {
         let inter = axis::inters(&[m.value("inter-bw")])?.remove(0);
         let checkpoint = axis::checkpoints(&[m.value("checkpoint")])?.remove(0);
         let sram = axis::sram_limits(&[m.value("sram-mib")])?.remove(0);
-        let mut builder = builder.method(method).engine(engine).checkpoint(checkpoint);
+        let topo = axis::topos(&[m.value("topo")])?.remove(0);
+        let mut builder = builder
+            .method(method)
+            .engine(engine)
+            .checkpoint(checkpoint)
+            .topology(topo);
         if let Some(cap) = sram {
             builder = builder.sram_limit(cap);
         }
@@ -669,14 +677,16 @@ fn print_info_table() -> crate::Result<()> {
     println!("TP methods: {}", methods.join(" | "));
     let engines: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
     println!("Engine backends: {}", engines.join(" | "));
+    let topos: Vec<&str> = TopologyKind::all().iter().map(|t| t.name()).collect();
+    println!("NoP topologies (--topo / --topos): {}", topos.join(" | "));
     println!(
-        "Sweep axes: --models --meshes --packages --drams --methods --engines \
+        "Sweep axes: --models --meshes --packages --drams --topos --methods --engines \
          (comma lists; most accept 'all'), --threads, --format table|csv|json"
     );
     println!(
         "Cluster knobs (simulate + sweep): --n-packages/--dp/--pp \
          (dp x pp must equal the package count; TP stays in-package), \
-         --inter-bw substrate|optical|<GB/s>"
+         --inter-bw substrate|optical|fat-tree|<GB/s>"
     );
     println!(
         "Memory knobs (simulate + sweep): --checkpoint none|auto|every-<k> \
@@ -743,8 +753,14 @@ fn info_json() -> String {
     };
     let methods: Vec<&str> = Method::all().iter().map(|m| m.name()).collect();
     let engines: Vec<&str> = EngineKind::all().iter().map(|e| e.name()).collect();
+    let topos: Vec<&str> = TopologyKind::all().iter().map(|t| t.name()).collect();
     out.push_str(&format!("  \"methods\": [{}],\n", quoted(&methods)));
     out.push_str(&format!("  \"engines\": [{}],\n", quoted(&engines)));
+    out.push_str(&format!("  \"topologies\": [{}],\n", quoted(&topos)));
+    out.push_str(&format!(
+        "  \"fabrics\": [{}],\n",
+        quoted(&["substrate", "optical", "fat-tree"])
+    ));
     out.push_str(&format!("  \"packages\": [{}],\n", quoted(&["standard", "advanced"])));
     out.push_str(&format!(
         "  \"drams\": [{}],\n",
@@ -841,6 +857,13 @@ mod tests {
             .unwrap();
         let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
         assert!(e.contains("did you mean 'event'"), "{e}");
+        // The topology axis speaks the same suggestion protocol.
+        let m = a
+            .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--topo", "tours"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("did you mean 'torus'"), "{e}");
         // Case-insensitive values keep working.
         let m = a
             .parse(&argv(&[
@@ -891,6 +914,29 @@ mod tests {
         cmd_simulate(&m).unwrap();
     }
 
+    /// The topology axis works end-to-end through the real CLI: a torus
+    /// simulate runs, and a mesh+torus sweep expands the grid.
+    #[test]
+    fn simulate_and_sweep_accept_topology_axis() {
+        let a = app();
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--topo", "torus",
+                "--method", "torus-ring",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
+        let m = a
+            .parse(&argv(&[
+                "sweep", "--models", "tinyllama-1.1b", "--meshes", "4x4", "--topos", "all",
+                "--methods", "hecaton", "--threads", "1",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_sweep(&m).unwrap();
+    }
+
     #[test]
     fn simulate_command_runs_event_engine() {
         let a = app();
@@ -928,6 +974,8 @@ mod tests {
         assert!(json.contains("\"tinyllama-1.1b\""));
         assert!(json.contains("\"cluster_presets\""));
         assert!(json.contains("\"405b-cluster\""));
+        assert!(json.contains("\"topologies\": [\"mesh\", \"torus\"]"));
+        assert!(json.contains("\"fat-tree\""));
         let bad = a.parse(&argv(&["info", "--format", "yaml"])).unwrap().unwrap();
         assert!(cmd_info(&bad).is_err());
     }

@@ -26,10 +26,37 @@ use crate::util::Seconds;
 pub struct InterPkgLink {
     /// Sustained fabric bandwidth for a single stream, bytes/s.
     pub bandwidth: f64,
-    /// Per-transfer latency (serialization + switch/retimer traversal).
+    /// Per-traversal latency (serialization + switch/retimer traversal).
     pub latency: Seconds,
     /// Transfer energy, pJ/bit.
     pub pj_per_bit: f64,
+    /// How packages are wired through the fabric — decides how many
+    /// traversals a transfer pays and how ring collectives lower
+    /// ([`crate::sim::cluster`]'s inter-package lowering).
+    pub topo: FabricTopo,
+}
+
+/// Inter-package fabric wiring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricTopo {
+    /// Direct neighbor-to-neighbor wiring (board traces, point-to-point
+    /// optics): one traversal per transfer; DP gradient all-reduce runs
+    /// as a `2(dp−1)`-step ring.
+    PointToPoint,
+    /// A switched (folded-Clos / fat-tree) fabric: every transfer
+    /// traverses up and down the switch tree (2 traversals), but any
+    /// package pair is one "hop" apart, so the gradient all-reduce runs
+    /// halving-doubling in `2·⌈log₂ dp⌉` rounds.
+    FatTree,
+}
+
+impl FabricTopo {
+    pub fn name(self) -> &'static str {
+        match self {
+            FabricTopo::PointToPoint => "point-to-point",
+            FabricTopo::FatTree => "fat-tree",
+        }
+    }
 }
 
 /// Named fabric technology presets.
@@ -41,6 +68,10 @@ pub enum InterKind {
     /// Co-packaged optics: an order of magnitude more bandwidth at lower
     /// pJ/bit.
     Optical,
+    /// An electrically-switched folded-Clos fabric (ChipLight's switched
+    /// baseline): mid-range bandwidth per stream, two switch traversals
+    /// per transfer, log-depth collectives.
+    FatTree,
 }
 
 impl InterKind {
@@ -48,6 +79,7 @@ impl InterKind {
         match self {
             InterKind::Substrate => "substrate",
             InterKind::Optical => "optical",
+            InterKind::FatTree => "fat-tree",
         }
     }
 }
@@ -60,21 +92,31 @@ impl InterPkgLink {
                 bandwidth: 64.0e9,
                 latency: Seconds::ns(250.0),
                 pj_per_bit: 4.0,
+                topo: FabricTopo::PointToPoint,
             },
             InterKind::Optical => InterPkgLink {
                 bandwidth: 512.0e9,
                 latency: Seconds::ns(100.0),
                 pj_per_bit: 1.0,
+                topo: FabricTopo::PointToPoint,
+            },
+            InterKind::FatTree => InterPkgLink {
+                bandwidth: 256.0e9,
+                latency: Seconds::ns(150.0),
+                pj_per_bit: 2.0,
+                topo: FabricTopo::FatTree,
             },
         }
     }
 
-    /// Parse a fabric spec: a preset name (`substrate` | `optical`) or a
-    /// bare number interpreted as GB/s on substrate-preset latency/energy.
+    /// Parse a fabric spec: a preset name (`substrate` | `optical` |
+    /// `fat-tree`) or a bare number interpreted as GB/s on
+    /// substrate-preset latency/energy.
     pub fn parse(s: &str) -> Option<InterPkgLink> {
         match s.to_ascii_lowercase().as_str() {
             "substrate" | "pcb" | "sub" => Some(InterPkgLink::preset(InterKind::Substrate)),
             "optical" | "opt" => Some(InterPkgLink::preset(InterKind::Optical)),
+            "fat-tree" | "fattree" | "ft" => Some(InterPkgLink::preset(InterKind::FatTree)),
             other => {
                 let gbs: f64 = other.parse().ok()?;
                 if !(gbs.is_finite() && gbs > 0.0) {
@@ -91,6 +133,16 @@ impl InterPkgLink {
     /// Bandwidth in GB/s (rendered in sweep tables).
     pub fn gbs(&self) -> f64 {
         self.bandwidth / 1.0e9
+    }
+
+    /// Effective per-transfer latency: every fat-tree transfer goes up
+    /// and down the switch tree (2 traversals of `latency`); point-to-
+    /// point wiring pays `latency` once.
+    pub fn hop_latency(&self) -> Seconds {
+        match self.topo {
+            FabricTopo::PointToPoint => self.latency,
+            FabricTopo::FatTree => self.latency * 2.0,
+        }
     }
 }
 
@@ -237,12 +289,30 @@ mod tests {
         assert_eq!(sub, InterPkgLink::preset(InterKind::Substrate));
         let opt = InterPkgLink::parse("optical").unwrap();
         assert!(opt.bandwidth > sub.bandwidth);
+        let ft = InterPkgLink::parse("fat-tree").unwrap();
+        assert_eq!(ft, InterPkgLink::preset(InterKind::FatTree));
+        assert_eq!(ft.topo, FabricTopo::FatTree);
         let n = InterPkgLink::parse("128").unwrap();
         assert!((n.bandwidth - 128.0e9).abs() < 1.0);
         assert_eq!(n.latency, sub.latency);
+        assert_eq!(n.topo, FabricTopo::PointToPoint);
         assert!(InterPkgLink::parse("bogus").is_none());
         assert!(InterPkgLink::parse("-3").is_none());
         assert!(InterPkgLink::parse("0").is_none());
+    }
+
+    #[test]
+    fn fat_tree_hop_latency_doubles_traversals() {
+        let sub = InterPkgLink::preset(InterKind::Substrate);
+        // Point-to-point: hop latency IS the configured latency, bitwise
+        // (the cluster timing paths route through hop_latency()).
+        assert_eq!(
+            sub.hop_latency().raw().to_bits(),
+            sub.latency.raw().to_bits()
+        );
+        let ft = InterPkgLink::preset(InterKind::FatTree);
+        assert_eq!(ft.hop_latency(), ft.latency * 2.0);
+        assert_eq!(FabricTopo::FatTree.name(), "fat-tree");
     }
 
     #[test]

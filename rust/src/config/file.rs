@@ -11,6 +11,7 @@
 //! mesh = [16, 16]
 //! package = "advanced"
 //! dram = "ddr5-6400"
+//! topology = "mesh"      # NoP lowering: mesh | torus
 //!
 //! [hardware.die]
 //! weight_buf_mib = 8
@@ -21,7 +22,7 @@
 //! packages = 16
 //! dp = 8
 //! pp = 2
-//! inter = "substrate"    # or "optical", or a bare GB/s number
+//! inter = "substrate"    # or "optical", "fat-tree", or a bare GB/s number
 //!
 //! [options]
 //! method = "hecaton"
@@ -52,7 +53,9 @@
 use anyhow::{anyhow, bail, Context};
 
 use crate::config::cluster::{InterKind, InterPkgLink};
-use crate::config::hardware::{DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
+use crate::config::hardware::{
+    DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind, TopologyKind,
+};
 use crate::config::model::ModelConfig;
 use crate::config::presets::{all_model_presets, model_preset};
 use crate::nop::analytic::Method;
@@ -105,7 +108,7 @@ const SCHEMA: &[(&str, &[&str])] = &[
             "vocab",
         ],
     ),
-    ("hardware", &["mesh", "dies", "package", "dram", "sram_mib"]),
+    ("hardware", &["mesh", "dies", "package", "dram", "topology", "sram_mib"]),
     (
         "hardware.die",
         &["freq_mhz", "pe_rows", "pe_cols", "lanes", "weight_buf_mib", "act_buf_mib"],
@@ -132,6 +135,7 @@ const SCHEMA: &[(&str, &[&str])] = &[
             "meshes",
             "packages",
             "drams",
+            "topos",
             "sram_mib",
             "methods",
             "engines",
@@ -395,6 +399,17 @@ fn parse_hardware(doc: &Document) -> crate::Result<HardwareConfig> {
 
     let mut hw = HardwareConfig::mesh(rows, cols, package, dram_kind);
 
+    // NoP topology (the comm-IR lowering axis).
+    if let Some(s) = doc.get_str("hardware", "topology") {
+        let topo = TopologyKind::parse(s).ok_or_else(|| {
+            anyhow!(
+                "{}",
+                crate::util::cli::unknown_value("topology", s, &["mesh", "torus"])
+            )
+        })?;
+        hw = hw.with_topology(topo);
+    }
+
     // Die overrides.
     if let Some(v) = doc.get_float("hardware.die", "freq_mhz") {
         hw.die.freq_hz = v * 1e6;
@@ -473,10 +488,10 @@ fn parse_cluster(doc: &Document) -> crate::Result<(usize, usize, usize, InterPkg
         Some(v) => {
             if let Some(s) = v.as_str() {
                 InterPkgLink::parse(s).ok_or_else(|| {
-                    match suggest(s, ["substrate", "optical"]) {
+                    match suggest(s, ["substrate", "optical", "fat-tree"]) {
                         Some(c) => anyhow!("bad [cluster] inter '{s}' (did you mean '{c}'?)"),
                         None => anyhow!(
-                            "bad [cluster] inter '{s}' (substrate | optical | <GB/s>)"
+                            "bad [cluster] inter '{s}' (substrate | optical | fat-tree | <GB/s>)"
                         ),
                     }
                 })?
@@ -588,6 +603,7 @@ fn parse_sweep(doc: &Document) -> crate::Result<ScenarioGrid> {
     let meshes = strings("meshes", "4x4")?;
     let packages = strings("packages", "standard")?;
     let drams = strings("drams", "ddr5-6400")?;
+    let topos = strings("topos", "mesh")?;
     let sram_mib = strings("sram_mib", "none")?;
     let methods = strings("methods", "all")?;
     let engines = strings("engines", "analytic")?;
@@ -603,6 +619,7 @@ fn parse_sweep(doc: &Document) -> crate::Result<ScenarioGrid> {
         packages: axis::package_kinds(&refs(&packages))?,
         drams: axis::drams(&refs(&drams))?,
         sram: axis::sram_limits(&refs(&sram_mib))?,
+        topos: axis::topos(&refs(&topos))?,
         methods: axis::methods(&refs(&methods))?,
         engines: axis::engines(&refs(&engines))?,
         checkpoints: axis::checkpoints(&refs(&checkpoint))?,
@@ -976,6 +993,47 @@ mod tests {
         assert_eq!(pts.len(), 2 * 2, "sram axis × checkpoint axis");
     }
 
+    /// The topology axis loads from TOML: `[hardware] topology`, the
+    /// `[cluster]` fat-tree fabric, and the `[sweep]` topos axis — with
+    /// the shared did-you-mean diagnostics on typos.
+    #[test]
+    fn topology_keys_load_and_validate() {
+        let LoadedScenario::One(s) = scenario_from_str(
+            "[model]\npreset = \"tinyllama-1.1b\"\n[hardware]\nmesh = [4, 4]\n\
+             topology = \"torus\"\n[cluster]\npackages = 2\ndp = 2\ninter = \"fat-tree\"\n",
+        )
+        .unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s.hw().topology, TopologyKind::Torus2d);
+        assert_eq!(
+            s.cluster_config().unwrap().inter,
+            InterPkgLink::preset(InterKind::FatTree)
+        );
+
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\npreset = \"tiny\"\n[hardware]\ntopology = \"tours\"\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("did you mean 'torus'"), "{e}");
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[model]\npreset = \"tiny\"\n[cluster]\ninter = \"fat-tre\"\n")
+                .unwrap_err()
+        );
+        assert!(e.contains("did you mean 'fat-tree'"), "{e}");
+
+        let LoadedScenario::Grid { grid, .. } = scenario_from_str(
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\nmeshes = [\"4x4\"]\n\
+             methods = [\"hecaton\"]\ntopos = [\"all\"]\n",
+        )
+        .unwrap() else {
+            panic!("expected a grid");
+        };
+        assert_eq!(grid.topos, TopologyKind::all().to_vec());
+    }
+
     /// `Scenario::to_toml` round-trips through the loader.
     #[test]
     fn to_toml_round_trips() {
@@ -984,6 +1042,19 @@ mod tests {
             .cluster(4, 2, 2)
             .engine(EngineKind::EventPrefetch)
             .fusion(false)
+            .build()
+            .unwrap();
+        let LoadedScenario::One(back) = scenario_from_str(&s.to_toml()).unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s, back);
+
+        // The topology axis round-trips too: torus NoP + fat-tree fabric.
+        let s = Scenario::builder(model_preset("tinyllama-1.1b").unwrap())
+            .dies(16)
+            .topology(TopologyKind::Torus2d)
+            .cluster(4, 4, 1)
+            .inter(InterPkgLink::preset(InterKind::FatTree))
             .build()
             .unwrap();
         let LoadedScenario::One(back) = scenario_from_str(&s.to_toml()).unwrap() else {

@@ -15,6 +15,7 @@
 //! | DDR5-6400 channel | 51.2 GB/s, 19 pJ/bit | §VI-A, Ramulator2 |
 //! | HBM2 stack | 307.2 GB/s, 3.9 pJ/bit | O'Connor et al. |
 //! | DRAM channels | 2·(rows + cols), one per perimeter die edge | §III-A(c) |
+//! | die topology | 2D mesh (default) or 2D torus; same link parameters, different collective lowerings (`crate::comm`) | Fig. 5(a); torus per Mikami/Ying |
 //! | DRAM stream efficiency | 0.90 of peak (validated: 0 < e ≤ 1) | Ramulator2 sequential-stream traces |
 //! | per-die SRAM capacity | weight + act buffers (16 MB) by default; `sram_limit` enforces an explicit cap | §IV capacity-relief check |
 //!
@@ -47,6 +48,40 @@ impl PackageKind {
             "advanced" | "adv" => Some(PackageKind::Advanced),
             _ => None,
         }
+    }
+}
+
+/// Intra-package die interconnect topology — how the `rows × cols` dies
+/// are wired, and therefore how [`crate::comm`] lowers each collective
+/// onto physical links.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// Adjacent-only 2D mesh (paper Fig. 5(a)): ring communicators need
+    /// the bypass construction (2 adjacent links per hop) or pay
+    /// `side`-long wrap spans.
+    Mesh2d,
+    /// 2D torus: each row/column additionally has a wrap-around link, so
+    /// every ring closes with single-hop steps (folded-torus routing
+    /// keeps the physical wires short).
+    Torus2d,
+}
+
+impl TopologyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::Mesh2d => "mesh",
+            TopologyKind::Torus2d => "torus",
+        }
+    }
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mesh" | "mesh2d" | "2d-mesh" => Some(TopologyKind::Mesh2d),
+            "torus" | "torus2d" | "2d-torus" => Some(TopologyKind::Torus2d),
+            _ => None,
+        }
+    }
+    pub fn all() -> [TopologyKind; 2] {
+        [TopologyKind::Mesh2d, TopologyKind::Torus2d]
     }
 }
 
@@ -208,6 +243,10 @@ pub struct HardwareConfig {
     pub mesh_rows: usize,
     pub mesh_cols: usize,
     pub package: PackageKind,
+    /// How the dies are wired ([`TopologyKind::Mesh2d`] is the paper's
+    /// layout and the default); decides the [`crate::comm`] lowering of
+    /// every NoP collective.
+    pub topology: TopologyKind,
     pub die: DieConfig,
     pub link: LinkConfig,
     pub dram: DramConfig,
@@ -272,11 +311,18 @@ impl HardwareConfig {
             mesh_rows: rows,
             mesh_cols: cols,
             package,
+            topology: TopologyKind::Mesh2d,
             die: Self::paper_die(),
             link: LinkConfig::for_package(package),
             dram: DramConfig::preset(dram),
             sram_limit: None,
         }
+    }
+
+    /// Swap the die interconnect topology (the `--topo` axis).
+    pub fn with_topology(mut self, topology: TopologyKind) -> HardwareConfig {
+        self.topology = topology;
+        self
     }
 
     /// The per-die SRAM capacity occupancy peaks are judged against: the
@@ -427,6 +473,18 @@ mod tests {
         assert_eq!(PackageKind::parse("ADV"), Some(PackageKind::Advanced));
         assert_eq!(DramKind::parse("hbm"), Some(DramKind::Hbm2));
         assert_eq!(PackageKind::parse("x"), None);
+        assert_eq!(TopologyKind::parse("Torus"), Some(TopologyKind::Torus2d));
+        assert_eq!(TopologyKind::parse("2d-mesh"), Some(TopologyKind::Mesh2d));
+        assert_eq!(TopologyKind::parse("tours"), None);
+    }
+
+    #[test]
+    fn topology_defaults_to_mesh_and_overrides() {
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        assert_eq!(hw.topology, TopologyKind::Mesh2d);
+        let t = hw.with_topology(TopologyKind::Torus2d);
+        assert_eq!(t.topology, TopologyKind::Torus2d);
+        assert_eq!(TopologyKind::all().map(|t| t.name()), ["mesh", "torus"]);
     }
 
     /// Satellite (dram-efficiency): the derating is a validated config

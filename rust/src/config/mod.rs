@@ -8,8 +8,12 @@ pub mod cluster;
 pub mod presets;
 pub mod file;
 
-pub use cluster::{cluster_preset, cluster_presets, ClusterConfig, InterKind, InterPkgLink};
-pub use hardware::{DieConfig, DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind};
+pub use cluster::{
+    cluster_preset, cluster_presets, ClusterConfig, FabricTopo, InterKind, InterPkgLink,
+};
+pub use hardware::{
+    DieConfig, DramConfig, DramKind, HardwareConfig, LinkConfig, PackageKind, TopologyKind,
+};
 pub use model::ModelConfig;
 pub use presets::{hardware_preset, model_preset, paper_pairings, PaperWorkload};
 

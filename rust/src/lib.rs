@@ -7,12 +7,14 @@
 //! The crate contains two cooperating halves:
 //!
 //! 1. **The chiplet system simulator** — the paper's evaluation testbed,
-//!    rebuilt from scratch: hardware models ([`arch`]), a step-level NoP
-//!    collective simulator ([`nop`]), per-die compute timing ([`compute`]),
-//!    a DRAM stream model ([`memory`]), the transformer workload
-//!    decomposition ([`workload`]), the four tensor-parallel methods
-//!    ([`parallel`]), Hecaton's fusion/overlap scheduling ([`sched`]) and
-//!    the system-level latency/energy simulator ([`sim`], [`energy`]).
+//!    rebuilt from scratch: hardware models ([`arch`]), a typed
+//!    communication IR lowered per topology ([`comm`]) onto the
+//!    step-level NoP collective simulator ([`nop`]), per-die compute
+//!    timing ([`compute`]), a DRAM stream model ([`memory`]), the
+//!    transformer workload decomposition ([`workload`]), the four
+//!    tensor-parallel methods ([`parallel`]) emitting [`comm::CommOp`]s,
+//!    Hecaton's fusion/overlap scheduling ([`sched`]) and the
+//!    system-level latency/energy simulator ([`sim`], [`energy`]).
 //!    Timing runs on one of **two engine backends**
 //!    ([`sim::system::EngineKind`]): the *analytic* closed forms of paper
 //!    Table III, or the *event* backend — a discrete-event core
@@ -55,6 +57,7 @@
 pub mod util;
 pub mod config;
 pub mod arch;
+pub mod comm;
 pub mod nop;
 pub mod compute;
 pub mod memory;
@@ -87,9 +90,11 @@ pub mod cli;
 /// println!("{} at {:.0} tokens/s", eval.latency(), eval.tokens_per_sec());
 /// ```
 pub mod prelude {
-    pub use crate::config::cluster::{cluster_preset, ClusterConfig, InterKind, InterPkgLink};
+    pub use crate::config::cluster::{
+        cluster_preset, ClusterConfig, FabricTopo, InterKind, InterPkgLink,
+    };
     pub use crate::config::presets::model_preset;
-    pub use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+    pub use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind, TopologyKind};
     pub use crate::memory::sram::OccupancyReport;
     pub use crate::nop::analytic::Method;
     pub use crate::sched::checkpoint::Checkpoint;

@@ -351,12 +351,24 @@ pub fn flat_ring_all_reduce(n: usize, volume: Bytes, link: &LinkConfig) -> Colle
 /// on latency (Table III: `4(N−√N)α` vs `8(√N−1)α`). Each step both
 /// halves' `n` ring links are active (`2n` links total) in lockstep.
 pub fn torus_all_reduce_schedule(side: usize, volume: Bytes) -> CollectiveSchedule {
+    // On the physical mesh every ring step pays the wrap-around span.
+    torus_all_reduce_schedule_with_hops(side, volume, side as f64)
+}
+
+/// [`torus_all_reduce_schedule`] with an explicit per-step hop multiplier —
+/// the knob the [`crate::comm`] topology lowerings turn: `side` when the
+/// logical rings wrap across a 2D mesh, `1` on a physical torus whose wrap
+/// links close every ring with adjacent hops.
+pub fn torus_all_reduce_schedule_with_hops(
+    side: usize,
+    volume: Bytes,
+    hops: f64,
+) -> CollectiveSchedule {
     if side <= 1 {
         return CollectiveSchedule::default();
     }
     let n = side * side;
     let half = volume * 0.5;
-    let hops = side as f64; // wrap-around dominated step latency
     // Phase chunk sizes, per the standard 2D algorithm on one half:
     //   RS over ring of `side` with S/2        → (side-1) steps of S/(2·side)
     //   AR over orthogonal ring on S/(2·side)  → 2(side-1) steps of S/(2·n)
@@ -442,6 +454,39 @@ pub fn recursive_doubling(
     link: &LinkConfig,
 ) -> CollectiveCost {
     recursive_doubling_schedule(kind, n, volume).cost(link)
+}
+
+/// Recursive-doubling broadcast/reduce on a ring **with a wrap link**
+/// (physical torus row/column): round `k`'s partner is `2^k` away going
+/// forward but `n − 2^k` away going around the wrap, so each round pays
+/// `min(2^k, n − 2^k)` adjacent hops instead of `2^k`. Same rounds, same
+/// bytes — only the fixed-latency term shrinks.
+pub fn recursive_doubling_wrap_schedule(
+    kind: CollectiveKind,
+    n: usize,
+    volume: Bytes,
+) -> CollectiveSchedule {
+    assert!(
+        matches!(kind, CollectiveKind::Broadcast | CollectiveKind::Reduce),
+        "recursive_doubling models broadcast/reduce"
+    );
+    if n <= 1 {
+        return CollectiveSchedule::default();
+    }
+    let rounds = (n as f64).log2().ceil() as usize;
+    let mut steps = Vec::with_capacity(rounds);
+    let mut active = 1usize; // dies holding the message (bcast view)
+    for k in 0..rounds {
+        let senders = active.min(n - active);
+        let dist = 1usize << k; // < n for every round, so n − dist ≥ 1
+        steps.push(Step {
+            per_link: volume,
+            hops: dist.min(n - dist) as f64,
+            links: LinkSpan::range(0, senders),
+        });
+        active = (2 * active).min(n);
+    }
+    CollectiveSchedule { steps }
 }
 
 #[cfg(test)]
@@ -532,6 +577,47 @@ mod tests {
         // transmission: 3 rounds × full message
         let expect = 3.0 * Bytes::mib(8.0).raw() / l.bandwidth;
         assert!((c.transmission.raw() - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn torus_hops_parameter_only_scales_fixed_latency() {
+        let l = link();
+        let side = 4;
+        let s = Bytes::gib(1.0);
+        // hops = side is bitwise the legacy mesh-wrapped schedule…
+        let mesh = torus_all_reduce_schedule(side, s);
+        let explicit = torus_all_reduce_schedule_with_hops(side, s, side as f64);
+        assert_eq!(mesh, explicit);
+        // …while hops = 1 (physical torus wrap links) keeps bytes and
+        // transmission identical and divides the latency term by `side`.
+        let torus = torus_all_reduce_schedule_with_hops(side, s, 1.0).cost(&l);
+        let c = mesh.cost(&l);
+        assert_eq!(torus.wire_bytes, c.wire_bytes);
+        assert_eq!(torus.transmission, c.transmission);
+        assert_eq!(torus.steps, c.steps);
+        let scaled = torus.link_latency.raw() * side as f64;
+        assert!((scaled - c.link_latency.raw()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn recursive_doubling_wrap_shortens_late_rounds() {
+        let l = link();
+        let line = recursive_doubling(CollectiveKind::Broadcast, 8, Bytes::mib(8.0), &l);
+        let wrap =
+            recursive_doubling_wrap_schedule(CollectiveKind::Broadcast, 8, Bytes::mib(8.0))
+                .cost(&l);
+        // Same rounds and bytes; hops 1+2+4 = 7 become min(1,7)+min(2,6)+min(4,4) = 7…
+        assert_eq!(wrap.steps, line.steps);
+        assert_eq!(wrap.wire_bytes, line.wire_bytes);
+        assert_eq!(wrap.transmission, line.transmission);
+        assert_eq!(wrap.link_latency, line.link_latency); // n=8: min() never bites
+        // …but on n=6 the last round's 4-hop span wraps to 2.
+        let line6 = recursive_doubling(CollectiveKind::Broadcast, 6, Bytes::mib(8.0), &l);
+        let wrap6 =
+            recursive_doubling_wrap_schedule(CollectiveKind::Broadcast, 6, Bytes::mib(8.0))
+                .cost(&l);
+        assert!(wrap6.link_latency < line6.link_latency);
+        assert_eq!(wrap6.transmission, line6.transmission);
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Network-on-package model.
+//! Network-on-package model — the schedule backend of the comm IR.
 //!
-//! Three pieces:
+//! Planners no longer call into this module directly: they emit
+//! [`crate::comm::CommOp`]s, and the [`crate::comm::Topology`] lowering
+//! picks which schedule builder here realises each op on the configured
+//! NoP (2D mesh vs 2D torus). Three pieces:
 //! * [`topology`] — the bypass-ring construction over a row/column of dies
 //!   (paper Fig. 5(b)) and the serpentine Hamiltonian ring the flat-ring
 //!   baseline needs over the whole mesh.

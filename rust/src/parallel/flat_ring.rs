@@ -12,10 +12,11 @@
 //! Fig. 8 — and (c) makes the per-die matmuls skinny at large `N`,
 //! degrading PE utilization (§VI-B).
 
+use crate::comm::{CommOp, Group, Topology};
 use crate::compute::{DieCompute, MatmulShape};
-use crate::config::HardwareConfig;
+use crate::config::{HardwareConfig, TopologyKind};
 use crate::nop::analytic::{Method, Pass};
-use crate::nop::collective::{flat_ring_all_reduce, flat_ring_phase, CollectiveCost};
+use crate::nop::collective::CollectiveCost;
 use crate::nop::topology::serpentine_closes_adjacent;
 use crate::parallel::plan::{
     act_bytes, attention_compute, vector_compute, BlockPlan, PlanInput, SramReport, TpPlanner,
@@ -132,10 +133,12 @@ impl TpPlanner for FlatRingPlanner {
         let hw = inp.hw;
         let n = hw.n_dies();
         let volume = act_bytes(tokens, inp.model.hidden);
+        let ring = Group::FlatRing { n };
+        let ar = hw.topology.price(CommOp::all_reduce(ring, volume), &hw.link);
         let nop = match pass {
-            Pass::Fwd => flat_ring_all_reduce(n, volume, &hw.link),
+            Pass::Fwd => ar,
             Pass::Bwd => {
-                flat_ring_all_reduce(n, volume, &hw.link).then(flat_ring_phase(n, volume, &hw.link))
+                ar.then(hw.topology.price(CommOp::all_gather(ring, volume), &hw.link))
             }
         };
         one_d_block_plan(block, pass, inp, tokens, nop)
@@ -146,9 +149,13 @@ impl TpPlanner for FlatRingPlanner {
     }
 
     fn layout_ok(&self, hw: &HardwareConfig) -> bool {
-        // Needs the Hamiltonian ring to close with adjacent hops
-        // (§V-A(c): "necessitates an even number of dies").
-        serpentine_closes_adjacent(hw.mesh_rows, hw.mesh_cols)
+        match hw.topology {
+            // Needs the Hamiltonian ring to close with adjacent hops
+            // (§V-A(c): "necessitates an even number of dies").
+            TopologyKind::Mesh2d => serpentine_closes_adjacent(hw.mesh_rows, hw.mesh_cols),
+            // Wrap links close the serpentine path on any shape.
+            TopologyKind::Torus2d => true,
+        }
     }
 }
 

@@ -15,13 +15,19 @@
 //! tiling is the transpose of the input tiling (Step 5 "mirrors the
 //! transposition"), which is what makes fusion communication-free.
 //!
-//! All collectives are ring all-gather / reduce-scatter on bypass rings —
-//! the only two primitives the architecture needs (§IV-B).
+//! All collectives are ring all-gather / reduce-scatter over row/column
+//! communicators — the only two primitives the architecture needs
+//! (§IV-B). The planner emits them as typed [`CommOp`]s over
+//! [`Group::BypassRing`] communicators; the package topology
+//! (`hw.topology`, via [`crate::comm::Topology`]) decides how each ring
+//! maps onto physical links — the bypass construction on the 2D mesh,
+//! plain single-hop rings on a torus.
 
+use crate::comm::{CommOp, Group, Topology};
 use crate::compute::{DieCompute, MatmulShape};
 use crate::config::HardwareConfig;
 use crate::nop::analytic::{Method, Pass};
-use crate::nop::collective::{ring_step_collective, CollectiveCost, CollectiveKind};
+use crate::nop::collective::CollectiveCost;
 use crate::parallel::plan::{
     act_bytes, attention_compute, fit_tokens, vector_compute, BlockPlan, PlanInput, SramReport,
     TpPlanner, ACT_BUF_FILL,
@@ -79,16 +85,18 @@ impl HecatonPlanner {
     ) -> CollectiveCost {
         // Per-ring volume: the ring's dies collectively hold [w, in/other]
         // of the input; "other" = scatter dim for the input.
-        let ag_in = ring_step_collective(
-            CollectiveKind::AllGather,
-            o.gather,
-            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+        let ag_in = hw.topology.price(
+            CommOp::all_gather(
+                Group::BypassRing { n: o.gather },
+                act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            ),
             &hw.link,
         );
-        let rs_out = ring_step_collective(
-            CollectiveKind::ReduceScatter,
-            o.scatter,
-            act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+        let rs_out = hw.topology.price(
+            CommOp::reduce_scatter(
+                Group::BypassRing { n: o.scatter },
+                act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+            ),
             &hw.link,
         );
         ag_in.then(rs_out)
@@ -102,22 +110,25 @@ impl HecatonPlanner {
         tokens: usize,
         hw: &HardwareConfig,
     ) -> CollectiveCost {
-        let ag_dout = ring_step_collective(
-            CollectiveKind::AllGather,
-            o.scatter,
-            act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+        let ag_dout = hw.topology.price(
+            CommOp::all_gather(
+                Group::BypassRing { n: o.scatter },
+                act_bytes(tokens, l.out_dim.div_ceil(o.gather)),
+            ),
             &hw.link,
         );
-        let rs_din = ring_step_collective(
-            CollectiveKind::ReduceScatter,
-            o.gather,
-            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+        let rs_din = hw.topology.price(
+            CommOp::reduce_scatter(
+                Group::BypassRing { n: o.gather },
+                act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            ),
             &hw.link,
         );
-        let ag_in = ring_step_collective(
-            CollectiveKind::AllGather,
-            o.gather,
-            act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+        let ag_in = hw.topology.price(
+            CommOp::all_gather(
+                Group::BypassRing { n: o.gather },
+                act_bytes(tokens, l.in_dim.div_ceil(o.scatter)),
+            ),
             &hw.link,
         );
         ag_dout.then(rs_din).then(ag_in)

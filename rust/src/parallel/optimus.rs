@@ -8,12 +8,15 @@
 //! bandwidth" (§V-A). NoP cost comes from the paper's Table III closed
 //! forms (which are *pessimistic* relative to an idealized
 //! recursive-doubling schedule — see `nop::analytic::optimus_gap`); wire
-//! bytes for the energy model come from the idealized step schedule, which
-//! is volume- (not schedule-) determined.
+//! bytes for the energy model come from the lowered [`Group::Line`]
+//! broadcast [`CommOp`]s, which are volume- (not schedule-) determined —
+//! the same bytes on every topology, so Optimus' paper-calibrated timing
+//! rides the IR without re-deriving Table III per topology.
 
+use crate::comm::{CommOp, Group, Topology};
 use crate::config::{HardwareConfig, ELEM_BYTES};
 use crate::nop::analytic::{table3, Method, NopParams, Pass};
-use crate::nop::collective::{recursive_doubling, CollectiveCost, CollectiveKind};
+use crate::nop::collective::CollectiveCost;
 use crate::parallel::hecaton::HecatonPlanner;
 use crate::parallel::plan::{
     act_bytes, BlockPlan, PlanInput, SramReport, TpPlanner,
@@ -65,10 +68,14 @@ impl OptimusPlanner {
             (crate::nop::analytic::Block::Attention, Pass::Bwd) => (4.0, 8.0),
             (crate::nop::analytic::Block::Ffn, Pass::Bwd) => (10.0, 16.0),
         };
-        let per_ring = recursive_doubling(CollectiveKind::Broadcast, rni, act_chunk, &hw.link)
+        let topo = hw.topology;
+        let per_ring = topo
+            .price(CommOp::broadcast(Group::Line { n: rni }, act_chunk), &hw.link)
             .wire_bytes
             * n_act
-            + recursive_doubling(CollectiveKind::Broadcast, rni, wt_chunk, &hw.link).wire_bytes
+            + topo
+                .price(CommOp::broadcast(Group::Line { n: rni }, wt_chunk), &hw.link)
+                .wire_bytes
                 * n_wt;
         CollectiveCost {
             link_latency,

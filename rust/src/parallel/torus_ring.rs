@@ -6,11 +6,14 @@
 //! but on a physical mesh its wrap-around links span the whole side, so
 //! link latency *grows* (Table III: `4(N−√N)α` vs flat's `2(N−1)α` —
 //! better T, worse L; and still a whole-package collective, unlike
-//! Hecaton's row/column-local ones).
+//! Hecaton's row/column-local ones). The planner emits one
+//! [`Group::Grid`] all-reduce [`CommOp`]; whether each ring step pays the
+//! `√N`-hop mesh wrap or a single torus hop is the topology lowering's
+//! call ([`crate::comm`]), not this planner's.
 
+use crate::comm::{CommOp, Group, Topology};
 use crate::config::HardwareConfig;
 use crate::nop::analytic::{Method, Pass};
-use crate::nop::collective::torus_all_reduce;
 use crate::parallel::flat_ring::{one_d_block_plan, one_d_sram_report};
 use crate::parallel::plan::{act_bytes, BlockPlan, PlanInput, SramReport, TpPlanner};
 use crate::workload::ops::BlockDesc;
@@ -36,18 +39,19 @@ impl TpPlanner for TorusRingPlanner {
         let hw = inp.hw;
         let side = (hw.n_dies() as f64).sqrt().round() as usize;
         let volume = act_bytes(tokens, inp.model.hidden);
-        let ar = torus_all_reduce(side, volume, &hw.link);
+        let phase = hw
+            .topology
+            .lower(CommOp::all_reduce(Group::Grid { side }, volume));
+        let ar = phase.cost(&hw.link);
         let nop = match pass {
             Pass::Fwd => ar,
-            // Bwd: AR + AG; on the torus the AG costs half the AR
-            // (Table III: 6(N−√N)α = 1.5 × 4(N−√N)α).
+            // Bwd: AR + AG; the AG costs half the AR (Table III:
+            // 6(N−√N)α = 1.5 × 4(N−√N)α) — the same lowered phase
+            // replayed at half scale.
             Pass::Bwd => {
-                let mut half = ar;
-                half.link_latency = half.link_latency * 0.5;
-                half.transmission = half.transmission * 0.5;
-                half.wire_bytes = half.wire_bytes * 0.5;
-                half.steps /= 2;
-                ar.then(half)
+                let mut half = phase;
+                half.scale *= 0.5;
+                ar.then(half.cost(&hw.link))
             }
         };
         one_d_block_plan(block, pass, inp, tokens, nop)

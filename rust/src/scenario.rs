@@ -29,18 +29,19 @@
 //! wrappers over this module).
 //!
 //! [`ScenarioGrid`] is the cross-product grid over scenario axes — the
-//! successor of the former `SweepGrid`/`ClusterGrid` pair: the six
-//! per-package axes plus the cluster knobs, expanded into a deterministic
+//! successor of the former `SweepGrid`/`ClusterGrid` pair: the
+//! per-package axes (including the NoP topology, the [`crate::comm`]
+//! lowering axis) plus the cluster knobs, expanded into a deterministic
 //! scenario list and executed on the shared worker pool
 //! ([`run_on`]/[`run_all`]) with memoized planning. The table/CSV/JSON
 //! renderers ([`render_table`] …) dispatch on the grid kind and keep the
-//! exact output of the pre-Scenario CLI.
+//! pre-Scenario CLI columns, extended with the topology/fabric cells.
 
 use anyhow::{anyhow, bail};
 
-use crate::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use crate::config::cluster::{ClusterConfig, FabricTopo, InterKind, InterPkgLink};
 use crate::config::presets::{all_model_presets, eval_models, model_preset};
-use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind};
+use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind, TopologyKind};
 use crate::nop::analytic::Method;
 use crate::parallel::hybrid::HybridSpec;
 use crate::sched::checkpoint::Checkpoint;
@@ -284,6 +285,9 @@ impl Scenario {
         out.push_str(&format!("mesh = [{}, {}]\n", hw.mesh_rows, hw.mesh_cols));
         out.push_str(&format!("package = \"{}\"\n", hw.package.name()));
         out.push_str(&format!("dram = \"{}\"\n", hw.dram.kind.name()));
+        if hw.topology != TopologyKind::Mesh2d {
+            out.push_str(&format!("topology = \"{}\"\n", hw.topology.name()));
+        }
         if let Some(cap) = hw.sram_limit {
             out.push_str(&format!("sram_mib = {}\n", cap.raw() / (1024.0 * 1024.0)));
         }
@@ -354,6 +358,8 @@ impl Scenario {
                 out.push_str("inter = \"substrate\"\n");
             } else if c.inter == InterPkgLink::preset(InterKind::Optical) {
                 out.push_str("inter = \"optical\"\n");
+            } else if c.inter == InterPkgLink::preset(InterKind::FatTree) {
+                out.push_str("inter = \"fat-tree\"\n");
             } else {
                 out.push_str(&format!("inter = {}\n", c.inter.gbs()));
             }
@@ -384,6 +390,7 @@ pub struct ScenarioBuilder {
     package: PackageKind,
     dram: DramKind,
     sram_limit: Option<Bytes>,
+    topology: Option<TopologyKind>,
     method: Method,
     engine: EngineKind,
     opts: PlanOptions,
@@ -405,6 +412,7 @@ impl ScenarioBuilder {
             package: PackageKind::Standard,
             dram: DramKind::Ddr5_6400,
             sram_limit: None,
+            topology: None,
             method: Method::Hecaton,
             engine: EngineKind::Analytic,
             opts: PlanOptions::default(),
@@ -457,6 +465,14 @@ impl ScenarioBuilder {
     /// occupancy peak exceeds it become evaluation errors.
     pub fn sram_limit(mut self, cap: Bytes) -> Self {
         self.sram_limit = Some(cap);
+        self
+    }
+
+    /// Intra-package NoP topology (default 2D mesh). `torus` adds wrap
+    /// links, changing every collective lowering ([`crate::comm`]) while
+    /// leaving planner byte counts untouched.
+    pub fn topology(mut self, topo: TopologyKind) -> Self {
+        self.topology = Some(topo);
         self
     }
 
@@ -530,6 +546,10 @@ impl ScenarioBuilder {
         };
         let hw = match self.sram_limit {
             Some(cap) => hw.with_sram_limit(cap)?,
+            None => hw,
+        };
+        let hw = match self.topology {
+            Some(topo) => hw.with_topology(topo),
             None => hw,
         };
         let target = if self.packages == 1 && self.dp == 1 && self.pp == 1 {
@@ -646,9 +666,10 @@ pub fn evaluate(s: &Scenario) -> crate::Result<Evaluation> {
 
 // ───────────────────────── grid + runner ─────────────────────────
 
-/// A cross-product grid over every scenario axis: the six per-package
-/// axes (models × meshes × packages × DRAM × methods × engines) plus the
-/// cluster knobs (package counts × dp × pp × fabrics). The successor of
+/// A cross-product grid over every scenario axis: the per-package axes
+/// (models × meshes × topologies × packages × DRAM × methods × engines)
+/// plus the cluster knobs (package counts × dp × pp × fabrics). The
+/// successor of
 /// the former `SweepGrid`/`ClusterGrid` pair: with the cluster axes at
 /// their degenerate defaults it expands exactly like the old
 /// single-package sweep (same nested order, same output); with any
@@ -664,6 +685,8 @@ pub struct ScenarioGrid {
     pub drams: Vec<DramKind>,
     /// Enforced per-die SRAM capacities; `None` = report-only default.
     pub sram: Vec<Option<Bytes>>,
+    /// Intra-package NoP topologies (the [`crate::comm`] lowering axis).
+    pub topos: Vec<TopologyKind>,
     pub methods: Vec<Method>,
     pub engines: Vec<EngineKind>,
     /// Activation-checkpointing policies.
@@ -685,6 +708,7 @@ impl Default for ScenarioGrid {
             packages: Vec::new(),
             drams: Vec::new(),
             sram: vec![None],
+            topos: vec![TopologyKind::Mesh2d],
             methods: Vec::new(),
             engines: Vec::new(),
             checkpoints: vec![Checkpoint::None],
@@ -712,6 +736,7 @@ impl ScenarioGrid {
             * self.packages.len()
             * self.drams.len()
             * self.sram.len()
+            * self.topos.len()
             * self.methods.len()
             * self.engines.len()
             * self.checkpoints.len()
@@ -728,9 +753,9 @@ impl ScenarioGrid {
     /// Expand into a deterministic scenario list plus the count of
     /// skipped (shape-inconsistent) combinations. Single-package grids
     /// skip nothing and keep the historical nested order
-    /// (models → meshes → packages → drams → methods → engines); cluster
-    /// grids nest the fabric and shape axes between drams and methods,
-    /// exactly as the old cluster sweep did.
+    /// (models → meshes → packages → drams → sram → topos → methods →
+    /// engines); cluster grids nest the fabric and shape axes between
+    /// topos and methods, exactly as the old cluster sweep did.
     pub fn points(&self) -> crate::Result<(Vec<Scenario>, usize)> {
         let mut out = Vec::new();
         if !self.is_cluster() {
@@ -744,19 +769,22 @@ impl ScenarioGrid {
                                     Some(cap) => base.clone().with_sram_limit(cap)?,
                                     None => base.clone(),
                                 };
-                                for &method in &self.methods {
-                                    for &engine in &self.engines {
-                                        for &ck in &self.checkpoints {
-                                            out.push(Scenario::package_with(
-                                                model.clone(),
-                                                hw.clone(),
-                                                method,
-                                                engine,
-                                                PlanOptions {
-                                                    checkpoint: ck,
-                                                    ..PlanOptions::default()
-                                                },
-                                            ));
+                                for &topo in &self.topos {
+                                    let hw = hw.clone().with_topology(topo);
+                                    for &method in &self.methods {
+                                        for &engine in &self.engines {
+                                            for &ck in &self.checkpoints {
+                                                out.push(Scenario::package_with(
+                                                    model.clone(),
+                                                    hw.clone(),
+                                                    method,
+                                                    engine,
+                                                    PlanOptions {
+                                                        checkpoint: ck,
+                                                        ..PlanOptions::default()
+                                                    },
+                                                ));
+                                            }
                                         }
                                     }
                                 }
@@ -780,35 +808,38 @@ impl ScenarioGrid {
                                 Some(cap) => base.clone().with_sram_limit(cap)?,
                                 None => base.clone(),
                             };
-                            for inter in &self.inter {
-                                for &npkg in &self.n_packages {
-                                    for &dp in &self.dp {
-                                        for &pp in &self.pp {
-                                            let Ok(cluster) = ClusterConfig::try_new(
-                                                hw.clone(),
-                                                npkg,
-                                                dp,
-                                                pp,
-                                                inter.clone(),
-                                            ) else {
-                                                skipped += per_combo;
-                                                continue;
-                                            };
-                                            if HybridSpec::plan(model, &cluster).is_err() {
-                                                skipped += per_combo;
-                                                continue;
-                                            }
-                                            for &method in &self.methods {
-                                                for &engine in &self.engines {
-                                                    for &ck in &self.checkpoints {
-                                                        let mut s = Scenario::cluster(
-                                                            model.clone(),
-                                                            cluster.clone(),
-                                                            method,
-                                                            engine,
-                                                        );
-                                                        s.opts.checkpoint = ck;
-                                                        out.push(s);
+                            for &topo in &self.topos {
+                                let hw = hw.clone().with_topology(topo);
+                                for inter in &self.inter {
+                                    for &npkg in &self.n_packages {
+                                        for &dp in &self.dp {
+                                            for &pp in &self.pp {
+                                                let Ok(cluster) = ClusterConfig::try_new(
+                                                    hw.clone(),
+                                                    npkg,
+                                                    dp,
+                                                    pp,
+                                                    inter.clone(),
+                                                ) else {
+                                                    skipped += per_combo;
+                                                    continue;
+                                                };
+                                                if HybridSpec::plan(model, &cluster).is_err() {
+                                                    skipped += per_combo;
+                                                    continue;
+                                                }
+                                                for &method in &self.methods {
+                                                    for &engine in &self.engines {
+                                                        for &ck in &self.checkpoints {
+                                                            let mut s = Scenario::cluster(
+                                                                model.clone(),
+                                                                cluster.clone(),
+                                                                method,
+                                                                engine,
+                                                            );
+                                                            s.opts.checkpoint = ck;
+                                                            out.push(s);
+                                                        }
                                                     }
                                                 }
                                             }
@@ -1120,11 +1151,30 @@ pub mod axis {
             .iter()
             .map(|x| {
                 InterPkgLink::parse(x).ok_or_else(|| {
-                    match crate::util::cli::suggest(x, ["substrate", "optical"]) {
+                    match crate::util::cli::suggest(x, ["substrate", "optical", "fat-tree"]) {
                         Some(s) => anyhow!("bad inter-bw '{x}' (did you mean '{s}'?)"),
-                        None => anyhow!("bad inter-bw '{x}' (substrate | optical | <GB/s>)"),
+                        None => anyhow!(
+                            "bad inter-bw '{x}' (substrate | optical | fat-tree | <GB/s>)"
+                        ),
                     }
                 })
+            })
+            .collect()
+    }
+
+    /// Intra-package NoP topologies; a lone `all` expands to every
+    /// lowering in the zoo.
+    pub fn topos(items: &[&str]) -> crate::Result<Vec<TopologyKind>> {
+        if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
+            return Ok(TopologyKind::all().to_vec());
+        }
+        if items.is_empty() {
+            bail!("empty topo list");
+        }
+        items
+            .iter()
+            .map(|x| {
+                TopologyKind::parse(x).ok_or_else(|| unknown("topo", x, &["mesh", "torus"]))
             })
             .collect()
     }
@@ -1142,8 +1192,8 @@ fn cluster_layout(scenarios: &[Scenario]) -> bool {
 
 /// Render a grid run as a table (CLI `--format table`). Dispatches on the
 /// grid kind: cluster grids get the cluster columns (bubble/p2p/
-/// all-reduce shares), package grids the classic sweep columns — both
-/// byte-identical to the pre-Scenario CLI output.
+/// all-reduce shares), package grids the classic sweep columns — the
+/// pre-Scenario CLI layout plus the topology/fabric cells.
 pub fn render_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
     if cluster_layout(scenarios) {
         render_cluster_table(scenarios, evals, pareto)
@@ -1170,10 +1220,11 @@ pub fn render_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]
     }
 }
 
-fn package_row_strings(s: &Scenario, r: &SimResult, pareto: bool) -> [String; 10] {
+fn package_row_strings(s: &Scenario, r: &SimResult, pareto: bool) -> [String; 11] {
     [
         s.model.name.clone(),
         format!("{}x{}", s.hw().mesh_rows, s.hw().mesh_cols),
+        s.hw().topology.name().to_string(),
         s.hw().package.name().to_string(),
         s.hw().dram.kind.name().to_string(),
         s.method.name().to_string(),
@@ -1187,8 +1238,8 @@ fn package_row_strings(s: &Scenario, r: &SimResult, pareto: bool) -> [String; 10
 
 fn render_package_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
     let mut t = Table::new(&[
-        "model", "mesh", "package", "dram", "method", "engine", "latency", "energy", "feasible",
-        "pareto",
+        "model", "mesh", "topo", "package", "dram", "method", "engine", "latency", "energy",
+        "feasible", "pareto",
     ])
     .with_title("Sweep — * marks the latency × energy Pareto frontier")
     .label_first();
@@ -1200,15 +1251,16 @@ fn render_package_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[
 
 fn render_package_csv(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
     let mut out = String::from(
-        "model,mesh,package,dram,method,engine,latency_s,energy_j,feasible,pareto\n",
+        "model,mesh,topo,package,dram,method,engine,latency_s,energy_j,feasible,pareto\n",
     );
     for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
         let r = e.sim();
         out.push_str(&format!(
-            "{},{}x{},{},{},{},{},{:e},{:e},{},{}\n",
+            "{},{}x{},{},{},{},{},{},{:e},{:e},{},{}\n",
             csv_field(&s.model.name),
             s.hw().mesh_rows,
             s.hw().mesh_cols,
+            s.hw().topology.name(),
             s.hw().package.name(),
             s.hw().dram.kind.name(),
             s.method.name(),
@@ -1230,12 +1282,13 @@ fn render_package_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[b
         }
         let r = e.sim();
         out.push_str(&format!(
-            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"package\": \"{}\", \
-             \"dram\": \"{}\", \"method\": \"{}\", \"engine\": \"{}\", \
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"topo\": \"{}\", \
+             \"package\": \"{}\", \"dram\": \"{}\", \"method\": \"{}\", \"engine\": \"{}\", \
              \"latency_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
             json_escape(&s.model.name),
             s.hw().mesh_rows,
             s.hw().mesh_cols,
+            s.hw().topology.name(),
             s.hw().package.name(),
             s.hw().dram.kind.name(),
             s.method.name(),
@@ -1257,10 +1310,19 @@ fn cluster_parts<'a>(s: &'a Scenario, e: &'a Evaluation) -> (&'a ClusterConfig, 
     )
 }
 
+/// The fabric cell: bandwidth, tagged with the switched topology when the
+/// fabric is not the default point-to-point mesh of links.
+fn inter_cell(inter: &InterPkgLink) -> String {
+    match inter.topo {
+        FabricTopo::PointToPoint => format!("{:.0}GB/s", inter.gbs()),
+        FabricTopo::FatTree => format!("ft-{:.0}GB/s", inter.gbs()),
+    }
+}
+
 fn render_cluster_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
     let mut t = Table::new(&[
-        "model", "mesh", "pkgs", "dp", "pp", "inter", "package", "dram", "method", "engine",
-        "latency", "bubble", "p2p", "allreduce", "energy", "feasible", "pareto",
+        "model", "mesh", "topo", "pkgs", "dp", "pp", "inter", "package", "dram", "method",
+        "engine", "latency", "bubble", "p2p", "allreduce", "energy", "feasible", "pareto",
     ])
     .with_title("Cluster sweep — * marks the latency × energy Pareto frontier")
     .label_first();
@@ -1269,10 +1331,11 @@ fn render_cluster_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[
         t.row(crate::table_row![
             s.model.name.clone(),
             format!("{}x{}", c.package_hw.mesh_rows, c.package_hw.mesh_cols),
+            c.package_hw.topology.name(),
             r.packages,
             r.dp,
             r.pp,
-            format!("{:.0}GB/s", c.inter.gbs()),
+            inter_cell(&c.inter),
             c.package_hw.package.name(),
             c.package_hw.dram.kind.name(),
             s.method.name(),
@@ -1291,20 +1354,22 @@ fn render_cluster_table(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[
 
 fn render_cluster_csv(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[bool]) -> String {
     let mut out = String::from(
-        "model,mesh,packages,dp,pp,inter_gbs,package,dram,method,engine,\
+        "model,mesh,topo,packages,dp,pp,inter_gbs,fabric,package,dram,method,engine,\
          latency_s,bubble_s,p2p_s,allreduce_s,energy_j,feasible,pareto\n",
     );
     for ((s, e), &on) in scenarios.iter().zip(evals).zip(pareto) {
         let (c, r) = cluster_parts(s, e);
         out.push_str(&format!(
-            "{},{}x{},{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e},{},{}\n",
+            "{},{}x{},{},{},{},{},{},{},{},{},{},{},{:e},{:e},{:e},{:e},{:e},{},{}\n",
             csv_field(&s.model.name),
             c.package_hw.mesh_rows,
             c.package_hw.mesh_cols,
+            c.package_hw.topology.name(),
             r.packages,
             r.dp,
             r.pp,
             c.inter.gbs(),
+            c.inter.topo.name(),
             c.package_hw.package.name(),
             c.package_hw.dram.kind.name(),
             s.method.name(),
@@ -1329,18 +1394,21 @@ fn render_cluster_json(scenarios: &[Scenario], evals: &[Evaluation], pareto: &[b
         }
         let (c, r) = cluster_parts(s, e);
         out.push_str(&format!(
-            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"packages\": {}, \"dp\": {}, \
-             \"pp\": {}, \"inter_gbs\": {}, \"package\": \"{}\", \"dram\": \"{}\", \
+            "  {{\"model\": \"{}\", \"mesh\": \"{}x{}\", \"topo\": \"{}\", \"packages\": {}, \
+             \"dp\": {}, \"pp\": {}, \"inter_gbs\": {}, \"fabric\": \"{}\", \
+             \"package\": \"{}\", \"dram\": \"{}\", \
              \"method\": \"{}\", \"engine\": \"{}\", \
              \"latency_s\": {:e}, \"bubble_s\": {:e}, \"p2p_s\": {:e}, \
              \"allreduce_s\": {:e}, \"energy_j\": {:e}, \"feasible\": {}, \"pareto\": {}}}",
             json_escape(&s.model.name),
             c.package_hw.mesh_rows,
             c.package_hw.mesh_cols,
+            c.package_hw.topology.name(),
             r.packages,
             r.dp,
             r.pp,
             c.inter.gbs(),
+            c.inter.topo.name(),
             c.package_hw.package.name(),
             c.package_hw.dram.kind.name(),
             s.method.name(),
@@ -1714,6 +1782,59 @@ mod tests {
         assert!(axis::sram_limits(&[]).is_err());
     }
 
+    /// Satellite: the topology axis parses with "did you mean" (the
+    /// `tours` typo regression) and `all` expansion, and the fabric axis
+    /// accepts the fat-tree preset by name.
+    #[test]
+    fn topology_axis_parses_and_suggests() {
+        assert_eq!(
+            axis::topos(&["mesh", "torus"]).unwrap(),
+            vec![TopologyKind::Mesh2d, TopologyKind::Torus2d]
+        );
+        assert_eq!(axis::topos(&["all"]).unwrap(), TopologyKind::all().to_vec());
+        let e = format!("{:#}", axis::topos(&["tours"]).unwrap_err());
+        assert!(e.contains("did you mean 'torus'"), "{e}");
+        assert!(axis::topos(&[]).is_err());
+        let ft = axis::inters(&["fat-tree"]).unwrap();
+        assert_eq!(ft[0].topo, FabricTopo::FatTree);
+        assert_eq!(ft[0], InterPkgLink::preset(InterKind::FatTree));
+        let e = format!("{:#}", axis::inters(&["fat-tre"]).unwrap_err());
+        assert!(e.contains("did you mean 'fat-tree'"), "{e}");
+    }
+
+    /// Tentpole: the topology axis multiplies the grid, and torus points
+    /// lower to genuinely different per-link schedules — faster than the
+    /// mesh for the wrap-hop-dominated torus all-reduce.
+    #[test]
+    fn topology_axis_expands_grid_and_changes_pricing() {
+        let g = ScenarioGrid {
+            models: vec![tiny()],
+            meshes: vec![(4, 4)],
+            packages: vec![PackageKind::Standard],
+            drams: vec![DramKind::Ddr5_6400],
+            topos: TopologyKind::all().to_vec(),
+            methods: vec![Method::TorusRing],
+            engines: vec![EngineKind::Analytic],
+            ..Default::default()
+        };
+        assert_eq!(g.len(), 2);
+        let (pts, skipped) = g.points().unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(pts[0].hw().topology, TopologyKind::Mesh2d);
+        assert_eq!(pts[1].hw().topology, TopologyKind::Torus2d);
+        let evals = run_all(&pts).unwrap();
+        assert!(
+            evals[1].latency() < evals[0].latency(),
+            "wrap links must beat the mesh for the torus all-reduce"
+        );
+        let table = render_table(&pts, &evals, &[false, false]);
+        assert!(table.contains("torus"), "{table}");
+        let csv = render_csv(&pts, &evals, &[false, false]);
+        assert!(csv.starts_with("model,mesh,topo,"), "{csv}");
+        let json = render_json(&pts, &evals, &[false, false]);
+        assert!(json.contains("\"topo\": \"torus\""), "{json}");
+    }
+
     #[test]
     fn to_toml_emits_expected_sections() {
         let s = Scenario::builder(tiny())
@@ -1735,5 +1856,22 @@ mod tests {
         // Package scenarios carry no [cluster] section.
         let p = Scenario::builder(tiny()).dies(16).build().unwrap();
         assert!(!p.to_toml().contains("[cluster]"));
+        // Topology emits only when it departs from the mesh default.
+        assert!(!toml.contains("topology ="), "{toml}");
+        let t = Scenario::builder(tiny())
+            .dies(16)
+            .topology(TopologyKind::Torus2d)
+            .build()
+            .unwrap();
+        assert_eq!(t.hw().topology, TopologyKind::Torus2d);
+        assert!(t.to_toml().contains("topology = \"torus\""));
+        // The fat-tree fabric round-trips by preset name.
+        let ft = Scenario::builder(tiny())
+            .dies(16)
+            .cluster(2, 2, 1)
+            .inter(InterPkgLink::preset(InterKind::FatTree))
+            .build()
+            .unwrap();
+        assert!(ft.to_toml().contains("inter = \"fat-tree\""));
     }
 }

@@ -15,7 +15,12 @@
 //!   terms, the event backends execute the 1F1B task DAG with every
 //!   boundary activation and gradient ring riding the **shared
 //!   inter-package fabric as a fair-share resource** — congestion on a
-//!   slow fabric is actually priced.
+//!   slow fabric is actually priced. The fabric's [`FabricTopo`] is the
+//!   inter-package analog of the intra-package [`crate::comm`] lowering:
+//!   it decides how many physical traversals each hop pays
+//!   ([`crate::config::cluster::InterPkgLink::hop_latency`]) and which
+//!   all-reduce round structure the gradient rings use (point-to-point
+//!   ring vs fat-tree halving-doubling).
 //!
 //! Invariant (regression-tested in `tests/integration_cluster.rs`): the
 //! degenerate cluster — 1 package, `dp = pp = 1` — produces results
@@ -24,7 +29,7 @@
 
 use std::sync::Arc;
 
-use crate::config::cluster::ClusterConfig;
+use crate::config::cluster::{ClusterConfig, FabricTopo};
 use crate::config::ModelConfig;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::memory::sram::OccupancyReport;
@@ -208,6 +213,9 @@ impl ClusterPlan {
     /// All `dp` replicas' rings run concurrently over the one shared
     /// fabric, so the medium carries `dp ×` the per-package ring volume —
     /// under fluid fair sharing that is exactly a `dp ×` longer stream.
+    /// The latency term is topology-lowered: [`FabricTopo::PointToPoint`]
+    /// pays the ring's `2(dp−1)` direct hops, [`FabricTopo::FatTree`]
+    /// runs halving-doubling in `2⌈log₂ dp⌉` switched rounds.
     pub fn allreduce_time(&self, s: usize) -> Seconds {
         let dp = self.cluster.dp;
         let vol = self.spec.allreduce_bytes(s, dp);
@@ -215,12 +223,26 @@ impl ClusterPlan {
             return Seconds::ZERO;
         }
         (vol * dp as f64).over_bandwidth(self.cluster.inter.bandwidth)
-            + self.cluster.inter.latency * (2.0 * (dp as f64 - 1.0))
+            + self.cluster.inter.hop_latency() * self.ar_hops()
+    }
+
+    /// Fabric hops on the all-reduce critical path, per [`FabricTopo`]:
+    /// the classic ring serializes `2(dp−1)` neighbor hops; a switched
+    /// fat-tree runs recursive halving-doubling — `⌈log₂ dp⌉` rounds of
+    /// reduce-scatter plus the mirrored all-gather — each round paying
+    /// one (two-traversal) switched hop.
+    fn ar_hops(&self) -> f64 {
+        let dp = self.cluster.dp as f64;
+        match self.cluster.inter.topo {
+            FabricTopo::PointToPoint => 2.0 * (dp - 1.0),
+            FabricTopo::FatTree => 2.0 * dp.log2().ceil(),
+        }
     }
 
     /// Stage `s`'s all-reduce as fabric wire bytes for the event DAG:
     /// all replicas' concurrent rings (`dp ×` the per-package volume)
-    /// with the ring hop latency folded in.
+    /// with the topology-lowered hop latency folded in as equivalent
+    /// bytes at the fabric's rate.
     fn allreduce_wire(&self, s: usize) -> Bytes {
         let dp = self.cluster.dp;
         let vol = self.spec.allreduce_bytes(s, dp);
@@ -229,9 +251,9 @@ impl ClusterPlan {
         }
         Bytes(
             vol.raw() * dp as f64
-                + self.cluster.inter.latency.raw()
+                + self.cluster.inter.hop_latency().raw()
                     * self.cluster.inter.bandwidth
-                    * (2.0 * (dp as f64 - 1.0)),
+                    * self.ar_hops(),
         )
     }
 
@@ -270,7 +292,9 @@ impl ClusterPlan {
         let m = self.microbatches;
         let fabric = Fabric {
             bandwidth: self.cluster.inter.bandwidth,
-            latency: self.cluster.inter.latency,
+            // Per-hop latency through the fabric topology: identity on a
+            // point-to-point fabric, two traversals through a fat-tree.
+            latency: self.cluster.inter.hop_latency(),
         };
 
         // Critical stage under the requested backend (the degenerate
@@ -593,5 +617,46 @@ mod tests {
             e.latency,
             a.latency
         );
+    }
+
+    /// The fat-tree lowering changes only the fabric's latency structure:
+    /// log₂-round all-reduce with doubled per-hop traversals. At equal
+    /// bandwidth/latency numbers the switched all-reduce beats the ring
+    /// for dp = 8 (6 vs 14 hop equivalents), and the point-to-point
+    /// result is byte-identical to the legacy expression.
+    #[test]
+    fn fat_tree_lowers_allreduce_rounds() {
+        let m = model_preset("tinyllama-1.1b").unwrap();
+        let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        let mut p2p = InterPkgLink::preset(InterKind::Substrate);
+        p2p.latency = Seconds::us(5.0); // make the hop term visible
+        let mut ft = p2p.clone();
+        ft.topo = FabricTopo::FatTree;
+        let cache = PlanCache::new();
+        let dp = 8;
+        let cluster = ClusterConfig::try_new(hw, dp, dp, 1, p2p.clone()).unwrap();
+        let mut plan =
+            ClusterPlan::build(&m, &cluster, Method::Hecaton, PlanOptions::default(), &cache)
+                .unwrap();
+        let vol = plan.spec.allreduce_bytes(0, dp) * dp as f64;
+        let ring_hops = 2.0 * (dp as f64 - 1.0);
+        let legacy = vol.over_bandwidth(p2p.bandwidth) + p2p.latency * ring_hops;
+        assert_eq!(
+            plan.allreduce_time(0).raw().to_bits(),
+            legacy.raw().to_bits(),
+            "point-to-point keeps the legacy ring expression bitwise"
+        );
+        let ring = plan.allreduce_time(0);
+        plan.retarget_inter(ft);
+        let switched = plan.allreduce_time(0);
+        // 2·⌈log₂ 8⌉ = 6 doubled traversals (12×α) vs the ring's 14×α.
+        assert!(
+            switched < ring,
+            "fat-tree halving-doubling {switched} must beat the ring {ring} at dp=8"
+        );
+        for engine in EngineKind::all() {
+            let r = plan.time(engine);
+            assert!(r.latency.raw().is_finite() && r.latency.raw() > 0.0, "{engine:?}");
+        }
     }
 }

@@ -131,6 +131,7 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
         mesh_rows,
         mesh_cols,
         package,
+        topology,
         die,
         link,
         dram,
@@ -163,6 +164,10 @@ fn hw_fingerprint(hw: &HardwareConfig) -> u64 {
         match package {
             crate::config::PackageKind::Standard => 0u64,
             crate::config::PackageKind::Advanced => 1,
+        },
+        match topology {
+            crate::config::TopologyKind::Mesh2d => 0u64,
+            crate::config::TopologyKind::Torus2d => 1,
         },
         freq_hz.to_bits(),
         *pe_rows as u64,

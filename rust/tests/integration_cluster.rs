@@ -9,7 +9,7 @@
 //! * **Sweep determinism** — the cluster sweep returns bitwise-identical
 //!   results regardless of worker-thread count.
 
-use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use hecaton::config::cluster::{ClusterConfig, FabricTopo, InterKind, InterPkgLink};
 use hecaton::config::presets::model_preset;
 use hecaton::config::{DramKind, HardwareConfig, PackageKind};
 use hecaton::nop::analytic::Method;
@@ -75,6 +75,7 @@ fn cluster_engines_agree_on_uncongested_fabric() {
         bandwidth: 1.0e15,
         latency: Seconds::ns(1.0),
         pj_per_bit: 1.0,
+        topo: FabricTopo::PointToPoint,
     };
     prop::check("cluster event == analytic <= 1% (uncongested)", 24, |g| {
         let dp = *g.pick(&[1usize, 2, 4]);

@@ -1,0 +1,167 @@
+//! Topology-axis integration tests — the comm-IR refactor's acceptance:
+//!
+//! * **Mesh parity** — evaluating with the topology axis *named* (the
+//!   default 2D mesh, the default substrate fabric) is bitwise-identical
+//!   to leaving it defaulted, for all four TP methods and all three
+//!   engines. Together with the unit-level property tests in
+//!   `src/comm/mod.rs` (IR lowering == legacy schedule builders, bitwise)
+//!   this pins every pre-IR result through the new layer.
+//! * **Engine parity on the new topologies** — event vs analytic timing
+//!   agrees ≤1% on the torus NoP and on the fat-tree inter-package
+//!   fabric, the same bar the mesh/substrate stack already meets.
+//! * **Ordering** — torus wrap links never price a collective above its
+//!   mesh lowering, end to end.
+
+use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, PackageKind, TopologyKind};
+use hecaton::nop::analytic::Method;
+use hecaton::scenario::Scenario;
+use hecaton::sim::cluster::ClusterPlan;
+use hecaton::sim::sweep::PlanCache;
+use hecaton::sim::system::{EngineKind, PlanOptions};
+use hecaton::util::Seconds;
+
+fn package_scenario(method: Method, engine: EngineKind, topo: Option<TopologyKind>) -> Scenario {
+    let b = Scenario::builder(model_preset("tinyllama-1.1b").unwrap())
+        .dies(16)
+        .method(method)
+        .engine(engine);
+    let b = match topo {
+        Some(t) => b.topology(t),
+        None => b,
+    };
+    b.build().unwrap()
+}
+
+/// Naming the default topology must not perturb a single bit: the IR is
+/// the only pricing path, so `--topo mesh` and the pre-axis default are
+/// the same evaluation for every method × engine on the substrate stack.
+#[test]
+fn explicit_mesh_is_bitwise_the_default_for_every_method_and_engine() {
+    let cache = PlanCache::new();
+    for method in Method::all() {
+        for engine in EngineKind::all() {
+            let base = package_scenario(method, engine, None);
+            let named = package_scenario(method, engine, Some(TopologyKind::Mesh2d));
+            let a = base.evaluate_on(&cache).unwrap();
+            let b = named.evaluate_on(&cache).unwrap();
+            let tag = format!("{method:?}/{engine:?}");
+            assert_eq!(
+                a.latency().raw().to_bits(),
+                b.latency().raw().to_bits(),
+                "{tag}: latency"
+            );
+            assert_eq!(
+                a.energy_total().raw().to_bits(),
+                b.energy_total().raw().to_bits(),
+                "{tag}: energy"
+            );
+        }
+    }
+}
+
+/// Same invariant on the cluster path: naming the substrate fabric (the
+/// point-to-point default) changes nothing, across engines.
+#[test]
+fn explicit_substrate_cluster_is_bitwise_the_default() {
+    let cache = PlanCache::new();
+    for engine in EngineKind::all() {
+        let mk = |named: bool| {
+            let b = Scenario::builder(model_preset("tinyllama-1.1b").unwrap())
+                .dies(16)
+                .cluster(4, 2, 2)
+                .engine(engine);
+            let b = if named {
+                b.inter(InterPkgLink::preset(InterKind::Substrate))
+                    .topology(TopologyKind::Mesh2d)
+            } else {
+                b
+            };
+            b.build().unwrap()
+        };
+        let a = mk(false).evaluate_on(&cache).unwrap();
+        let b = mk(true).evaluate_on(&cache).unwrap();
+        assert_eq!(
+            a.latency().raw().to_bits(),
+            b.latency().raw().to_bits(),
+            "{engine:?}: latency"
+        );
+        assert_eq!(
+            a.energy_total().raw().to_bits(),
+            b.energy_total().raw().to_bits(),
+            "{engine:?}: energy"
+        );
+    }
+}
+
+/// Event vs analytic timing on the torus NoP meets the same ≤1% bar the
+/// mesh stack does, for every TP method.
+#[test]
+fn torus_engines_agree_within_one_percent() {
+    let cache = PlanCache::new();
+    for method in Method::all() {
+        let a = package_scenario(method, EngineKind::Analytic, Some(TopologyKind::Torus2d))
+            .evaluate_on(&cache)
+            .unwrap();
+        for engine in [EngineKind::Event, EngineKind::EventPrefetch] {
+            let e = package_scenario(method, engine, Some(TopologyKind::Torus2d))
+                .evaluate_on(&cache)
+                .unwrap();
+            let (ar, er) = (a.latency().raw(), e.latency().raw());
+            assert!(
+                ((er - ar) / ar).abs() <= 1e-2,
+                "{method:?}/{engine:?}: event {er} vs analytic {ar}"
+            );
+        }
+    }
+}
+
+/// The torus lowering never prices a run above its mesh twin: wrap links
+/// only shorten hops (bytes on the wire are identical by construction).
+#[test]
+fn torus_never_loses_to_mesh_end_to_end() {
+    let cache = PlanCache::new();
+    for method in Method::all() {
+        let mesh = package_scenario(method, EngineKind::Analytic, Some(TopologyKind::Mesh2d))
+            .evaluate_on(&cache)
+            .unwrap();
+        let torus = package_scenario(method, EngineKind::Analytic, Some(TopologyKind::Torus2d))
+            .evaluate_on(&cache)
+            .unwrap();
+        assert!(
+            torus.latency().raw() <= mesh.latency().raw() * (1.0 + 1e-12),
+            "{method:?}: torus {} vs mesh {}",
+            torus.latency(),
+            mesh.latency()
+        );
+    }
+}
+
+/// Event vs analytic cluster timing agrees ≤1% on an uncongested
+/// fat-tree fabric (mirroring the point-to-point parity test in
+/// `integration_cluster.rs`), across dp/pp shapes.
+#[test]
+fn fat_tree_cluster_engines_agree_within_one_percent() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+    let cache = PlanCache::new();
+    let mut ft = InterPkgLink::preset(InterKind::FatTree);
+    ft.bandwidth = 1.0e15;
+    ft.latency = Seconds::ns(1.0);
+    for (dp, pp) in [(4usize, 1usize), (2, 2), (1, 4)] {
+        let cluster = ClusterConfig::try_new(hw.clone(), dp * pp, dp, pp, ft.clone()).unwrap();
+        let plan =
+            ClusterPlan::build(&m, &cluster, Method::Hecaton, PlanOptions::default(), &cache)
+                .unwrap();
+        let a = plan.time(EngineKind::Analytic);
+        for engine in [EngineKind::Event, EngineKind::EventPrefetch] {
+            let e = plan.time(engine);
+            let (ar, er) = (a.latency.raw(), e.latency.raw());
+            assert!(
+                ((er - ar) / ar).abs() <= 1e-2,
+                "dp{dp}xpp{pp}/{engine:?}: event {er} vs analytic {ar}"
+            );
+        }
+    }
+}
