@@ -1,7 +1,7 @@
 //! `hecaton bench` — the in-tree perf harness with a *committed* baseline.
 //!
-//! Two suites guard the evaluate() hot path (see ARCHITECTURE.md
-//! §Performance):
+//! Three suites guard the evaluate() hot path and the search layer (see
+//! ARCHITECTURE.md §Performance and §Search):
 //!
 //! * `hotpath` — repeated single-scenario evaluation: the cold path
 //!   (fresh plan cache + fresh engine buffers every call) against the
@@ -10,9 +10,14 @@
 //! * `sweep` — the Fig. 8 grid (2 packagings × 4 paper pairings × 4
 //!   methods) serial vs parallel vs warm-cache through
 //!   [`crate::scenario::run_on`].
+//! * `search` — branch-and-bound co-exploration ([`crate::search`])
+//!   against the exhaustive sweep on the `reproduce search` grid, plus
+//!   *recorded* evaluated-point fractions so the same `--compare`
+//!   threshold that catches slowdowns also catches pruning-effectiveness
+//!   regressions.
 //!
 //! Results are compared against `BENCH_hotpath.json` / `BENCH_sweep.json`
-//! at the repo root; `--compare` fails the run when a bench's median
+//! / `BENCH_search.json` at the repo root; `--compare` fails the run when a bench's median
 //! regresses past the threshold, and `--update` rewrites the baselines in
 //! place. The JSON row shape is byte-compatible with the `harness = false`
 //! bench binaries in `benches/` (`finish_with_json`), so either producer
@@ -32,7 +37,8 @@ use crate::config::presets::{model_preset, paper_pairings};
 use crate::config::{DramKind, HardwareConfig, PackageKind};
 use crate::memory::dram::DramModel;
 use crate::nop::analytic::Method;
-use crate::scenario::{run_on, EvalScratch, Scenario};
+use crate::scenario::{run_all, run_on, EvalScratch, Scenario};
+use crate::search::{Objective, SearchConfig};
 use crate::sched::pipeline::{
     overlap_chain_event, overlap_chain_event_in, GroupStage, EVENT_ITEM_CAP,
 };
@@ -44,7 +50,7 @@ use crate::util::stats::Summary;
 use crate::util::{Bytes, Seconds};
 
 /// The suite names `--suite all` expands to, in run order.
-pub const SUITES: [&str; 2] = ["hotpath", "sweep"];
+pub const SUITES: [&str; 3] = ["hotpath", "sweep", "search"];
 
 /// Harness knobs. `quick` shrinks the per-bench measurement window (CI
 /// and smoke runs); the *workload* under each bench name never changes,
@@ -134,6 +140,25 @@ impl Runner {
             max_s: s.max,
         });
     }
+
+    /// Record a derived *metric* (not a timing) as a row: every stat field
+    /// carries the value, so `compare()` ratios it like any median and the
+    /// `--threshold` gate guards it. Used for deterministic quantities
+    /// (e.g. the search's evaluated-point fraction) where any drift is a
+    /// real change, not measurement noise.
+    fn record(&mut self, name: &str, value: f64) {
+        println!("bench {:40} {:>6} iters  value {:>12.6}", name, 1, value);
+        self.rows.push(BenchRow {
+            suite: self.suite.to_string(),
+            name: name.to_string(),
+            iters: 1,
+            mean_s: value,
+            median_s: value,
+            p95_s: value,
+            min_s: value,
+            max_s: value,
+        });
+    }
 }
 
 /// Run one named suite. Unknown names error with the valid set.
@@ -141,8 +166,9 @@ pub fn run_suite(suite: &str, opts: BenchOpts) -> crate::Result<Vec<BenchRow>> {
     match suite {
         "hotpath" => Ok(hotpath_suite(opts)),
         "sweep" => Ok(sweep_suite(opts)),
+        "search" => Ok(search_suite(opts)),
         other => Err(anyhow!(
-            "unknown bench suite '{other}' (expected hotpath | sweep | all)"
+            "unknown bench suite '{other}' (expected hotpath | sweep | search | all)"
         )),
     }
 }
@@ -259,6 +285,44 @@ fn sweep_suite(opts: BenchOpts) -> Vec<BenchRow> {
     r.bench("sweep/fig8_grid_warm_cache", || {
         std::hint::black_box(run_on(&warm, &scenarios, 0).expect("grid evaluates"));
     });
+
+    r.rows
+}
+
+fn search_suite(opts: BenchOpts) -> Vec<BenchRow> {
+    let mut r = Runner::new("search", opts);
+
+    // The `reproduce search` co-exploration grid: the exhaustive sweep is
+    // the baseline the pruned searches must beat.
+    let grid = crate::report::search::grid();
+    let (points, _) = grid.points().expect("search grid expands");
+    r.bench("search/exhaustive_grid", || {
+        std::hint::black_box(run_all(&points).expect("grid evaluates"));
+    });
+    for (name, objective) in [
+        ("search/pruned_latency", Objective::Latency),
+        ("search/pruned_pareto", Objective::Pareto),
+    ] {
+        r.bench(name, || {
+            std::hint::black_box(
+                crate::search::run(&grid, &SearchConfig::new(objective), &PlanCache::new())
+                    .expect("search grid is valid"),
+            );
+        });
+    }
+
+    // Pruning effectiveness as guarded rows. The fraction is deterministic
+    // for a fixed grid, so a ratio past the threshold means the bounds got
+    // looser (or grouping broke) — a perf regression the timing rows alone
+    // could hide on a faster machine.
+    for (name, objective) in [
+        ("search/evaluated_fraction_latency", Objective::Latency),
+        ("search/evaluated_fraction_pareto", Objective::Pareto),
+    ] {
+        let out = crate::search::run(&grid, &SearchConfig::new(objective), &PlanCache::new())
+            .expect("search grid is valid");
+        r.record(name, out.evaluated_fraction());
+    }
 
     r.rows
 }
@@ -450,7 +514,7 @@ mod tests {
     fn suite_names_resolve() {
         for s in SUITES {
             // Only validate dispatch; running the suites is the CLI's job.
-            assert!(["hotpath", "sweep"].contains(&s));
+            assert!(["hotpath", "sweep", "search"].contains(&s));
         }
         assert!(run_suite("bogus", BenchOpts::default()).is_err());
     }

@@ -4,8 +4,11 @@
 //! * `simulate`  — run one scenario built from flags (or a config file)
 //! * `sweep`     — run a scenario grid in parallel (memoized planning,
 //!   Pareto-annotated table/CSV/JSON output)
-//! * `run`       — execute a scenario TOML file (single scenario or a
-//!   `[sweep]` grid) — see `examples/scenarios/`
+//! * `search`    — branch-and-bound search over the same grid axes:
+//!   same optimum/Pareto front as an exhaustive sweep, a fraction of the
+//!   evaluations ([`crate::search`])
+//! * `run`       — execute a scenario TOML file (single scenario, a
+//!   `[sweep]` grid, or a `[search]` over one) — see `examples/scenarios/`
 //! * `reproduce` — regenerate a paper table/figure (fig8, fig9, …)
 //! * `train`     — functional distributed training with a loss curve
 //! * `info`      — show presets and the resolved configuration
@@ -73,6 +76,27 @@ pub fn app() -> App {
                 .opt("format", "table", "output format: table | csv | json"),
         )
         .command(
+            CommandSpec::new("search", "pruned branch-and-bound search over a scenario grid")
+                .opt("objective", "latency", "latency | energy | pareto | latency-under-sram")
+                .opt("budget-sram-mib", "", "per-die SRAM budget in MiB (latency-under-sram only)")
+                .opt("models", "tinyllama-1.1b", "comma list of model presets, or 'all'")
+                .opt("meshes", "4x4", "comma list of RxC meshes and/or square die counts, e.g. 4x4,2x8,64")
+                .opt("packages", "standard", "comma list: standard,advanced or 'all'")
+                .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
+                .opt("topos", "mesh", "comma list of NoP topologies: mesh,torus or 'all'")
+                .opt("methods", "all", "comma list of TP methods, or 'all'")
+                .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("checkpoint", "none", "comma list of checkpoint policies: none | auto | every-<k>")
+                .opt("sram-mib", "none", "comma list of enforced per-die SRAM capacities (MiB or 'none')")
+                .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
+                .opt("dp", "1", "comma list of data-parallel widths")
+                .opt("pp", "1", "comma list of pipeline depths")
+                .opt("inter-bw", "substrate", "comma list of fabrics: substrate | optical | fat-tree | <GB/s>")
+                .opt("batch", "32", "frontier batch width in plan groups (thread-independent)")
+                .opt("threads", "0", "worker threads (0 = one per core; results are thread-independent)")
+                .opt("format", "table", "output format: table | csv | json"),
+        )
+        .command(
             CommandSpec::new("run", "execute a scenario TOML file (single scenario or [sweep] grid)")
                 .pos("scenario", "path to a scenario file (see examples/scenarios/)")
                 .opt("threads", "", "override the file's [options] threads")
@@ -80,7 +104,7 @@ pub fn app() -> App {
         )
         .command(
             CommandSpec::new("reproduce", "regenerate a paper table/figure")
-                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | sram | all"),
+                .pos("experiment", "fig8 | fig9 | fig10 | fig11 | table3 | table4 | gpu | weak | cluster | sram | search | all"),
         )
         .command(
             CommandSpec::new("train", "functional distributed training (real numerics)")
@@ -102,6 +126,7 @@ pub fn app() -> App {
                 .opt("threshold", "0.20", "median regression ratio that fails --compare (0.20 = 20%)")
                 .opt("save", "", "also write the refreshed JSON files into this directory")
                 .flag("compare", "exit non-zero when any bench regresses past --threshold")
+                .flag("json", "with --compare: emit the diff as a JSON array on stdout")
                 .flag("update", "rewrite the baseline files in place with this run's results")
                 .flag("quick", "short measurement window (CI/smoke; noisier medians)"),
         )
@@ -116,6 +141,7 @@ pub fn run(args: &[String]) -> crate::Result<i32> {
     match m.command.as_str() {
         "simulate" => cmd_simulate(&m),
         "sweep" => cmd_sweep(&m),
+        "search" => cmd_search(&m),
         "run" => cmd_run(&m),
         "reproduce" => cmd_reproduce(&m),
         "train" => cmd_train(&m),
@@ -413,6 +439,7 @@ fn cmd_run(m: &Matches) -> crate::Result<()> {
             grid,
             threads,
             format,
+            search,
         } => {
             let threads = if m.value("threads").is_empty() {
                 threads
@@ -428,7 +455,10 @@ fn cmd_run(m: &Matches) -> crate::Result<()> {
                 }
                 f.to_string()
             };
-            run_grid(&grid, threads, &format)
+            match search {
+                Some(spec) => run_search(&grid, &spec.config(threads), &format),
+                None => run_grid(&grid, threads, &format),
+            }
         }
     }
 }
@@ -469,25 +499,73 @@ fn run_grid(grid: &ScenarioGrid, threads: usize, format: &str) -> crate::Result<
         "json" => print!("{}", scenario::render_json(&points, &results, &front)),
         _ => unreachable!("format validated above"),
     }
-    // Run stats go to stderr so stdout stays machine-parseable.
-    if grid.is_cluster() {
-        eprintln!(
-            "cluster sweep: {} points ({} combinations skipped), {} plans built, {} cache hits, {:?} wall",
-            points.len(),
-            skipped,
-            cache.misses(),
-            cache.hits(),
-            wall
-        );
-    } else {
-        eprintln!(
-            "sweep: {} points, {} plans built, {} cache hits, {:?} wall",
-            points.len(),
-            cache.misses(),
-            cache.hits(),
-            wall
-        );
+    // Run stats go to stderr so stdout stays machine-parseable. Both grid
+    // kinds report the skip-invalid count — points must never vanish
+    // silently from the expansion (the search's pruning ledger relies on
+    // the same count).
+    eprintln!(
+        "{}: {} points ({} combinations skipped), {} plans built, {} cache hits, {:?} wall",
+        if grid.is_cluster() { "cluster sweep" } else { "sweep" },
+        points.len(),
+        skipped,
+        cache.misses(),
+        cache.hits(),
+        wall
+    );
+    Ok(())
+}
+
+// ───────────────────────── search ─────────────────────────
+
+fn cmd_search(m: &Matches) -> crate::Result<()> {
+    let format = m.value("format");
+    if !matches!(format, "table" | "csv" | "json") {
+        return Err(anyhow!("bad format '{format}' (table | csv | json)"));
     }
+    let budget = match m.value("budget-sram-mib") {
+        "" => None,
+        v => {
+            let mib: f64 = v
+                .parse()
+                .map_err(|e| anyhow!("bad budget-sram-mib '{v}': {e} (MiB per die)"))?;
+            Some(crate::util::Bytes::mib(mib))
+        }
+    };
+    let objective = crate::search::Objective::parse(m.value("objective"), budget)?;
+    let batch: usize = m.parse_value("batch")?;
+    if batch == 0 {
+        return Err(anyhow!("--batch must be >= 1 plan group"));
+    }
+    let cfg = crate::search::SearchConfig {
+        objective,
+        threads: m.parse_value("threads")?,
+        batch,
+    };
+    let grid = ScenarioArgs::sweep_grid(m)?;
+    run_search(&grid, &cfg, format)
+}
+
+/// Execute a pruned search and render it — shared by `search` and `run`
+/// (scenario files with a `[search]` section).
+fn run_search(
+    grid: &ScenarioGrid,
+    cfg: &crate::search::SearchConfig,
+    format: &str,
+) -> crate::Result<()> {
+    let t0 = std::time::Instant::now();
+    let cache = PlanCache::new();
+    let out = crate::search::run(grid, cfg, &cache)?;
+    let wall = t0.elapsed();
+    print!("{}", crate::search::render(&out, format)?);
+    // The deterministic ledger is part of the table output; the stderr
+    // line carries it for csv/json plus the run-dependent cache stats.
+    eprintln!(
+        "{} | {} plans built, {} cache hits, {:?} wall",
+        out.counts_line(),
+        out.plans_built,
+        out.cache_hits,
+        wall
+    );
     Ok(())
 }
 
@@ -577,8 +655,16 @@ fn cmd_bench(m: &Matches) -> crate::Result<()> {
         "" => bench::default_baseline_dir(),
         d => PathBuf::from(d),
     };
+    // --json is a machine-readable *diff*, so it only means something
+    // under --compare; with it, stdout carries exactly one JSON array and
+    // the advisory messages move to stderr.
+    let json_diff = m.flag("json");
+    if json_diff && !m.flag("compare") {
+        return Err(anyhow!("--json is the machine-readable --compare diff; add --compare"));
+    }
 
     let mut regressions: Vec<String> = Vec::new();
+    let mut diff_rows: Vec<String> = Vec::new();
     for suite in suites {
         let rows = bench::run_suite(suite, opts)?;
         let path = bench::baseline_path(&base_dir, suite);
@@ -587,10 +673,15 @@ fn cmd_bench(m: &Matches) -> crate::Result<()> {
                 let baseline = bench::parse_rows(&text)
                     .map_err(|e| anyhow!("bad baseline {}: {e}", path.display()))?;
                 if baseline.is_empty() {
-                    println!(
+                    let msg = format!(
                         "(baseline {} is empty — bootstrap it with `hecaton bench --update`)",
                         path.display()
                     );
+                    if json_diff {
+                        eprintln!("{msg}");
+                    } else {
+                        println!("{msg}");
+                    }
                 } else {
                     let mut t = Table::new(&["bench", "baseline", "now", "ratio"])
                         .with_title(&format!("{suite} vs {}", path.display()))
@@ -602,6 +693,16 @@ fn cmd_bench(m: &Matches) -> crate::Result<()> {
                             crate::util::fmt::seconds(d.new_median),
                             format!("{:.2}x", d.ratio())
                         ]);
+                        diff_rows.push(format!(
+                            "  {{\"suite\": \"{suite}\", \"name\": \"{}\", \
+                             \"base_median_s\": {:e}, \"new_median_s\": {:e}, \
+                             \"ratio\": {:.6}, \"regressed\": {}}}",
+                            d.name,
+                            d.base_median,
+                            d.new_median,
+                            d.ratio(),
+                            d.regressed(threshold)
+                        ));
                         if d.regressed(threshold) {
                             regressions.push(format!(
                                 "{} regressed {:.2}x (median {} -> {}, threshold {:.0}%)",
@@ -613,27 +714,51 @@ fn cmd_bench(m: &Matches) -> crate::Result<()> {
                             ));
                         }
                     }
-                    println!("{}", t.render());
+                    if !json_diff {
+                        println!("{}", t.render());
+                    }
                 }
             }
-            Err(_) => println!(
-                "(no baseline at {} — create one with `hecaton bench --update`)",
-                path.display()
-            ),
+            Err(_) => {
+                let msg = format!(
+                    "(no baseline at {} — create one with `hecaton bench --update`)",
+                    path.display()
+                );
+                if json_diff {
+                    eprintln!("{msg}");
+                } else {
+                    println!("{msg}");
+                }
+            }
         }
         if m.flag("update") {
             std::fs::write(&path, bench::rows_to_json(&rows))?;
-            println!("updated {}", path.display());
+            if json_diff {
+                eprintln!("updated {}", path.display());
+            } else {
+                println!("updated {}", path.display());
+            }
         }
         let save = m.value("save");
         if !save.is_empty() {
             std::fs::create_dir_all(save)?;
             let out = bench::baseline_path(std::path::Path::new(save), suite);
             std::fs::write(&out, bench::rows_to_json(&rows))?;
-            println!("saved {}", out.display());
+            if json_diff {
+                eprintln!("saved {}", out.display());
+            } else {
+                println!("saved {}", out.display());
+            }
         }
     }
 
+    if json_diff {
+        if diff_rows.is_empty() {
+            println!("[]");
+        } else {
+            println!("[\n{}\n]", diff_rows.join(",\n"));
+        }
+    }
     for r in &regressions {
         eprintln!("regression: {r}");
     }
@@ -679,9 +804,14 @@ fn print_info_table() -> crate::Result<()> {
     println!("Engine backends: {}", engines.join(" | "));
     let topos: Vec<&str> = TopologyKind::all().iter().map(|t| t.name()).collect();
     println!("NoP topologies (--topo / --topos): {}", topos.join(" | "));
+    println!("Search objectives (hecaton search --objective, typo-suggesting):");
+    for name in crate::search::OBJECTIVE_NAMES {
+        println!("  {name}: {}", crate::search::Objective::describe(name));
+    }
     println!(
         "Sweep axes: --models --meshes --packages --drams --topos --methods --engines \
-         (comma lists; most accept 'all'), --threads, --format table|csv|json"
+         (comma lists; most accept 'all'), --threads, --format table|csv|json \
+         (`hecaton search` takes the same axes plus --objective/--budget-sram-mib)"
     );
     println!(
         "Cluster knobs (simulate + sweep): --n-packages/--dp/--pp \
@@ -758,6 +888,10 @@ fn info_json() -> String {
     out.push_str(&format!("  \"engines\": [{}],\n", quoted(&engines)));
     out.push_str(&format!("  \"topologies\": [{}],\n", quoted(&topos)));
     out.push_str(&format!(
+        "  \"objectives\": [{}],\n",
+        quoted(&crate::search::OBJECTIVE_NAMES)
+    ));
+    out.push_str(&format!(
         "  \"fabrics\": [{}],\n",
         quoted(&["substrate", "optical", "fat-tree"])
     ));
@@ -809,7 +943,78 @@ mod tests {
             .parse(&argv(&["bench", "--suite", "hotpath", "--quick", "--compare"]))
             .unwrap()
             .is_some());
+        assert!(a
+            .parse(&argv(&["search", "--objective", "pareto", "--models", "tiny"]))
+            .unwrap()
+            .is_some());
         assert!(a.parse(&argv(&["bogus"])).is_err());
+    }
+
+    /// `search` runs end to end through the real CLI in every format, and
+    /// objective typos / bad pairings error with suggestions.
+    #[test]
+    fn search_command_runs_and_validates() {
+        let a = app();
+        for (objective, format) in
+            [("latency", "table"), ("energy", "csv"), ("pareto", "json")]
+        {
+            let m = a
+                .parse(&argv(&[
+                    "search",
+                    "--objective",
+                    objective,
+                    "--models",
+                    "tinyllama-1.1b",
+                    "--meshes",
+                    "2x2,4x4",
+                    "--methods",
+                    "hecaton,flat-ring",
+                    "--threads",
+                    "2",
+                    "--format",
+                    format,
+                ]))
+                .unwrap()
+                .unwrap();
+            cmd_search(&m).unwrap();
+        }
+        // Budget objective through the flag pair.
+        let m = a
+            .parse(&argv(&[
+                "search", "--objective", "latency-under-sram", "--budget-sram-mib", "256",
+                "--models", "tinyllama-1.1b", "--meshes", "4x4", "--methods", "hecaton",
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_search(&m).unwrap();
+        // Typos and bad pairings are clean errors.
+        let m = a
+            .parse(&argv(&["search", "--objective", "latancy"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_search(&m).unwrap_err());
+        assert!(e.contains("did you mean 'latency'"), "{e}");
+        for args in [
+            vec!["search", "--objective", "latency-under-sram"], // missing budget
+            vec!["search", "--objective", "latency", "--budget-sram-mib", "64"],
+            vec!["search", "--batch", "0"],
+            vec!["search", "--format", "yaml"],
+        ] {
+            let m = a.parse(&argv(&args)).unwrap().unwrap();
+            assert!(cmd_search(&m).is_err(), "{args:?} should error cleanly");
+        }
+    }
+
+    /// `bench --json` demands --compare (it *is* the compare diff).
+    #[test]
+    fn bench_json_requires_compare() {
+        let a = app();
+        let m = a
+            .parse(&argv(&["bench", "--suite", "hotpath", "--quick", "--json"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_bench(&m).unwrap_err());
+        assert!(e.contains("--compare"), "{e}");
     }
 
     /// Regression: `simulate` rejects degenerate hardware with a clean

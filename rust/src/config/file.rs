@@ -79,11 +79,14 @@ pub struct SimSetup {
 pub enum LoadedScenario {
     /// A single fully-specified scenario.
     One(Scenario),
-    /// A sweep grid plus its run options.
+    /// A sweep grid plus its run options; with a `[search]` section the
+    /// grid is explored by the branch-and-bound search instead of run
+    /// exhaustively.
     Grid {
         grid: ScenarioGrid,
         threads: usize,
         format: String,
+        search: Option<crate::search::SearchSpec>,
     },
 }
 
@@ -146,6 +149,7 @@ const SCHEMA: &[(&str, &[&str])] = &[
             "inter",
         ],
     ),
+    ("search", &["objective", "budget_sram_mib", "batch"]),
 ];
 
 /// Reject unknown sections and keys with the offending name and a
@@ -244,11 +248,19 @@ pub fn scenario_from_str(input: &str) -> crate::Result<LoadedScenario> {
         }
         let (threads, format) = parse_run_options(&doc)?;
         let grid = parse_sweep(&doc)?;
+        let search = parse_search(&doc)?;
         return Ok(LoadedScenario::Grid {
             grid,
             threads,
             format,
+            search,
         });
+    }
+
+    // A [search] needs a [sweep] grid to explore — on a single scenario
+    // there is nothing to prune.
+    if doc.sections.contains_key("search") {
+        bail!("[search] requires a [sweep] grid to explore (this file holds a single scenario)");
     }
 
     // The grid-only run options make no sense on a single scenario —
@@ -566,6 +578,33 @@ fn parse_run_options(doc: &Document) -> crate::Result<(usize, String)> {
     Ok((threads, format))
 }
 
+/// `[search]`: the objective (plus its optional SRAM budget) and the
+/// frontier batch width — the TOML form of the `hecaton search` flags.
+fn parse_search(doc: &Document) -> crate::Result<Option<crate::search::SearchSpec>> {
+    if !doc.sections.contains_key("search") {
+        return Ok(None);
+    }
+    let name = doc.get_str("search", "objective").ok_or_else(|| {
+        anyhow!("[search] needs an objective (latency | energy | pareto | latency-under-sram)")
+    })?;
+    let budget = match doc.get("search", "budget_sram_mib") {
+        None => None,
+        Some(v) => {
+            let Some(mib) = v.as_float() else {
+                bail!("[search] budget_sram_mib must be a number (MiB per die)");
+            };
+            Some(Bytes::mib(mib))
+        }
+    };
+    let objective = crate::search::Objective::parse(name, budget)?;
+    let batch = match doc.get_int("search", "batch") {
+        None => None,
+        Some(v) if v >= 1 => Some(v as usize),
+        Some(v) => bail!("[search] batch must be >= 1 plan group (got {v})"),
+    };
+    Ok(Some(crate::search::SearchSpec { objective, batch }))
+}
+
 /// One `[sweep]` axis as strings: a TOML array of strings/numbers (or a
 /// bare scalar), defaulting like the CLI flag.
 fn axis_strings(doc: &Document, key: &str, default: &str) -> crate::Result<Vec<String>> {
@@ -817,12 +856,14 @@ mod tests {
             grid,
             threads,
             format,
+            search,
         } = loaded
         else {
             panic!("expected a grid");
         };
         assert_eq!(threads, 2);
         assert_eq!(format, "csv");
+        assert!(search.is_none());
         assert!(!grid.is_cluster());
         assert_eq!(grid.meshes, vec![(4, 4), (2, 8), (4, 4)]);
         assert_eq!(grid.methods.len(), 4);
@@ -1032,6 +1073,66 @@ mod tests {
             panic!("expected a grid");
         };
         assert_eq!(grid.topos, TopologyKind::all().to_vec());
+    }
+
+    /// A `[search]` section rides on a `[sweep]` grid: the objective (and
+    /// budget/batch) parse, pairings are enforced, and a `[search]`
+    /// without a grid — or with a typo'd section name — errors cleanly.
+    #[test]
+    fn search_section_loads_and_validates() {
+        let LoadedScenario::Grid { search, .. } = scenario_from_str(
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\nmeshes = [\"4x4\"]\n\
+             methods = [\"hecaton\"]\n\n[search]\nobjective = \"pareto\"\nbatch = 8\n",
+        )
+        .unwrap() else {
+            panic!("expected a grid");
+        };
+        let spec = search.expect("search spec parsed");
+        assert_eq!(spec.objective, crate::search::Objective::Pareto);
+        assert_eq!(spec.batch, Some(8));
+
+        let LoadedScenario::Grid { search, .. } = scenario_from_str(
+            "[sweep]\nmodels = [\"tinyllama-1.1b\"]\n\n[search]\n\
+             objective = \"latency-under-sram\"\nbudget_sram_mib = 64\n",
+        )
+        .unwrap() else {
+            panic!("expected a grid");
+        };
+        assert_eq!(
+            search.unwrap().objective,
+            crate::search::Objective::LatencyUnderSram(Bytes::mib(64.0))
+        );
+
+        // Typo'd objective gets the shared did-you-mean diagnostic.
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\n[search]\nobjective = \"paretto\"\n").unwrap_err()
+        );
+        assert!(e.contains("did you mean 'pareto'"), "{e}");
+        // Budget pairing is enforced in the file form too.
+        assert!(scenario_from_str(
+            "[sweep]\n[search]\nobjective = \"latency-under-sram\"\n"
+        )
+        .is_err());
+        assert!(scenario_from_str(
+            "[sweep]\n[search]\nobjective = \"latency\"\nbudget_sram_mib = 64\n"
+        )
+        .is_err());
+        // [search] without [sweep] has nothing to explore.
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\npreset = \"tiny\"\n[search]\nobjective = \"latency\"\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("[search] requires a [sweep] grid"), "{e}");
+        // Section typo suggests [search].
+        let e = format!(
+            "{:#}",
+            scenario_from_str("[sweep]\n[serch]\nobjective = \"latency\"\n").unwrap_err()
+        );
+        assert!(e.contains("did you mean [search]"), "{e}");
     }
 
     /// `Scenario::to_toml` round-trips through the loader.

@@ -37,7 +37,10 @@
 //! [`scenario::ScenarioBuilder`] or loaded from a TOML scenario file) and
 //! one [`scenario::evaluate`] returning a unified [`scenario::Evaluation`].
 //! Grids over scenario axes ([`scenario::ScenarioGrid`]) power
-//! `hecaton sweep`, `hecaton run` and every report driver. The
+//! `hecaton sweep`, `hecaton run` and every report driver, and the
+//! branch-and-bound [`search`] subsystem explores the same grids with
+//! admissible-bound pruning (`hecaton search`) instead of exhaustive
+//! evaluation. The
 //! [`prelude`] makes the whole surface usable in a handful of lines:
 //!
 //! ```no_run
@@ -67,6 +70,7 @@ pub mod sched;
 pub mod energy;
 pub mod sim;
 pub mod scenario;
+pub mod search;
 pub mod runtime;
 pub mod coordinator;
 pub mod train;
@@ -101,6 +105,7 @@ pub mod prelude {
     pub use crate::scenario::{
         evaluate, run_all, run_on, Evaluation, Scenario, ScenarioBuilder, ScenarioGrid, Target,
     };
+    pub use crate::search::{Objective, SearchConfig, SearchOutcome};
     pub use crate::sim::cluster::ClusterResult;
     pub use crate::sim::sweep::PlanCache;
     pub use crate::sim::system::{EngineKind, PlanOptions, SimResult};

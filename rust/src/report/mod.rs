@@ -14,12 +14,13 @@ pub mod ablation;
 pub mod congestion;
 pub mod cluster;
 pub mod sram;
+pub mod search;
 
 /// All experiment ids.
 pub fn experiments() -> &'static [&'static str] {
     &[
         "fig8", "fig9", "fig10", "fig11", "table3", "table4", "gpu", "weak", "ablation",
-        "congestion", "cluster", "sram",
+        "congestion", "cluster", "sram", "search",
     ]
 }
 
@@ -38,6 +39,7 @@ pub fn run(id: &str) -> crate::Result<String> {
         "congestion" => Ok(congestion::report()),
         "cluster" => Ok(cluster::report()),
         "sram" => Ok(sram::report()),
+        "search" => Ok(search::report()),
         other => anyhow::bail!("unknown experiment '{other}'; try one of {:?}", experiments()),
     }
 }

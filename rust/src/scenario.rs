@@ -156,6 +156,17 @@ impl Scenario {
         }
     }
 
+    /// The scenario's plan signature: two scenarios with equal signatures
+    /// share one priced plan (engine — and for clusters, fabric — are
+    /// timing-side axes the planner never sees). This is what the sweep's
+    /// plan-affine execution order and the search's plan groups key on.
+    pub(crate) fn plan_sig(&self) -> PlanSig {
+        match &self.target {
+            Target::Package(hw) => PlanSig::of(&self.model, hw, self.method, self.opts),
+            Target::Cluster(c) => PlanSig::of_cluster(&self.model, c, self.method, self.opts),
+        }
+    }
+
     /// Evaluate with a private plan cache (one-shot convenience).
     pub fn evaluate(&self) -> crate::Result<Evaluation> {
         evaluate(self)
@@ -901,14 +912,7 @@ impl EvalScratch {
 /// Result slots are untouched — this only permutes *who computes when*.
 fn plan_affine_order(scenarios: &[Scenario]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..scenarios.len()).collect();
-    order.sort_by_key(|&i| {
-        let s = &scenarios[i];
-        let sig = match &s.target {
-            Target::Package(hw) => PlanSig::of(&s.model, hw, s.method, s.opts),
-            Target::Cluster(c) => PlanSig::of_cluster(&s.model, c, s.method, s.opts),
-        };
-        (sig, i)
-    });
+    order.sort_by_key(|&i| (scenarios[i].plan_sig(), i));
     order
 }
 

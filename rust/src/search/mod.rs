@@ -1,0 +1,603 @@
+//! `hecaton search` — pruned design-space exploration over a
+//! [`ScenarioGrid`].
+//!
+//! Exhaustive sweeps (`hecaton sweep`, [`crate::scenario::run_on`]) plan,
+//! price and time every cross-product point. For co-exploration grids —
+//! model × mesh × topology × method × checkpoint × SRAM × dp/pp ×
+//! fabric — that is O(product-of-axes) full evaluations even though most
+//! points provably cannot win. This module is the branch-and-bound
+//! alternative: same grid, same objective values, a small fraction of
+//! the evaluations.
+//!
+//! ## How points are skipped
+//!
+//! 1. **Grouping.** Grid points collapse into *plan groups* keyed by
+//!    [`PlanSig`] — the plan-invariant axes (engine; for clusters also
+//!    the inter-package fabric) never split a group. One bound covers
+//!    the whole group, and a surviving group is evaluated contiguously
+//!    so neighbors hit the [`EvalScratch`] last-plan fast path and
+//!    [`ClusterPlan::retarget_inter`](crate::sim::cluster::ClusterPlan)
+//!    instead of re-planning.
+//! 2. **Feasibility cuts.** Before any [`SimPlan::build`], the
+//!    closed-form SRAM floor ([`bound::sram_floor`]) rejects groups
+//!    whose enforced per-die capacity (or the objective's SRAM budget)
+//!    cannot hold even the leanest schedule. At tier 1, enforced
+//!    over-peak occupancy, broken layouts and over-budget peaks cut the
+//!    group — *counted*, never an error, unlike the exhaustive path
+//!    which refuses to price enforced-infeasible points.
+//! 3. **Admissible bounds.** Each group carries a plan-free tier-0
+//!    bound, refined to a plan-priced tier-1 bound only if tier 0 fails
+//!    to prune ([`bound`]). A group is pruned when its bound strictly
+//!    loses to the incumbent (scalar objectives) or is strictly
+//!    dominated in both coordinates by an evaluated front member
+//!    (Pareto) — ties are never pruned, so the reported optimum is the
+//!    *same point* (same grid index, bitwise-equal values) the
+//!    exhaustive sweep reports.
+//!
+//! ## Determinism contract
+//!
+//! The frontier is *batch-synchronous*: groups are ordered by (tier-0
+//! bound, first grid index), consumed in constant-size batches
+//! ([`SearchConfig::batch`] — never derived from the thread count), and
+//! the incumbent/front is folded in grid-index order only *between*
+//! batches. Within a batch, evaluations run on the
+//! [`parallel_map_with`] pool, whose results are position-stable. Prune
+//! decisions therefore depend only on batch boundaries and evaluated
+//! values — never on thread scheduling — so the optimum, the Pareto
+//! front **and every reported count** are bitwise identical across
+//! thread counts (tested in `tests/integration_search.rs`).
+
+pub mod bound;
+pub mod objective;
+
+pub use bound::CostBound;
+pub use objective::{Objective, OBJECTIVE_NAMES};
+
+use anyhow::bail;
+
+use crate::scenario::{self, Evaluation, Scenario, ScenarioGrid, EvalScratch, Target};
+use crate::sim::cluster::ClusterPlan;
+use crate::sim::sweep::{dominates_strictly, parallel_map_with, pareto_front, PlanCache, PlanSig};
+use crate::sim::system::SimPlan;
+use crate::util::fmt::pct;
+
+/// Default frontier batch width, in plan groups. Large enough to keep
+/// every worker busy per round, small enough that the incumbent tightens
+/// early; constant so results never depend on the machine.
+pub const DEFAULT_BATCH: usize = 32;
+
+/// Search knobs. `threads` only changes wall-clock, never results.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchConfig {
+    pub objective: Objective,
+    /// Worker threads for bound and evaluation rounds (0 = one per core).
+    pub threads: usize,
+    /// Plan groups per frontier batch (see the determinism contract).
+    pub batch: usize,
+}
+
+impl SearchConfig {
+    pub fn new(objective: Objective) -> SearchConfig {
+        SearchConfig {
+            objective,
+            threads: 0,
+            batch: DEFAULT_BATCH,
+        }
+    }
+}
+
+/// A `[search]` table from a scenario TOML file: the objective plus the
+/// optional frontier batch override, applied on top of the file's
+/// `[sweep]` grid by `hecaton run`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchSpec {
+    pub objective: Objective,
+    pub batch: Option<usize>,
+}
+
+impl SearchSpec {
+    /// The runnable config: the file's spec plus the run-time thread
+    /// override.
+    pub fn config(&self, threads: usize) -> SearchConfig {
+        SearchConfig {
+            objective: self.objective,
+            threads,
+            batch: self.batch.unwrap_or(DEFAULT_BATCH),
+        }
+    }
+}
+
+/// One winning point: the optimum (scalar objectives) or a front member.
+#[derive(Debug, Clone)]
+pub struct SearchHit {
+    /// The point's index in grid expansion order — the row the
+    /// exhaustive sweep would print it at.
+    pub index: usize,
+    pub scenario: Scenario,
+    pub eval: Evaluation,
+}
+
+/// Everything a search run learned, including the pruning ledger. The
+/// ledger is exhaustive: `evaluated + pruned_bound + pruned_infeasible`
+/// always equals `total`.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub objective: Objective,
+    /// Valid grid points (after skip-invalid expansion).
+    pub total: usize,
+    /// Invalid axis combinations dropped during grid expansion.
+    pub skipped: usize,
+    /// Plan groups the points collapsed into.
+    pub groups: usize,
+    /// Points fully evaluated (planned, priced *and timed*).
+    pub evaluated: usize,
+    /// Points pruned because their admissible bound cannot beat the
+    /// incumbent (or is strictly dominated by the front).
+    pub pruned_bound: usize,
+    /// Points cut without timing: SRAM floor/occupancy/budget overruns
+    /// and broken layouts.
+    pub pruned_infeasible: usize,
+    /// Plans built during the search (plan-cache misses — includes
+    /// tier-1 bound probes). Informational; may vary across runs when
+    /// workers race to build the same plan, so it is reported on stderr,
+    /// never in deterministic output.
+    pub plans_built: usize,
+    /// Plan-cache hits during the search (informational, like
+    /// `plans_built`).
+    pub cache_hits: usize,
+    /// The optimum (scalar objectives: at most one entry; empty when no
+    /// feasible point exists) or the Pareto front in grid order.
+    pub hits: Vec<SearchHit>,
+}
+
+impl SearchOutcome {
+    /// Fraction of grid points fully evaluated, in `[0, 1]`.
+    pub fn evaluated_fraction(&self) -> f64 {
+        self.evaluated as f64 / self.total.max(1) as f64
+    }
+
+    /// The deterministic one-line ledger (also the last line of
+    /// [`render`] table output).
+    pub fn counts_line(&self) -> String {
+        format!(
+            "search[{}]: {} points ({} skipped, {} groups), {} evaluated ({}), \
+             {} bound-pruned, {} infeasible",
+            self.objective.name(),
+            self.total,
+            self.skipped,
+            self.groups,
+            self.evaluated,
+            pct(self.evaluated as f64, self.total as f64, 1),
+            self.pruned_bound,
+            self.pruned_infeasible,
+        )
+    }
+}
+
+/// One plan group mid-search.
+struct Group {
+    /// Member grid indices, ascending.
+    members: Vec<usize>,
+    /// Tier-0 plan-free bound (shared by every member).
+    lb0: CostBound,
+}
+
+/// Tier-1 probe result for a group's representative.
+enum Tier1 {
+    Infeasible,
+    Bound(CostBound),
+}
+
+/// The incumbent: scalar best `(value, grid index)` or the evaluated
+/// Pareto front's `(latency, energy)` coordinates.
+struct Incumbent {
+    best: Option<(f64, usize)>,
+    front: Vec<(f64, f64)>,
+}
+
+impl Incumbent {
+    /// Whether a group with bound `lb` can be discarded. Strict
+    /// comparisons only: a bound that *ties* the incumbent might hide an
+    /// equal-valued point at a smaller grid index (scalar) or an exact
+    /// duplicate of a front member (Pareto), so ties always evaluate.
+    fn prunes(&self, objective: Objective, lb: CostBound) -> bool {
+        match objective {
+            Objective::Pareto => self
+                .front
+                .iter()
+                .any(|&(l, e)| dominates_strictly((l, e), (lb.latency_s, lb.energy_j))),
+            Objective::Energy => self.best.is_some_and(|(v, _)| lb.energy_j > v),
+            Objective::Latency | Objective::LatencyUnderSram(_) => {
+                self.best.is_some_and(|(v, _)| lb.latency_s > v)
+            }
+        }
+    }
+}
+
+/// The per-die SRAM capacity a group must provably fit: the tighter of
+/// the hardware's enforced limit and the objective's budget.
+fn effective_cap(s: &Scenario, objective: Objective) -> Option<crate::util::Bytes> {
+    let enforced = s.hw().sram_limit;
+    match (enforced, objective.budget()) {
+        (Some(l), Some(b)) => Some(if l.raw() <= b.raw() { l } else { b }),
+        (Some(l), None) => Some(l),
+        (None, Some(b)) => Some(b),
+        (None, None) => None,
+    }
+}
+
+/// Tier-1 probe: plan the group's representative through the shared
+/// cache, apply the plan-level feasibility cuts, and refine the bound.
+/// Planning is engine- and fabric-blind, so one probe covers the group.
+fn tier1(s: &Scenario, lb0: CostBound, objective: Objective, cache: &PlanCache) -> Tier1 {
+    let over_budget = |peak: crate::util::Bytes| {
+        objective
+            .budget()
+            .is_some_and(|b| peak.raw() > b.raw() * (1.0 + 1e-9))
+    };
+    match &s.target {
+        Target::Package(hw) => {
+            let plan = cache.plan(&s.model, hw, s.method, s.opts);
+            if !plan.layout_ok
+                || (plan.occupancy.enforced && !plan.occupancy.fits())
+                || over_budget(plan.occupancy.peak)
+            {
+                return Tier1::Infeasible;
+            }
+            Tier1::Bound(bound::tier1_package(&plan, hw, lb0))
+        }
+        Target::Cluster(c) => {
+            // An enforced-infeasible cluster refuses to build — the
+            // exhaustive path's error is the search's counted cut.
+            match ClusterPlan::build(&s.model, c, s.method, s.opts, cache) {
+                Err(_) => Tier1::Infeasible,
+                Ok(plan) => {
+                    if !plan.stage_plans[0].layout_ok || over_budget(plan.occupancy.peak) {
+                        return Tier1::Infeasible;
+                    }
+                    Tier1::Bound(bound::tier1_cluster(&plan, lb0))
+                }
+            }
+        }
+    }
+}
+
+/// Run a pruned search over `grid`. Returns the same optimum / Pareto
+/// front (same grid indices, bitwise-equal objective values over the
+/// feasible points) as exhaustively evaluating `grid.points()` — see the
+/// module docs for the soundness and determinism arguments.
+pub fn run(grid: &ScenarioGrid, cfg: &SearchConfig, cache: &PlanCache) -> crate::Result<SearchOutcome> {
+    if grid.len() == 0 {
+        bail!("empty search grid: every axis needs at least one value");
+    }
+    let (scenarios, skipped) = grid.points()?;
+    if scenarios.is_empty() {
+        bail!(
+            "search grid expanded to no valid points \
+             ({skipped} invalid axis combinations were skipped)"
+        );
+    }
+    let objective = cfg.objective;
+    let batch = cfg.batch.max(1);
+    let (misses0, hits0) = (cache.misses(), cache.hits());
+
+    // ── group by plan signature ──
+    let mut order: Vec<usize> = (0..scenarios.len()).collect();
+    let sigs: Vec<PlanSig> = scenarios.iter().map(Scenario::plan_sig).collect();
+    order.sort_by_key(|&i| (sigs[i], i));
+    let mut groups_total = 0usize;
+    let mut pruned_infeasible = 0usize;
+    let mut live: Vec<Group> = Vec::new();
+    let mut run_start = 0;
+    while run_start < order.len() {
+        let sig = sigs[order[run_start]];
+        let mut run_end = run_start + 1;
+        while run_end < order.len() && sigs[order[run_end]] == sig {
+            run_end += 1;
+        }
+        let members: Vec<usize> = order[run_start..run_end].to_vec();
+        run_start = run_end;
+        groups_total += 1;
+        let rep = &scenarios[members[0]];
+        // Pre-plan feasibility cut: reject before any SimPlan::build.
+        if let Some(cap) = effective_cap(rep, objective) {
+            if bound::sram_infeasible(&rep.model, rep.hw(), cap) {
+                pruned_infeasible += members.len();
+                continue;
+            }
+        }
+        live.push(Group {
+            lb0: bound::tier0(rep),
+            members,
+        });
+    }
+
+    // ── deterministic frontier order: cheapest tier-0 bound first ──
+    let primary = |lb: CostBound| match objective {
+        Objective::Energy => lb.energy_j,
+        _ => lb.latency_s,
+    };
+    live.sort_by(|a, b| {
+        primary(a.lb0)
+            .total_cmp(&primary(b.lb0))
+            .then(a.members[0].cmp(&b.members[0]))
+    });
+
+    // ── batch-synchronous branch and bound ──
+    let mut evaluated: Vec<(usize, Evaluation)> = Vec::new();
+    let mut pool: Vec<(f64, f64, usize)> = Vec::new(); // feasible (lat, energy, idx)
+    let mut pruned_bound = 0usize;
+    let mut inc = Incumbent {
+        best: None,
+        front: Vec::new(),
+    };
+    let mut cursor = 0;
+    while cursor < live.len() {
+        let end = (cursor + batch).min(live.len());
+        let batch_groups = &live[cursor..end];
+        cursor = end;
+
+        // (a) tier-0 prune against the incumbent — no plan needed.
+        let mut survivors: Vec<&Group> = Vec::new();
+        for g in batch_groups {
+            if inc.prunes(objective, g.lb0) {
+                pruned_bound += g.members.len();
+            } else {
+                survivors.push(g);
+            }
+        }
+
+        // (b) tier-1 probes in parallel (plans land in the shared cache,
+        // so a surviving group's evaluation re-planning cost is a hit).
+        let probes: Vec<(&Group, &Scenario)> = survivors
+            .iter()
+            .map(|g| (*g, &scenarios[g.members[0]]))
+            .collect();
+        let t1: Vec<Tier1> = parallel_map_with(
+            &probes,
+            cfg.threads,
+            None,
+            || (),
+            |_, (g, s)| tier1(s, g.lb0, objective, cache),
+        );
+
+        // (c) full evaluation of the surviving members, contiguous per
+        // group = plan-affine execution order.
+        let mut eval_idx: Vec<usize> = Vec::new();
+        for ((g, _), probe) in probes.iter().zip(&t1) {
+            match probe {
+                Tier1::Infeasible => pruned_infeasible += g.members.len(),
+                Tier1::Bound(lb1) => {
+                    if inc.prunes(objective, *lb1) {
+                        pruned_bound += g.members.len();
+                    } else {
+                        eval_idx.extend(g.members.iter().copied());
+                    }
+                }
+            }
+        }
+        let targets: Vec<&Scenario> = eval_idx.iter().map(|&i| &scenarios[i]).collect();
+        let results = parallel_map_with(&targets, cfg.threads, None, EvalScratch::new, |scr, s| {
+            s.evaluate_with(cache, scr)
+        });
+
+        // (d) fold the incumbent, in a thread-independent reduction.
+        for (&i, res) in eval_idx.iter().zip(results) {
+            match res {
+                // Defensive: the tier-1 cuts mirror the evaluation-time
+                // feasibility errors, so this arm should be dead — but an
+                // infeasible point must never abort a search.
+                Err(_) => pruned_infeasible += 1,
+                Ok(ev) => {
+                    if ev.feasible() && objective.satisfies_budget(&ev) {
+                        let (lat, en) = (ev.latency().raw(), ev.energy_total().raw());
+                        if objective.is_pareto() {
+                            pool.push((lat, en, i));
+                        } else {
+                            let v = objective.value(&ev);
+                            let wins = match inc.best {
+                                None => true,
+                                Some((bv, bi)) => v < bv || (v == bv && i < bi),
+                            };
+                            if wins {
+                                inc.best = Some((v, i));
+                            }
+                        }
+                    }
+                    evaluated.push((i, ev));
+                }
+            }
+        }
+        if objective.is_pareto() {
+            let coords: Vec<(f64, f64)> = pool.iter().map(|&(l, e, _)| (l, e)).collect();
+            inc.front = pareto_front(&coords)
+                .into_iter()
+                .zip(coords)
+                .filter_map(|(on, p)| on.then_some(p))
+                .collect();
+        }
+    }
+
+    // ── assemble hits ──
+    let mut hits: Vec<SearchHit> = Vec::new();
+    if objective.is_pareto() {
+        let coords: Vec<(f64, f64)> = pool.iter().map(|&(l, e, _)| (l, e)).collect();
+        let mut front_idx: Vec<usize> = pareto_front(&coords)
+            .into_iter()
+            .zip(&pool)
+            .filter_map(|(on, &(_, _, i))| on.then_some(i))
+            .collect();
+        front_idx.sort_unstable();
+        for i in front_idx {
+            let ev = evaluated
+                .iter()
+                .find(|(j, _)| *j == i)
+                .expect("front members were evaluated")
+                .1
+                .clone();
+            hits.push(SearchHit {
+                index: i,
+                scenario: scenarios[i].clone(),
+                eval: ev,
+            });
+        }
+    } else if let Some((_, i)) = inc.best {
+        let ev = evaluated
+            .iter()
+            .find(|(j, _)| *j == i)
+            .expect("the incumbent was evaluated")
+            .1
+            .clone();
+        hits.push(SearchHit {
+            index: i,
+            scenario: scenarios[i].clone(),
+            eval: ev,
+        });
+    }
+
+    let outcome = SearchOutcome {
+        objective,
+        total: scenarios.len(),
+        skipped,
+        groups: groups_total,
+        evaluated: evaluated.len(),
+        pruned_bound,
+        pruned_infeasible,
+        plans_built: cache.misses() - misses0,
+        cache_hits: cache.hits() - hits0,
+        hits,
+    };
+    debug_assert_eq!(
+        outcome.evaluated + outcome.pruned_bound + outcome.pruned_infeasible,
+        outcome.total,
+        "pruning ledger must cover every point"
+    );
+    Ok(outcome)
+}
+
+// ───────────────────────── renderers ─────────────────────────
+
+/// Render an outcome in the sweep's table/csv/json formats. Table and
+/// JSON embed the deterministic counts ledger; CSV stays a pure row
+/// stream (the CLI mirrors the ledger to stderr).
+pub fn render(out: &SearchOutcome, format: &str) -> crate::Result<String> {
+    let scenarios: Vec<Scenario> = out.hits.iter().map(|h| h.scenario.clone()).collect();
+    let evals: Vec<Evaluation> = out.hits.iter().map(|h| h.eval.clone()).collect();
+    let pareto = vec![out.objective.is_pareto(); out.hits.len()];
+    match format {
+        "table" => {
+            let mut s = format!("objective: {}\n", out.objective);
+            if out.hits.is_empty() {
+                s.push_str("no feasible point satisfies the objective\n");
+            } else {
+                s.push_str(&scenario::render_table(&scenarios, &evals, &pareto));
+                if !s.ends_with('\n') {
+                    s.push('\n');
+                }
+            }
+            s.push_str(&out.counts_line());
+            s.push('\n');
+            Ok(s)
+        }
+        "csv" => Ok(scenario::render_csv(&scenarios, &evals, &pareto)),
+        "json" => {
+            let rows = scenario::render_json(&scenarios, &evals, &pareto);
+            Ok(format!(
+                "{{\"objective\": \"{}\", \"total\": {}, \"skipped\": {}, \"groups\": {}, \
+                 \"evaluated\": {}, \"pruned_bound\": {}, \"pruned_infeasible\": {}, \
+                 \"hits\": {}}}\n",
+                out.objective.name(),
+                out.total,
+                out.skipped,
+                out.groups,
+                out.evaluated,
+                out.pruned_bound,
+                out.pruned_infeasible,
+                rows.trim_end(),
+            ))
+        }
+        other => bail!("unknown search format '{other}' (expected table | csv | json)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::model_preset;
+    use crate::nop::analytic::Method;
+    use crate::scenario::axis;
+    use crate::sim::system::EngineKind;
+
+    fn small_grid() -> ScenarioGrid {
+        ScenarioGrid {
+            models: vec![model_preset("tinyllama-1.1b").unwrap()],
+            meshes: vec![(2, 2), (4, 4)],
+            packages: axis::package_kinds(&["standard"]).unwrap(),
+            drams: axis::drams(&["ddr5-6400"]).unwrap(),
+            methods: Method::all().to_vec(),
+            engines: vec![EngineKind::Analytic],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn scalar_search_finds_the_exhaustive_argmin() {
+        let grid = small_grid();
+        let (scens, _) = grid.points().unwrap();
+        let evals = scenario::run_all(&scens).unwrap();
+        let mut best: Option<(f64, usize)> = None;
+        for (i, ev) in evals.iter().enumerate() {
+            if !ev.feasible() {
+                continue;
+            }
+            let v = ev.latency().raw();
+            if best.map_or(true, |(bv, _)| v < bv) {
+                best = Some((v, i));
+            }
+        }
+        let out = run(
+            &grid,
+            &SearchConfig::new(Objective::Latency),
+            &PlanCache::new(),
+        )
+        .unwrap();
+        let (bv, bi) = best.unwrap();
+        assert_eq!(out.hits.len(), 1);
+        assert_eq!(out.hits[0].index, bi);
+        assert_eq!(out.hits[0].eval.latency().raw().to_bits(), bv.to_bits());
+        assert_eq!(
+            out.evaluated + out.pruned_bound + out.pruned_infeasible,
+            out.total
+        );
+    }
+
+    #[test]
+    fn empty_grid_errors() {
+        let grid = ScenarioGrid::default();
+        assert!(run(
+            &grid,
+            &SearchConfig::new(Objective::Latency),
+            &PlanCache::new()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn render_formats_embed_the_ledger() {
+        let grid = small_grid();
+        let out = run(
+            &grid,
+            &SearchConfig::new(Objective::Pareto),
+            &PlanCache::new(),
+        )
+        .unwrap();
+        let table = render(&out, "table").unwrap();
+        assert!(table.contains("objective: pareto"));
+        assert!(table.contains("search[pareto]:"));
+        let json = render(&out, "json").unwrap();
+        assert!(json.contains("\"objective\": \"pareto\""));
+        assert!(json.contains("\"evaluated\":"));
+        assert!(render(&out, "yaml").is_err());
+        assert!(!render(&out, "csv").unwrap().contains("search["));
+    }
+}

@@ -1,0 +1,187 @@
+//! Search objectives: what `hecaton search` optimizes over the grid.
+//!
+//! An [`Objective`] is either a *scalar* (minimize one number — batch
+//! latency, total energy, or latency subject to a per-die SRAM budget)
+//! or the latency×energy *Pareto front*. The driver in
+//! [`crate::search`] only ever talks to an objective through three
+//! questions: what is a point's value, does a candidate bound still
+//! stand a chance against the incumbent, and does a point satisfy the
+//! objective's feasibility constraint (the SRAM budget). Everything
+//! else — frontier order, pruning, determinism — is objective-agnostic.
+
+use anyhow::{anyhow, bail};
+
+use crate::scenario::Evaluation;
+use crate::util::Bytes;
+
+/// The valid `--objective` spellings, in display order. The single
+/// source for CLI parsing, `hecaton info` and did-you-mean suggestions.
+pub const OBJECTIVE_NAMES: [&str; 4] = ["latency", "energy", "pareto", "latency-under-sram"];
+
+/// What the search minimizes (or, for [`Objective::Pareto`], traces).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize wall-clock latency of one training batch.
+    Latency,
+    /// Minimize total (dynamic + static) energy of one training batch.
+    Energy,
+    /// Trace the latency × energy Pareto front.
+    Pareto,
+    /// Minimize latency among points whose per-die SRAM occupancy peak
+    /// fits the given budget — a *budget*, not a hardware limit: it
+    /// constrains the search even when the grid's hardware enforces
+    /// nothing.
+    LatencyUnderSram(Bytes),
+}
+
+impl Objective {
+    /// Parse an objective name (case-insensitive) plus the optional SRAM
+    /// budget. Unknown names fail with a did-you-mean suggestion; a
+    /// budget with a non-budget objective (and vice versa) is an error
+    /// rather than a silently ignored flag.
+    pub fn parse(name: &str, budget_sram: Option<Bytes>) -> crate::Result<Objective> {
+        let obj = match name.to_ascii_lowercase().as_str() {
+            "latency" => Objective::Latency,
+            "energy" => Objective::Energy,
+            "pareto" => Objective::Pareto,
+            "latency-under-sram" => {
+                let b = budget_sram.ok_or_else(|| {
+                    anyhow!(
+                        "objective 'latency-under-sram' needs a per-die SRAM budget \
+                         (--budget-sram-mib on the CLI, budget_sram_mib in [search])"
+                    )
+                })?;
+                if !(b.raw() > 0.0) {
+                    bail!("SRAM budget must be positive, got {b}");
+                }
+                Objective::LatencyUnderSram(b)
+            }
+            other => {
+                return Err(anyhow!(
+                    "{}",
+                    crate::util::cli::unknown_value("objective", other, &OBJECTIVE_NAMES)
+                ))
+            }
+        };
+        if budget_sram.is_some() && !matches!(obj, Objective::LatencyUnderSram(_)) {
+            bail!(
+                "an SRAM budget only applies to the 'latency-under-sram' objective \
+                 (got objective '{}')",
+                obj.name()
+            );
+        }
+        Ok(obj)
+    }
+
+    /// Canonical spelling (the one [`Objective::parse`] accepts).
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Pareto => "pareto",
+            Objective::LatencyUnderSram(_) => "latency-under-sram",
+        }
+    }
+
+    /// One-line description for `hecaton info`.
+    pub fn describe(name: &str) -> &'static str {
+        match name {
+            "latency" => "minimize training-batch latency",
+            "energy" => "minimize total (dynamic + static) energy",
+            "pareto" => "trace the latency x energy Pareto front",
+            "latency-under-sram" => "minimize latency with per-die SRAM peak under a budget",
+            _ => "",
+        }
+    }
+
+    /// Whether the result is a front rather than a single optimum.
+    pub fn is_pareto(self) -> bool {
+        matches!(self, Objective::Pareto)
+    }
+
+    /// The SRAM budget constraint, when the objective carries one.
+    pub fn budget(self) -> Option<Bytes> {
+        match self {
+            Objective::LatencyUnderSram(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Scalar value of an evaluated point (for [`Objective::Pareto`] the
+    /// latency coordinate — used only to order hit rows, never to prune).
+    pub fn value(self, eval: &Evaluation) -> f64 {
+        match self {
+            Objective::Energy => eval.energy_total().raw(),
+            _ => eval.latency().raw(),
+        }
+    }
+
+    /// Whether an evaluated point satisfies the objective's constraint.
+    /// Clusters are judged on the cluster-level occupancy (critical stage
+    /// plus in-flight 1F1B boundaries), packages on the plan's. The same
+    /// `1e-9` relative tolerance as
+    /// [`crate::memory::sram::OccupancyReport::fits`], so a budget equal
+    /// to a schedule's exact peak admits it.
+    pub fn satisfies_budget(self, eval: &Evaluation) -> bool {
+        match self.budget() {
+            None => true,
+            Some(b) => {
+                let peak = match eval.cluster() {
+                    Some(c) => c.occupancy.peak,
+                    None => eval.sim().occupancy.peak,
+                };
+                peak.raw() <= b.raw() * (1.0 + 1e-9)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Objective::LatencyUnderSram(b) => write!(f, "latency-under-sram({b})"),
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_every_canonical_name() {
+        assert_eq!(Objective::parse("latency", None).unwrap(), Objective::Latency);
+        assert_eq!(Objective::parse("ENERGY", None).unwrap(), Objective::Energy);
+        assert_eq!(Objective::parse("pareto", None).unwrap(), Objective::Pareto);
+        assert_eq!(
+            Objective::parse("latency-under-sram", Some(Bytes::mib(16.0))).unwrap(),
+            Objective::LatencyUnderSram(Bytes::mib(16.0))
+        );
+    }
+
+    #[test]
+    fn typo_gets_a_suggestion() {
+        let err = Objective::parse("latancy", None).unwrap_err().to_string();
+        assert!(err.contains("latency"), "no did-you-mean in: {err}");
+        let err = Objective::parse("paretto", None).unwrap_err().to_string();
+        assert!(err.contains("pareto"), "no did-you-mean in: {err}");
+    }
+
+    #[test]
+    fn budget_pairing_is_enforced_both_ways() {
+        assert!(Objective::parse("latency-under-sram", None).is_err());
+        assert!(Objective::parse("latency", Some(Bytes::mib(16.0))).is_err());
+        assert!(Objective::parse("latency-under-sram", Some(Bytes::ZERO)).is_err());
+    }
+
+    #[test]
+    fn names_table_is_in_sync() {
+        for name in OBJECTIVE_NAMES {
+            let budget = (name == "latency-under-sram").then(|| Bytes::mib(1.0));
+            let obj = Objective::parse(name, budget).unwrap();
+            assert_eq!(obj.name(), name);
+            assert!(!Objective::describe(name).is_empty());
+        }
+    }
+}

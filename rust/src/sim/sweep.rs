@@ -561,12 +561,23 @@ where
 pub fn pareto_front(points: &[(f64, f64)]) -> Vec<bool> {
     points
         .iter()
-        .map(|&(lat, en)| {
-            !points.iter().any(|&(l, e)| {
-                l <= lat && e <= en && (l < lat || e < en)
-            })
-        })
+        .map(|&p| !points.iter().any(|&q| dominates_weakly(q, p)))
         .collect()
+}
+
+/// Whether `a` dominates `b` in the Pareto sense: no worse on both axes,
+/// strictly better on at least one. The [`pareto_front`] membership test.
+pub fn dominates_weakly(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Whether `a` strictly dominates `b` on **both** axes. This is the only
+/// comparison sound for pruning against a *lower bound*: a group whose
+/// bound merely ties a front member on one axis could still contain a
+/// distinct front point, so the search ([`crate::search`]) prunes on
+/// strict domination and leaves weak domination to the front itself.
+pub fn dominates_strictly(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 < b.0 && a.1 < b.1
 }
 
 /// CSV field quoting for the one free-form column (model names are

@@ -1,0 +1,366 @@
+//! Branch-and-bound design-space search — integration and property tests:
+//!
+//! * **admissible bounds** — the tier-0 (plan-free) and tier-1
+//!   (plan-priced) lower bounds never exceed the true evaluated latency
+//!   or energy, for every TP method × timing engine × topology on
+//!   deterministic pseudo-random shapes, on packages and clusters alike;
+//!   the closed-form SRAM floor never exceeds a real schedule's peak.
+//! * **exhaustive equivalence** (the acceptance property) — on a
+//!   512-point co-exploration grid the pruned search returns the
+//!   bitwise-identical argmin and Pareto front the exhaustive
+//!   `run_all` produces, fully evaluating at most 25% of the points,
+//!   with the pruning ledger covering the grid exactly — and every
+//!   count, index and value identical across thread counts.
+//! * **feasibility cuts** — an enforced SRAM capacity below the weight
+//!   floor makes the exhaustive sweep error while the search *counts*
+//!   the whole grid as infeasible without building a single plan.
+//! * **budgeted objective** — `latency-under-sram` reproduces the
+//!   exhaustive argmin over the budget-satisfying subset, and a generous
+//!   budget degenerates to the plain latency optimum.
+
+use hecaton::prelude::*;
+use hecaton::scenario;
+use hecaton::search::{self, bound, Objective, SearchConfig};
+use hecaton::sim::cluster::ClusterPlan;
+use hecaton::util::Bytes;
+
+/// Deterministic xorshift64 — property-test shapes without a rand
+/// dependency (and reproducible failures).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+/// Tier-0 and tier-1 bounds are admissible — `bound ≤ true cost` in both
+/// coordinates — for every method × engine × topology on randomized
+/// package shapes, and the SRAM floor is below every real peak.
+#[test]
+fn package_bounds_are_admissible_for_every_method_engine_topology() {
+    let base = model_preset("tinyllama-1.1b").unwrap();
+    let mut rng = Rng(0x9e37_79b9_7f4a_7c15);
+    let cache = PlanCache::new();
+    for method in Method::all() {
+        for engine in [EngineKind::Analytic, EngineKind::Event, EngineKind::EventPrefetch] {
+            for topo in [TopologyKind::Mesh2d, TopologyKind::Torus2d] {
+                for _ in 0..3 {
+                    let k = rng.pick(&[1usize, 2, 3]);
+                    let (rows, cols) = rng.pick(&[(2usize, 2usize), (2, 4), (4, 4)]);
+                    let dram = rng.pick(&[DramKind::Ddr5_6400, DramKind::Hbm2]);
+                    let ck = rng.pick(&[Checkpoint::None, Checkpoint::Auto]);
+                    let s = Scenario::builder(base.scaled(k))
+                        .mesh(rows, cols)
+                        .topology(topo)
+                        .dram(dram)
+                        .checkpoint(ck)
+                        .method(method)
+                        .engine(engine)
+                        .build()
+                        .unwrap();
+                    let ev = evaluate(&s).unwrap();
+                    let (lat, en) = (ev.latency().raw(), ev.energy_total().raw());
+                    let lb0 = bound::tier0(&s);
+                    let plan = cache.plan(&s.model, s.hw(), s.method, s.opts);
+                    let lb1 = bound::tier1_package(&plan, s.hw(), lb0);
+                    let tag = format!("{method:?}/{engine:?}/{topo:?} k={k} {rows}x{cols}");
+                    for (tier, lb) in [("tier0", lb0), ("tier1", lb1)] {
+                        assert!(
+                            lb.latency_s <= lat,
+                            "{tag} {tier}: latency bound {} > true {lat}",
+                            lb.latency_s
+                        );
+                        assert!(
+                            lb.energy_j <= en,
+                            "{tag} {tier}: energy bound {} > true {en}",
+                            lb.energy_j
+                        );
+                    }
+                    assert!(
+                        bound::sram_floor(&s.model, s.hw()).raw()
+                            <= plan.occupancy.peak.raw() * (1.0 + 1e-9),
+                        "{tag}: SRAM floor above a real schedule's peak"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The cluster tier-1 bound (critical-stage floor + per-stage dynamic
+/// energy) is admissible for every method.
+#[test]
+fn cluster_bounds_are_admissible() {
+    let model = model_preset("tinyllama-1.1b").unwrap();
+    let cache = PlanCache::new();
+    for method in Method::all() {
+        let s = Scenario::builder(model.clone())
+            .dies(16)
+            .cluster(4, 2, 2)
+            .method(method)
+            .build()
+            .unwrap();
+        let ev = evaluate(&s).unwrap();
+        let lb0 = bound::tier0(&s);
+        let plan =
+            ClusterPlan::build(&s.model, s.cluster_config().unwrap(), s.method, s.opts, &cache)
+                .unwrap();
+        let lb1 = bound::tier1_cluster(&plan, lb0);
+        for (tier, lb) in [("tier0", lb0), ("tier1", lb1)] {
+            assert!(
+                lb.latency_s <= ev.latency().raw(),
+                "{method:?} {tier}: latency bound above the cluster's true latency"
+            );
+            assert!(
+                lb.energy_j <= ev.energy_total().raw(),
+                "{method:?} {tier}: energy bound above the cluster's true energy"
+            );
+        }
+    }
+}
+
+/// The acceptance grid: 8 model scales × 2 meshes × 2 topologies × 4
+/// methods × 2 checkpoint policies = 512 points. Scaled models separate
+/// the compute floors (≈k²), so the bound ordering has real teeth.
+fn equivalence_grid() -> ScenarioGrid {
+    let base = model_preset("tinyllama-1.1b").unwrap();
+    ScenarioGrid {
+        models: [1usize, 2, 3, 4, 6, 8, 12, 16]
+            .iter()
+            .map(|&k| base.scaled(k))
+            .collect(),
+        meshes: vec![(2, 4), (4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        topos: vec![TopologyKind::Mesh2d, TopologyKind::Torus2d],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic],
+        checkpoints: vec![Checkpoint::None, Checkpoint::Auto],
+        ..Default::default()
+    }
+}
+
+fn search_on(grid: &ScenarioGrid, objective: Objective, threads: usize) -> search::SearchOutcome {
+    let cfg = SearchConfig {
+        threads,
+        ..SearchConfig::new(objective)
+    };
+    search::run(grid, &cfg, &PlanCache::new()).unwrap()
+}
+
+/// Acceptance: on a ≥500-point grid, the pruned search returns the
+/// bitwise-identical argmin the exhaustive sweep produces while fully
+/// evaluating ≤ 25% of the points — with identical results *and counts*
+/// across thread counts, and the ledger covering the grid exactly.
+#[test]
+fn pruned_latency_search_matches_exhaustive_on_512_points() {
+    let grid = equivalence_grid();
+    let (points, skipped) = grid.points().unwrap();
+    assert!(points.len() >= 500, "acceptance grid must be ≥500 points");
+    assert_eq!(skipped, 0);
+    let evals = scenario::run_all(&points).unwrap();
+    let mut best: Option<(f64, usize)> = None;
+    for (i, ev) in evals.iter().enumerate() {
+        let v = ev.latency().raw();
+        if ev.feasible() && best.map_or(true, |(bv, _)| v < bv) {
+            best = Some((v, i));
+        }
+    }
+    let (bv, bi) = best.unwrap();
+
+    let reference = search_on(&grid, Objective::Latency, 1);
+    for threads in [1usize, 2, 4] {
+        let out = search_on(&grid, Objective::Latency, threads);
+        assert_eq!(out.total, points.len());
+        assert_eq!(
+            out.evaluated + out.pruned_bound + out.pruned_infeasible,
+            out.total,
+            "ledger must cover every point"
+        );
+        assert!(
+            out.evaluated * 4 <= out.total,
+            "must fully evaluate ≤ 25% of points: {} of {}",
+            out.evaluated,
+            out.total
+        );
+        assert_eq!(out.hits.len(), 1);
+        assert_eq!(out.hits[0].index, bi, "threads={threads}");
+        assert_eq!(
+            out.hits[0].eval.latency().raw().to_bits(),
+            bv.to_bits(),
+            "threads={threads}: optimum must be bitwise-equal to the sweep's"
+        );
+        // Every count is part of the determinism contract.
+        assert_eq!(out.evaluated, reference.evaluated, "threads={threads}");
+        assert_eq!(out.pruned_bound, reference.pruned_bound, "threads={threads}");
+        assert_eq!(out.pruned_infeasible, reference.pruned_infeasible, "threads={threads}");
+        assert_eq!(out.groups, reference.groups, "threads={threads}");
+        // The ledger is part of the rendered output.
+        let table = search::render(&out, "table").unwrap();
+        assert!(table.contains(&out.counts_line()), "{table}");
+    }
+}
+
+/// Acceptance, Pareto flavor: identical front (same grid indices, same
+/// bits) as annotating the exhaustive sweep, ≤ 25% evaluated, identical
+/// across thread counts.
+#[test]
+fn pruned_pareto_search_matches_exhaustive_front() {
+    let grid = equivalence_grid();
+    let (points, _) = grid.points().unwrap();
+    let evals = scenario::run_all(&points).unwrap();
+    let want: Vec<(usize, u64, u64)> = scenario::pareto(&evals)
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, on)| {
+            on.then(|| {
+                (
+                    i,
+                    evals[i].latency().raw().to_bits(),
+                    evals[i].energy_total().raw().to_bits(),
+                )
+            })
+        })
+        .collect();
+    assert!(!want.is_empty());
+
+    let mut seen: Option<Vec<(usize, u64, u64)>> = None;
+    for threads in [1usize, 4] {
+        let out = search_on(&grid, Objective::Pareto, threads);
+        assert!(
+            out.evaluated * 4 <= out.total,
+            "must fully evaluate ≤ 25% of points: {} of {}",
+            out.evaluated,
+            out.total
+        );
+        let got: Vec<(usize, u64, u64)> = out
+            .hits
+            .iter()
+            .map(|h| {
+                (
+                    h.index,
+                    h.eval.latency().raw().to_bits(),
+                    h.eval.energy_total().raw().to_bits(),
+                )
+            })
+            .collect();
+        assert_eq!(got, want, "threads={threads}: front must match the sweep's");
+        if let Some(prev) = &seen {
+            assert_eq!(&got, prev, "front must not depend on thread count");
+        }
+        seen = Some(got);
+    }
+}
+
+/// Plan-group sharing across timing engines: with three engines on
+/// otherwise identical axes, the groups collapse 3:1 and the argmin still
+/// matches the exhaustive sweep (which times every engine).
+#[test]
+fn engine_axis_shares_plan_groups() {
+    let base = model_preset("tinyllama-1.1b").unwrap();
+    let grid = ScenarioGrid {
+        models: vec![base.scaled(1), base.scaled(2)],
+        meshes: vec![(2, 2)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        topos: vec![TopologyKind::Mesh2d, TopologyKind::Torus2d],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic, EngineKind::Event, EngineKind::EventPrefetch],
+        ..Default::default()
+    };
+    let (points, _) = grid.points().unwrap();
+    let evals = scenario::run_all(&points).unwrap();
+    let (bi, _) = evals
+        .iter()
+        .enumerate()
+        .map(|(i, ev)| (i, ev.latency().raw()))
+        .fold(None::<(usize, f64)>, |best, (i, v)| match best {
+            Some((_, bv)) if bv <= v => best,
+            _ => Some((i, v)),
+        })
+        .unwrap();
+    for threads in [1usize, 3] {
+        let out = search_on(&grid, Objective::Latency, threads);
+        assert_eq!(out.groups * 3, out.total, "3 engines per plan group");
+        assert_eq!(out.hits[0].index, bi, "threads={threads}");
+    }
+}
+
+/// The pre-plan SRAM floor: a capacity below even the leanest schedule's
+/// weight share makes the exhaustive sweep refuse to evaluate, while the
+/// search counts every point infeasible without planning anything.
+#[test]
+fn sram_floor_cuts_grids_the_sweep_refuses()  {
+    let grid = ScenarioGrid {
+        models: vec![model_preset("tinyllama-1.1b").unwrap()],
+        meshes: vec![(2, 2), (4, 4)],
+        packages: vec![PackageKind::Standard],
+        drams: vec![DramKind::Ddr5_6400],
+        sram: vec![Some(Bytes::mib(0.25))],
+        methods: Method::all().to_vec(),
+        engines: vec![EngineKind::Analytic],
+        ..Default::default()
+    };
+    let (points, _) = grid.points().unwrap();
+    assert!(
+        scenario::run_all(&points).is_err(),
+        "the exhaustive sweep errors on enforced-infeasible points"
+    );
+    let out = search_on(&grid, Objective::Latency, 1);
+    assert_eq!(out.pruned_infeasible, out.total);
+    assert_eq!(out.evaluated, 0);
+    assert_eq!(out.pruned_bound, 0);
+    assert!(out.hits.is_empty());
+    let table = search::render(&out, "table").unwrap();
+    assert!(table.contains("no feasible point"), "{table}");
+}
+
+/// `latency-under-sram`: a tight budget reproduces the exhaustive argmin
+/// over the budget-satisfying subset (same tolerance rule as the
+/// occupancy report), and a generous budget degenerates to the plain
+/// latency optimum.
+#[test]
+fn budgeted_objective_matches_filtered_argmin() {
+    let grid = equivalence_grid();
+    let (points, _) = grid.points().unwrap();
+    let evals = scenario::run_all(&points).unwrap();
+    let peaks: Vec<f64> = evals.iter().map(|e| e.sim().occupancy.peak.raw()).collect();
+    // A budget just above the leanest schedule: a genuinely selective cut.
+    let min_peak = peaks.iter().cloned().fold(f64::INFINITY, f64::min);
+    let budget = Bytes(min_peak * 1.2);
+    let mut best: Option<(f64, usize)> = None;
+    for (i, ev) in evals.iter().enumerate() {
+        if peaks[i] > budget.raw() * (1.0 + 1e-9) || !ev.feasible() {
+            continue;
+        }
+        let v = ev.latency().raw();
+        if best.map_or(true, |(bv, _)| v < bv) {
+            best = Some((v, i));
+        }
+    }
+    let (bv, bi) = best.expect("some point fits a 1.2x-min budget");
+
+    let out = search_on(&grid, Objective::LatencyUnderSram(budget), 2);
+    assert_eq!(out.hits.len(), 1);
+    assert_eq!(out.hits[0].index, bi);
+    assert_eq!(out.hits[0].eval.latency().raw().to_bits(), bv.to_bits());
+    assert!(out.pruned_infeasible > 0, "a tight budget must cut points");
+
+    // Generous budget: bitwise the plain latency optimum.
+    let plain = search_on(&grid, Objective::Latency, 2);
+    let roomy = search_on(&grid, Objective::LatencyUnderSram(Bytes::gib(1024.0)), 2);
+    assert_eq!(roomy.hits[0].index, plain.hits[0].index);
+    assert_eq!(
+        roomy.hits[0].eval.latency().raw().to_bits(),
+        plain.hits[0].eval.latency().raw().to_bits()
+    );
+}
