@@ -243,6 +243,21 @@ fn hotpath_suite(opts: BenchOpts) -> Vec<BenchRow> {
         std::hint::black_box(arena.kernel.makespan());
     });
 
+    // Packet engine on a cluster shape: the per-flow queue/transport
+    // simulation is the measured path (the on-package chain itself rides
+    // the event arena). Gated by the same `--threshold` as every row.
+    let pkt = Scenario::builder(model_preset("tinyllama-1.1b").expect("preset exists"))
+        .dies(16)
+        .cluster(4, 2, 2)
+        .engine(EngineKind::Packet)
+        .build()
+        .expect("valid cluster scenario");
+    let cache = PlanCache::new();
+    let mut scratch = EvalScratch::new();
+    r.bench("hotpath/evaluate_packet", || {
+        std::hint::black_box(pkt.evaluate_with(&cache, &mut scratch).expect("evaluates"));
+    });
+
     r.rows
 }
 

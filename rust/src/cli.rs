@@ -29,7 +29,7 @@ use crate::config::{DramKind, HardwareConfig, ModelConfig, PackageKind, Topology
 use crate::memory::sram::OccupancyReport;
 use crate::nop::analytic::Method;
 use crate::scenario::{self, axis, EvalDetail, Scenario, ScenarioGrid};
-use crate::sim::cluster::ClusterResult;
+use crate::sim::cluster::{ClusterPlan, ClusterResult};
 use crate::sim::sweep::PlanCache;
 use crate::sim::system::{EngineKind, SimResult};
 use crate::util::cli::{split_list, unknown_value, App, CommandSpec, Matches};
@@ -48,13 +48,14 @@ pub fn app() -> App {
                 .opt("dram", "ddr5-6400", "dram: ddr4-3200 | ddr5-6400 | hbm2")
                 .opt("topo", "mesh", "intra-package NoP topology: mesh | torus")
                 .opt("method", "hecaton", "hecaton | flat-ring | torus-ring | optimus")
-                .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch")
+                .opt("engine", "analytic", "timing backend: analytic | event | event-prefetch | packet")
                 .opt("checkpoint", "none", "activation checkpointing: none | auto | every-<k>")
                 .opt("sram-mib", "none", "enforced per-die SRAM capacity in MiB (none = report only)")
                 .opt("n-packages", "1", "packages in the cluster (must equal dp x pp)")
                 .opt("dp", "1", "data-parallel replicas across packages")
                 .opt("pp", "1", "pipeline stages across packages (1F1B)")
                 .opt("inter-bw", "substrate", "inter-package fabric: substrate | optical | fat-tree | <GB/s>")
+                .opt("trace", "", "with --engine packet on a cluster: write per-queue occupancy JSONL here")
                 .opt("config", "", "TOML config file (overrides the above)"),
         )
         .command(
@@ -65,7 +66,7 @@ pub fn app() -> App {
                 .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
                 .opt("topos", "mesh", "comma list of NoP topologies: mesh,torus or 'all'")
                 .opt("methods", "all", "comma list of TP methods, or 'all'")
-                .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("engines", "analytic", "comma list of timing backends (analytic,event,event-prefetch,packet), or 'all'")
                 .opt("checkpoint", "none", "comma list of checkpoint policies: none | auto | every-<k>")
                 .opt("sram-mib", "none", "comma list of enforced per-die SRAM capacities (MiB or 'none')")
                 .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
@@ -85,7 +86,7 @@ pub fn app() -> App {
                 .opt("drams", "ddr5-6400", "comma list: ddr4-3200,ddr5-6400,hbm2 or 'all'")
                 .opt("topos", "mesh", "comma list of NoP topologies: mesh,torus or 'all'")
                 .opt("methods", "all", "comma list of TP methods, or 'all'")
-                .opt("engines", "analytic", "comma list of timing backends, or 'all'")
+                .opt("engines", "analytic", "comma list of timing backends (analytic,event,event-prefetch,packet), or 'all'")
                 .opt("checkpoint", "none", "comma list of checkpoint policies: none | auto | every-<k>")
                 .opt("sram-mib", "none", "comma list of enforced per-die SRAM capacities (MiB or 'none')")
                 .opt("n-packages", "1", "comma list of cluster package counts (dp x pp)")
@@ -252,7 +253,43 @@ impl ScenarioArgs {
 
 fn cmd_simulate(m: &Matches) -> crate::Result<()> {
     let scenario = ScenarioArgs::simulate_scenario(m)?;
-    print_scenario_evaluation(&scenario)
+    print_scenario_evaluation(&scenario)?;
+    if !m.value("trace").is_empty() {
+        write_packet_trace(&scenario, m.value("trace"))?;
+    }
+    Ok(())
+}
+
+/// `--trace <path>`: export the packet engine's per-queue occupancy
+/// samples as JSONL (one `{"t":…,"queue":…,"pkts":…,"dropped":…}` object
+/// per line). Only meaningful when the packet backend actually runs
+/// shared-fabric flows — a cluster target under `--engine packet` — so
+/// anything else errors rather than writing a silently empty file.
+fn write_packet_trace(scenario: &Scenario, path: &str) -> crate::Result<()> {
+    if scenario.engine != EngineKind::Packet {
+        return Err(anyhow!(
+            "--trace requires --engine packet (got --engine {})",
+            scenario.engine.name()
+        ));
+    }
+    let Some(c) = scenario.cluster_config() else {
+        return Err(anyhow!(
+            "--trace requires a cluster target (--n-packages/--dp/--pp): the packet \
+             engine's queues live on the inter-package fabric"
+        ));
+    };
+    let plan =
+        ClusterPlan::build(&scenario.model, c, scenario.method, scenario.opts, &PlanCache::new())?;
+    let trace = plan.packet_trace();
+    std::fs::write(path, trace.to_jsonl())
+        .map_err(|e| anyhow!("writing packet trace to {path}: {e}"))?;
+    println!(
+        "packet trace: {} samples over {} queues -> {path}{}",
+        trace.samples.len(),
+        trace.queues.len(),
+        if trace.truncated { " (truncated at sample cap)" } else { "" }
+    );
+    Ok(())
 }
 
 /// Evaluate one scenario and print the matching table (package breakdown
@@ -1062,6 +1099,12 @@ mod tests {
             .unwrap();
         let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
         assert!(e.contains("did you mean 'event'"), "{e}");
+        let m = a
+            .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--engine", "pakcet"]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("did you mean 'packet'"), "{e}");
         // The topology axis speaks the same suggestion protocol.
         let m = a
             .parse(&argv(&["simulate", "--model", "tinyllama-1.1b", "--dies", "16", "--topo", "tours"]))
@@ -1145,7 +1188,7 @@ mod tests {
     #[test]
     fn simulate_command_runs_event_engine() {
         let a = app();
-        for engine in ["event", "event-prefetch"] {
+        for engine in ["event", "event-prefetch", "packet"] {
             let m = a
                 .parse(&argv(&[
                     "simulate",
@@ -1167,6 +1210,52 @@ mod tests {
         assert!(cmd_simulate(&bad).is_err());
     }
 
+    /// `--trace` exports per-queue occupancy JSONL on a packet-engine
+    /// cluster run, and errors cleanly on the shapes it cannot trace.
+    #[test]
+    fn simulate_trace_exports_packet_queue_occupancy() {
+        let a = app();
+        let path = std::env::temp_dir().join("hecaton_cli_trace_test.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16",
+                "--n-packages", "4", "--dp", "2", "--pp", "2",
+                "--engine", "packet", "--trace", &path_s,
+            ]))
+            .unwrap()
+            .unwrap();
+        cmd_simulate(&m).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let first = body.lines().next().expect("trace has samples");
+        assert!(first.starts_with('{') && first.ends_with('}'), "{first}");
+        for key in ["\"t\"", "\"queue\"", "\"pkts\"", "\"dropped\""] {
+            assert!(first.contains(key), "{first} missing {key}");
+        }
+        // Wrong engine: clean error pointing at --engine packet.
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16",
+                "--n-packages", "4", "--dp", "2", "--pp", "2",
+                "--engine", "event", "--trace", &path_s,
+            ]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("--engine packet"), "{e}");
+        // Single-package target: nothing crosses the fabric to trace.
+        let m = a
+            .parse(&argv(&[
+                "simulate", "--model", "tinyllama-1.1b", "--dies", "16",
+                "--engine", "packet", "--trace", &path_s,
+            ]))
+            .unwrap()
+            .unwrap();
+        let e = format!("{:#}", cmd_simulate(&m).unwrap_err());
+        assert!(e.contains("cluster"), "{e}");
+    }
+
     #[test]
     fn info_runs_table_and_json() {
         let a = app();
@@ -1180,6 +1269,9 @@ mod tests {
         assert!(json.contains("\"cluster_presets\""));
         assert!(json.contains("\"405b-cluster\""));
         assert!(json.contains("\"topologies\": [\"mesh\", \"torus\"]"));
+        assert!(json.contains(
+            "\"engines\": [\"analytic\", \"event\", \"event-prefetch\", \"packet\"]"
+        ));
         assert!(json.contains("\"fat-tree\""));
         let bad = a.parse(&argv(&["info", "--format", "yaml"])).unwrap().unwrap();
         assert!(cmd_info(&bad).is_err());

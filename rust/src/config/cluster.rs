@@ -110,14 +110,30 @@ impl InterPkgLink {
     }
 
     /// Parse a fabric spec: a preset name (`substrate` | `optical` |
-    /// `fat-tree`) or a bare number interpreted as GB/s on
-    /// substrate-preset latency/energy.
+    /// `fat-tree`), a bare number interpreted as GB/s on substrate-preset
+    /// latency/energy, or `fat-tree:<GB/s>` — the fat-tree preset with
+    /// its per-stream bandwidth overridden (how the packet-engine incast
+    /// scenarios pin a deliberately oversubscribed switched fabric).
     pub fn parse(s: &str) -> Option<InterPkgLink> {
         match s.to_ascii_lowercase().as_str() {
             "substrate" | "pcb" | "sub" => Some(InterPkgLink::preset(InterKind::Substrate)),
             "optical" | "opt" => Some(InterPkgLink::preset(InterKind::Optical)),
             "fat-tree" | "fattree" | "ft" => Some(InterPkgLink::preset(InterKind::FatTree)),
             other => {
+                if let Some(gbs) = other
+                    .strip_prefix("fat-tree:")
+                    .or_else(|| other.strip_prefix("fattree:"))
+                    .or_else(|| other.strip_prefix("ft:"))
+                {
+                    let gbs: f64 = gbs.parse().ok()?;
+                    if !(gbs.is_finite() && gbs > 0.0) {
+                        return None;
+                    }
+                    return Some(InterPkgLink {
+                        bandwidth: gbs * 1.0e9,
+                        ..InterPkgLink::preset(InterKind::FatTree)
+                    });
+                }
                 let gbs: f64 = other.parse().ok()?;
                 if !(gbs.is_finite() && gbs > 0.0) {
                     return None;
@@ -299,6 +315,15 @@ mod tests {
         assert!(InterPkgLink::parse("bogus").is_none());
         assert!(InterPkgLink::parse("-3").is_none());
         assert!(InterPkgLink::parse("0").is_none());
+        // fat-tree:<GB/s>: switched topology with overridden bandwidth.
+        let slow_ft = InterPkgLink::parse("fat-tree:8").unwrap();
+        assert_eq!(slow_ft.topo, FabricTopo::FatTree);
+        assert!((slow_ft.bandwidth - 8.0e9).abs() < 1.0);
+        assert_eq!(slow_ft.latency, ft.latency);
+        assert_eq!(slow_ft.pj_per_bit, ft.pj_per_bit);
+        assert_eq!(InterPkgLink::parse("ft:8"), Some(slow_ft.clone()));
+        assert!(InterPkgLink::parse("fat-tree:0").is_none());
+        assert!(InterPkgLink::parse("fat-tree:x").is_none());
     }
 
     #[test]

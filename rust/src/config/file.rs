@@ -772,6 +772,34 @@ mod tests {
         assert!(e.contains("top-level key 'preset'"), "{e}");
     }
 
+    /// The packet engine speaks the full TOML surface: it loads by name,
+    /// a typo gets the shared did-you-mean diagnostic, and the
+    /// `fat-tree:<GB/s>` fabric form parses in [cluster] inter.
+    #[test]
+    fn packet_engine_and_fat_tree_override_load_from_toml() {
+        let LoadedScenario::One(s) = scenario_from_str(
+            "[model]\npreset = \"tinyllama-1.1b\"\n[hardware]\nmesh = [4, 4]\n\
+             [cluster]\npackages = 4\ndp = 2\npp = 2\ninter = \"fat-tree:8\"\n\
+             [options]\nengine = \"packet\"\n",
+        )
+        .unwrap() else {
+            panic!("single scenario");
+        };
+        assert_eq!(s.engine, EngineKind::Packet);
+        let inter = &s.cluster_config().unwrap().inter;
+        assert_eq!(inter.topo, crate::config::cluster::FabricTopo::FatTree);
+        assert!((inter.bandwidth - 8.0e9).abs() < 1.0);
+
+        let e = format!(
+            "{:#}",
+            scenario_from_str(
+                "[model]\npreset = \"tiny\"\n[options]\nengine = \"pakcet\"\n"
+            )
+            .unwrap_err()
+        );
+        assert!(e.contains("did you mean 'packet'"), "{e}");
+    }
+
     /// The legacy loader points at `hecaton run` for scenario sections.
     #[test]
     fn simsetup_rejects_scenario_sections() {

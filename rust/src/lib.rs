@@ -68,6 +68,7 @@ pub mod workload;
 pub mod parallel;
 pub mod sched;
 pub mod energy;
+pub mod net;
 pub mod sim;
 pub mod scenario;
 pub mod search;

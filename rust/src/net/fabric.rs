@@ -1,0 +1,294 @@
+//! The cluster fabric as a packet network: 1F1B boundary crossings and
+//! DP gradient all-reduce as flows over an [`InterPkgLink`] graph.
+//!
+//! The event engine models the inter-package fabric as one fair-shared
+//! resource; here the fabric becomes a small link graph with real
+//! queues:
+//!
+//! * [`FabricTopo::PointToPoint`] — one shared trunk link (the board's
+//!   aggregate substrate/optical capacity, propagation = the link
+//!   latency). This reproduces the event engine's single fair resource,
+//!   plus queue/transport dynamics.
+//! * [`FabricTopo::FatTree`] — one uplink per source package into a
+//!   shared core link (both at the fabric rate, each adding one switch
+//!   traversal of propagation, so an uncontended crossing pays
+//!   [`InterPkgLink::hop_latency`] = 2·latency exactly). Incast
+//!   materializes at the core queue: many uplinks, one bottleneck.
+//!
+//! [`onef1b_packet_in`] replays the exact
+//! [`crate::sched::onef1b::onef1b_order`] schedule the event DAG
+//! executes — same sweeps, same dependency structure — with stage FIFOs
+//! as work nodes and boundary crossings as flows (raw activation bytes;
+//! the hop latency rides as completion debt instead of being folded into
+//! the byte count). [`allreduce_packet`] prices the gradient all-reduce
+//! as `dp` concurrent per-replica flows — on a fat-tree this is the
+//! many-to-one shape the fair-share model flattens.
+
+use crate::config::cluster::{FabricTopo, InterPkgLink};
+use crate::nop::analytic::Pass;
+use crate::sched::onef1b::{onef1b_order, PipelineStage};
+use crate::util::{Bytes, Seconds};
+
+use super::sim::{LinkId, NetParams, PacketNet, TaskId, Trace};
+
+/// Build the fabric's link graph: one route (link id sequence) per
+/// source package/stage. Point-to-point: every route is the shared
+/// trunk. Fat-tree: per-source uplink, then the shared core.
+fn fabric_routes(net: &mut PacketNet, inter: &InterPkgLink, sources: usize) -> Vec<Vec<LinkId>> {
+    match inter.topo {
+        FabricTopo::PointToPoint => {
+            let trunk = net.link("fabric", inter.bandwidth, inter.latency);
+            (0..sources).map(|_| vec![trunk]).collect()
+        }
+        FabricTopo::FatTree => {
+            let core = net.link("core", inter.bandwidth, inter.latency);
+            (0..sources)
+                .map(|s| {
+                    let up = net.link(&format!("up{s}"), inter.bandwidth, inter.latency);
+                    vec![up, core]
+                })
+                .collect()
+        }
+    }
+}
+
+/// The 1F1B schedule executed on the packet network — the packet twin of
+/// [`crate::sched::onef1b::onef1b_event_in`], same repeated-sweep DAG
+/// construction over [`onef1b_order`].
+///
+/// `tails[s]` is stage `s`'s trailing gradient stream as `(bytes,
+/// completion debt)` — the debt carries the all-reduce's serial hop
+/// latency (`hop_latency × ar_hops`), which the event DAG folds into the
+/// byte count instead.
+pub fn onef1b_packet_in(
+    stages: &[PipelineStage],
+    microbatches: usize,
+    act_bytes: Bytes,
+    tails: &[(Bytes, Seconds)],
+    inter: &InterPkgLink,
+    params: &NetParams,
+    trace: Option<&mut Trace>,
+) -> Seconds {
+    let p = stages.len();
+    assert!(p >= 1, "pipeline needs at least one stage");
+    assert_eq!(tails.len(), p, "one tail stream slot per stage");
+    let m = microbatches.max(1);
+
+    let mut net = PacketNet::new(params.clone());
+    let routes = fabric_routes(&mut net, inter, p);
+    let stage_nodes: Vec<_> = (0..p).map(|s| net.node(&format!("stage{s}"))).collect();
+
+    let orders: Vec<Vec<(Pass, usize)>> = (0..p).map(|s| onef1b_order(s, p, m)).collect();
+    let mut next_op = vec![0usize; p];
+    let mut prev_op: Vec<Option<TaskId>> = vec![None; p];
+    let mut fwd_out: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; p];
+    let mut bwd_out: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; p];
+    let mut fwd_id: Vec<Vec<Option<TaskId>>> = vec![vec![None; m]; p];
+
+    // Same repeated-sweep construction as the event DAG: each pass over
+    // the stages creates every op whose dependencies already exist.
+    let total_ops = 2 * m * p;
+    let mut created = 0usize;
+    while created < total_ops {
+        let mut progressed = false;
+        for s in 0..p {
+            while next_op[s] < orders[s].len() {
+                let (pass, i) = orders[s][next_op[s]];
+                let data_dep = match pass {
+                    Pass::Fwd if s == 0 => None,
+                    Pass::Fwd => match fwd_out[s - 1][i] {
+                        Some(t) => Some(t),
+                        None => break,
+                    },
+                    Pass::Bwd if s == p - 1 => match fwd_id[s][i] {
+                        Some(t) => Some(t),
+                        None => break,
+                    },
+                    Pass::Bwd => match bwd_out[s + 1][i] {
+                        Some(t) => Some(t),
+                        None => break,
+                    },
+                };
+                let mut deps: Vec<TaskId> = Vec::with_capacity(2);
+                if let Some(t) = data_dep {
+                    deps.push(t);
+                }
+                if let Some(t) = prev_op[s] {
+                    deps.push(t);
+                }
+                let dur = match pass {
+                    Pass::Fwd => stages[s].fwd,
+                    Pass::Bwd => stages[s].bwd,
+                };
+                let t = net.work(stage_nodes[s], dur, &deps);
+                match pass {
+                    Pass::Fwd => {
+                        fwd_id[s][i] = Some(t);
+                        fwd_out[s][i] = Some(if s + 1 < p {
+                            net.flow(&routes[s], act_bytes, &[t])
+                        } else {
+                            t
+                        });
+                    }
+                    Pass::Bwd => {
+                        bwd_out[s][i] = Some(if s > 0 {
+                            net.flow(&routes[s], act_bytes, &[t])
+                        } else {
+                            t
+                        });
+                    }
+                }
+                prev_op[s] = Some(t);
+                next_op[s] += 1;
+                created += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "1F1B schedule deadlocked (p={p}, m={m})");
+    }
+
+    for (s, &(tail, debt)) in tails.iter().enumerate() {
+        if tail.raw() > 0.0 {
+            let last = prev_op[s].expect("every stage emitted ops");
+            net.flow_with_debt(&routes[s], tail, debt, &[last]);
+        }
+    }
+    net.run(trace).makespan
+}
+
+/// The DP gradient all-reduce as `dp` concurrent per-replica flows of
+/// `vol` bytes each (aggregate `dp × vol`, the same wire volume the
+/// closed form charges), each carrying the all-reduce's serial hop
+/// latency (`hop_debt`) as completion debt. On an uncongested fabric
+/// this reproduces `(dp·vol)/bandwidth + hop_debt`; on a fat-tree the
+/// `dp` uplinks converge on the core queue — the incast the fair-share
+/// model cannot express.
+pub fn allreduce_packet(
+    vol: Bytes,
+    dp: usize,
+    hop_debt: Seconds,
+    inter: &InterPkgLink,
+    params: &NetParams,
+    trace: Option<&mut Trace>,
+) -> Seconds {
+    if vol.raw() <= 0.0 || dp <= 1 {
+        return Seconds::ZERO;
+    }
+    let mut net = PacketNet::new(params.clone());
+    let routes = fabric_routes(&mut net, inter, dp);
+    for route in &routes {
+        net.flow_with_debt(route, vol, hop_debt, &[]);
+    }
+    net.run(trace).makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::cluster::InterKind;
+    use crate::sched::onef1b::onef1b_analytic;
+    use crate::util::prop;
+
+    fn homogeneous(p: usize, f: f64, b: f64) -> Vec<PipelineStage> {
+        (0..p).map(|_| PipelineStage { fwd: Seconds(f), bwd: Seconds(b) }).collect()
+    }
+
+    fn analytic_fabric(inter: &InterPkgLink) -> crate::sched::onef1b::Fabric {
+        crate::sched::onef1b::Fabric {
+            bandwidth: inter.bandwidth,
+            latency: inter.hop_latency(),
+        }
+    }
+
+    /// Packet 1F1B matches the closed form on uncongested fabrics —
+    /// both point-to-point and fat-tree — within the 2% parity bar.
+    #[test]
+    fn packet_matches_analytic_on_uncongested_fabric() {
+        prop::check("1f1b packet == analytic (uncongested)", 32, |g| {
+            for kind in [InterKind::Substrate, InterKind::FatTree] {
+                let inter = InterPkgLink::preset(kind);
+                let p = g.usize_range(1, 5);
+                let m = g.usize_range(1, 12);
+                let f = g.f64_range(1e-3, 1e-2);
+                let b = g.f64_range(1e-3, 1e-2);
+                let stages = homogeneous(p, f, b);
+                // hop ≪ pass: the cluster regime.
+                let act = Bytes(1e-5 * f.min(b) * inter.bandwidth);
+                let a = onef1b_analytic(&stages, m, act, &analytic_fabric(&inter));
+                let tails = vec![(Bytes::ZERO, Seconds::ZERO); p];
+                let e = onef1b_packet_in(
+                    &stages,
+                    m,
+                    act,
+                    &tails,
+                    &inter,
+                    &NetParams::default(),
+                    None,
+                );
+                prop::assert_close(e.raw(), a.raw(), 2e-2, format!("{kind:?} p={p} m={m}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// A slow fabric congests the packet schedule past the closed form,
+    /// like the event engine — the congestion scenarios stay expressible.
+    #[test]
+    fn congested_fabric_exceeds_closed_form() {
+        let stages = homogeneous(4, 1.0e-3, 1.0e-3);
+        let mut inter = InterPkgLink::preset(InterKind::Substrate);
+        inter.bandwidth = 1.0e9;
+        let act = Bytes(5.0e6); // 5 ms per crossing vs 1 ms compute
+        let a = onef1b_analytic(&stages, 8, act, &analytic_fabric(&inter));
+        let tails = vec![(Bytes::ZERO, Seconds::ZERO); 4];
+        let e = onef1b_packet_in(&stages, 8, act, &tails, &inter, &NetParams::default(), None);
+        assert!(e > a, "packet {e} should exceed analytic {a} under congestion");
+    }
+
+    /// Uncongested all-reduce reproduces the closed form: `dp` flows at
+    /// a fair `C/dp` each finish together at `dp·vol/C + hop_debt`.
+    #[test]
+    fn allreduce_packet_matches_closed_form_uncongested() {
+        for kind in [InterKind::Substrate, InterKind::Optical, InterKind::FatTree] {
+            let inter = InterPkgLink::preset(kind);
+            let dp = 2;
+            let vol = Bytes::mib(64.0);
+            let hop_debt = inter.hop_latency() * 2.0 * (dp as f64 - 1.0);
+            let t = allreduce_packet(vol, dp, hop_debt, &inter, &NetParams::default(), None);
+            let want = vol.raw() * dp as f64 / inter.bandwidth + hop_debt.raw();
+            assert!(
+                (t.raw() - want).abs() / want < 2e-2,
+                "{kind:?}: {t} vs {want}"
+            );
+        }
+    }
+
+    /// Many-to-one on a slow fat-tree: the core queue drops, flows
+    /// retransmit and pause — strictly above the fair-share time, and a
+    /// deeper core queue relieves it.
+    #[test]
+    fn fat_tree_incast_prices_above_fair_share() {
+        let mut inter = InterPkgLink::preset(InterKind::FatTree);
+        inter.bandwidth = 8.0e9; // oversubscribed core
+        let dp = 8;
+        let vol = Bytes::mib(32.0);
+        let hop_debt = inter.hop_latency() * 6.0; // 2·⌈log₂ 8⌉ switched rounds
+        // The fair-share (event-engine) time: a dp× stream at full rate
+        // plus the same serial hop latency the packet flows carry.
+        let fair = vol.raw() * dp as f64 / inter.bandwidth + hop_debt.raw();
+        let time_with =
+            |p: NetParams| allreduce_packet(vol, dp, hop_debt, &inter, &p, None).raw();
+        let shallow = time_with(NetParams {
+            queue_pkts: 32.0,
+            ecn_pkts: 8.0,
+            ..NetParams::default()
+        });
+        assert!(shallow > fair, "incast {shallow} must exceed fair share {fair}");
+        let deep = time_with(NetParams {
+            queue_pkts: 4096.0,
+            ecn_pkts: 8.0,
+            ..NetParams::default()
+        });
+        assert!(deep < shallow, "deep queue must relieve incast: {deep} vs {shallow}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Lowering collective schedules onto the packet network.
+//!
+//! [`packet_time_concurrent`] is the packet twin of
+//! [`crate::nop::collective::event_time_concurrent`]: the same
+//! [`CollectiveSchedule`]s (and therefore the same lowered
+//! [`crate::comm::TrafficPhase`]s) replayed over per-link DropTail
+//! queues instead of fair-share FIFOs. Each step's active links become
+//! one flow per link; the step's hop latency is carried as completion
+//! debt (the schedule folds multi-hop spans into a per-step latency
+//! multiplier, not per-hop link ids); a zero-byte barrier work node
+//! separates steps within one schedule, so schedules stay internally
+//! synchronous while contending freely with each other on shared links —
+//! exactly the event engine's semantics, now with queues.
+
+use crate::config::LinkConfig;
+use crate::nop::collective::CollectiveSchedule;
+use crate::util::Seconds;
+
+use super::sim::{NetParams, PacketNet, TaskId, Trace};
+
+/// Replay several schedules concurrently on one shared fabric of
+/// per-link queues. The packet twin of
+/// [`crate::nop::collective::event_time_concurrent`]; returns the
+/// makespan.
+pub fn packet_time_concurrent(
+    schedules: &[&CollectiveSchedule],
+    link: &LinkConfig,
+    params: &NetParams,
+) -> Seconds {
+    packet_time_traced(schedules, link, params, None)
+}
+
+/// [`packet_time_concurrent`] with an optional queue-occupancy trace.
+pub fn packet_time_traced(
+    schedules: &[&CollectiveSchedule],
+    link: &LinkConfig,
+    params: &NetParams,
+    trace: Option<&mut Trace>,
+) -> Seconds {
+    let mut net = PacketNet::new(params.clone());
+    let n_links = schedules.iter().map(|s| s.n_links()).max().unwrap_or(0);
+    let links: Vec<_> = (0..n_links)
+        .map(|i| net.link(&format!("link{i}"), link.bandwidth, link.latency))
+        .collect();
+    for (si, sched) in schedules.iter().enumerate() {
+        // One barrier node per schedule (zero-duration work keeps the
+        // dependency count linear, mirroring event_time_concurrent).
+        let barrier_node = net.node(&format!("barrier{si}"));
+        let mut barrier: Vec<TaskId> = Vec::new();
+        for step in &sched.steps {
+            // The step spans `hops` adjacent links serially; the link id
+            // carries serialization, the debt carries the full fixed
+            // latency of the span.
+            let debt = link.latency * step.hops;
+            let mut cur = Vec::with_capacity(step.links.count());
+            for id in step.links.ids() {
+                cur.push(net.flow_with_debt(&[links[id]], step.per_link, debt, &barrier));
+            }
+            barrier = vec![net.work(barrier_node, Seconds::ZERO, &cur)];
+        }
+    }
+    net.run(trace).makespan
+}
+
+/// Lowered packet time of one schedule alone — the parity anchor against
+/// [`CollectiveSchedule::event_time`].
+pub fn packet_time(sched: &CollectiveSchedule, link: &LinkConfig, params: &NetParams) -> Seconds {
+    packet_time_concurrent(&[sched], link, params)
+}
+
+/// Packet replay of one [`crate::comm::TrafficPhase`] — the packet twin
+/// of [`crate::comm::TrafficPhase::event_time`]: the schedule replayed
+/// over queues, the phase's repetition/halving scale applied as the same
+/// uniform multiplier.
+pub fn phase_packet_time(
+    phase: &crate::comm::TrafficPhase,
+    link: &LinkConfig,
+    params: &NetParams,
+) -> Seconds {
+    packet_time(&phase.schedule, link, params) * phase.scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LinkConfig, PackageKind};
+    use crate::nop::collective::{
+        flat_ring_all_reduce_schedule, ring_step_schedule, CollectiveKind,
+    };
+    use crate::util::prop;
+
+    fn link() -> LinkConfig {
+        LinkConfig::for_package(PackageKind::Standard)
+    }
+
+    /// Uncongested lowering matches the event replay (which matches the
+    /// closed form) — the package-level parity anchor.
+    #[test]
+    fn packet_time_matches_event_time_uncongested() {
+        prop::check("packet lowering == event replay", 32, |g| {
+            let l = link();
+            let s = crate::util::Bytes(g.f64_range(1e5, 1e9));
+            let n = g.usize_range(2, 10);
+            for sched in [
+                ring_step_schedule(CollectiveKind::AllGather, n, s),
+                flat_ring_all_reduce_schedule(n, s),
+            ] {
+                let event = sched.event_time(&l).raw();
+                let packet = packet_time(&sched, &l, &NetParams::default()).raw();
+                prop::assert_close(packet, event, 2e-2, format!("n={n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Two schedules over the same links contend: packet time ~2× one.
+    #[test]
+    fn shared_links_contend() {
+        let l = link();
+        let a = ring_step_schedule(CollectiveKind::AllGather, 8, crate::util::Bytes::mib(32.0));
+        let single = packet_time(&a, &l, &NetParams::default()).raw();
+        let shared = packet_time_concurrent(&[&a, &a], &l, &NetParams::default()).raw();
+        assert!(
+            shared > 1.8 * single && shared < 2.3 * single,
+            "{shared} vs {single}"
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Packet-level network backend (`EngineKind::Packet`) — ROADMAP item 1.
+//!
+//! The event engine (`sim/engine.rs`) models contention as fair-shared
+//! abstract resources: `k` streams on a link each get `bandwidth / k`,
+//! instantly and losslessly. That ceiling cannot express queue buildup,
+//! ECN backpressure, or incast collapse — the behaviors that decide
+//! whether a switched inter-package fabric actually sustains the paper's
+//! weak-scaling claims. This module replaces the ceiling with a
+//! flow-level queueing/transport simulator in the htsim idiom:
+//!
+//! * [`sim`] — the core: links with DropTail queues, window-based
+//!   DCTCP-flavored flows (ECN marking + multiplicative backoff, drops +
+//!   retransmission + timeout pause), FIFO work nodes, a deterministic
+//!   `(time, seq)` event loop, and the [`sim::Trace`] JSONL export of
+//!   per-queue occupancy (`--trace`).
+//! * [`lower`] — consumes the same lowered [`crate::comm::TrafficPhase`]
+//!   / [`crate::nop::CollectiveSchedule`]s the event engine replays:
+//!   each schedule step becomes a set of flows over per-link queues,
+//!   with the step's hop latency carried as completion debt.
+//! * [`fabric`] — the cluster paths: the 1F1B pipeline boundary and the
+//!   gradient all-reduce as flows over an [`InterPkgLink`] graph
+//!   (point-to-point → one shared trunk; fat-tree → per-stage uplinks
+//!   into a shared core, where incast materializes).
+//!
+//! Parity contract (property-tested in `tests/integration_net.rs`): on
+//! uncongested shapes the packet engine reproduces the event engine
+//! within 2%; on incast/oversubscribed scenarios it prices *strictly
+//! higher* latency, monotone in queue depth and ECN threshold.
+//!
+//! [`InterPkgLink`]: crate::config::InterPkgLink
+
+pub mod fabric;
+pub mod lower;
+pub mod sim;
+
+pub use fabric::{allreduce_packet, onef1b_packet_in};
+pub use lower::{packet_time_concurrent, phase_packet_time};
+pub use sim::{NetParams, NetRun, PacketNet, Trace};

@@ -1,0 +1,823 @@
+//! The packet-network core: links with DropTail queues, window-based
+//! flows, and FIFO work nodes, executed by a deterministic event loop.
+//!
+//! This is deliberately *not* a per-packet simulator: flows progress as
+//! piecewise-constant fluids between events (per-MTU event counts on a
+//! multi-gigabyte gradient stream would dwarf the rest of the simulator),
+//! but the three behaviors the fair-share event engine cannot express are
+//! modeled explicitly, in packet units:
+//!
+//! * **queues** — each link carries a DropTail queue of `queue_pkts`
+//!   MTU-sized slots. A flow's self-clocked excess (window beyond its
+//!   granted rate × RTT) sits in the queue of its bottleneck link.
+//! * **ECN + backoff** — once a queue exceeds `ecn_pkts`, flows crossing
+//!   it are marked and multiplicatively back off at their next window
+//!   epoch (DCTCP-flavored: gentle `mark_backoff` on marks, halving on
+//!   drops).
+//! * **DropTail + retransmission** — window volume overflowing the queue
+//!   capacity is dropped: the flow must resend those bytes, halves its
+//!   window, and pauses for one epoch (the retransmission-timeout
+//!   idiom). This is the mechanism that makes incast *strictly* more
+//!   expensive than fluid fair sharing — dropped bytes are served twice
+//!   and the pause leaves capacity idle.
+//!
+//! An **uncontended** flow never queues past the ECN threshold (its
+//! window is capped at `BDP + ecn`), never backs off, and therefore
+//! finishes in exactly `bytes/bandwidth + propagation` — which is why the
+//! packet engine reproduces the event engine on uncongested shapes
+//! (property-tested in `tests/integration_net.rs`).
+//!
+//! Determinism: all state transitions happen at events ordered by
+//! `(time, seq)` exactly like [`crate::sim::engine`]; there is no
+//! randomness anywhere in the model.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::{Bytes, Seconds};
+
+/// Tunable constants of the transport + queue model. Defaults are the
+/// calibration rows documented in ARCHITECTURE.md.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetParams {
+    /// Packet (flit) size: the queue-accounting unit and the additive
+    /// window increase per epoch.
+    pub mtu: Bytes,
+    /// DropTail queue depth per link, in MTU packets.
+    pub queue_pkts: f64,
+    /// ECN marking threshold per link, in MTU packets. Must be below
+    /// `queue_pkts` for marking to precede drops.
+    pub ecn_pkts: f64,
+    /// Multiplicative window factor applied on an ECN mark (DCTCP-style
+    /// gentle decrease).
+    pub mark_backoff: f64,
+    /// Multiplicative window factor applied after a tail-drop.
+    pub drop_backoff: f64,
+    /// Window-update (and drop-pause) interval as a fraction of the
+    /// flow's solo stream time, floored at one base RTT — bounds the
+    /// event count per flow at ~`1/epoch_frac` regardless of scale.
+    pub epoch_frac: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> NetParams {
+        NetParams {
+            mtu: Bytes(4096.0),
+            queue_pkts: 64.0,
+            ecn_pkts: 16.0,
+            mark_backoff: 0.75,
+            drop_backoff: 0.5,
+            epoch_frac: 1.0 / 64.0,
+        }
+    }
+}
+
+pub type NodeId = usize;
+pub type LinkId = usize;
+pub type TaskId = usize;
+
+/// Per-queue occupancy trace: one sample per (event, link) where the
+/// queue depth or drop counter changed. Serialized as JSONL by
+/// [`Trace::to_jsonl`] — the `--trace` CLI export.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Link names, indexed by the `queue` field of samples.
+    pub queues: Vec<String>,
+    /// `(time, queue index, occupancy pkts, cumulative dropped pkts)`.
+    pub samples: Vec<(f64, usize, f64, f64)>,
+    /// True when sampling stopped at [`Trace::SAMPLE_CAP`].
+    pub truncated: bool,
+}
+
+impl Trace {
+    /// Sampling stops after this many records — the export stays cheap
+    /// even on pathological runs.
+    pub const SAMPLE_CAP: usize = 1 << 16;
+
+    fn push(&mut self, t: f64, queue: usize, pkts: f64, dropped: f64) {
+        if self.samples.len() >= Trace::SAMPLE_CAP {
+            self.truncated = true;
+            return;
+        }
+        self.samples.push((t, queue, pkts, dropped));
+    }
+
+    /// One JSON object per line: `{"t":…,"queue":"…","pkts":…,"dropped":…}`.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::with_capacity(self.samples.len() * 64);
+        for &(t, q, pkts, dropped) in &self.samples {
+            out.push_str(&format!(
+                "{{\"t\":{:.9e},\"queue\":\"{}\",\"pkts\":{:.3},\"dropped\":{:.3}}}\n",
+                t, self.queues[q], pkts, dropped
+            ));
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+struct LinkDef {
+    name: String,
+    /// Bytes/s.
+    bandwidth: f64,
+    /// One-way propagation (serialization folded by the caller if
+    /// desired; the queue model charges it per traversal).
+    prop: Seconds,
+}
+
+#[derive(Debug, Clone)]
+enum TaskKind {
+    /// Exclusive FIFO service on a node (compute).
+    Work { node: NodeId, dur: Seconds },
+    /// A transported flow over `route`; completes `debt` after its last
+    /// byte is served (defaults to the route's one-way propagation).
+    Flow { route: Vec<LinkId>, bytes: Bytes, debt: Seconds },
+}
+
+#[derive(Debug, Clone)]
+struct TaskDef {
+    kind: TaskKind,
+    deps: Vec<TaskId>,
+}
+
+/// A packet-level task graph: build with [`PacketNet::work`] /
+/// [`PacketNet::flow`], execute with [`PacketNet::run`].
+#[derive(Debug, Clone)]
+pub struct PacketNet {
+    pub params: NetParams,
+    nodes: Vec<String>,
+    links: Vec<LinkDef>,
+    tasks: Vec<TaskDef>,
+}
+
+/// Result of a [`PacketNet::run`].
+#[derive(Debug, Clone)]
+pub struct NetRun {
+    pub makespan: Seconds,
+    /// Completion time per task, in creation order.
+    pub finish: Vec<Seconds>,
+}
+
+impl PacketNet {
+    pub fn new(params: NetParams) -> PacketNet {
+        PacketNet { params, nodes: Vec::new(), links: Vec::new(), tasks: Vec::new() }
+    }
+
+    /// Register a FIFO work node (a pipeline stage, a compute slot).
+    pub fn node(&mut self, name: &str) -> NodeId {
+        self.nodes.push(name.to_string());
+        self.nodes.len() - 1
+    }
+
+    /// Register a link: `bandwidth` bytes/s, one-way propagation `prop`.
+    pub fn link(&mut self, name: &str, bandwidth: f64, prop: Seconds) -> LinkId {
+        assert!(bandwidth > 0.0, "link {name} needs positive bandwidth");
+        self.links.push(LinkDef { name: name.to_string(), bandwidth, prop });
+        self.links.len() - 1
+    }
+
+    /// Exclusive busy time on `node`, after `deps`.
+    pub fn work(&mut self, node: NodeId, dur: Seconds, deps: &[TaskId]) -> TaskId {
+        self.tasks.push(TaskDef { kind: TaskKind::Work { node, dur }, deps: deps.to_vec() });
+        self.tasks.len() - 1
+    }
+
+    /// A flow of `bytes` over `route`, after `deps`. Completion lags the
+    /// last served byte by the route's one-way propagation.
+    pub fn flow(&mut self, route: &[LinkId], bytes: Bytes, deps: &[TaskId]) -> TaskId {
+        let debt = route.iter().map(|&l| self.links[l].prop).sum();
+        self.flow_with_debt(route, bytes, debt, deps)
+    }
+
+    /// [`PacketNet::flow`] with an explicit completion debt — used to
+    /// fold multi-hop serial latency (ring steps, all-reduce rounds) that
+    /// the route's link set does not spell out per hop.
+    pub fn flow_with_debt(
+        &mut self,
+        route: &[LinkId],
+        bytes: Bytes,
+        debt: Seconds,
+        deps: &[TaskId],
+    ) -> TaskId {
+        assert!(!route.is_empty(), "a flow needs at least one link");
+        self.tasks.push(TaskDef {
+            kind: TaskKind::Flow { route: route.to_vec(), bytes, debt },
+            deps: deps.to_vec(),
+        });
+        self.tasks.len() - 1
+    }
+
+    /// Execute the graph. Deterministic; `trace`, when given, records
+    /// per-queue occupancy at every queue-state change.
+    pub fn run(&self, trace: Option<&mut Trace>) -> NetRun {
+        Runner::new(self, trace).run()
+    }
+}
+
+// ── event loop ──
+
+/// Event-queue key: total order on finite times, ties by sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EvKind {
+    WorkDone(TaskId),
+    /// Flow completion (service done + debt elapsed).
+    FlowDone(TaskId),
+    /// Window-update epoch for a flow.
+    Epoch(TaskId),
+    /// End of a drop-pause for a flow.
+    Resume(TaskId),
+    /// Completion-estimate check; valid only at the generation it was
+    /// scheduled under.
+    Recheck(u64),
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .expect("event times are finite")
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct FlowState {
+    route: Vec<LinkId>,
+    remaining: f64,
+    debt: f64,
+    /// Congestion window, bytes.
+    window: f64,
+    /// Window cap: bottleneck BDP + ECN threshold.
+    wcap: f64,
+    /// 2 × route propagation.
+    base_rtt: f64,
+    /// Granted rate at the current network state, bytes/s.
+    rate: f64,
+    epoch_dt: f64,
+    active: bool,
+    /// Tail-drop seen since the last epoch: halve at resume.
+    dropped: bool,
+    paused_until: f64,
+}
+
+struct Runner<'a> {
+    net: &'a PacketNet,
+    trace: Option<&'a mut Trace>,
+    events: BinaryHeap<Ev>,
+    seq: u64,
+    now: f64,
+    gen: u64,
+    deps_left: Vec<usize>,
+    dependents: Vec<Vec<TaskId>>,
+    finish: Vec<f64>,
+    node_queue: Vec<VecDeque<TaskId>>,
+    node_busy: Vec<bool>,
+    flows: Vec<Option<FlowState>>,
+    active: Vec<TaskId>,
+    queue_bytes: Vec<f64>,
+    dropped_bytes: Vec<f64>,
+    last_sampled: Vec<f64>,
+}
+
+impl<'a> Runner<'a> {
+    fn new(net: &'a PacketNet, trace: Option<&'a mut Trace>) -> Runner<'a> {
+        let n = net.tasks.len();
+        let mut deps_left = vec![0usize; n];
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (id, t) in net.tasks.iter().enumerate() {
+            deps_left[id] = t.deps.len();
+            for &d in &t.deps {
+                assert!(d < id, "deps must precede their task");
+                dependents[d].push(id);
+            }
+        }
+        let mut trace = trace;
+        if let Some(tr) = trace.as_deref_mut() {
+            tr.queues = net.links.iter().map(|l| l.name.clone()).collect();
+        }
+        Runner {
+            net,
+            trace,
+            events: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            gen: 0,
+            deps_left,
+            dependents,
+            finish: vec![0.0; n],
+            node_queue: net.nodes.iter().map(|_| VecDeque::new()).collect(),
+            node_busy: vec![false; net.nodes.len()],
+            flows: vec![None; n],
+            active: Vec::new(),
+            queue_bytes: vec![0.0; net.links.len()],
+            dropped_bytes: vec![0.0; net.links.len()],
+            last_sampled: vec![-1.0; net.links.len()],
+        }
+    }
+
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.events.push(Ev { t, seq: self.seq, kind });
+    }
+
+    fn run(mut self) -> NetRun {
+        let roots: Vec<TaskId> = (0..self.net.tasks.len())
+            .filter(|&id| self.deps_left[id] == 0)
+            .collect();
+        let mut touched = false;
+        for id in roots {
+            self.start(id);
+            touched = true;
+        }
+        if touched {
+            self.recompute();
+        }
+        while let Some(ev) = self.events.pop() {
+            debug_assert!(ev.t >= self.now - 1e-12);
+            self.advance(ev.t);
+            match ev.kind {
+                EvKind::WorkDone(id) => {
+                    let TaskKind::Work { node, .. } = self.net.tasks[id].kind else {
+                        unreachable!()
+                    };
+                    self.node_busy[node] = false;
+                    self.complete(id);
+                    if let Some(&next) = self.node_queue[node].front() {
+                        self.node_queue[node].pop_front();
+                        self.begin_work(next);
+                    }
+                    self.recompute();
+                }
+                EvKind::FlowDone(id) => {
+                    self.complete(id);
+                    self.recompute();
+                }
+                EvKind::Epoch(id) => {
+                    self.epoch(id);
+                    self.recompute();
+                }
+                EvKind::Resume(id) => {
+                    if let Some(f) = self.flows[id].as_mut() {
+                        if f.active && f.dropped && f.paused_until <= self.now + 1e-18 {
+                            f.dropped = false;
+                            f.window =
+                                (f.window * self.net.params.drop_backoff).max(self.net.params.mtu.raw());
+                        }
+                    }
+                    self.recompute();
+                }
+                EvKind::Recheck(gen) => {
+                    if gen != self.gen {
+                        continue;
+                    }
+                    self.finish_served_flows();
+                    self.recompute();
+                }
+            }
+        }
+        let makespan = self.finish.iter().copied().fold(0.0, f64::max);
+        NetRun {
+            makespan: Seconds(makespan),
+            finish: self.finish.iter().map(|&t| Seconds(t)).collect(),
+        }
+    }
+
+    /// Advance fluid flow progress to `t`.
+    fn advance(&mut self, t: f64) {
+        let dt = t - self.now;
+        if dt > 0.0 {
+            for &id in &self.active {
+                let f = self.flows[id].as_mut().expect("active flows have state");
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+        }
+        self.now = t;
+    }
+
+    /// Dependencies satisfied: enqueue work / activate the flow.
+    fn start(&mut self, id: TaskId) {
+        match &self.net.tasks[id].kind {
+            TaskKind::Work { node, .. } => {
+                let node = *node;
+                if self.node_busy[node] {
+                    self.node_queue[node].push_back(id);
+                } else {
+                    self.begin_work(id);
+                }
+            }
+            TaskKind::Flow { route, bytes, debt } => {
+                let p = &self.net.params;
+                let base_rtt: f64 =
+                    2.0 * route.iter().map(|&l| self.net.links[l].prop.raw()).sum::<f64>();
+                let bottleneck_bw = route
+                    .iter()
+                    .map(|&l| self.net.links[l].bandwidth)
+                    .fold(f64::INFINITY, f64::min);
+                // Window cap = bottleneck BDP + ECN headroom: an
+                // uncontended flow parks exactly the threshold in its
+                // queue and is never marked (strict `>` below).
+                let wcap = (bottleneck_bw * base_rtt + p.ecn_pkts * p.mtu.raw()).max(p.mtu.raw());
+                let epoch_dt = (bytes.raw() / bottleneck_bw * p.epoch_frac).max(base_rtt);
+                let f = FlowState {
+                    route: route.clone(),
+                    remaining: bytes.raw().max(0.0),
+                    debt: debt.raw(),
+                    window: wcap,
+                    wcap,
+                    base_rtt,
+                    rate: 0.0,
+                    epoch_dt,
+                    active: true,
+                    dropped: false,
+                    paused_until: 0.0,
+                };
+                // Zero-latency fabrics have no meaningful BDP: the
+                // window machinery (epochs, queues) is disabled and the
+                // flow degenerates to fluid fair share.
+                let windowed = base_rtt > 0.0 && epoch_dt > 0.0;
+                self.flows[id] = Some(f);
+                self.active.push(id);
+                if windowed {
+                    let t = self.now + self.flows[id].as_ref().unwrap().epoch_dt;
+                    self.push(t, EvKind::Epoch(id));
+                }
+            }
+        }
+    }
+
+    fn begin_work(&mut self, id: TaskId) {
+        let TaskKind::Work { node, dur } = &self.net.tasks[id].kind else {
+            unreachable!("begin_work on a flow")
+        };
+        self.node_busy[*node] = true;
+        self.push(self.now + dur.raw(), EvKind::WorkDone(id));
+    }
+
+    /// Task done: record finish, release dependents.
+    fn complete(&mut self, id: TaskId) {
+        self.finish[id] = self.now;
+        let deps: Vec<TaskId> = self.dependents[id].clone();
+        for d in deps {
+            self.deps_left[d] -= 1;
+            if self.deps_left[d] == 0 {
+                self.start(d);
+            }
+        }
+    }
+
+    /// Deactivate flows whose bytes are fully served; their task
+    /// completes `debt` later.
+    fn finish_served_flows(&mut self) {
+        let done: Vec<TaskId> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|&id| self.flows[id].as_ref().unwrap().remaining <= 1e-6)
+            .collect();
+        if done.is_empty() {
+            return;
+        }
+        self.active.retain(|id| !done.contains(id));
+        for id in done {
+            let f = self.flows[id].as_mut().unwrap();
+            f.active = false;
+            f.remaining = 0.0;
+            let t = self.now + f.debt;
+            self.push(t, EvKind::FlowDone(id));
+        }
+    }
+
+    /// Window-update epoch: back off when the route queued past the ECN
+    /// threshold since the last check, grow additively otherwise.
+    fn epoch(&mut self, id: TaskId) {
+        let p = self.net.params.clone();
+        let ecn = p.ecn_pkts * p.mtu.raw();
+        let Some(f) = self.flows[id].as_mut() else { return };
+        if !f.active {
+            return;
+        }
+        let paused = f.paused_until > self.now + 1e-18;
+        if !paused && !f.dropped {
+            let marked = f.route.iter().any(|&l| self.queue_bytes[l] > ecn + 1e-9);
+            f.window = if marked {
+                (f.window * p.mark_backoff).max(p.mtu.raw())
+            } else {
+                (f.window + p.mtu.raw()).min(f.wcap)
+            };
+        }
+        let t = self.now + f.epoch_dt;
+        self.push(t, EvKind::Epoch(id));
+    }
+
+    /// Recompute granted rates, algebraic queue depths, and drops from
+    /// the current active-flow set; then schedule the next estimate.
+    fn recompute(&mut self) {
+        self.gen += 1;
+        let p = self.net.params.clone();
+        let cap = p.queue_pkts * p.mtu.raw();
+
+        // Per-link contender counts (paused flows consume nothing).
+        let mut n_on = vec![0usize; self.net.links.len()];
+        for &id in &self.active {
+            let f = self.flows[id].as_ref().unwrap();
+            if f.paused_until <= self.now + 1e-18 {
+                for &l in &f.route {
+                    n_on[l] += 1;
+                }
+            }
+        }
+        // Granted rate: equal bottleneck share, capped by window/RTT.
+        for q in self.queue_bytes.iter_mut() {
+            *q = 0.0;
+        }
+        let mut bottleneck = vec![0usize; self.net.tasks.len()];
+        for &id in &self.active {
+            let f = self.flows[id].as_mut().unwrap();
+            if f.paused_until > self.now + 1e-18 {
+                f.rate = 0.0;
+                continue;
+            }
+            let mut share = f64::INFINITY;
+            let mut bneck = f.route[0];
+            for &l in &f.route {
+                let s = self.net.links[l].bandwidth / n_on[l].max(1) as f64;
+                if s < share {
+                    share = s;
+                    bneck = l;
+                }
+            }
+            let win_rate = if f.base_rtt > 0.0 { f.window / f.base_rtt } else { f64::INFINITY };
+            f.rate = share.min(win_rate);
+            bottleneck[id] = bneck;
+            if f.base_rtt > 0.0 {
+                // Self-clocked excess parks in the bottleneck queue.
+                let excess = (f.window - f.rate * f.base_rtt).max(0.0);
+                self.queue_bytes[bneck] += excess.min(f.remaining.max(0.0) + p.mtu.raw());
+            }
+        }
+        // DropTail: overflow is charged back to the contributing flows
+        // as retransmission volume + a timeout pause.
+        let mut any_drop = false;
+        for l in 0..self.net.links.len() {
+            let over = self.queue_bytes[l] - cap;
+            if over <= 1e-9 {
+                continue;
+            }
+            let contributors: Vec<TaskId> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    let f = self.flows[id].as_ref().unwrap();
+                    f.paused_until <= self.now + 1e-18
+                        && f.base_rtt > 0.0
+                        && bottleneck[id] == l
+                        && f.window > f.rate * f.base_rtt
+                })
+                .collect();
+            let total: f64 = contributors
+                .iter()
+                .map(|&id| {
+                    let f = self.flows[id].as_ref().unwrap();
+                    f.window - f.rate * f.base_rtt
+                })
+                .sum();
+            if total <= 0.0 {
+                continue;
+            }
+            any_drop = true;
+            self.dropped_bytes[l] += over;
+            for &id in &contributors {
+                let f = self.flows[id].as_mut().unwrap();
+                let excess = f.window - f.rate * f.base_rtt;
+                let share = over * excess / total;
+                f.remaining += share; // resend what the queue dropped
+                f.window = (f.window - share).max(p.mtu.raw());
+                f.dropped = true;
+                f.paused_until = self.now + f.epoch_dt;
+                let t = f.paused_until;
+                self.push(t, EvKind::Resume(id));
+            }
+            self.queue_bytes[l] = cap;
+        }
+        if any_drop {
+            // Paused flows freed capacity: re-grant once (no cascaded
+            // drop pass — the next event re-evaluates).
+            let mut n_on = vec![0usize; self.net.links.len()];
+            for &id in &self.active {
+                let f = self.flows[id].as_ref().unwrap();
+                if f.paused_until <= self.now + 1e-18 {
+                    for &l in &f.route {
+                        n_on[l] += 1;
+                    }
+                }
+            }
+            for &id in &self.active {
+                let f = self.flows[id].as_mut().unwrap();
+                if f.paused_until > self.now + 1e-18 {
+                    f.rate = 0.0;
+                    continue;
+                }
+                let share = f
+                    .route
+                    .iter()
+                    .map(|&l| self.net.links[l].bandwidth / n_on[l].max(1) as f64)
+                    .fold(f64::INFINITY, f64::min);
+                let win_rate =
+                    if f.base_rtt > 0.0 { f.window / f.base_rtt } else { f64::INFINITY };
+                f.rate = share.min(win_rate);
+            }
+        }
+        self.sample();
+        // Next network event: earliest flow completion or pause end.
+        let mut dt = f64::INFINITY;
+        for &id in &self.active {
+            let f = self.flows[id].as_ref().unwrap();
+            if f.paused_until > self.now + 1e-18 {
+                dt = dt.min(f.paused_until - self.now);
+            } else if f.rate > 0.0 {
+                dt = dt.min(f.remaining / f.rate);
+            }
+        }
+        if dt.is_finite() {
+            let gen = self.gen;
+            self.push(self.now + dt.max(0.0), EvKind::Recheck(gen));
+        }
+    }
+
+    fn sample(&mut self) {
+        let mtu = self.net.params.mtu.raw();
+        let Some(tr) = self.trace.as_deref_mut() else { return };
+        for l in 0..self.queue_bytes.len() {
+            let pkts = self.queue_bytes[l] / mtu;
+            if (pkts - self.last_sampled[l]).abs() > 1e-6 {
+                tr.push(self.now, l, pkts, self.dropped_bytes[l] / mtu);
+                self.last_sampled[l] = pkts;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn params() -> NetParams {
+        NetParams::default()
+    }
+
+    /// An uncontended flow is pure serialization + propagation — the
+    /// parity anchor against the event engine's `bytes/β + α`.
+    #[test]
+    fn solo_flow_is_serialization_plus_propagation() {
+        prop::check("solo flow == bytes/bw + prop", 48, |g| {
+            let bw = g.f64_range(1e9, 1e12);
+            let prop_s = g.f64_range(1e-9, 1e-5);
+            let bytes = g.f64_range(1e4, 1e9);
+            let mut net = PacketNet::new(params());
+            let l = net.link("l", bw, Seconds(prop_s));
+            net.flow(&[l], Bytes(bytes), &[]);
+            let run = net.run(None);
+            prop::assert_close(
+                run.makespan.raw(),
+                bytes / bw + prop_s,
+                1e-6,
+                format!("bw={bw:e} prop={prop_s:e} bytes={bytes:e}"),
+            )
+        });
+    }
+
+    /// Two flows share a link fairly and work-conserve: the pair
+    /// finishes in ~2× one stream (no drops at default queue depth).
+    #[test]
+    fn two_flows_share_fairly_without_drops() {
+        let bw = 64.0e9;
+        let prop_s = 250.0e-9;
+        let bytes = 256.0 * 1024.0 * 1024.0;
+        let mut net = PacketNet::new(params());
+        let l = net.link("l", bw, Seconds(prop_s));
+        net.flow(&[l], Bytes(bytes), &[]);
+        net.flow(&[l], Bytes(bytes), &[]);
+        let run = net.run(None);
+        let ideal = 2.0 * bytes / bw + prop_s;
+        assert!(
+            (run.makespan.raw() - ideal).abs() / ideal < 0.02,
+            "{} vs ideal {ideal}",
+            run.makespan
+        );
+    }
+
+    /// Work nodes are FIFO + dependency ordered, matching the event
+    /// engine's resource semantics.
+    #[test]
+    fn work_chain_serializes() {
+        let mut net = PacketNet::new(params());
+        let n = net.node("stage");
+        let a = net.work(n, Seconds::ms(2.0), &[]);
+        let b = net.work(n, Seconds::ms(3.0), &[a]);
+        let _c = net.work(n, Seconds::ms(5.0), &[b]);
+        let run = net.run(None);
+        assert!((run.makespan.raw() - 0.010).abs() < 1e-12);
+    }
+
+    /// A flow between two works composes serially with full propagation.
+    #[test]
+    fn flow_gates_downstream_work() {
+        let bw = 1.0e9;
+        let mut net = PacketNet::new(params());
+        let n = net.node("stage");
+        let l = net.link("fabric", bw, Seconds::us(1.0));
+        let a = net.work(n, Seconds::ms(1.0), &[]);
+        let f = net.flow(&[l], Bytes(1.0e6), &[a]); // 1 ms stream
+        let _b = net.work(n, Seconds::ms(1.0), &[f]);
+        let run = net.run(None);
+        let want = 1.0e-3 + (1.0e6 / bw + 1.0e-6) + 1.0e-3;
+        assert!((run.makespan.raw() - want).abs() / want < 1e-3, "{run:?}");
+    }
+
+    /// Incast: N flows into one link with a shallow queue drop and
+    /// retransmit — strictly slower than fluid fair sharing; deeper
+    /// queues and earlier marking both relieve it monotonically.
+    #[test]
+    fn incast_exceeds_fair_share_and_knobs_are_monotone() {
+        let bw = 32.0e9;
+        let prop_s = 300.0e-9;
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let n_flows = 8;
+        let time_with = |p: NetParams| {
+            let mut net = PacketNet::new(p);
+            let core = net.link("core", bw, Seconds(prop_s));
+            for _ in 0..n_flows {
+                net.flow(&[core], Bytes(bytes), &[]);
+            }
+            net.run(None).makespan.raw()
+        };
+        let fair = n_flows as f64 * bytes / bw + prop_s;
+        let shallow = time_with(NetParams { queue_pkts: 32.0, ecn_pkts: 8.0, ..params() });
+        assert!(shallow > fair * (1.0 + 1e-6), "incast {shallow} vs fair {fair}");
+        let deep = time_with(NetParams { queue_pkts: 4096.0, ecn_pkts: 8.0, ..params() });
+        assert!(deep < shallow, "deeper queue must relieve incast: {deep} vs {shallow}");
+        let late_ecn = time_with(NetParams { queue_pkts: 32.0, ecn_pkts: 28.0, ..params() });
+        assert!(
+            late_ecn >= shallow,
+            "later marking cannot beat early marking under incast: {late_ecn} vs {shallow}"
+        );
+    }
+
+    /// The trace records queue buildup and drops on the congested link.
+    #[test]
+    fn trace_records_queue_occupancy() {
+        let mut net =
+            PacketNet::new(NetParams { queue_pkts: 32.0, ecn_pkts: 8.0, ..params() });
+        let core = net.link("core", 32.0e9, Seconds::ns(300.0));
+        for _ in 0..8 {
+            net.flow(&[core], Bytes::mib(64.0), &[]);
+        }
+        let mut trace = Trace::default();
+        net.run(Some(&mut trace));
+        assert_eq!(trace.queues, vec!["core".to_string()]);
+        assert!(!trace.samples.is_empty());
+        assert!(trace.samples.iter().any(|&(_, _, pkts, _)| pkts > 0.0), "queue built up");
+        assert!(trace.samples.iter().any(|&(_, _, _, d)| d > 0.0), "drops recorded");
+        let jsonl = trace.to_jsonl();
+        let first = jsonl.lines().next().unwrap();
+        assert!(first.starts_with("{\"t\":") && first.contains("\"queue\":\"core\""), "{first}");
+        assert_eq!(jsonl.lines().count(), trace.samples.len());
+    }
+
+    /// Determinism: two identical runs produce bitwise-equal makespans.
+    #[test]
+    fn runs_are_deterministic() {
+        let build = || {
+            let mut net = PacketNet::new(params());
+            let n0 = net.node("s0");
+            let n1 = net.node("s1");
+            let l = net.link("fabric", 2.0e9, Seconds::us(5.0));
+            let mut prev: Vec<TaskId> = Vec::new();
+            for i in 0..16 {
+                let w = net.work(n0, Seconds::us(50.0 + i as f64), &prev);
+                let f = net.flow(&[l], Bytes(2.0e5), &[w]);
+                let w2 = net.work(n1, Seconds::us(80.0), &[f]);
+                prev = vec![w2];
+            }
+            net.run(None).makespan.raw().to_bits()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -12,6 +12,7 @@
 
 use crate::config::presets::model_preset;
 use crate::config::{DramKind, HardwareConfig, LinkConfig, PackageKind};
+use crate::net::{packet_time_concurrent, NetParams};
 use crate::nop::analytic::Method;
 use crate::nop::collective::{event_time_concurrent, ring_step_schedule, CollectiveKind};
 use crate::scenario::{self, Scenario};
@@ -25,7 +26,8 @@ pub fn report() -> String {
 
     // ── 1. engine parity on an uncongested mesh ──
     // One sweep per section: methods × engines, all points in parallel,
-    // three engines per method sharing one memoized plan.
+    // all engines per method sharing one memoized plan.
+    let n_engines = EngineKind::all().len();
     let m = model_preset("tinyllama-1.1b").expect("preset");
     let hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
     let parity_points: Vec<Scenario> = Method::all()
@@ -38,20 +40,27 @@ pub fn report() -> String {
         })
         .collect();
     let parity = scenario::run_sim(&parity_points);
-    let mut t = Table::new(&["method", "analytic", "event", "rel err", "event-prefetch"])
-        .with_title("Engine parity — tinyllama-1.1b @ 4x4, uncongested (event must match ≤1%)")
-        .label_first();
-    for (method, chunk) in Method::all().into_iter().zip(parity.chunks(3)) {
-        let [an, ev, pre] = chunk else {
-            unreachable!("three engines per method");
-        };
+    let mut t = Table::new(&[
+        "method",
+        "analytic",
+        "event",
+        "rel err",
+        "event-prefetch",
+        "packet",
+    ])
+    .with_title("Engine parity — tinyllama-1.1b @ 4x4, uncongested (event must match ≤1%)")
+    .label_first();
+    for (method, chunk) in Method::all().into_iter().zip(parity.chunks(n_engines)) {
+        // EngineKind::all() order: analytic, event, event-prefetch, packet.
+        let (an, ev, pre, pkt) = (&chunk[0], &chunk[1], &chunk[2], &chunk[3]);
         let rel = (ev.latency.raw() - an.latency.raw()).abs() / an.latency.raw();
         t.row(crate::table_row![
             method.name(),
             an.latency,
             ev.latency,
             format!("{:.4}%", 100.0 * rel),
-            pre.latency
+            pre.latency,
+            pkt.latency
         ]);
     }
     out.push_str(&t.render());
@@ -73,7 +82,7 @@ pub fn report() -> String {
     let mut t = Table::new(&["workload", "engine", "latency", "exposed DRAM", "vs analytic"])
         .with_title("Overlap slack — cross-group DRAM prefetch (DDR4 to stress the channels)")
         .label_first();
-    for (&(name, dies), chunk) in slack_workloads.iter().zip(slack.chunks(3)) {
+    for (&(name, dies), chunk) in slack_workloads.iter().zip(slack.chunks(n_engines)) {
         let an = &chunk[0]; // EngineKind::all()[0] is Analytic
         for (engine, r) in EngineKind::all().into_iter().zip(chunk) {
             t.row(crate::table_row![
@@ -114,6 +123,22 @@ pub fn report() -> String {
         "event, shared fabric (contended)",
         shared,
         format!("{:.2}x", shared / ideal)
+    ]);
+    // The packet backend replays the same schedules over DropTail queues
+    // with windowed transport — on this shape it tracks the fair-share
+    // event rows; it diverges where queues overflow (see `incast` tests).
+    let np = NetParams::default();
+    let pkt_shared = packet_time_concurrent(&[&ag, &rs], &link, &np);
+    let pkt_disjoint = packet_time_concurrent(&[&ag, &rs.clone().offset_links(64)], &link, &np);
+    t.row(crate::table_row![
+        "packet, disjoint fabric",
+        pkt_disjoint,
+        format!("{:.2}x", pkt_disjoint / ideal)
+    ]);
+    t.row(crate::table_row![
+        "packet, shared fabric (contended)",
+        pkt_shared,
+        format!("{:.2}x", pkt_shared / ideal)
     ]);
     out.push_str(&t.render());
     out.push('\n');
@@ -175,6 +200,7 @@ mod tests {
         assert!(r.contains("Engine parity"));
         assert!(r.contains("Overlap slack"));
         assert!(r.contains("Link contention"));
+        assert!(r.contains("packet, shared fabric"));
         assert!(r.contains("Skewed meshes"));
         assert!(r.contains("Fig. 8 grid under the event engine"));
     }

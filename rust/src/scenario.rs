@@ -1073,7 +1073,8 @@ pub mod axis {
             .collect()
     }
 
-    /// Timing backends; a lone `all` expands to all three.
+    /// Timing backends; a lone `all` expands to every registered backend
+    /// (analytic, event, event-prefetch, packet).
     pub fn engines(items: &[&str]) -> crate::Result<Vec<EngineKind>> {
         if items.len() == 1 && items[0].eq_ignore_ascii_case("all") {
             return Ok(EngineKind::all().to_vec());
@@ -1158,7 +1159,8 @@ pub mod axis {
                     match crate::util::cli::suggest(x, ["substrate", "optical", "fat-tree"]) {
                         Some(s) => anyhow!("bad inter-bw '{x}' (did you mean '{s}'?)"),
                         None => anyhow!(
-                            "bad inter-bw '{x}' (substrate | optical | fat-tree | <GB/s>)"
+                            "bad inter-bw '{x}' \
+                             (substrate | optical | fat-tree | fat-tree:<GB/s> | <GB/s>)"
                         ),
                     }
                 })
@@ -1653,9 +1655,9 @@ mod tests {
             .collect();
         let cache = PlanCache::new();
         let evals = run_on(&cache, &pts, 1).unwrap();
-        assert_eq!(evals.len(), 3);
-        assert_eq!(cache.len(), 1, "three engines share one plan");
-        // The worker's EvalScratch keeps the last plan, so the two
+        assert_eq!(evals.len(), EngineKind::all().len());
+        assert_eq!(cache.len(), 1, "all engines share one plan");
+        // The worker's EvalScratch keeps the last plan, so the
         // engine-only neighbors never even probe the shared cache.
         assert_eq!(cache.misses(), 1);
         assert_eq!(cache.hits(), 0, "engine neighbors reuse the scratch plan");
@@ -1695,6 +1697,8 @@ mod tests {
         assert!(e.contains("did you mean 'hecaton'"), "{e}");
         let e = format!("{:#}", axis::engines(&["evnt"]).unwrap_err());
         assert!(e.contains("did you mean 'event'"), "{e}");
+        let e = format!("{:#}", axis::engines(&["pakcet"]).unwrap_err());
+        assert!(e.contains("did you mean 'packet'"), "{e}");
         let e = format!("{:#}", axis::drams(&["ddr5-640"]).unwrap_err());
         assert!(e.contains("did you mean 'ddr5-6400'"), "{e}");
         let e = format!("{:#}", axis::drams(&["sram"]).unwrap_err());
@@ -1709,6 +1713,10 @@ mod tests {
             axis::package_kinds(&["ADVANCED"]).unwrap(),
             vec![PackageKind::Advanced]
         );
+        // 'all' tracks the engine registry — the packet backend rides in.
+        let all = axis::engines(&["all"]).unwrap();
+        assert_eq!(all, EngineKind::all().to_vec());
+        assert!(all.contains(&EngineKind::Packet));
     }
 
     /// Tentpole: an enforced SRAM limit turns an over-peak schedule into

@@ -40,6 +40,15 @@
 //! safety margin keeps the bound admissible with headroom while staying
 //! sharp enough to prune anything more than ~2% off the incumbent.
 //!
+//! The packet backend ([`crate::sim::system::EngineKind::Packet`]) stays
+//! under these bounds for free: on-package it runs the event schedule
+//! bitwise, and over the shared fabric its DropTail queues, ECN backoff
+//! and retransmissions only ever *add* latency on top of the fair-share
+//! serialization the event backend already prices — congestion pushes
+//! the true cost up, never below the floors. The admissibility property
+//! tests iterate [`EngineKind::all`](crate::sim::system::EngineKind::all)
+//! and so cover it automatically.
+//!
 //! The SRAM floor ([`sram_floor`]) is the feasibility analog: the
 //! leanest schedule any planner can emit still holds one block's per-die
 //! weight shard resident while computing it

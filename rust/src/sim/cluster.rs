@@ -33,6 +33,7 @@ use crate::config::cluster::{ClusterConfig, FabricTopo};
 use crate::config::ModelConfig;
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::memory::sram::OccupancyReport;
+use crate::net::{allreduce_packet, onef1b_packet_in, NetParams, Trace};
 use crate::nop::analytic::Method;
 use crate::sched::checkpoint::Checkpoint;
 use crate::parallel::hybrid::HybridSpec;
@@ -257,6 +258,86 @@ impl ClusterPlan {
         )
     }
 
+    /// Stage `s`'s all-reduce as a packet-network flow spec: the `dp ×`
+    /// aggregate ring volume in raw bytes, with the topology-lowered
+    /// serial hop latency carried as completion debt (the packet twin of
+    /// [`ClusterPlan::allreduce_wire`]'s byte folding).
+    fn allreduce_flow(&self, s: usize) -> (Bytes, Seconds) {
+        let dp = self.cluster.dp;
+        let vol = self.spec.allreduce_bytes(s, dp);
+        if vol.raw() <= 0.0 {
+            return (Bytes::ZERO, Seconds::ZERO);
+        }
+        (vol * dp as f64, self.cluster.inter.hop_latency() * self.ar_hops())
+    }
+
+    /// The stage-0 gradient all-reduce priced on the packet network:
+    /// `dp` concurrent per-replica flows over the fabric graph (incast
+    /// on a fat-tree core) instead of one fluid fair-shared stream.
+    fn allreduce_packet_time(&self, s: usize, trace: Option<&mut Trace>) -> Seconds {
+        let dp = self.cluster.dp;
+        let vol = self.spec.allreduce_bytes(s, dp);
+        if vol.raw() <= 0.0 || dp <= 1 {
+            return Seconds::ZERO;
+        }
+        allreduce_packet(
+            vol,
+            dp,
+            self.cluster.inter.hop_latency() * self.ar_hops(),
+            &self.cluster.inter,
+            &NetParams::default(),
+            trace,
+        )
+    }
+
+    /// The 1F1B schedule on the packet network (`pp > 1`), mirroring the
+    /// event DAG's stage slots and tail streams.
+    fn packet_pipeline(
+        &self,
+        stage_latency: Seconds,
+        trace: Option<&mut Trace>,
+    ) -> Seconds {
+        let pp = self.cluster.pp;
+        let m = self.microbatches;
+        let (fa, ba) = self.stage_plans[0].analytic_pass_latency();
+        let ratio_f = if (fa + ba).raw() > 0.0 {
+            fa.raw() / (fa + ba).raw()
+        } else {
+            0.5
+        };
+        let slot = PipelineStage {
+            fwd: stage_latency * ratio_f / m as f64,
+            bwd: stage_latency * (1.0 - ratio_f) / m as f64,
+        };
+        let stages_vec = vec![slot; pp];
+        let tails: Vec<(Bytes, Seconds)> = (0..pp).map(|s| self.allreduce_flow(s)).collect();
+        onef1b_packet_in(
+            &stages_vec,
+            m,
+            self.act_mb_bytes * self.cluster.dp as f64,
+            &tails,
+            &self.cluster.inter,
+            &NetParams::default(),
+            trace,
+        )
+    }
+
+    /// Re-run the packet-engine fabric paths with queue tracing on: the
+    /// 1F1B boundary + gradient flows when `pp > 1`, the gradient incast
+    /// alone when `pp == 1 < dp`. Returns the per-queue occupancy trace
+    /// the `--trace` CLI export serializes (empty on a degenerate
+    /// cluster — there is no shared fabric to trace).
+    pub fn packet_trace(&self) -> Trace {
+        let mut trace = Trace::default();
+        if self.cluster.pp > 1 {
+            let stage = self.stage_plans[0].time(EngineKind::Packet);
+            self.packet_pipeline(stage.latency, Some(&mut trace));
+        } else if self.cluster.dp > 1 {
+            self.allreduce_packet_time(0, Some(&mut trace));
+        }
+        trace
+    }
+
     /// Retarget the priced plan to a different inter-package fabric.
     ///
     /// Planning is fabric-blind: stage sub-plans, microbatch depth,
@@ -325,7 +406,11 @@ impl ClusterPlan {
             let stages_vec = vec![slot; pp];
             let hop = wire_mb.over_bandwidth(fabric.bandwidth) + fabric.latency;
             let p2p = hop * (2 * (pp - 1)) as f64;
-            let lat = if engine.is_event() {
+            let lat = if engine == EngineKind::Packet {
+                // Boundary crossings and gradient streams as flows over
+                // the fabric's link graph with real queues.
+                self.packet_pipeline(stage.latency, None)
+            } else if engine.is_event() {
                 // DP gradient rings ride the same fair-shared fabric.
                 let tails: Vec<Bytes> = (0..pp).map(|s| self.allreduce_wire(s)).collect();
                 onef1b_event_in(arena, &stages_vec, m, wire_mb, &tails, &fabric)
@@ -339,8 +424,13 @@ impl ClusterPlan {
         // The event 1F1B DAG already carries the gradient streams; the
         // analytic path (and the DAG-less pp == 1 case) charges stage 0's
         // ring serially — it drains last, and the other stages' rings
-        // overlap its remaining backwards.
-        let ar = self.allreduce_time(0);
+        // overlap its remaining backwards. The packet backend prices the
+        // pp == 1 ring as dp concurrent flows (incast on a fat-tree core).
+        let ar = if engine == EngineKind::Packet && pp == 1 {
+            self.allreduce_packet_time(0, None)
+        } else {
+            self.allreduce_time(0)
+        };
         let latency = if pp > 1 && engine.is_event() {
             pipeline_latency
         } else if dp > 1 {

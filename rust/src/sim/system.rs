@@ -56,6 +56,13 @@ pub enum EngineKind {
     /// Discrete-event execution with cross-group DRAM prefetch
     /// (double-buffered group boundaries).
     EventPrefetch,
+    /// Packet/flow-level network backend ([`crate::net`]): the on-package
+    /// chain runs the event schedule (no shared fabric on-package — the
+    /// NoP schedule is folded at plan time), while every shared-fabric
+    /// path (1F1B boundary crossings, DP gradient all-reduce, lowered
+    /// collective replays) runs over DropTail queues with DCTCP-style
+    /// windowed transport instead of fluid fair sharing.
+    Packet,
 }
 
 impl EngineKind {
@@ -64,6 +71,7 @@ impl EngineKind {
             EngineKind::Analytic => "analytic",
             EngineKind::Event => "event",
             EngineKind::EventPrefetch => "event-prefetch",
+            EngineKind::Packet => "packet",
         }
     }
 
@@ -72,19 +80,23 @@ impl EngineKind {
             "analytic" | "closed-form" | "a" => Some(EngineKind::Analytic),
             "event" | "e" => Some(EngineKind::Event),
             "event-prefetch" | "prefetch" | "ep" => Some(EngineKind::EventPrefetch),
+            "packet" | "pkt" | "p" => Some(EngineKind::Packet),
             _ => None,
         }
     }
 
-    pub fn all() -> [EngineKind; 3] {
+    pub fn all() -> [EngineKind; 4] {
         [
             EngineKind::Analytic,
             EngineKind::Event,
             EngineKind::EventPrefetch,
+            EngineKind::Packet,
         ]
     }
 
-    /// Whether this backend runs on the discrete-event engine.
+    /// Whether this backend runs the discrete-event group chain (the
+    /// packet backend does too — its queueing model replaces only the
+    /// shared-fabric paths; see [`EngineKind::Packet`]).
     pub fn is_event(self) -> bool {
         !matches!(self, EngineKind::Analytic)
     }
@@ -620,7 +632,14 @@ impl SimPlan {
                     breakdown.dram_exposed += ov.exposed_dram;
                 }
             }
-            EngineKind::Event | EngineKind::EventPrefetch => {
+            // On-package, the packet backend IS the event backend: the NoP
+            // schedule is folded into stage times at plan time and the DRAM
+            // pool is fluid, so there is no shared queue for the packet
+            // model to model — its fidelity lives in the shared-fabric
+            // paths ([`crate::net`]; cluster timing and collective
+            // replays). This also keeps the degenerate-cluster bitwise
+            // invariant and the search bounds' admissibility for free.
+            EngineKind::Event | EngineKind::EventPrefetch | EngineKind::Packet => {
                 let chain = overlap_chain_event_in(
                     arena,
                     &self.stages,

@@ -167,8 +167,9 @@ fn cluster_points_share_stage_plans_through_the_cache() {
         ..Default::default()
     };
     let (pts, _) = grid.points().unwrap();
-    // Valid shapes for 2 packages: (dp=1,pp=2) and (dp=2,pp=1) → 3 engines each.
-    assert_eq!(pts.len(), 6);
+    // Valid shapes for 2 packages: (dp=1,pp=2) and (dp=2,pp=1), times
+    // every engine backend.
+    assert_eq!(pts.len(), 2 * EngineKind::all().len());
     let cache = PlanCache::new();
     scenario::run_on(&cache, &pts, 1).unwrap();
     // Distinct stage sub-models: 11-layer/b1024 (pp=2) + 22-layer/b512 (dp=2).

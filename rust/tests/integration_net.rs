@@ -1,0 +1,214 @@
+//! Packet-engine integration tests — the acceptance surface of the
+//! `src/net/` subsystem:
+//!
+//! * **Uncongested parity** — the packet backend reproduces the event
+//!   engine within 2% on package-level lowered traffic phases (all four
+//!   TP methods' shapes × mesh/torus NoP topologies) and on cluster
+//!   shapes over every fabric preset (point-to-point and fat-tree).
+//! * **Incast divergence** — a many-to-one gradient all-reduce on an
+//!   oversubscribed fat-tree is *strictly* slower under the packet
+//!   backend than the fair-share event price, and the divergence
+//!   responds monotonically to the queue-depth and ECN knobs.
+//! * **Trace export** — [`ClusterPlan::packet_trace`] produces JSONL the
+//!   CLI `--trace` flag ships verbatim.
+
+use hecaton::comm::{CommOp, Group, Topology};
+use hecaton::config::cluster::{ClusterConfig, InterKind, InterPkgLink};
+use hecaton::config::presets::model_preset;
+use hecaton::config::{DramKind, HardwareConfig, LinkConfig, PackageKind, TopologyKind};
+use hecaton::net::{allreduce_packet, phase_packet_time, NetParams};
+use hecaton::nop::analytic::Method;
+use hecaton::sim::cluster::ClusterPlan;
+use hecaton::sim::sweep::PlanCache;
+use hecaton::sim::system::{EngineKind, PlanOptions};
+use hecaton::util::{prop, Bytes};
+
+fn package_hw() -> HardwareConfig {
+    HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400)
+}
+
+/// ≤2% packet-vs-event parity on uncongested package-level collectives:
+/// one representative lowered shape per TP method, on both NoP
+/// topologies, across group sizes and volumes.
+#[test]
+fn packet_matches_event_on_uncongested_phases() {
+    let link = LinkConfig::for_package(PackageKind::Standard);
+    let np = NetParams::default();
+    prop::check("packet == event <= 2% on lowered phases", 48, |g| {
+        let topo = *g.pick(&[TopologyKind::Mesh2d, TopologyKind::Torus2d]);
+        let n = *g.pick(&[4usize, 8, 16]);
+        let vol = Bytes::mib(*g.pick(&[1.0f64, 16.0, 64.0]));
+        // One op per method's lowering shape: Hecaton's row/col ring,
+        // the flat (Megatron) ring, the 2D halved all-reduce, Optimus'
+        // recursive-doubling broadcast.
+        let op = match *g.pick(&[0usize, 1, 2, 3]) {
+            0 => CommOp::all_gather(Group::BypassRing { n }, vol),
+            1 => CommOp::all_reduce(Group::FlatRing { n }, vol),
+            2 => CommOp::all_reduce(Group::Grid { side: 4 }, vol),
+            _ => CommOp::broadcast(Group::Line { n }, vol),
+        };
+        let phase = topo.lower(op);
+        let ev = phase.event_time(&link);
+        let pkt = phase_packet_time(&phase, &link, &np);
+        prop::assert_close(
+            pkt.raw(),
+            ev.raw(),
+            2e-2,
+            format!("{:?} n={n} vol={vol} op={:?}", topo, op.kind),
+        )
+    });
+}
+
+/// ≤2% packet-vs-event parity on uncongested cluster shapes: dp/pp
+/// grids under every TP method over both fabric topologies (the
+/// point-to-point presets and the switched fat-tree).
+#[test]
+fn packet_matches_event_on_uncongested_clusters() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = package_hw();
+    prop::check("cluster packet == event <= 2% (uncongested)", 24, |g| {
+        let dp = *g.pick(&[1usize, 2, 4]);
+        let pp = *g.pick(&[1usize, 2]);
+        let method = *g.pick(&Method::all());
+        let kind = *g.pick(&[InterKind::Substrate, InterKind::Optical, InterKind::FatTree]);
+        let cluster = ClusterConfig::try_new(
+            hw.clone(),
+            dp * pp,
+            dp,
+            pp,
+            InterPkgLink::preset(kind),
+        )
+        .unwrap();
+        let cache = PlanCache::new();
+        let plan =
+            ClusterPlan::build(&m, &cluster, method, PlanOptions::default(), &cache).unwrap();
+        let e = plan.time(EngineKind::Event);
+        let p = plan.time(EngineKind::Packet);
+        prop::assert_close(
+            p.latency.raw(),
+            e.latency.raw(),
+            2e-2,
+            format!("dp={dp} pp={pp} {method:?} {kind:?}"),
+        )?;
+        prop::assert_prop(p.microbatches == e.microbatches, "schedule shape")?;
+        prop::assert_prop(
+            p.energy_total.raw().is_finite() && p.energy_total.raw() > 0.0,
+            "energy finite",
+        )
+    });
+}
+
+/// The degenerate cluster (and any pp=1/dp=1 package chain) is bitwise
+/// event under the packet engine — the on-package NoP is folded at plan
+/// time, so there is nothing for queues to price.
+#[test]
+fn packet_package_path_is_bitwise_event() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = package_hw();
+    for method in Method::all() {
+        let e = hecaton::sim::system::simulate_engine(&m, &hw, method, EngineKind::Event);
+        let p = hecaton::sim::system::simulate_engine(&m, &hw, method, EngineKind::Packet);
+        assert_eq!(
+            e.latency.raw().to_bits(),
+            p.latency.raw().to_bits(),
+            "{method:?}: on-package packet == event"
+        );
+    }
+}
+
+/// Incast: 8 replicas firing their gradient all-reduce into an
+/// oversubscribed fat-tree core. The fair-share event price cannot see
+/// the core queue overflowing; the packet backend must be *strictly*
+/// slower.
+#[test]
+fn fat_tree_incast_packet_strictly_exceeds_event() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let hw = package_hw();
+    let inter = InterPkgLink::parse("fat-tree:8").unwrap();
+    let cluster = ClusterConfig::try_new(hw, 8, 8, 1, inter).unwrap();
+    let cache = PlanCache::new();
+    let plan =
+        ClusterPlan::build(&m, &cluster, Method::Hecaton, PlanOptions::default(), &cache)
+            .unwrap();
+    let e = plan.time(EngineKind::Event);
+    let p = plan.time(EngineKind::Packet);
+    assert!(
+        p.latency > e.latency,
+        "incast must cost more under queues: packet {} vs event {}",
+        p.latency,
+        e.latency
+    );
+    // The divergence is the all-reduce term: stage compute is identical.
+    assert_eq!(
+        p.stage.latency.raw().to_bits(),
+        e.stage.latency.raw().to_bits(),
+        "stage timing is engine-shared"
+    );
+}
+
+/// The congestion knobs act the right way at cluster volumes: deeper
+/// queues absorb the incast burst (less retransmission), and a later ECN
+/// threshold delays backoff — both can only speed up the transfer, and
+/// the shallow/early baseline stays above the fluid fair share.
+#[test]
+fn incast_knobs_are_monotone_at_cluster_volumes() {
+    let inter = InterPkgLink::parse("fat-tree:8").unwrap();
+    let dp = 8usize;
+    let vol = Bytes::mib(64.0);
+    let hop_debt = inter.hop_latency() * 6.0; // 2·⌈log₂ 8⌉ switched hops
+    let shallow = NetParams { queue_pkts: 32.0, ecn_pkts: 8.0, ..NetParams::default() };
+    let deep = NetParams { queue_pkts: 4096.0, ecn_pkts: 8.0, ..NetParams::default() };
+    let late_ecn = NetParams { queue_pkts: 32.0, ecn_pkts: 28.0, ..NetParams::default() };
+    let t_shallow = allreduce_packet(vol, dp, hop_debt, &inter, &shallow, None);
+    let t_deep = allreduce_packet(vol, dp, hop_debt, &inter, &deep, None);
+    let t_late = allreduce_packet(vol, dp, hop_debt, &inter, &late_ecn, None);
+    assert!(t_deep <= t_shallow, "deeper queues can't hurt: {t_deep:?} vs {t_shallow:?}");
+    assert!(t_late <= t_shallow, "later ECN can't hurt: {t_late:?} vs {t_shallow:?}");
+    let fair = vol.raw() * dp as f64 / inter.bandwidth + hop_debt.raw();
+    assert!(
+        t_shallow.raw() > fair,
+        "incast above fluid fair share: {} vs {fair}",
+        t_shallow.raw()
+    );
+}
+
+/// The trace export the CLI ships: non-empty, structurally valid JSONL
+/// whose queue names point at the inter-package fabric.
+#[test]
+fn cluster_packet_trace_is_valid_jsonl() {
+    let m = model_preset("tinyllama-1.1b").unwrap();
+    let cluster = ClusterConfig::try_new(
+        package_hw(),
+        4,
+        2,
+        2,
+        InterPkgLink::preset(InterKind::Substrate),
+    )
+    .unwrap();
+    let plan = ClusterPlan::build(
+        &m,
+        &cluster,
+        Method::Hecaton,
+        PlanOptions::default(),
+        &PlanCache::new(),
+    )
+    .unwrap();
+    let trace = plan.packet_trace();
+    assert!(!trace.queues.is_empty(), "the fabric registers queues");
+    assert!(!trace.samples.is_empty(), "flows park bytes in queues");
+    let jsonl = trace.to_jsonl();
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        lines += 1;
+        assert!(line.starts_with("{\"t\":") && line.ends_with('}'), "{line}");
+        for key in ["\"queue\":\"", "\"pkts\":", "\"dropped\":"] {
+            assert!(line.contains(key), "{line} missing {key}");
+        }
+    }
+    assert_eq!(lines, trace.samples.len(), "one JSON object per sample");
+    assert!(
+        trace.queues.iter().any(|q| q.contains("fabric")),
+        "queues name the fabric links: {:?}",
+        trace.queues
+    );
+}
