@@ -1,0 +1,382 @@
+//! Pure invariant checks over the simulator's intermediate structures.
+//!
+//! Each function here takes an already-built IR fragment — a dependency
+//! table, a lowered traffic phase, a bound pair, an SRAM timeline, the
+//! loader schema — and returns human-readable violation messages. The
+//! functions are pure so they serve three callers identically: the
+//! `hecaton audit` driver ([`crate::audit`]), the `debug_assertions`
+//! hooks wired into the builders themselves, and the mutation-fixture
+//! tests below that prove each check actually fires.
+
+use crate::comm::TrafficPhase;
+use crate::memory::sram::SramTimeline;
+use crate::nop::CollectiveKind;
+use crate::search::bound::CostBound;
+
+/// Relative tolerance for float cross-checks. Every compared pair is
+/// produced by two evaluation orders of the same f64 arithmetic, so the
+/// honest disagreement is a few ulps; 1e-9 leaves five orders of
+/// magnitude of headroom while still catching any real modeling drift.
+pub const REL_TOL: f64 = 1e-9;
+
+/// `a ≈ b` under [`REL_TOL`], with an absolute floor of one unit so
+/// near-zero quantities (bytes, seconds) compare sanely.
+pub fn rel_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Check a task dependency table: `deps[id]` lists the tasks `id` waits
+/// on. Valid tables are exactly the DAGs the event engine can run —
+/// every dep exists, precedes its dependent (tasks are pushed in
+/// topological order), and no cycle closes. The cycle scan is an
+/// independent three-color DFS so a table that *also* breaks the
+/// precedence rule still gets its cycles named.
+pub fn dep_table_violations(deps: &[Vec<usize>]) -> Vec<String> {
+    let n = deps.len();
+    let mut out = Vec::new();
+    for (id, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            if d >= n {
+                out.push(format!("task {id} depends on task {d}, which does not exist"));
+            } else if d >= id {
+                out.push(format!("task {id} depends on task {d}, which does not precede it"));
+            }
+        }
+    }
+    // 0 = unvisited, 1 = on the current DFS path, 2 = finished.
+    let mut color = vec![0u8; n];
+    for start in 0..n {
+        if color[start] != 0 {
+            continue;
+        }
+        color[start] = 1;
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        while let Some(&(node, i)) = stack.last() {
+            let ds = &deps[node];
+            if i < ds.len() {
+                stack.last_mut().expect("non-empty stack").1 += 1;
+                let d = ds[i];
+                if d >= n {
+                    continue; // already reported above
+                }
+                match color[d] {
+                    0 => {
+                        color[d] = 1;
+                        stack.push((d, 0));
+                    }
+                    1 => out.push(format!("dependency cycle through tasks {node} and {d}")),
+                    _ => {}
+                }
+            } else {
+                color[node] = 2;
+                stack.pop();
+            }
+        }
+    }
+    out
+}
+
+/// Check byte conservation across a lowering: the wire bytes a lowered
+/// schedule actually moves (`scale × Σ per_link × |links|`) must equal
+/// the collective's closed-form total — `(n−1)·V` for all-gather,
+/// reduce-scatter, broadcast and reduce, `2(n−1)·V` for all-reduce. A
+/// topology is free to *route* however it likes; it is not free to drop
+/// or invent traffic.
+pub fn conservation_violation(phase: &TrafficPhase) -> Option<String> {
+    let n = phase.op.group.size() as f64;
+    let volume = phase.op.volume.raw();
+    let expected = match phase.op.kind {
+        CollectiveKind::AllGather
+        | CollectiveKind::ReduceScatter
+        | CollectiveKind::Broadcast
+        | CollectiveKind::Reduce => (n - 1.0) * volume,
+        CollectiveKind::AllReduce => 2.0 * (n - 1.0) * volume,
+        // No topology lowers these yet; there is no law to check.
+        CollectiveKind::Gather | CollectiveKind::Scatter => return None,
+    };
+    let moved: f64 = phase
+        .schedule
+        .steps
+        .iter()
+        .map(|s| s.per_link.raw() * s.links.count() as f64)
+        .sum();
+    let actual = phase.scale * moved;
+    if rel_close(actual, expected) {
+        return None;
+    }
+    Some(format!(
+        "{:?} over {:?} moves {actual:.3} wire bytes, expected {expected:.3}",
+        phase.op.kind, phase.op.group
+    ))
+}
+
+/// Check the bound sandwich `tier0 ≤ tier1 ≤ anchor`: a refinement may
+/// only tighten a lower bound, and an admissible latency bound can
+/// never exceed the serialized cost of a concrete plan (`anchor_s`).
+/// All four bound components must also be finite and non-negative, or
+/// the branch-and-bound comparisons they feed are meaningless.
+pub fn bound_violations(lb0: CostBound, lb1: CostBound, anchor_s: f64) -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, v) in [
+        ("tier-0 latency", lb0.latency_s),
+        ("tier-0 energy", lb0.energy_j),
+        ("tier-1 latency", lb1.latency_s),
+        ("tier-1 energy", lb1.energy_j),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            out.push(format!("{name} bound is {v}, not a finite non-negative number"));
+        }
+    }
+    if lb1.latency_s < lb0.latency_s {
+        out.push(format!(
+            "tier-1 latency bound {} is below tier-0's {} — refinement must only tighten",
+            lb1.latency_s, lb0.latency_s
+        ));
+    }
+    if lb1.energy_j < lb0.energy_j {
+        out.push(format!(
+            "tier-1 energy bound {} is below tier-0's {} — refinement must only tighten",
+            lb1.energy_j, lb0.energy_j
+        ));
+    }
+    if lb1.latency_s > anchor_s * (1.0 + REL_TOL) {
+        out.push(format!(
+            "tier-1 latency bound {} exceeds the plan's serialized anchor {anchor_s} — \
+             the bound is not admissible",
+            lb1.latency_s
+        ));
+    }
+    out
+}
+
+/// Check a replayed SRAM timeline: non-empty, every sample finite with
+/// non-negative occupancy, and sample times non-decreasing (the replay
+/// walks the schedule in execution order, so time travel means the
+/// span accounting double-counted or went negative).
+pub fn timeline_violation(timeline: &SramTimeline) -> Option<String> {
+    if timeline.samples.is_empty() {
+        return Some("timeline has no samples".to_string());
+    }
+    let mut prev = f64::NEG_INFINITY;
+    for (i, s) in timeline.samples.iter().enumerate() {
+        let t = s.t.raw();
+        let total = s.total().raw();
+        if !t.is_finite() || !total.is_finite() {
+            return Some(format!("sample {i} is not finite (t={t}, total={total})"));
+        }
+        if total < 0.0 {
+            return Some(format!("sample {i} has negative occupancy {total}"));
+        }
+        if t + 1e-12 < prev {
+            return Some(format!(
+                "sample {i} at t={t} precedes the previous sample at t={prev}"
+            ));
+        }
+        prev = prev.max(t);
+    }
+    None
+}
+
+/// Check the scenario-file loader schema against the axes the grid
+/// runner and the search driver actually consume: every consumer axis
+/// must be reachable from its section, and every schema key must feed a
+/// consumer. Either direction failing means a TOML key silently does
+/// nothing — the schema-exhaustiveness contract.
+pub fn schema_violations(
+    schema: &[(&str, &[&str])],
+    grid_axes: &[&str],
+    search_keys: &[&str],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    section_violations(schema, "sweep", grid_axes, &mut out);
+    section_violations(schema, "search", search_keys, &mut out);
+    out
+}
+
+fn section_violations(
+    schema: &[(&str, &[&str])],
+    section: &str,
+    expected: &[&str],
+    out: &mut Vec<String>,
+) {
+    let Some((_, keys)) = schema.iter().find(|(s, _)| *s == section) else {
+        out.push(format!("loader schema has no [{section}] section"));
+        return;
+    };
+    for k in expected {
+        if !keys.contains(k) {
+            out.push(format!("axis '{k}' is unreachable from [{section}] in the loader schema"));
+        }
+    }
+    for k in *keys {
+        if !expected.contains(k) {
+            out.push(format!("[{section}] key '{k}' feeds no consumer axis"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommOp, Group, Topology};
+    use crate::config::TopologyKind;
+    use crate::memory::sram::SramSample;
+    use crate::util::{Bytes, Seconds};
+
+    #[test]
+    fn valid_dep_table_is_clean() {
+        let deps = vec![vec![], vec![0], vec![0, 1]];
+        assert!(dep_table_violations(&deps).is_empty());
+    }
+
+    #[test]
+    fn cyclic_dep_table_names_the_cycle() {
+        // 0 → 1 → 0: both a precedence violation (0 depends on 1) and a
+        // genuine cycle; the DFS must report the cycle independently.
+        let v = dep_table_violations(&[vec![1], vec![0]]);
+        assert!(
+            v.iter().any(|m| m.contains("dependency cycle through tasks")),
+            "{v:?}"
+        );
+        assert!(v.iter().any(|m| m.contains("does not precede")), "{v:?}");
+    }
+
+    #[test]
+    fn dangling_dep_is_reported() {
+        let v = dep_table_violations(&[vec![5]]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("task 5, which does not exist"), "{}", v[0]);
+    }
+
+    #[test]
+    fn real_lowerings_conserve_bytes() {
+        let vol = Bytes::mib(3.0);
+        for topo in [TopologyKind::Mesh2d, TopologyKind::Torus2d] {
+            for op in [
+                CommOp::all_gather(Group::BypassRing { n: 4 }, vol),
+                CommOp::reduce_scatter(Group::BypassRing { n: 5 }, vol),
+                CommOp::all_reduce(Group::FlatRing { n: 16 }, vol),
+                CommOp::all_gather(Group::FlatRing { n: 9 }, vol),
+                CommOp::all_reduce(Group::Grid { side: 4 }, vol),
+                CommOp::broadcast(Group::Line { n: 4 }, vol),
+                CommOp::new(CollectiveKind::Reduce, Group::Line { n: 3 }, vol),
+            ] {
+                let phase = topo.lower(op);
+                assert_eq!(conservation_violation(&phase), None, "{topo:?} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_step_breaks_conservation() {
+        let op = CommOp::all_gather(Group::BypassRing { n: 4 }, Bytes::mib(1.0));
+        let mut phase = TopologyKind::Mesh2d.lower(op);
+        phase.schedule.steps.pop();
+        let v = conservation_violation(&phase).expect("dropped bytes must be detected");
+        assert!(v.contains("wire bytes"), "{v}");
+    }
+
+    #[test]
+    fn scaled_schedule_conserves_through_the_scale() {
+        // The flat ring's all-reduce replays one phase schedule twice
+        // (scale 2.0) — conservation must account for the scale.
+        let op = CommOp::all_reduce(Group::FlatRing { n: 8 }, Bytes::mib(2.0));
+        let phase = TopologyKind::Mesh2d.lower(op);
+        assert!(phase.scale > 1.0, "fixture assumes a scaled lowering");
+        assert_eq!(conservation_violation(&phase), None);
+    }
+
+    #[test]
+    fn admissible_bounds_are_clean() {
+        let lb0 = CostBound { latency_s: 1.0, energy_j: 10.0 };
+        let lb1 = CostBound { latency_s: 2.0, energy_j: 12.0 };
+        assert!(bound_violations(lb0, lb1, 3.0).is_empty());
+    }
+
+    #[test]
+    fn loosened_refinement_is_reported() {
+        let lb0 = CostBound { latency_s: 2.0, energy_j: 10.0 };
+        let lb1 = CostBound { latency_s: 1.0, energy_j: 8.0 };
+        let v = bound_violations(lb0, lb1, 3.0);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("refinement must only tighten"), "{}", v[0]);
+    }
+
+    #[test]
+    fn bound_above_anchor_is_inadmissible() {
+        let lb0 = CostBound { latency_s: 1.0, energy_j: 1.0 };
+        let lb1 = CostBound { latency_s: 5.0, energy_j: 1.0 };
+        let v = bound_violations(lb0, lb1, 4.0);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("not admissible"), "{}", v[0]);
+    }
+
+    #[test]
+    fn non_finite_bound_is_reported() {
+        let lb0 = CostBound { latency_s: f64::NAN, energy_j: 1.0 };
+        let lb1 = CostBound { latency_s: 1.0, energy_j: 1.0 };
+        assert!(!bound_violations(lb0, lb1, 2.0).is_empty());
+    }
+
+    fn sample(t: f64, acts: f64) -> SramSample {
+        SramSample {
+            t: Seconds(t),
+            weights: Bytes(100.0),
+            acts: Bytes(acts),
+            staging: Bytes::ZERO,
+        }
+    }
+
+    #[test]
+    fn monotone_timeline_is_clean() {
+        let tl = SramTimeline {
+            samples: vec![sample(0.0, 1.0), sample(1.0, 2.0), sample(1.0, 3.0)],
+            capacity: Bytes::mib(1.0),
+        };
+        assert_eq!(timeline_violation(&tl), None);
+    }
+
+    #[test]
+    fn time_travel_is_reported() {
+        let tl = SramTimeline {
+            samples: vec![sample(2.0, 1.0), sample(1.0, 1.0)],
+            capacity: Bytes::mib(1.0),
+        };
+        let v = timeline_violation(&tl).expect("decreasing time must be detected");
+        assert!(v.contains("precedes the previous sample"), "{v}");
+    }
+
+    #[test]
+    fn negative_occupancy_is_reported() {
+        let tl = SramTimeline {
+            samples: vec![sample(0.0, -500.0)],
+            capacity: Bytes::mib(1.0),
+        };
+        let v = timeline_violation(&tl).expect("negative occupancy must be detected");
+        assert!(v.contains("negative occupancy"), "{v}");
+    }
+
+    #[test]
+    fn empty_timeline_is_reported() {
+        let tl = SramTimeline { samples: vec![], capacity: Bytes::mib(1.0) };
+        assert!(timeline_violation(&tl).is_some());
+    }
+
+    #[test]
+    fn doctored_schema_is_reported_both_directions() {
+        let sweep: &[&str] = &["models", "stray"];
+        let search: &[&str] = &["objective"];
+        let schema: &[(&str, &[&str])] = &[("sweep", sweep), ("search", search)];
+        let v = schema_violations(schema, &["models", "meshes"], &["objective"]);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|m| m.contains("axis 'meshes' is unreachable")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("key 'stray' feeds no consumer")), "{v:?}");
+    }
+
+    #[test]
+    fn missing_schema_section_is_reported() {
+        let v = schema_violations(&[], &["models"], &["objective"]);
+        assert!(v.iter().any(|m| m.contains("no [sweep] section")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("no [search] section")), "{v:?}");
+    }
+}

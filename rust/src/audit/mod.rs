@@ -1,0 +1,457 @@
+//! IR auditor: static verification of the simulator's invariant
+//! contracts (`hecaton audit`).
+//!
+//! Layer 2 of the static-analysis subsystem (Layer 1, the source-level
+//! determinism lint, is [`crate::lint`]). Where the property tests
+//! *sample* the contracts at runtime, the auditor *states* them over
+//! the intermediate structures a scenario actually builds and checks
+//! every instance:
+//!
+//! - **task-graph** — the event and packet task DAGs are acyclic, every
+//!   dependency exists and precedes its dependent, every task's
+//!   resources are registered.
+//! - **byte-conservation** — every collective lowering moves exactly
+//!   the closed-form wire bytes; the cluster fabric's all-reduce
+//!   bandwidth term is invariant across fabric topologies.
+//! - **bound-sandwich** — the search's admissible bounds satisfy
+//!   `tier0 ≤ tier1 ≤ serialized plan anchor`.
+//! - **sram-monotonic** — the replayed SRAM timeline is finite,
+//!   non-negative and time-ordered, and its peak matches the plan's
+//!   occupancy report.
+//! - **schema** — the scenario-file loader schema and the grid/search
+//!   consumers agree key-for-key (no TOML key silently does nothing).
+//!
+//! The same predicates (in [`checks`]) back `debug_assertions` hooks at
+//! the build sites themselves — `comm::Topology::lower`,
+//! `net::PacketNet::run`, `search::bound::tier1_*`,
+//! `memory::sram::replay` — so debug test runs re-verify the contracts
+//! on every structure they build, while release binaries pay nothing
+//! and rely on `hecaton audit` in CI.
+
+pub mod checks;
+
+use std::fmt;
+
+use crate::comm::{CommOp, Group, Topology};
+use crate::config::{FabricTopo, HardwareConfig};
+use crate::memory::{sram, DramModel};
+use crate::net::lower::build_packet_net;
+use crate::net::NetParams;
+use crate::nop::collective::build_event_graph;
+use crate::nop::{CollectiveKind, CollectiveSchedule};
+use crate::scenario::Scenario;
+use crate::sched::{overlap, StageTimes};
+use crate::search::bound::{tier0, tier1_cluster, tier1_package};
+use crate::sim::{ClusterPlan, PlanCache, SimPlan};
+use crate::util::{Bytes, Seconds};
+
+/// One audit finding: which contract, on which structure, and what
+/// exactly is wrong.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditFinding {
+    /// Name of the violated check (a [`CHECKS`] entry).
+    pub check: &'static str,
+    /// The structure the violation was found on.
+    pub context: String,
+    /// Human-readable statement of the violation.
+    pub detail: String,
+}
+
+impl fmt::Display for AuditFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.check, self.context, self.detail)
+    }
+}
+
+/// One registered audit check, for `hecaton info` and `--checks`.
+pub struct Check {
+    pub name: &'static str,
+    /// One-line summary (shown by `hecaton info`).
+    pub summary: &'static str,
+    /// Longer statement of the contract.
+    pub docs: &'static str,
+}
+
+/// The full check registry, in stable display order.
+pub const CHECKS: &[Check] = &[
+    Check {
+        name: "task-graph",
+        summary: "event/packet task DAGs are acyclic with valid deps",
+        docs: "Every task dependency must name an existing task pushed \
+               before its dependent, and no dependency cycle may close; \
+               packet tasks must also run on registered nodes and route \
+               over registered links. A violation would deadlock or \
+               misprice the event backends.",
+    },
+    Check {
+        name: "byte-conservation",
+        summary: "every lowering moves exactly the collective's bytes",
+        docs: "A topology lowering chooses routes, not volumes: the wire \
+               bytes of the lowered schedule (scale x sum of per-link x \
+               link count) must equal (n-1)V for all-gather, \
+               reduce-scatter, broadcast and reduce, and 2(n-1)V for \
+               all-reduce. The cluster fabric's all-reduce is checked \
+               for topology invariance of its bandwidth term.",
+    },
+    Check {
+        name: "bound-sandwich",
+        summary: "search bounds satisfy tier0 <= tier1 <= plan anchor",
+        docs: "The branch-and-bound search is exact only if its bounds \
+               are admissible: the tier-1 refinement may only tighten \
+               tier-0, and neither may exceed the serialized cost of \
+               the concrete plan they bound. All components must be \
+               finite and non-negative.",
+    },
+    Check {
+        name: "sram-monotonic",
+        summary: "SRAM timelines are time-ordered with a consistent peak",
+        docs: "The replayed per-die occupancy timeline must be \
+               non-empty, finite, non-negative and non-decreasing in \
+               time, and its peak must match the occupancy report the \
+               plan carries — otherwise feasibility gating and \
+               checkpoint resolution judged a different schedule than \
+               the one priced.",
+    },
+    Check {
+        name: "schema",
+        summary: "scenario-file schema and its consumers agree key-for-key",
+        docs: "Every [sweep]/[search] key the TOML loader accepts must \
+               feed a grid axis or search knob, and every axis must be \
+               reachable from a key — a mismatch means a scenario file \
+               can name a knob that silently does nothing.",
+    },
+];
+
+/// Names of all registered checks, in display order.
+pub fn check_names() -> Vec<&'static str> {
+    CHECKS.iter().map(|c| c.name).collect()
+}
+
+/// Look up a check by name.
+pub fn check(name: &str) -> Option<&'static Check> {
+    CHECKS.iter().find(|c| c.name == name)
+}
+
+/// Checks that need no scenario: schema exhaustiveness between the TOML
+/// loader and the grid/search consumers.
+pub fn audit_static() -> Vec<AuditFinding> {
+    checks::schema_violations(
+        crate::config::file::schema(),
+        crate::scenario::GRID_AXES,
+        crate::search::SEARCH_FILE_KEYS,
+    )
+    .into_iter()
+    .map(|detail| AuditFinding {
+        check: "schema",
+        context: "loader schema".to_string(),
+        detail,
+    })
+    .collect()
+}
+
+/// Audit one scenario: lower its collective matrix, build both task
+/// graphs, price its plan, and check every contract instance. Returns
+/// the findings; errors only when the scenario itself cannot be planned
+/// (which the planner reports better than the auditor could).
+pub fn audit_scenario(s: &Scenario) -> crate::Result<Vec<AuditFinding>> {
+    let mut out = Vec::new();
+    audit_package(s, &mut out);
+    audit_cluster(s, &mut out)?;
+    Ok(out)
+}
+
+/// The collective matrix the package audit lowers: every (collective,
+/// group) combination the topology zoo supports, shaped to `hw`'s mesh,
+/// at a round and a deliberately awkward volume.
+fn planner_shapes(hw: &HardwareConfig) -> Vec<CommOp> {
+    let rows = hw.mesh_rows;
+    let cols = hw.mesh_cols;
+    let dies = hw.n_dies();
+    let side = rows.min(cols);
+    let mut ops = Vec::new();
+    for vol in [Bytes::mib(8.0), Bytes(12_345_678.0)] {
+        ops.push(CommOp::all_gather(Group::BypassRing { n: rows }, vol));
+        ops.push(CommOp::reduce_scatter(Group::BypassRing { n: cols }, vol));
+        ops.push(CommOp::all_reduce(Group::FlatRing { n: dies }, vol));
+        ops.push(CommOp::all_gather(Group::FlatRing { n: dies }, vol));
+        ops.push(CommOp::all_reduce(Group::Grid { side }, vol));
+        ops.push(CommOp::broadcast(Group::Line { n: rows }, vol));
+        ops.push(CommOp::new(CollectiveKind::Reduce, Group::Line { n: cols }, vol));
+    }
+    ops.retain(|op| op.group.size() >= 2);
+    ops
+}
+
+/// Package-level audit: conservation across the lowering matrix, both
+/// task graphs over the lowered schedules, the package bound sandwich,
+/// and the plan's SRAM timeline.
+fn audit_package(s: &Scenario, out: &mut Vec<AuditFinding>) {
+    let hw = s.hw();
+    let mut schedules: Vec<CollectiveSchedule> = Vec::new();
+    for op in planner_shapes(hw) {
+        let phase = hw.topology.lower(op);
+        if let Some(detail) = checks::conservation_violation(&phase) {
+            out.push(AuditFinding {
+                check: "byte-conservation",
+                context: format!("{} lowering", hw.topology.name()),
+                detail,
+            });
+        }
+        schedules.push(phase.schedule);
+    }
+    let refs: Vec<&CollectiveSchedule> = schedules.iter().collect();
+
+    let eng = build_event_graph(&refs, &hw.link);
+    let deps: Vec<Vec<usize>> = (0..eng.n_tasks()).map(|t| eng.task_deps(t).to_vec()).collect();
+    for detail in checks::dep_table_violations(&deps) {
+        out.push(AuditFinding {
+            check: "task-graph",
+            context: "event graph".to_string(),
+            detail,
+        });
+    }
+
+    let net = build_packet_net(&refs, &hw.link, &NetParams::default());
+    let deps: Vec<Vec<usize>> = (0..net.n_tasks()).map(|t| net.task_deps(t).to_vec()).collect();
+    for detail in checks::dep_table_violations(&deps) {
+        out.push(AuditFinding {
+            check: "task-graph",
+            context: "packet graph".to_string(),
+            detail,
+        });
+    }
+    if let Err(detail) = net.validate() {
+        out.push(AuditFinding {
+            check: "task-graph",
+            context: "packet graph".to_string(),
+            detail,
+        });
+    }
+
+    let lb0 = tier0(s);
+    let plan = SimPlan::build(&s.model, hw, s.method, s.opts);
+    let lb1 = tier1_package(&plan, hw, lb0);
+    let anchor = plan
+        .breakdown
+        .total()
+        .raw()
+        .max(DramModel::new(hw).stream_time(plan.dram_bytes).raw())
+        .max(lb0.latency_s);
+    for detail in checks::bound_violations(lb0, lb1, anchor) {
+        out.push(AuditFinding {
+            check: "bound-sandwich",
+            context: "package bound".to_string(),
+            detail,
+        });
+    }
+    audit_plan_sram(&plan, hw, "package plan", out);
+}
+
+/// Cluster-level audit (no-op for package scenarios): the cluster bound
+/// sandwich, every stage plan's SRAM timeline, and fabric-topology
+/// invariance of the DP all-reduce's bandwidth term.
+fn audit_cluster(s: &Scenario, out: &mut Vec<AuditFinding>) -> crate::Result<()> {
+    let Some(cluster) = s.cluster_config() else {
+        return Ok(());
+    };
+    let cache = PlanCache::new();
+    let plan = ClusterPlan::build(&s.model, cluster, s.method, s.opts, &cache)?;
+    let hw = &plan.cluster.package_hw;
+
+    let lb0 = tier0(s);
+    let lb1 = tier1_cluster(&plan, lb0);
+    let stage0 = &plan.stage_plans[0];
+    let anchor = stage0
+        .breakdown
+        .total()
+        .raw()
+        .max(DramModel::new(hw).stream_time(stage0.dram_bytes).raw())
+        .max(lb0.latency_s);
+    for detail in checks::bound_violations(lb0, lb1, anchor) {
+        out.push(AuditFinding {
+            check: "bound-sandwich",
+            context: "cluster bound".to_string(),
+            detail,
+        });
+    }
+
+    for (i, sp) in plan.stage_plans.iter().enumerate() {
+        audit_plan_sram(sp, hw, &format!("cluster stage {i} plan"), out);
+    }
+
+    // Fabric invariance: the all-reduce time minus the topology's own
+    // latency term is pure bandwidth — flipping the fabric topology at
+    // equal bandwidth must not change it. The hop counts are duplicated
+    // in `audit_ar_hops` so this checks the simulator against an
+    // independent statement of the lowering contract.
+    let dp = plan.cluster.dp;
+    let mut flipped = plan.clone();
+    let mut inter = plan.cluster.inter.clone();
+    inter.topo = match inter.topo {
+        FabricTopo::PointToPoint => FabricTopo::FatTree,
+        FabricTopo::FatTree => FabricTopo::PointToPoint,
+    };
+    flipped.retarget_inter(inter);
+    for stage in 0..plan.stage_plans.len() {
+        if plan.spec.allreduce_bytes(stage, dp).raw() <= 0.0 {
+            continue;
+        }
+        let a = bandwidth_term(&plan, stage, dp);
+        let b = bandwidth_term(&flipped, stage, dp);
+        if !checks::rel_close(a, b) {
+            out.push(AuditFinding {
+                check: "byte-conservation",
+                context: format!("fabric all-reduce, stage {stage}"),
+                detail: format!(
+                    "bandwidth term {a:.6e}s under {} vs {b:.6e}s under {} — \
+                     the fabric topology changed the bytes moved",
+                    plan.cluster.inter.topo.name(),
+                    flipped.cluster.inter.topo.name()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Stage `stage`'s all-reduce time with the fabric's latency term
+/// subtracted — what remains is volume over bandwidth.
+fn bandwidth_term(plan: &ClusterPlan, stage: usize, dp: usize) -> f64 {
+    plan.allreduce_time(stage).raw()
+        - plan.cluster.inter.hop_latency().raw() * audit_ar_hops(dp, plan.cluster.inter.topo)
+}
+
+/// Fabric hops on the DP all-reduce critical path, restated
+/// independently of [`ClusterPlan`]'s private rule: a point-to-point
+/// ring serializes `2(dp−1)` hops, a fat-tree runs halving-doubling in
+/// `2⌈log₂ dp⌉` switched rounds.
+fn audit_ar_hops(dp: usize, topo: FabricTopo) -> f64 {
+    let dp = dp as f64;
+    match topo {
+        FabricTopo::PointToPoint => 2.0 * (dp - 1.0),
+        FabricTopo::FatTree => 2.0 * dp.log2().ceil(),
+    }
+}
+
+/// Replay `plan`'s SRAM timeline under freshly recomputed analytic
+/// stage spans and check ordering plus peak agreement with the plan's
+/// own occupancy report.
+fn audit_plan_sram(
+    plan: &SimPlan,
+    hw: &HardwareConfig,
+    context: &str,
+    out: &mut Vec<AuditFinding>,
+) {
+    let dram_model = DramModel::new(hw);
+    let spans: Vec<Seconds> = plan
+        .stages
+        .iter()
+        .map(|st| {
+            overlap(StageTimes {
+                on_package: st.on_package,
+                dram: dram_model.stream_time(st.dram_bytes),
+                n_minibatches: st.n_minibatches,
+            })
+            .latency
+        })
+        .collect();
+    let timeline = sram::replay(plan.occupancy_shape(), &plan.groups, &plan.stages, &spans);
+    if let Some(detail) = checks::timeline_violation(&timeline) {
+        out.push(AuditFinding {
+            check: "sram-monotonic",
+            context: context.to_string(),
+            detail,
+        });
+    }
+    let replayed = timeline.peak().total();
+    if !checks::rel_close(replayed.raw(), plan.occupancy.peak.raw()) {
+        out.push(AuditFinding {
+            check: "sram-monotonic",
+            context: context.to_string(),
+            detail: format!(
+                "replayed occupancy peak {replayed} disagrees with the plan's reported {}",
+                plan.occupancy.peak
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{cluster_preset, model_preset, DramKind, PackageKind, TopologyKind};
+    use crate::nop::analytic::Method;
+    use crate::sim::EngineKind;
+
+    #[test]
+    fn registry_is_consistent() {
+        let names = check_names();
+        assert_eq!(names.len(), CHECKS.len());
+        for c in CHECKS {
+            assert!(!c.summary.is_empty() && !c.docs.is_empty(), "{}", c.name);
+            assert_eq!(check(c.name).map(|x| x.name), Some(c.name));
+        }
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate check names");
+        assert!(check("no-such-check").is_none());
+    }
+
+    #[test]
+    fn finding_display_names_check_and_context() {
+        let f = AuditFinding {
+            check: "task-graph",
+            context: "event graph".to_string(),
+            detail: "task 3 depends on task 9, which does not exist".to_string(),
+        };
+        assert_eq!(
+            f.to_string(),
+            "[task-graph] event graph: task 3 depends on task 9, which does not exist"
+        );
+    }
+
+    #[test]
+    fn loader_schema_audits_clean() {
+        let findings = audit_static();
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    fn package_scenario(topo: TopologyKind) -> Scenario {
+        let model = model_preset("tinyllama-1.1b").expect("preset");
+        let mut hw = HardwareConfig::square(16, PackageKind::Standard, DramKind::Ddr5_6400);
+        hw.topology = topo;
+        Scenario::package(model, hw, Method::Hecaton, EngineKind::Analytic)
+    }
+
+    #[test]
+    fn mesh_package_scenario_audits_clean() {
+        let findings = audit_scenario(&package_scenario(TopologyKind::Mesh2d)).expect("plans");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn torus_package_scenario_audits_clean() {
+        let findings = audit_scenario(&package_scenario(TopologyKind::Torus2d)).expect("plans");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cluster_scenario_audits_clean() {
+        let (model, cluster) = cluster_preset("tiny-cluster").expect("preset");
+        let s = Scenario::cluster(model, cluster, Method::Hecaton, EngineKind::Analytic);
+        let findings = audit_scenario(&s).expect("plans");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn bad_packet_graph_fails_validation() {
+        // The packet builders do not check routes — `validate` must.
+        let mut net = crate::net::PacketNet::new(NetParams::default());
+        let n = net.node("die0");
+        net.work(n, Seconds(1e-6), &[]);
+        net.flow_with_debt(&[7], Bytes(1e6), Seconds::ZERO, &[]);
+        let err = net.validate().expect_err("unregistered link must be caught");
+        assert!(err.contains("unregistered link 7"), "{err}");
+    }
+}

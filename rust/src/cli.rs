@@ -13,6 +13,10 @@
 //! * `train`     — functional distributed training with a loss curve
 //! * `info`      — show presets and the resolved configuration
 //!   (`--format json` for machine-readable presets)
+//! * `lint`      — determinism lint over the crate's own sources
+//!   ([`crate::lint`]; non-zero exit on findings)
+//! * `audit`     — static verification of the simulator's invariant
+//!   contracts over scenario files ([`crate::audit`])
 //!
 //! Every evaluation path funnels into [`crate::scenario`]: the flags are
 //! parsed once by [`ScenarioArgs`] into a [`Scenario`] or a
@@ -121,6 +125,18 @@ pub fn app() -> App {
                 .opt("format", "table", "output format: table | json"),
         )
         .command(
+            CommandSpec::new("lint", "determinism lint over the crate's own sources")
+                .pos("path", "source root to lint (default: this crate's src/)")
+                .opt("rules", "all", "comma list of rules to report, or 'all' (see `hecaton info`)"),
+        )
+        .command(
+            CommandSpec::new("audit", "statically verify the simulator's invariant contracts")
+                .pos("scenario", "scenario TOML file to audit (omit with --all-examples)")
+                .opt("checks", "all", "comma list of checks to report, or 'all' (see `hecaton info`)")
+                .opt("examples-dir", "", "scenario directory for --all-examples (default: examples/scenarios/)")
+                .flag("all-examples", "audit every *.toml in the examples directory"),
+        )
+        .command(
             CommandSpec::new("bench", "run the perf suites against the committed baseline")
                 .opt("suite", "all", "bench suite: hotpath | sweep | all")
                 .opt("baseline-dir", "", "directory holding BENCH_*.json (default: repo root)")
@@ -147,6 +163,8 @@ pub fn run(args: &[String]) -> crate::Result<i32> {
         "reproduce" => cmd_reproduce(&m),
         "train" => cmd_train(&m),
         "info" => cmd_info(&m),
+        "lint" => cmd_lint(&m),
+        "audit" => cmd_audit(&m),
         "bench" => cmd_bench(&m),
         other => Err(anyhow!("unhandled command {other}")),
     }?;
@@ -809,6 +827,144 @@ fn cmd_bench(m: &Matches) -> crate::Result<()> {
     Ok(())
 }
 
+/// Resolve a comma-list name filter (`all` or explicit names) against a
+/// registry, with did-you-mean on unknown names.
+fn name_filter(
+    raw: &str,
+    what: &str,
+    known: &[&'static str],
+) -> crate::Result<Vec<&'static str>> {
+    if raw.trim().eq_ignore_ascii_case("all") {
+        return Ok(known.to_vec());
+    }
+    let mut out = Vec::new();
+    for item in split_list(raw) {
+        match known.iter().find(|k| **k == item) {
+            Some(k) => out.push(*k),
+            None => return Err(unknown_value(what, item, known).into()),
+        }
+    }
+    if out.is_empty() {
+        return Err(anyhow!("empty {what} list"));
+    }
+    Ok(out)
+}
+
+/// `hecaton lint` — Layer-1 static analysis: run the determinism lint
+/// over a source tree and exit non-zero on findings.
+fn cmd_lint(m: &Matches) -> crate::Result<()> {
+    let root = match m.pos(0) {
+        Some(p) => std::path::PathBuf::from(p),
+        None => crate::lint::default_src_root(),
+    };
+    let rules = name_filter(m.value("rules"), "lint rule", &crate::lint::rule_names())?;
+    let findings: Vec<crate::lint::Finding> = crate::lint::lint_root(&root)?
+        .into_iter()
+        .filter(|f| rules.contains(&f.rule))
+        .collect();
+    for f in &findings {
+        println!("{f}");
+    }
+    if !findings.is_empty() {
+        return Err(anyhow!("{} lint finding(s) under {}", findings.len(), root.display()));
+    }
+    println!("lint clean: {} rule(s) over {}", rules.len(), root.display());
+    Ok(())
+}
+
+/// Grid scenario files are audited on a capped prefix of their points
+/// (auditing re-plans every point; a full grid belongs to `run`, not
+/// `audit`). The cap is reported so coverage is never silently partial.
+const AUDIT_GRID_CAP: usize = 8;
+
+/// `hecaton audit` — Layer-2 static analysis: verify the invariant
+/// contracts over the loader schema plus the given scenario file(s),
+/// exiting non-zero on findings.
+fn cmd_audit(m: &Matches) -> crate::Result<()> {
+    let checks = name_filter(m.value("checks"), "audit check", &crate::audit::check_names())?;
+    let files: Vec<std::path::PathBuf> = if m.flag("all-examples") {
+        example_scenarios(m.value("examples-dir"))?
+    } else {
+        match m.pos(0) {
+            Some(p) => vec![std::path::PathBuf::from(p)],
+            None => Vec::new(),
+        }
+    };
+    let mut findings: Vec<(String, crate::audit::AuditFinding)> = crate::audit::audit_static()
+        .into_iter()
+        .map(|f| ("loader".to_string(), f))
+        .collect();
+    let mut audited = 0usize;
+    for path in &files {
+        audited += audit_file(path, &mut findings)?;
+    }
+    findings.retain(|(_, f)| checks.contains(&f.check));
+    for (label, f) in &findings {
+        println!("{label}: {f}");
+    }
+    if !findings.is_empty() {
+        return Err(anyhow!("{} audit finding(s)", findings.len()));
+    }
+    println!(
+        "audit clean: {} check(s), {} scenario(s) across {} file(s) plus the loader schema",
+        checks.len(),
+        audited,
+        files.len()
+    );
+    Ok(())
+}
+
+/// Audit one scenario file; returns the number of scenarios audited.
+fn audit_file(
+    path: &std::path::Path,
+    out: &mut Vec<(String, crate::audit::AuditFinding)>,
+) -> crate::Result<usize> {
+    let label = path.display().to_string();
+    match crate::config::file::load_scenario(&path.to_string_lossy())? {
+        LoadedScenario::One(s) => {
+            for f in crate::audit::audit_scenario(&s)? {
+                out.push((label.clone(), f));
+            }
+            Ok(1)
+        }
+        LoadedScenario::Grid { grid, .. } => {
+            let (points, _) = grid.points()?;
+            let take = points.len().min(AUDIT_GRID_CAP);
+            if take < points.len() {
+                println!("{label}: audited {take} of {} grid points", points.len());
+            }
+            for s in points.iter().take(take) {
+                for f in crate::audit::audit_scenario(s)? {
+                    out.push((label.clone(), f));
+                }
+            }
+            Ok(take)
+        }
+    }
+}
+
+/// The checked-in example scenarios: a non-recursive `*.toml` listing of
+/// `dir` (default `examples/scenarios/` at the repo root), matching the
+/// CI scenarios job's glob — fixture files in subdirectories
+/// (intentionally invalid) are not picked up.
+fn example_scenarios(dir: &str) -> crate::Result<Vec<std::path::PathBuf>> {
+    let root = if dir.is_empty() {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+    } else {
+        std::path::PathBuf::from(dir)
+    };
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(&root)
+        .map_err(|e| anyhow!("cannot read {}: {e}", root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        return Err(anyhow!("no *.toml scenarios under {}", root.display()));
+    }
+    Ok(files)
+}
+
 fn print_info_table() -> crate::Result<()> {
     let mut t = Table::new(&["model", "hidden", "layers", "heads", "seq", "params"])
         .with_title("Model presets")
@@ -882,6 +1038,13 @@ fn print_info_table() -> crate::Result<()> {
          these presets machine-readably"
     );
     println!("Functional (train) presets: tiny, e2e-100m — see aot.py DEPLOYMENTS");
+    println!("Static analysis (`hecaton lint` / `hecaton audit`, typo-suggesting):");
+    for r in crate::lint::RULES {
+        println!("  lint  {}: {}", r.name, r.summary);
+    }
+    for c in crate::audit::CHECKS {
+        println!("  audit {}: {}", c.name, c.summary);
+    }
     Ok(())
 }
 
@@ -931,6 +1094,11 @@ fn info_json() -> String {
     out.push_str(&format!(
         "  \"fabrics\": [{}],\n",
         quoted(&["substrate", "optical", "fat-tree"])
+    ));
+    out.push_str(&format!("  \"lint_rules\": [{}],\n", quoted(&crate::lint::rule_names())));
+    out.push_str(&format!(
+        "  \"audit_checks\": [{}],\n",
+        quoted(&crate::audit::check_names())
     ));
     out.push_str(&format!("  \"packages\": [{}],\n", quoted(&["standard", "advanced"])));
     out.push_str(&format!(
@@ -985,6 +1153,50 @@ mod tests {
             .unwrap()
             .is_some());
         assert!(a.parse(&argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn app_parses_lint_and_audit() {
+        let a = app();
+        assert!(a.parse(&argv(&["lint"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["lint", "--rules", "hash-order"])).unwrap().is_some());
+        assert!(a.parse(&argv(&["audit", "--all-examples"])).unwrap().is_some());
+        assert!(a
+            .parse(&argv(&["audit", "scenario.toml", "--checks", "schema"]))
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn misspelled_command_suggests_audit() {
+        let e = app().parse(&argv(&["adit"])).unwrap_err();
+        assert!(format!("{e}").contains("did you mean 'audit'?"), "{e}");
+    }
+
+    #[test]
+    fn unknown_rule_and_check_names_get_suggestions() {
+        let e = name_filter("hash-ordr", "lint rule", &crate::lint::rule_names()).unwrap_err();
+        assert!(format!("{e:#}").contains("did you mean 'hash-order'?"), "{e}");
+        let e =
+            name_filter("bound-sandwch", "audit check", &crate::audit::check_names()).unwrap_err();
+        assert!(format!("{e:#}").contains("did you mean 'bound-sandwich'?"), "{e}");
+    }
+
+    #[test]
+    fn name_filter_resolves_all_and_explicit_lists() {
+        let all = name_filter("all", "audit check", &crate::audit::check_names()).unwrap();
+        assert_eq!(all, crate::audit::check_names());
+        let two = name_filter("schema,task-graph", "audit check", &all).unwrap();
+        assert_eq!(two, vec!["schema", "task-graph"]);
+    }
+
+    #[test]
+    fn info_json_lists_analysis_registries() {
+        let j = info_json();
+        assert!(j.contains("\"lint_rules\""));
+        assert!(j.contains("\"hash-order\""));
+        assert!(j.contains("\"audit_checks\""));
+        assert!(j.contains("\"bound-sandwich\""));
     }
 
     /// `search` runs end to end through the real CLI in every format, and

@@ -206,7 +206,16 @@ impl Topology for TopologyKind {
                 panic!("no {kind:?} lowering for {group:?} on {topo:?}")
             }
         };
-        TrafficPhase { op, schedule, scale }
+        let phase = TrafficPhase { op, schedule, scale };
+        // Every lowering must put exactly the collective's algebraic
+        // byte count on the wire; `hecaton audit` checks the same law
+        // statically over every shape, this hook checks each lowering
+        // actually built in a debug run.
+        #[cfg(debug_assertions)]
+        if let Some(v) = crate::audit::checks::conservation_violation(&phase) {
+            panic!("non-conserving lowering: {v}");
+        }
+        phase
     }
 }
 

@@ -152,6 +152,13 @@ const SCHEMA: &[(&str, &[&str])] = &[
     ("search", &["objective", "budget_sram_mib", "batch"]),
 ];
 
+/// The full section/key table the loader accepts — exposed so the IR
+/// auditor ([`crate::audit`]) can cross-check it against the grid and
+/// search axes that consume those keys (TOML-schema exhaustiveness).
+pub fn schema() -> &'static [(&'static str, &'static [&'static str])] {
+    SCHEMA
+}
+
 /// Reject unknown sections and keys with the offending name and a
 /// suggestion when something known is close.
 fn validate_keys(doc: &Document) -> crate::Result<()> {

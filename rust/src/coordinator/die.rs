@@ -336,6 +336,7 @@ impl DieState {
             }
 
             DieCmd::SgdStep { lr } => {
+                // lint: allow(hash-order, every weight is updated exactly once; no fold)
                 for (key, w) in self.weights.iter_mut() {
                     let g = self.dweights.get_mut(key).expect("grad accum exists");
                     w.sub_scaled(g, lr);

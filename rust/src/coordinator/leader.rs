@@ -641,6 +641,7 @@ impl Coordinator {
             }
         }
         self.wait_acks()?;
+        // lint: allow(hash-order, every param is updated exactly once; no fold)
         for (key, p) in self.params.iter_mut() {
             let g = self.grads.get_mut(key).expect("grad slot");
             p.sub_scaled(g, lr);

@@ -76,6 +76,8 @@ pub mod runtime;
 pub mod coordinator;
 pub mod train;
 pub mod report;
+pub mod audit;
+pub mod lint;
 pub mod bench;
 pub mod cli;
 

@@ -1,0 +1,291 @@
+//! Determinism lint over the repo's own Rust sources.
+//!
+//! Layer 1 of the static-analysis subsystem (`hecaton lint`; Layer 2,
+//! the IR auditor, is [`crate::audit`]). A dependency-free scanner
+//! ([`scan`]) splits each `src/**/*.rs` file into code/comment views and
+//! the rule set ([`rules`]) matches repo-specific determinism hazards:
+//! hash-ordered iteration feeding results, wall-clock/entropy reads in
+//! the core simulator dirs, float folds over unordered collections, and
+//! bare unwraps. The contracts themselves are the bitwise guarantees the
+//! property tests sample at runtime — the lint covers the whole tree
+//! statically, catching the hazard class instead of an instance.
+//!
+//! ## Escape hatch
+//!
+//! A finding on a provably-safe line is suppressed with an inline
+//! directive in a line comment:
+//!
+//! ```text
+//! // lint: allow(<rule>, <reason>)
+//! ```
+//!
+//! The directive covers its own line if it trails code, otherwise the
+//! first code line below it — so directives stack: two standalone allow
+//! comments above one statement both apply to that statement. A
+//! directive that fails to parse, names an unknown rule, or omits the
+//! reason is itself reported (rule `allow-form`), keeping every
+//! suppression auditable.
+
+pub mod rules;
+pub mod scan;
+
+use anyhow::anyhow;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+pub use rules::{rule, rule_names, Rule, Scope, CORE_DIRS, RULES};
+
+/// One lint finding, located by `src/`-relative path and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A parsed `lint: allow(rule, reason)` directive.
+struct Directive {
+    /// Line the directive's comment sits on.
+    line: usize,
+    /// The named rule (validated against the registry).
+    rule: &'static str,
+}
+
+/// Parse the allow directive in `comment`, if any. Returns
+/// `Some(Ok(rule))` for a well-formed directive, `Some(Err(message))`
+/// for a malformed one, `None` when the comment has no directive.
+///
+/// The directive must open the comment (`// lint: …`). Doc comments
+/// never match: the scanner leaves their extra `/`/`!` marker at the
+/// front of the comment text, so prose *describing* the grammar (like
+/// these docs) is not itself a directive.
+fn parse_allow(comment: &str) -> Option<Result<&'static str, String>> {
+    let rest = comment.trim_start().strip_prefix("lint:")?;
+    let rest = rest.trim_start();
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(Err(format!(
+            "malformed lint directive `{}` — expected `lint: allow(<rule>, <reason>)`",
+            rest.split_whitespace().next().unwrap_or("")
+        )));
+    };
+    let Some(end) = body.find(')') else {
+        return Some(Err("unterminated `lint: allow(` — missing `)`".to_string()));
+    };
+    let inner = &body[..end];
+    let Some((name, reason)) = inner.split_once(',') else {
+        return Some(Err(format!(
+            "allow(`{inner}`) has no reason — expected `lint: allow(<rule>, <reason>)`"
+        )));
+    };
+    let name = name.trim();
+    if reason.trim().is_empty() {
+        return Some(Err(format!("allow({name}, …) has an empty reason")));
+    }
+    match rule(name) {
+        Some(r) => Some(Ok(r.name)),
+        None => {
+            let hint = match crate::util::cli::suggest(name, rule_names()) {
+                Some(s) => format!(" (did you mean '{s}'?)"),
+                None => format!(" (known rules: {})", rule_names().join(" | ")),
+            };
+            Some(Err(format!("allow names unknown rule '{name}'{hint}")))
+        }
+    }
+}
+
+/// Lint one file. `rel` is the `src/`-relative path with `/` separators
+/// (it decides core-dir scoping and labels the findings).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lines = scan::scan(src);
+    let in_test = rules::test_region_flags(&lines);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut directives: Vec<Directive> = Vec::new();
+    for (l, &test) in lines.iter().zip(in_test.iter()) {
+        match parse_allow(&l.comment) {
+            Some(Ok(rule)) => directives.push(Directive { line: l.number, rule }),
+            // Malformed directives in test regions are as inert as the
+            // rules they would suppress — skip them too.
+            Some(Err(message)) if !test => findings.push(Finding {
+                file: rel.to_string(),
+                line: l.number,
+                rule: "allow-form",
+                message,
+            }),
+            _ => {}
+        }
+    }
+    // Resolve each directive to its target: the directive's own line if
+    // it trails code, else the first code line below (enables stacking).
+    let targets: Vec<(usize, &'static str)> = directives
+        .iter()
+        .map(|d| {
+            let target = lines
+                .iter()
+                .filter(|l| l.number >= d.line && !l.code.trim().is_empty())
+                .map(|l| l.number)
+                .next()
+                .unwrap_or(d.line);
+            (target, d.rule)
+        })
+        .collect();
+    for raw in rules::raw_findings(rel, &lines) {
+        let suppressed = targets.iter().any(|&(line, rule)| line == raw.line && rule == raw.rule);
+        if !suppressed {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: raw.line,
+                rule: raw.rule,
+                message: raw.message,
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Recursively collect `*.rs` files under `root`, sorted for a
+/// deterministic report order.
+fn rust_files(root: &Path) -> crate::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .map_err(|e| anyhow!("lint: cannot read {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                files.push(p);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `*.rs` file under `root` (normally `src/`). Findings are
+/// sorted by file, then line.
+pub fn lint_root(root: &Path) -> crate::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for path in rust_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("lint: cannot read {}: {e}", path.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings
+        .sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(findings)
+}
+
+/// The crate's own `src/` directory — the default lint target for the
+/// CLI and the clean-repo test.
+pub fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_suppresses_trailing_line() {
+        let src = "struct C { w: HashMap<u32, f64> }\nimpl C {\n\
+                   fn n(&self) -> usize { self.w.keys().count() } // lint: allow(hash-order, count is order-free)\n}\n";
+        assert!(lint_source("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn standalone_allow_covers_next_code_line() {
+        let src = "struct C { w: HashMap<u32, f64> }\nimpl C {\n\
+                   fn n(&self) -> usize {\n\
+                   // lint: allow(hash-order, count is order-free)\n\
+                   self.w.keys().count()\n}\n}\n";
+        assert!(lint_source("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stacked_allows_each_suppress_one_rule() {
+        let src = "struct C { w: HashMap<u32, f64> }\nimpl C {\n\
+                   fn t(&self) -> f64 {\n\
+                   // lint: allow(hash-order, all values summed exactly once)\n\
+                   // lint: allow(unordered-fold, u64-exact values, order-free)\n\
+                   self.w.values().sum()\n}\n}\n";
+        assert!(lint_source("sim/fixture.rs", src).is_empty());
+        // Dropping one of the two leaves the other rule firing.
+        let partial =
+            src.replace("// lint: allow(unordered-fold, u64-exact values, order-free)\n", "");
+        let left: Vec<_> = lint_source("sim/fixture.rs", &partial)
+            .into_iter()
+            .map(|f| f.rule)
+            .collect();
+        assert_eq!(left, vec!["unordered-fold"]);
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n\
+                   // lint: allow(hash-order, wrong rule on purpose)\n\
+                   x.unwrap()\n}\n";
+        let found: Vec<_> = lint_source("sim/fixture.rs", src).iter().map(|f| f.rule).collect();
+        assert_eq!(found, vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn malformed_allow_is_reported() {
+        let f = lint_source("sim/fixture.rs", "// lint: allow(no-unwrap)\nfn f() {}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "allow-form");
+        assert!(f[0].message.contains("no reason"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_gets_a_suggestion() {
+        let f = lint_source("sim/fixture.rs", "// lint: allow(hash-ordr, oops)\nfn f() {}\n");
+        assert_eq!(f[0].rule, "allow-form");
+        assert!(f[0].message.contains("did you mean 'hash-order'?"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn empty_reason_is_reported() {
+        let f = lint_source("sim/fixture.rs", "// lint: allow(no-unwrap,   )\nfn f() {}\n");
+        assert_eq!(f[0].rule, "allow-form");
+        assert!(f[0].message.contains("empty reason"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn finding_display_is_file_line_rule() {
+        let f = lint_source("net/fixture.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n");
+        assert_eq!(f.len(), 1);
+        let s = f[0].to_string();
+        assert!(s.starts_with("net/fixture.rs:1: [no-unwrap]"), "{s}");
+    }
+
+    /// The satellite acceptance test: the merged tree is lint-clean.
+    /// Every hash-iteration site either uses ordered containers or
+    /// carries an audited allow; the core dirs are unwrap-free.
+    #[test]
+    fn clean_repo_has_zero_findings() {
+        let findings = lint_root(&default_src_root()).expect("lint src/");
+        assert!(
+            findings.is_empty(),
+            "lint found {} issue(s) in src/:\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,483 @@
+//! The determinism rule set and its registry.
+//!
+//! Each rule encodes one repo-specific contract (see ARCHITECTURE.md
+//! "Static verification" for the table). Rules are line-oriented
+//! substring/boundary matchers over the scanned code view from
+//! [`crate::lint::scan`] — deliberately simple, because the hazards
+//! they target (`HashMap` iteration, wall-clock reads, bare unwraps)
+//! are single-line constructs under the rustfmt style CI enforces.
+
+use crate::lint::scan::Line;
+
+/// Where a rule applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Every `.rs` file under `src/`.
+    AllSources,
+    /// Only the determinism-critical directories ([`CORE_DIRS`]).
+    CoreDirs,
+}
+
+impl Scope {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scope::AllSources => "src/**",
+            Scope::CoreDirs => "core dirs",
+        }
+    }
+}
+
+/// Top-level `src/` directories whose code feeds timing/energy results
+/// and must be bitwise deterministic and panic-free.
+pub const CORE_DIRS: &[&str] = &["sim", "net", "search", "comm", "nop", "sched", "memory"];
+
+/// One lint rule's registry entry.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub name: &'static str,
+    /// One-line summary (shown by `hecaton info` and `hecaton lint --rules`).
+    pub summary: &'static str,
+    /// Longer rationale + the sanctioned fix.
+    pub docs: &'static str,
+    pub scope: Scope,
+}
+
+/// The full rule registry, in stable display order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "hash-order",
+        summary: "no HashMap/HashSet iteration outside an allow",
+        docs: "Iterating a std HashMap/HashSet observes RandomState bucket \
+               order, which varies per process and breaks the bitwise \
+               determinism contracts (parallel sweep == serial sweep, \
+               search == sweep argmin). Use BTreeMap/BTreeSet, collect \
+               and sort before iterating, or annotate an order-independent \
+               use with `// lint: allow(hash-order, <why order cannot \
+               leak>)`.",
+        scope: Scope::AllSources,
+    },
+    Rule {
+        name: "unordered-fold",
+        summary: "no float accumulation over unordered iteration",
+        docs: "Floating-point addition is not associative: folding/summing \
+               over HashMap/HashSet iteration makes the result depend on \
+               bucket order even when every element is visited. Sort first \
+               or accumulate into an order-independent integer domain; \
+               annotate provably order-free folds with \
+               `// lint: allow(unordered-fold, <why>)`.",
+        scope: Scope::AllSources,
+    },
+    Rule {
+        name: "wall-clock",
+        summary: "no Instant::now/SystemTime in core simulator dirs",
+        docs: "Simulated time must come from the event clock, never the \
+               host. A wall-clock read inside sim/, net/, search/, comm/, \
+               nop/, sched/ or memory/ makes results machine-dependent. \
+               Timing harnesses live in bench.rs/cli.rs, which are out of \
+               scope.",
+        scope: Scope::CoreDirs,
+    },
+    Rule {
+        name: "entropy",
+        summary: "no randomness sources in core simulator dirs",
+        docs: "Any entropy source (thread_rng, rand::, RandomState, \
+               from_entropy, getrandom) inside the core dirs breaks \
+               replayability. Property tests use the seeded LCG in \
+               util::prop; hashes use the fixed-state hashers already in \
+               the tree.",
+        scope: Scope::CoreDirs,
+    },
+    Rule {
+        name: "no-unwrap",
+        summary: "no bare .unwrap() in core simulator dirs",
+        docs: "A bare unwrap panics without stating the invariant that \
+               justified it. In the core dirs, use `.expect(\"<invariant>\")` \
+               for genuinely unreachable states or propagate a Result. \
+               Tests and benches are exempt (cfg(test) regions are \
+               skipped); cli.rs/main.rs are outside the scope.",
+        scope: Scope::CoreDirs,
+    },
+    Rule {
+        name: "allow-form",
+        summary: "allow comments must name a known rule and give a reason",
+        docs: "The escape hatch is `// lint: allow(<rule>, <reason>)`. A \
+               directive that does not parse, names an unknown rule, or \
+               omits the reason is itself a finding — so suppressions \
+               stay auditable.",
+        scope: Scope::AllSources,
+    },
+];
+
+/// Names of every registered rule, in display order.
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+/// Look up a rule by name.
+pub fn rule(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+/// A raw (pre-suppression) finding. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawFinding {
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Whether `rel` (a `src/`-relative path with `/` separators) is inside
+/// the determinism-critical directories.
+pub fn is_core(rel: &str) -> bool {
+    match rel.split('/').next() {
+        Some(first) => CORE_DIRS.contains(&first),
+        None => false,
+    }
+}
+
+/// Tokens whose presence marks an iteration over the receiver.
+const ITER_TOKENS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+];
+
+/// Tokens that accumulate an iterator into one value.
+const FOLD_TOKENS: &[&str] = &[".sum(", ".fold(", ".product("];
+
+/// Wall-clock reads (scoped to core dirs).
+const CLOCK_TOKENS: &[&str] = &["Instant::now", "SystemTime"];
+
+/// Entropy sources (scoped to core dirs).
+const ENTROPY_TOKENS: &[&str] = &[
+    "thread_rng",
+    "rand::",
+    "RandomState",
+    "from_entropy",
+    "getrandom",
+];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Does `code` contain `token` starting at a word boundary? (Guards
+/// against e.g. `operand::` matching the `rand::` entropy token.)
+fn has_token(code: &str, token: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(token) {
+        let at = from + pos;
+        let bounded = match code[..at].chars().next_back() {
+            Some(prev) => !is_ident_char(prev),
+            None => true,
+        };
+        if bounded {
+            return true;
+        }
+        from = at + token.len();
+    }
+    false
+}
+
+/// Does `code` call a method on `ident` (i.e. contain `ident.` at a
+/// word boundary)? Chained forms like `ident.lock().expect(..).iter()`
+/// count: the hazard is the receiver, not the adjacency.
+fn uses_ident_method(code: &str, ident: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(ident) {
+        let at = from + pos;
+        let start_ok = match code[..at].chars().next_back() {
+            Some(prev) => !is_ident_char(prev),
+            None => true,
+        };
+        let rest = &code[at + ident.len()..];
+        if start_ok && rest.trim_start().starts_with('.') {
+            return true;
+        }
+        from = at + ident.len().max(1);
+    }
+    false
+}
+
+/// Extract the bound name from a `let [mut] NAME` prefix, if the line
+/// declares one.
+fn let_binding_name(code: &str) -> Option<&str> {
+    let mut rest = code.trim_start();
+    rest = rest.strip_prefix("let ")?;
+    let rest = rest.trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest).trim_start();
+    let end = rest.find(|c: char| !is_ident_char(c)).unwrap_or(rest.len());
+    let name = &rest[..end];
+    let after = rest[end..].trim_start();
+    if !name.is_empty() && (after.starts_with(':') || after.starts_with('=')) {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// Extract the field name from a `name: Type` declaration: the ident
+/// immediately before the first single (non-path) colon.
+fn field_decl_name(code: &str) -> Option<&str> {
+    let bytes = code.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b':' {
+            continue;
+        }
+        let path_colon =
+            (i > 0 && bytes[i - 1] == b':') || bytes.get(i + 1).is_some_and(|&n| n == b':');
+        if path_colon {
+            continue;
+        }
+        let head = code[..i].trim_end();
+        let start = head
+            .rfind(|c: char| !is_ident_char(c))
+            .map(|p| p + 1)
+            .unwrap_or(0);
+        let name = &head[start..];
+        if !name.is_empty() && !name.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            return Some(name);
+        }
+        return None;
+    }
+    None
+}
+
+/// Names bound to `HashMap`/`HashSet` values in this file — the
+/// receivers the ordering rules watch. `use` lines bind nothing.
+fn hash_idents(lines: &[Line]) -> Vec<String> {
+    let mut idents: Vec<String> = Vec::new();
+    for l in lines {
+        let code = &l.code;
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        if code.trim_start().starts_with("use ") {
+            continue;
+        }
+        let name = let_binding_name(code).or_else(|| field_decl_name(code));
+        if let Some(n) = name {
+            if !idents.iter().any(|e| e == n) {
+                idents.push(n.to_string());
+            }
+        }
+    }
+    idents
+}
+
+/// Per-line flags marking `#[cfg(test)]` item bodies (skipped by every
+/// rule). The attribute latches onto the next braced item; a `;` first
+/// (e.g. `#[cfg(test)] use …;`) clears it without opening a region.
+pub(crate) fn test_region_flags(lines: &[Line]) -> Vec<bool> {
+    let mut flags = Vec::with_capacity(lines.len());
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut in_test = false;
+    let mut test_depth: i64 = 0;
+    for l in lines {
+        let code = &l.code;
+        if code.contains("#[cfg(test)]") {
+            pending = true;
+        } else if pending && !code.trim().is_empty() {
+            if code.contains('{') {
+                in_test = true;
+                test_depth = depth;
+                pending = false;
+            } else if code.trim_end().ends_with(';') {
+                pending = false;
+            }
+        }
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        flags.push(in_test);
+        if in_test && depth <= test_depth {
+            in_test = false;
+        }
+    }
+    flags
+}
+
+/// Run every rule's matcher over a scanned file. Allow-directive
+/// suppression and the `allow-form` rule live in [`crate::lint`]; this
+/// returns the raw hazards only.
+pub fn raw_findings(rel: &str, lines: &[Line]) -> Vec<RawFinding> {
+    let core = is_core(rel);
+    let idents = hash_idents(lines);
+    let in_test = test_region_flags(lines);
+    let mut out = Vec::new();
+    for (l, &test) in lines.iter().zip(in_test.iter()) {
+        if test {
+            continue;
+        }
+        let code = &l.code;
+        let has_iter = ITER_TOKENS.iter().any(|t| code.contains(t));
+        let iterated = if has_iter {
+            idents.iter().find(|id| uses_ident_method(code, id))
+        } else {
+            None
+        };
+        if let Some(id) = iterated {
+            out.push(RawFinding {
+                line: l.number,
+                rule: "hash-order",
+                message: format!(
+                    "iteration over hash-ordered `{id}` — use BTreeMap/BTreeSet or sort first"
+                ),
+            });
+            if FOLD_TOKENS.iter().any(|t| code.contains(t)) {
+                out.push(RawFinding {
+                    line: l.number,
+                    rule: "unordered-fold",
+                    message: format!(
+                        "accumulation over hash-ordered `{id}` — float folds are order-sensitive"
+                    ),
+                });
+            }
+        }
+        if core {
+            for t in CLOCK_TOKENS {
+                if has_token(code, t) {
+                    out.push(RawFinding {
+                        line: l.number,
+                        rule: "wall-clock",
+                        message: format!("host clock read `{t}` in a core simulator dir"),
+                    });
+                }
+            }
+            for t in ENTROPY_TOKENS {
+                if has_token(code, t) {
+                    out.push(RawFinding {
+                        line: l.number,
+                        rule: "entropy",
+                        message: format!("entropy source `{t}` in a core simulator dir"),
+                    });
+                }
+            }
+            if code.contains(".unwrap()") {
+                out.push(RawFinding {
+                    line: l.number,
+                    rule: "no-unwrap",
+                    message: "bare .unwrap() — use .expect(\"<invariant>\") or propagate"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<&'static str> {
+        raw_findings(rel, &scan(src)).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_documented() {
+        let names = rule_names();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[i + 1..].contains(n), "duplicate rule {n}");
+            let r = rule(n).expect("registered");
+            assert!(!r.summary.is_empty() && !r.docs.is_empty());
+        }
+        assert!(rule("no-such-rule").is_none());
+    }
+
+    #[test]
+    fn hash_order_fires_on_renderer_snippet() {
+        // The satellite fixture: a renderer iterating a HashMap straight
+        // into its output — exactly the order leak the rule exists for.
+        let src = "struct R {\n    rows: HashMap<String, f64>,\n}\n\
+                   impl R {\n    fn render(&self) -> String {\n        \
+                   self.rows.iter().map(|(k, v)| format!(\"{k}={v}\")).collect()\n    }\n}\n";
+        assert_eq!(rules_fired("report/fixture.rs", src), vec!["hash-order"]);
+    }
+
+    #[test]
+    fn hash_order_fires_through_lock_chains() {
+        let src = "struct C { plans: Mutex<HashMap<u64, Vec<u32>>> }\nimpl C {\n\
+                   fn n(&self) -> usize { self.plans.lock().expect(\"ok\").values().count() }\n}\n";
+        assert_eq!(rules_fired("sim/fixture.rs", src), vec!["hash-order"]);
+    }
+
+    #[test]
+    fn unordered_fold_fires_with_hash_order() {
+        let src = "struct C { w: HashMap<u32, f64> }\nimpl C {\n\
+                   fn total(&self) -> f64 { self.w.values().sum() }\n}\n";
+        assert_eq!(rules_fired("sim/fixture.rs", src), vec!["hash-order", "unordered-fold"]);
+    }
+
+    #[test]
+    fn btree_iteration_is_clean() {
+        let src = "struct C { w: BTreeMap<u32, f64> }\nimpl C {\n\
+                   fn total(&self) -> f64 { self.w.values().sum() }\n}\n";
+        assert!(rules_fired("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_insert_lookup_is_clean() {
+        let src = "let mut seen: HashSet<u64> = HashSet::new();\nseen.insert(3);\n\
+                   if seen.contains(&3) {}\n";
+        assert!(rules_fired("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fires_in_core_only() {
+        let src = "fn t() -> Instant { Instant::now() }\n";
+        assert_eq!(rules_fired("net/fixture.rs", src), vec!["wall-clock"]);
+        assert!(rules_fired("bench_fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn entropy_fires_with_word_boundary() {
+        assert_eq!(
+            rules_fired("search/fixture.rs", "let r = rand::random();\n"),
+            vec!["entropy"]
+        );
+        // `operand::` must not trip the `rand::` token.
+        assert!(rules_fired("search/fixture.rs", "let r = operand::pick();\n").is_empty());
+    }
+
+    #[test]
+    fn no_unwrap_fires_in_core_and_skips_tests() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   #[cfg(test)]\nmod tests {\n    fn g(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert_eq!(rules_fired("comm/fixture.rs", src), vec!["no-unwrap"]);
+        assert!(rules_fired("report/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn expect_is_sanctioned() {
+        assert!(rules_fired("sim/fixture.rs", "fn f(x: Option<u32>) -> u32 { x.expect(\"set\") }\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn cfg_test_on_use_does_not_open_a_region() {
+        let src = "#[cfg(test)]\nuse crate::util::prop;\n\
+                   fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_fired("sim/fixture.rs", src), vec!["no-unwrap"]);
+    }
+
+    #[test]
+    fn patterns_inside_strings_do_not_fire() {
+        let src = "fn msg() -> &'static str { \"call .unwrap() on Instant::now\" }\n";
+        assert!(rules_fired("sim/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn core_scope_matches_dirs_exactly() {
+        assert!(is_core("sim/sweep.rs"));
+        assert!(is_core("net/sim.rs"));
+        assert!(!is_core("report/table.rs"));
+        assert!(!is_core("cli.rs"));
+        // Prefix of a core dir name is not the core dir.
+        assert!(!is_core("simulator/x.rs"));
+    }
+}

@@ -1,0 +1,263 @@
+//! Minimal Rust source scanner for the determinism lint.
+//!
+//! [`scan`] splits a source file into per-line `(code, comment)` views:
+//! string/char-literal *contents* are blanked out of the code view (the
+//! delimiters stay, so column positions survive), comments are removed
+//! from the code view and collected into the comment view. The rules in
+//! [`crate::lint::rules`] then run plain substring matches against the
+//! code view without ever tripping on a pattern that only appears inside
+//! a string literal or a doc comment — which matters, because the rule
+//! definitions themselves spell their patterns as string literals and
+//! the lint lints its own sources.
+//!
+//! This is a scanner, not a parser: it understands exactly the token
+//! classes that can hide or fake a match — `//` line comments, nested
+//! `/* */` block comments, `"…"` strings with escapes, `r#"…"#` raw
+//! strings, byte strings, and the `'x'` char-literal vs `'a` lifetime
+//! ambiguity. Everything else passes through verbatim. The rules are
+//! correspondingly line-oriented; a match split across lines is out of
+//! scope (and rustfmt, enforced in CI, keeps the constructs the rules
+//! target on one line).
+
+/// One scanned source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments stripped and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text on this line (without `//`/`/*`).
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comments carry their depth.
+    BlockComment(usize),
+    /// Inside `"…"`; `raw_hashes` is `Some(n)` for `r##"…"##` forms.
+    Str { raw_hashes: Option<usize> },
+}
+
+/// Scan `src` into per-line code/comment views (see module docs).
+pub fn scan(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut number = 1usize;
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Close out the current line buffers.
+    macro_rules! flush_line {
+        () => {{
+            lines.push(Line {
+                number,
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            number += 1;
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // A line comment ends with its line; strings and block
+            // comments continue across it.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            flush_line!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    state = State::Str { raw_hashes: None };
+                    i += 1;
+                    continue;
+                }
+                // Raw (and raw byte) strings: r"…", r#"…"#, br#"…"#.
+                if c == 'r' || (c == 'b' && chars.get(i + 1) == Some(&'r')) {
+                    let start = if c == 'b' { i + 2 } else { i + 1 };
+                    let mut j = start;
+                    while chars.get(j) == Some(&'#') {
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        for &d in &chars[i..=j] {
+                            code.push(d);
+                        }
+                        state = State::Str { raw_hashes: Some(j - start) };
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Disambiguate char literal from lifetime: a literal
+                    // closes with a matching quote one escaped-or-plain
+                    // char later; a lifetime never closes.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'\'') {
+                            code.push_str("''");
+                            i = j + 1;
+                            continue;
+                        }
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        code.push_str("''");
+                        i += 3;
+                        continue;
+                    }
+                    // Lifetime (or stray quote): keep and move on.
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                    continue;
+                }
+                comment.push(c);
+                i += 1;
+            }
+            State::Str { raw_hashes } => {
+                match raw_hashes {
+                    None => {
+                        if c == '\\' {
+                            i += 2; // skip the escaped char (blanked)
+                            continue;
+                        }
+                        if c == '"' {
+                            code.push('"');
+                            state = State::Code;
+                            i += 1;
+                            continue;
+                        }
+                    }
+                    Some(n) => {
+                        let hashes = chars[i + 1..].iter().take(n).filter(|&&h| h == '#').count();
+                        if c == '"' && hashes == n {
+                            code.push('"');
+                            for _ in 0..n {
+                                code.push('#');
+                            }
+                            state = State::Code;
+                            i += n + 1;
+                            continue;
+                        }
+                    }
+                }
+                i += 1; // literal contents are blanked from the code view
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() || lines.is_empty() {
+        flush_line!();
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strings_are_blanked_but_delimited() {
+        let c = code_of("let x = \"HashMap.iter()\";\n");
+        assert_eq!(c[0], "let x = \"\";");
+    }
+
+    #[test]
+    fn escapes_do_not_end_strings() {
+        let c = code_of(r#"let x = "a\"b.unwrap()"; y.unwrap();"#);
+        assert_eq!(c[0], "let x = \"\"; y.unwrap();");
+    }
+
+    #[test]
+    fn raw_strings_blank_across_hashes() {
+        let src = "let f = r#\"for (k, v) in m.iter() {}\"#; real();\n";
+        let c = code_of(src);
+        assert!(!c[0].contains("iter"), "{}", c[0]);
+        assert!(c[0].contains("real();"), "{}", c[0]);
+    }
+
+    #[test]
+    fn multiline_raw_string_stays_blanked() {
+        let src = "let f = r#\"\nInstant::now()\n\"#;\nInstant::now();\n";
+        let c = code_of(src);
+        assert!(!c[1].contains("Instant"), "{:?}", c);
+        assert!(c[3].contains("Instant::now()"), "{:?}", c);
+    }
+
+    #[test]
+    fn line_comments_split_off() {
+        let lines = scan("foo(); // lint: allow(no-unwrap, test)\n");
+        assert_eq!(lines[0].code.trim_end(), "foo();");
+        assert!(lines[0].comment.contains("lint: allow(no-unwrap, test)"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a(); /* x /* y */ still */ b();\n/* open\n.unwrap()\n*/ c();\n";
+        let c = code_of(src);
+        assert_eq!(c[0], "a();  b();");
+        assert!(!c[2].contains("unwrap"));
+        assert_eq!(c[3].trim(), "c();");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = code_of("let a: Vec<'a> = f('x', '\\n', \"y\");\n");
+        assert!(c[0].contains("Vec<'a>"), "{}", c[0]);
+        assert!(!c[0].contains('x'), "{}", c[0]);
+        assert!(!c[0].contains("\\n"), "{}", c[0]);
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_dense() {
+        let lines = scan("a\n\nb\n");
+        let nums: Vec<usize> = lines.iter().map(|l| l.number).collect();
+        assert_eq!(nums, vec![1, 2, 3]);
+    }
+}

@@ -259,10 +259,17 @@ pub fn replay(
         }
     }
 
-    SramTimeline {
+    let timeline = SramTimeline {
         samples,
         capacity: shape.capacity,
+    };
+    // Sample times must advance monotonically with finite totals — the
+    // same law `hecaton audit` checks statically per scenario.
+    #[cfg(debug_assertions)]
+    if let Some(v) = crate::audit::checks::timeline_violation(&timeline) {
+        panic!("invalid SRAM timeline: {v}");
     }
+    timeline
 }
 
 /// The schedule's peak occupancy derived directly from the group list —

@@ -37,6 +37,18 @@ pub fn packet_time_traced(
     params: &NetParams,
     trace: Option<&mut Trace>,
 ) -> Seconds {
+    build_packet_net(schedules, link, params).run(trace).makespan
+}
+
+/// Build the packet task graph for a set of concurrent schedules without
+/// running it — the untimed half of [`packet_time_traced`], exposed so
+/// the IR auditor ([`crate::audit`]) can statically validate the graph
+/// (dependency order, link-id ranges) that the timing path executes.
+pub fn build_packet_net(
+    schedules: &[&CollectiveSchedule],
+    link: &LinkConfig,
+    params: &NetParams,
+) -> PacketNet {
     let mut net = PacketNet::new(params.clone());
     let n_links = schedules.iter().map(|s| s.n_links()).max().unwrap_or(0);
     let links: Vec<_> = (0..n_links)
@@ -59,7 +71,7 @@ pub fn packet_time_traced(
             barrier = vec![net.work(barrier_node, Seconds::ZERO, &cur)];
         }
     }
-    net.run(trace).makespan
+    net
 }
 
 /// Lowered packet time of one schedule alone — the parity anchor against

@@ -207,9 +207,52 @@ impl PacketNet {
         self.tasks.len() - 1
     }
 
+    /// Number of tasks in the graph.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Dependencies of task `t`, in declaration order.
+    pub fn task_deps(&self, t: TaskId) -> &[TaskId] {
+        &self.tasks[t].deps
+    }
+
+    /// Statically validate the task graph without running it: every
+    /// dependency must precede its task (schedule order, which also
+    /// implies acyclicity) and every node/link id must be registered.
+    /// Returns the first violation, phrased for audit reports.
+    pub fn validate(&self) -> Result<(), String> {
+        for (id, t) in self.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                if d >= id {
+                    return Err(format!("task {id} depends on {d}, which does not precede it"));
+                }
+            }
+            match &t.kind {
+                TaskKind::Work { node, .. } => {
+                    if *node >= self.nodes.len() {
+                        return Err(format!("task {id} runs on unregistered node {node}"));
+                    }
+                }
+                TaskKind::Flow { route, .. } => {
+                    for &l in route {
+                        if l >= self.links.len() {
+                            return Err(format!("task {id} routes over unregistered link {l}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Execute the graph. Deterministic; `trace`, when given, records
     /// per-queue occupancy at every queue-state change.
     pub fn run(&self, trace: Option<&mut Trace>) -> NetRun {
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.validate() {
+            panic!("invalid packet task graph: {e}");
+        }
         Runner::new(self, trace).run()
     }
 }
@@ -450,11 +493,11 @@ impl<'a> Runner<'a> {
                 // window machinery (epochs, queues) is disabled and the
                 // flow degenerates to fluid fair share.
                 let windowed = base_rtt > 0.0 && epoch_dt > 0.0;
+                let next_epoch = self.now + f.epoch_dt;
                 self.flows[id] = Some(f);
                 self.active.push(id);
                 if windowed {
-                    let t = self.now + self.flows[id].as_ref().unwrap().epoch_dt;
-                    self.push(t, EvKind::Epoch(id));
+                    self.push(next_epoch, EvKind::Epoch(id));
                 }
             }
         }
@@ -487,14 +530,14 @@ impl<'a> Runner<'a> {
             .active
             .iter()
             .copied()
-            .filter(|&id| self.flows[id].as_ref().unwrap().remaining <= 1e-6)
+            .filter(|&id| self.flows[id].as_ref().expect("active flow state").remaining <= 1e-6)
             .collect();
         if done.is_empty() {
             return;
         }
         self.active.retain(|id| !done.contains(id));
         for id in done {
-            let f = self.flows[id].as_mut().unwrap();
+            let f = self.flows[id].as_mut().expect("active flow state");
             f.active = false;
             f.remaining = 0.0;
             let t = self.now + f.debt;
@@ -534,7 +577,7 @@ impl<'a> Runner<'a> {
         // Per-link contender counts (paused flows consume nothing).
         let mut n_on = vec![0usize; self.net.links.len()];
         for &id in &self.active {
-            let f = self.flows[id].as_ref().unwrap();
+            let f = self.flows[id].as_ref().expect("active flow state");
             if f.paused_until <= self.now + 1e-18 {
                 for &l in &f.route {
                     n_on[l] += 1;
@@ -547,7 +590,7 @@ impl<'a> Runner<'a> {
         }
         let mut bottleneck = vec![0usize; self.net.tasks.len()];
         for &id in &self.active {
-            let f = self.flows[id].as_mut().unwrap();
+            let f = self.flows[id].as_mut().expect("active flow state");
             if f.paused_until > self.now + 1e-18 {
                 f.rate = 0.0;
                 continue;
@@ -583,7 +626,7 @@ impl<'a> Runner<'a> {
                 .iter()
                 .copied()
                 .filter(|&id| {
-                    let f = self.flows[id].as_ref().unwrap();
+                    let f = self.flows[id].as_ref().expect("active flow state");
                     f.paused_until <= self.now + 1e-18
                         && f.base_rtt > 0.0
                         && bottleneck[id] == l
@@ -593,7 +636,7 @@ impl<'a> Runner<'a> {
             let total: f64 = contributors
                 .iter()
                 .map(|&id| {
-                    let f = self.flows[id].as_ref().unwrap();
+                    let f = self.flows[id].as_ref().expect("active flow state");
                     f.window - f.rate * f.base_rtt
                 })
                 .sum();
@@ -603,7 +646,7 @@ impl<'a> Runner<'a> {
             any_drop = true;
             self.dropped_bytes[l] += over;
             for &id in &contributors {
-                let f = self.flows[id].as_mut().unwrap();
+                let f = self.flows[id].as_mut().expect("active flow state");
                 let excess = f.window - f.rate * f.base_rtt;
                 let share = over * excess / total;
                 f.remaining += share; // resend what the queue dropped
@@ -620,7 +663,7 @@ impl<'a> Runner<'a> {
             // drop pass — the next event re-evaluates).
             let mut n_on = vec![0usize; self.net.links.len()];
             for &id in &self.active {
-                let f = self.flows[id].as_ref().unwrap();
+                let f = self.flows[id].as_ref().expect("active flow state");
                 if f.paused_until <= self.now + 1e-18 {
                     for &l in &f.route {
                         n_on[l] += 1;
@@ -628,7 +671,7 @@ impl<'a> Runner<'a> {
                 }
             }
             for &id in &self.active {
-                let f = self.flows[id].as_mut().unwrap();
+                let f = self.flows[id].as_mut().expect("active flow state");
                 if f.paused_until > self.now + 1e-18 {
                     f.rate = 0.0;
                     continue;
@@ -647,7 +690,7 @@ impl<'a> Runner<'a> {
         // Next network event: earliest flow completion or pause end.
         let mut dt = f64::INFINITY;
         for &id in &self.active {
-            let f = self.flows[id].as_ref().unwrap();
+            let f = self.flows[id].as_ref().expect("active flow state");
             if f.paused_until > self.now + 1e-18 {
                 dt = dt.min(f.paused_until - self.now);
             } else if f.rate > 0.0 {

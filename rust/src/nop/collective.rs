@@ -244,6 +244,14 @@ impl CollectiveSchedule {
 /// `CollectiveCost::alongside` assumes disjoint links and takes a max;
 /// here, sharing is decided by the link ids the schedules actually name.
 pub fn event_time_concurrent(schedules: &[&CollectiveSchedule], link: &LinkConfig) -> Seconds {
+    build_event_graph(schedules, link).run().makespan
+}
+
+/// Build the event task graph for a set of concurrent schedules without
+/// running it — the untimed half of [`event_time_concurrent`], exposed
+/// so the IR auditor ([`crate::audit`]) can statically walk the exact
+/// dependency structure the timing path executes.
+pub fn build_event_graph(schedules: &[&CollectiveSchedule], link: &LinkConfig) -> EventEngine {
     let mut eng = EventEngine::new();
     let n_links = schedules.iter().map(|s| s.n_links()).max().unwrap_or(0);
     let links: Vec<_> = (0..n_links).map(|i| eng.fifo(&format!("link{i}"))).collect();
@@ -263,7 +271,7 @@ pub fn event_time_concurrent(schedules: &[&CollectiveSchedule], link: &LinkConfi
             barrier = vec![eng.task(barrier_res, Service::Busy(Seconds::ZERO), &cur)];
         }
     }
-    eng.run().makespan
+    eng
 }
 
 // ───────────────────────── schedule builders ─────────────────────────

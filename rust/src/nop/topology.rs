@@ -49,7 +49,7 @@ pub fn max_hop(order: &[usize]) -> usize {
             a.abs_diff(b)
         })
         .max()
-        .unwrap()
+        .expect("non-empty ring order")
 }
 
 /// Hamiltonian ring over a `rows × cols` mesh for the flat-ring baseline.

@@ -677,6 +677,26 @@ pub fn evaluate(s: &Scenario) -> crate::Result<Evaluation> {
 
 // ───────────────────────── grid + runner ─────────────────────────
 
+/// The `[sweep]` TOML keys that populate a [`ScenarioGrid`], one per
+/// axis field, in field order. [`crate::audit`] asserts this list and
+/// the loader schema ([`crate::config::file::schema`]) stay in lockstep,
+/// so no grid axis can become unreachable from TOML (or vice versa).
+pub const GRID_AXES: &[&str] = &[
+    "models",
+    "meshes",
+    "packages",
+    "drams",
+    "sram_mib",
+    "topos",
+    "methods",
+    "engines",
+    "checkpoint",
+    "n_packages",
+    "dp",
+    "pp",
+    "inter",
+];
+
 /// A cross-product grid over every scenario axis: the per-package axes
 /// (models × meshes × topologies × packages × DRAM × methods × engines)
 /// plus the cluster knobs (package counts × dp × pp × fabrics). The

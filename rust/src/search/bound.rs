@@ -136,6 +136,10 @@ pub fn sram_infeasible(model: &ModelConfig, hw: &HardwareConfig, cap: Bytes) -> 
 /// Plan-floor latency in seconds: serialized on-package stages vs the
 /// DRAM stream floor, whichever binds.
 fn plan_floor_s(plan: &SimPlan, dram: &DramModel) -> f64 {
+    debug_assert!(
+        PLAN_FLOOR_SAFETY > 0.0 && PLAN_FLOOR_SAFETY < 1.0,
+        "the plan-floor safety factor must shrink the floor"
+    );
     let serialized = plan.breakdown.total().raw();
     let stream = dram.stream_time(plan.dram_bytes).raw();
     PLAN_FLOOR_SAFETY * serialized.max(stream)
@@ -149,10 +153,26 @@ pub fn tier1_package(plan: &SimPlan, hw: &HardwareConfig, lb0: CostBound) -> Cos
     // Plan energy is dynamic-only (static_e is filled at timing); static
     // leakage is monotone in latency, so the latency bound feeds it.
     let energy_j = plan.energy.total().raw() + em.static_w_per_die * plan.dies as f64 * latency_s;
-    CostBound {
+    let lb1 = CostBound {
         latency_s,
         energy_j: energy_j.max(lb0.energy_j),
+    };
+    // The sandwich lb0 ≤ lb1 ≤ serialized anchor is what `hecaton
+    // audit` verifies per scenario; assert it at every debug-build
+    // bound computation too.
+    #[cfg(debug_assertions)]
+    {
+        let anchor = plan
+            .breakdown
+            .total()
+            .raw()
+            .max(DramModel::new(hw).stream_time(plan.dram_bytes).raw())
+            .max(lb0.latency_s);
+        for v in crate::audit::checks::bound_violations(lb0, lb1, anchor) {
+            panic!("inadmissible tier-1 package bound: {v}");
+        }
     }
+    lb1
 }
 
 /// Tier-1 bound for a cluster scenario from its priced plan. The 1F1B
@@ -173,10 +193,23 @@ pub fn tier1_cluster(plan: &ClusterPlan, lb0: CostBound) -> CostBound {
         * plan.cluster.dp as f64;
     let total_dies = plan.cluster.total_dies();
     let energy_j = dynamic_j + em.static_w_per_die * total_dies as f64 * latency_s;
-    CostBound {
+    let lb1 = CostBound {
         latency_s,
         energy_j: energy_j.max(lb0.energy_j),
+    };
+    #[cfg(debug_assertions)]
+    {
+        let anchor = stage0
+            .breakdown
+            .total()
+            .raw()
+            .max(DramModel::new(hw).stream_time(stage0.dram_bytes).raw())
+            .max(lb0.latency_s);
+        for v in crate::audit::checks::bound_violations(lb0, lb1, anchor) {
+            panic!("inadmissible tier-1 cluster bound: {v}");
+        }
     }
+    lb1
 }
 
 #[cfg(test)]

@@ -86,6 +86,11 @@ impl SearchConfig {
     }
 }
 
+/// The `[search]` TOML keys the loader consumes into a [`SearchSpec`].
+/// [`crate::audit`] asserts this list and the loader schema
+/// ([`crate::config::file::schema`]) stay in lockstep.
+pub const SEARCH_FILE_KEYS: &[&str] = &["objective", "budget_sram_mib", "batch"];
+
 /// A `[search]` table from a scenario TOML file: the objective plus the
 /// optional frontier batch override, applied on top of the file's
 /// `[sweep]` grid by `hecaton run`.

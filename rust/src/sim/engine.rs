@@ -221,6 +221,13 @@ impl EventEngine {
         &self.deps[spec.deps_start..spec.deps_end]
     }
 
+    /// Dependencies of task `t`, in declaration order — the static view
+    /// the IR auditor ([`crate::audit`]) walks for acyclicity and
+    /// dangling-dependency checks.
+    pub fn task_deps(&self, t: TaskId) -> &[TaskId] {
+        self.deps_of(&self.tasks[t])
+    }
+
     /// Execute the task graph with a throwaway kernel.
     pub fn run(&self) -> RunResult {
         let mut kernel = Kernel::new();

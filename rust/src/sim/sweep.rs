@@ -372,7 +372,7 @@ impl PlanCache {
         method: Method,
         opts: PlanOptions,
     ) -> Arc<SimPlan> {
-        if let Some(entries) = self.plans.lock().unwrap().get(&sig.0) {
+        if let Some(entries) = self.plans.lock().expect("plan cache lock").get(&sig.0) {
             if let Some(e) = entries.iter().find(|e| e.matches(model, hw, method, opts)) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return Arc::clone(&e.plan);
@@ -382,7 +382,7 @@ impl PlanCache {
         // produces an identical plan and the first insert wins).
         let built = Arc::new(SimPlan::build(model, hw, method, opts));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.plans.lock().unwrap();
+        let mut map = self.plans.lock().expect("plan cache lock");
         let entries = map.entry(sig.0).or_default();
         if let Some(e) = entries.iter().find(|e| e.matches(model, hw, method, opts)) {
             return Arc::clone(&e.plan);
@@ -415,7 +415,9 @@ impl PlanCache {
 
     /// Number of distinct plans resident.
     pub fn len(&self) -> usize {
-        self.plans.lock().unwrap().values().map(|v| v.len()).sum()
+        // lint: allow(hash-order, every bucket is counted exactly once)
+        // lint: allow(unordered-fold, usize addition is order-free)
+        self.plans.lock().expect("plan cache lock").values().map(|v| v.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -540,6 +540,14 @@ impl SimPlan {
             })
             .collect();
         let occupancy = sram::report(&occ_shape, &groups, &stages, &spans);
+        // The search's pre-plan SRAM feasibility floor must sit at or
+        // below every real schedule's peak (or its cuts would be
+        // unsound) — `hecaton audit` checks the same law per scenario.
+        debug_assert!(
+            crate::search::bound::sram_floor(model, hw).raw()
+                <= occupancy.peak.raw() * (1.0 + 1e-9),
+            "SRAM feasibility floor above the planned occupancy peak"
+        );
 
         SimPlan {
             model_name: model.name.clone(),

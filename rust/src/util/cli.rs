@@ -277,7 +277,13 @@ impl App {
             .commands
             .iter()
             .find(|c| c.name == first.as_str())
-            .ok_or_else(|| CliError(format!("unknown command '{first}'\n\n{}", self.help())))?;
+            .ok_or_else(|| {
+                let hint = match suggest(first, self.commands.iter().map(|c| c.name)) {
+                    Some(s) => format!(" (did you mean '{s}'?)"),
+                    None => String::new(),
+                };
+                CliError(format!("unknown command '{first}'{hint}\n\n{}", self.help()))
+            })?;
 
         let mut m = Matches {
             command: cmd.name.to_string(),
@@ -387,6 +393,8 @@ mod tests {
     fn rejects_unknown() {
         assert!(app().parse(&argv(&["simulate", "--bogus", "1"])).is_err());
         assert!(app().parse(&argv(&["nope"])).is_err());
+        let e = app().parse(&argv(&["simulte"])).unwrap_err();
+        assert!(e.0.contains("did you mean 'simulate'?"), "{}", e.0);
         assert!(app()
             .parse(&argv(&["simulate", "a", "b"]))
             .is_err()); // too many positionals

@@ -1,0 +1,76 @@
+//! Static-analysis integration tests: the shipped crate must be clean
+//! under its own verifiers.
+//!
+//! * **Lint** — `lint_root` over this crate's `src/` reports zero
+//!   findings: every intentional exception carries an inline
+//!   `// lint: allow(<rule>, <reason>)` directive.
+//! * **Audit** — the loader schema and every checked-in single-scenario
+//!   example pass all audit checks; the deliberately broken fixture in
+//!   `examples/scenarios/audit/` fails to load with a did-you-mean
+//!   suggestion (the CI failure-path smoke relies on this).
+
+use std::path::{Path, PathBuf};
+
+use hecaton::audit::{audit_scenario, audit_static};
+use hecaton::config::file::{load_scenario, LoadedScenario};
+use hecaton::lint::{default_src_root, lint_root};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// The crate's own sources carry zero lint findings.
+#[test]
+fn shipped_sources_lint_clean() {
+    let findings = lint_root(&default_src_root()).unwrap();
+    assert!(
+        findings.is_empty(),
+        "crate sources must lint clean:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+/// The loader schema wiring audits clean.
+#[test]
+fn loader_schema_audits_clean() {
+    let findings = audit_static();
+    assert!(findings.is_empty(), "schema findings: {findings:?}");
+}
+
+/// Every checked-in single-scenario example passes every audit check.
+/// Grid files are covered by the CLI's `audit --all-examples` path; here
+/// we keep the runtime bounded by auditing the concrete scenarios.
+#[test]
+fn example_scenarios_audit_clean() {
+    let mut audited = 0usize;
+    let mut entries: Vec<_> = std::fs::read_dir(scenarios_dir())
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let loaded = load_scenario(&path.to_string_lossy()).unwrap();
+        if let LoadedScenario::One(scenario) = loaded {
+            let findings = audit_scenario(&scenario).unwrap();
+            assert!(findings.is_empty(), "{}: {findings:?}", path.display());
+            audited += 1;
+        }
+    }
+    assert!(audited >= 2, "expected several concrete example scenarios");
+}
+
+/// The broken fixture is rejected at load time with a suggestion; it must
+/// never start looking like a valid scenario.
+#[test]
+fn audit_fixture_fails_to_load_with_suggestion() {
+    let path = scenarios_dir().join("audit/audit_fixture.toml");
+    let err = load_scenario(&path.to_string_lossy()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("methids"), "{msg}");
+    assert!(msg.contains("did you mean 'methods'?"), "{msg}");
+}
